@@ -1,0 +1,105 @@
+//! Graph analytics on CCM: run PageRank to convergence on a real RMAT
+//! graph, computing every iteration's numerics through the AOT artifacts
+//! (CCM half = Pallas edge-gather kernel, host half = segment-sum +
+//! damped update) while the discrete-event simulator times the same
+//! pipeline at paper scale under BS vs AXLE.
+//!
+//! This is the paper's §III-B motivating workload: per-edge intermediate
+//! results make data movement ~half the runtime, which back-streaming
+//! overlaps away.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example graph_analytics
+//! ```
+
+use anyhow::Result;
+use axle::config::{poll_factors, Protocol, SimConfig};
+use axle::runtime::{literal_f32, literal_i32, Runtime};
+use axle::sim::ps_to_us;
+use axle::workload::graph::SynthGraph;
+use axle::{protocol, workload};
+
+fn main() -> Result<()> {
+    // ------------------------------------------------------------------
+    // 1. Timing at paper scale (|V| = 299067, |E| = 977676).
+    // ------------------------------------------------------------------
+    let cfg = SimConfig::m2ndp().with_poll(poll_factors::P1);
+    let w = workload::by_annotation('e', &cfg);
+    println!("PageRank timing at paper scale ({}):", w.name);
+    let rp = protocol::run(Protocol::Rp, &w, &cfg);
+    let bs = protocol::run(Protocol::Bs, &w, &cfg);
+    let ax = protocol::run(Protocol::Axle, &w, &cfg);
+    for m in [&rp, &bs, &ax] {
+        println!(
+            "  {:<6} total {:>10.2} us  (CCM {:>5.1}%  DM {:>5.1}%  host {:>5.1}%)",
+            m.protocol,
+            ps_to_us(m.total),
+            100.0 * m.frac(m.ccm_busy),
+            100.0 * m.frac(m.dm_busy),
+            100.0 * m.frac(m.host_busy)
+        );
+    }
+    println!(
+        "  AXLE reduces end-to-end runtime by {:.1}% vs RP, {:.1}% vs BS\n",
+        100.0 * (1.0 - ax.ratio_to(&rp)),
+        100.0 * (1.0 - ax.ratio_to(&bs))
+    );
+
+    // ------------------------------------------------------------------
+    // 2. Numerics at exec scale: PageRank to convergence through PJRT.
+    // ------------------------------------------------------------------
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(run `make artifacts` for the numerics half of this example)");
+        return Ok(());
+    }
+    let mut rt = Runtime::new("artifacts")?;
+    let meta = rt.entry("pagerank_ccm")?.meta.clone();
+    let v = meta.get("v").as_usize().unwrap();
+    let e = meta.get("e").as_usize().unwrap();
+    let g = SynthGraph::rmat(v, e, 42);
+    let src: Vec<i32> = g.src.iter().map(|&x| x as i32).collect();
+    let dst: Vec<i32> = g.dst.iter().map(|&x| x as i32).collect();
+    let inv_deg: Vec<f32> = g.out_deg.iter().map(|&d| 1.0 / (d.max(1) as f32)).collect();
+    let mut ranks = vec![1.0 / v as f32; v];
+
+    println!("Running PageRank numerics on an RMAT graph (|V|={v}, |E|={e}) via PJRT:");
+    let mut iters = 0;
+    loop {
+        iters += 1;
+        // CCM half: per-edge contributions (the Pallas gather kernel).
+        let contrib = rt.execute(
+            "pagerank_ccm",
+            &[
+                literal_f32(&ranks, &[v])?,
+                literal_f32(&inv_deg, &[v])?,
+                literal_i32(&src, &[e])?,
+            ],
+        )?[0]
+            .to_vec::<f32>()
+            .map_err(|err| anyhow::anyhow!("{err:?}"))?;
+        // Host half: segment sum + damped update.
+        let new_ranks = rt.execute(
+            "pagerank_host",
+            &[literal_f32(&contrib, &[e])?, literal_i32(&dst, &[e])?],
+        )?[0]
+            .to_vec::<f32>()
+            .map_err(|err| anyhow::anyhow!("{err:?}"))?;
+        let delta: f32 = ranks
+            .iter()
+            .zip(&new_ranks)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        ranks = new_ranks;
+        println!("  iter {iters:>2}: L1 delta {delta:.3e}");
+        if delta < 1e-4 || iters >= 30 {
+            break;
+        }
+    }
+    let mut top: Vec<(usize, f32)> = ranks.iter().cloned().enumerate().collect();
+    top.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("converged after {iters} iterations; top-5 vertices by rank:");
+    for (vtx, r) in top.iter().take(5) {
+        println!("  vertex {vtx:>6}: rank {r:.3e} (out-degree {})", g.out_deg[*vtx]);
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: offload one KNN batch through all four mechanisms and
+//! print the end-to-end comparison (and, if `make artifacts` has run,
+//! execute the actual offloaded kernel through PJRT).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use axle::config::{Protocol, SimConfig};
+use axle::sim::ps_to_us;
+use axle::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    // Table III hardware, Table IV workload (a): KNN, Dim 2048, 128 rows.
+    let cfg = SimConfig::m2ndp();
+    let coord = Coordinator::new(cfg);
+
+    println!("AXLE quickstart — KNN (Dim 2048, Rows 128), Table III hardware\n");
+    println!(
+        "{:<16} {:>12} {:>8} {:>8} {:>8} {:>10}",
+        "mechanism", "total (us)", "T_C%", "T_D%", "T_H%", "host stall"
+    );
+    let mut baseline = None;
+    for p in Protocol::ALL {
+        let m = coord.run('a', p);
+        let base = *baseline.get_or_insert(m.total);
+        println!(
+            "{:<16} {:>12.2} {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}%   ({:.2}x vs RP)",
+            m.protocol,
+            ps_to_us(m.total),
+            100.0 * m.frac(m.ccm_busy),
+            100.0 * m.frac(m.dm_busy),
+            100.0 * m.frac(m.host_busy),
+            100.0 * m.frac(m.host_stall.min(m.total)),
+            m.total as f64 / base as f64,
+        );
+    }
+
+    // If the AOT artifacts exist, run the real offloaded numerics too.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\nValidating the offloaded kernel's numerics through PJRT...");
+        let mut coord = Coordinator::new(SimConfig::m2ndp()).with_artifacts("artifacts")?;
+        let r = coord.validate_numerics('a')?;
+        println!(
+            "  {:?}: {} checks, max rel err {:.2e} — the Pallas distance kernel",
+            r.artifacts, r.checks, r.max_rel_err
+        );
+        println!("  and the top-k host task agree with the Rust reference.");
+    } else {
+        println!("\n(run `make artifacts` to also execute the offloaded kernels via PJRT)");
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+"""AOT pipeline: lower every Layer-2 workload model to HLO-text artifacts.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla_extension 0.5.1
+bundled in this image rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly into the Rust PJRT client
+(see /opt/xla-example/README.md).
+
+Each workload in Table IV contributes two artifacts — its CCM half and its
+host half (the offload boundary of Table I) — plus a ``manifest.json``
+describing input/output shapes so the Rust runtime can construct literals.
+
+Numerics run at *exec scale* (sizes the CPU PJRT client executes quickly);
+the Rust simulator's timing model independently uses paper-scale parameters
+(DESIGN.md §Reproduction strategy).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_of(x):
+    if isinstance(x, (tuple, list)):
+        return [_shape_of(e) for e in x]
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+# --------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example arg specs, metadata)
+# --------------------------------------------------------------------------
+
+# KNN top-k size used by every VectorDB host half.
+KNN_K = 16
+
+# Exec-scale LLM config (OPT-2.7B geometry scaled 4x down; paper scale is
+# hidden=2560, heads=32, head_dim=80, ffn=10240, tokens=1024 — used by the
+# simulator's timing model, not by these numerics artifacts).
+LLM = dict(hidden=640, heads=8, head_dim=80, ffn=2560, tokens=256)
+
+# Exec-scale graph (paper scale: SSSP |V|=264346 |E|=733846; PageRank
+# |V|=299067 |E|=977676). Exec scale keeps artifact execution sub-second.
+GRAPH = dict(v=8192, e=32768)
+
+# Exec-scale OLAP (paper runs SSB Q1.1/Q1.2; SF1 lineorder is ~6M rows).
+SSB = dict(rows=262144)
+
+# Exec-scale DLRM (paper: dim 256, 1M-row Criteo lookups).
+DLRM = dict(vocab=16384, dim=64, batch=256, lookups=32)
+
+
+def build_registry():
+    """All artifacts: name -> (callable, arg specs, metadata dict)."""
+    reg = {}
+
+    # ---- VectorDB / KNN (a)-(c): paper-scale shapes are exec-friendly ----
+    for tag, (dim, rows) in {
+        "a": (2048, 128),
+        "b": (1024, 256),
+        "c": (512, 512),
+    }.items():
+        reg[f"knn_{tag}_ccm"] = (
+            model.knn_ccm,
+            (_spec((dim,)), _spec((rows, dim))),
+            {"workload": "knn", "dim": dim, "rows": rows},
+        )
+        reg[f"knn_{tag}_host"] = (
+            lambda d, _k=KNN_K: model.knn_host(d, k=_k),
+            (_spec((rows,)),),
+            {"workload": "knn", "k": KNN_K, "rows": rows},
+        )
+
+    # ---- Graph analytics (d)-(e) ----
+    v, e = GRAPH["v"], GRAPH["e"]
+    reg["pagerank_ccm"] = (
+        model.pagerank_ccm,
+        (_spec((v,)), _spec((v,)), _spec((e,), jnp.int32)),
+        {"workload": "pagerank", **GRAPH},
+    )
+    reg["pagerank_host"] = (
+        lambda c, d: model.pagerank_host(c, d, num_vertices=v),
+        (_spec((e,)), _spec((e,), jnp.int32)),
+        {"workload": "pagerank", **GRAPH},
+    )
+    reg["sssp_ccm"] = (
+        model.sssp_ccm,
+        (_spec((v,)), _spec((v,)), _spec((e,), jnp.int32), _spec((e,))),
+        {"workload": "sssp", **GRAPH},
+    )
+    reg["sssp_host"] = (
+        model.sssp_host,
+        (_spec((e,)), _spec((e,), jnp.int32), _spec((v,))),
+        {"workload": "sssp", **GRAPH},
+    )
+
+    # ---- OLAP / SSB (f)-(g) ----
+    n = SSB["rows"]
+    reg["ssb_q1_ccm"] = (
+        model.ssb_q1_ccm,
+        (_spec((n,)), _spec((n,)), _spec((2,)), _spec((2,))),
+        {"workload": "ssb", **SSB},
+    )
+    reg["ssb_q1_host"] = (
+        model.ssb_q1_host,
+        (_spec((n,)), _spec((n,)), _spec((n,))),
+        {"workload": "ssb", **SSB},
+    )
+
+    # ---- LLM attention block (h) ----
+    hd, nh, d, ffn, t = (
+        LLM["hidden"],
+        LLM["heads"],
+        LLM["head_dim"],
+        LLM["ffn"],
+        LLM["tokens"],
+    )
+    reg["llm_attn_ccm"] = (
+        model.attention_block_ccm,
+        (
+            _spec((1, hd)),
+            _spec((nh, t, d)),
+            _spec((nh, t, d)),
+            _spec((hd, 3 * hd)),
+            _spec((hd, hd)),
+            _spec((hd,)),
+            _spec((hd,)),
+        ),
+        {"workload": "llm", **LLM},
+    )
+    reg["llm_mlp_host"] = (
+        model.mlp_host,
+        (_spec((1, hd)), _spec((hd, ffn)), _spec((ffn,)), _spec((ffn, hd)), _spec((hd,))),
+        {"workload": "llm", **LLM},
+    )
+
+    # ---- DLRM (i) ----
+    vv, dd, bb, ll = DLRM["vocab"], DLRM["dim"], DLRM["batch"], DLRM["lookups"]
+    reg["dlrm_ccm"] = (
+        model.dlrm_ccm,
+        (_spec((vv, dd)), _spec((bb, ll), jnp.int32)),
+        {"workload": "dlrm", **DLRM},
+    )
+    reg["dlrm_host"] = (
+        model.dlrm_host,
+        (_spec((bb, dd)), _spec((bb, dd)), _spec((2 * dd, 1))),
+        {"workload": "dlrm", **DLRM},
+    )
+
+    return reg
+
+
+def lower_all(out_dir: str, only=None) -> dict:
+    """Lower every registry entry to ``<out_dir>/<name>.hlo.txt``."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    reg = build_registry()
+    for name, (fn, specs, meta) in reg.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = _shape_of(jax.eval_shape(fn, *specs))
+        if not isinstance(out_shapes, list):
+            out_shapes = [out_shapes]
+        manifest[name] = {
+            "file": fname,
+            "inputs": [_shape_of(s) for s in specs],
+            "outputs": out_shapes,
+            "meta": meta,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    manifest = lower_all(args.out, only=args.only)
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas kernels for the AXLE reproduction.
+
+Every kernel is authored with ``jax.experimental.pallas`` and lowered with
+``interpret=True`` so the resulting HLO is plain XLA ops executable on the
+CPU PJRT client that the Rust coordinator embeds (real-TPU Mosaic
+custom-calls cannot run there; see DESIGN.md §Hardware-Adaptation).
+
+Each module exposes a single public entry point that mirrors one of the
+paper's offloaded functions (Table I):
+
+- :mod:`.matmul`        — tiled MXU-style matmul (LLM projections)
+- :mod:`.knn_distance`  — MAC-based squared-L2 distance (VectorDB / KNN)
+- :mod:`.sls`           — embedding gather + sparse-length-sum (DLRM)
+- :mod:`.filter`        — numeric predicate filter / boolean marking (OLAP)
+- :mod:`.attention`     — per-head scaled-dot-product attention (LLM)
+- :mod:`.spmv`          — edge traversal gather/scale (graph analytics)
+
+Pure-jnp oracles live in :mod:`.ref`; pytest asserts allclose between the
+two for swept shapes/dtypes (python/tests/).
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul
+from .knn_distance import knn_squared_l2
+from .sls import sparse_length_sum
+from .filter import predicate_filter
+from .attention import mha_decode_attention
+from .spmv import edge_gather_scale
+
+__all__ = [
+    "matmul",
+    "knn_squared_l2",
+    "sparse_length_sum",
+    "predicate_filter",
+    "mha_decode_attention",
+    "edge_gather_scale",
+    "ref",
+]

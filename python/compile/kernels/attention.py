@@ -1,0 +1,66 @@
+"""Per-head scaled-dot-product attention Pallas kernel (LLM workload).
+
+The paper's LLM case offloads the attention block (Table I, Fig. 3) —
+LayerNormQ → QKVProj → Attention1 → Attention2 → OutProj → Residual — to
+the CCM while the host runs the MLP. Attention1/2 are the two matmul halves
+of SDPA; this kernel fuses them per head so the (T, d) K/V panels stream
+through VMEM once and only the [1, hidden] attention output (the paper's
+"considerably small" intermediate, §V-B) leaves the device.
+
+Decode-style single-query attention: one grid step per head.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One head: softmax(q·Kᵀ·scale)·V with a numerically-stable softmax."""
+    q = q_ref[0]  # (d,)
+    k = k_ref[0]  # (T, d)
+    v = v_ref[0]  # (T, d)
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (T,)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def mha_decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array
+) -> jax.Array:
+    """Multi-head single-token attention.
+
+    Args:
+      q: (H, d) query per head.
+      k: (H, T, d) key cache.
+      v: (H, T, d) value cache.
+
+    Returns:
+      (H, d) float32 attention output per head.
+    """
+    h, d = q.shape
+    h2, t, d2 = k.shape
+    assert (h, d) == (h2, d2), f"q {q.shape} vs k {k.shape}"
+    scale = 1.0 / (d**0.5)
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+    )

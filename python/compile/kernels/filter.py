@@ -1,0 +1,57 @@
+"""Predicate-filter Pallas kernel (OLAP / SSB workload, Table I/IV).
+
+M²NDP's OLAP offload performs "boolean marking within the selection
+operation": the CCM scans a column resident in its DRAM, evaluates the
+range predicate with the CMP primitive-function logic, and returns a
+compact mark vector (§VI). Star Schema Benchmark Q1.x predicates are
+conjunctions of range filters over discount/quantity — exactly this shape.
+
+The kernel evaluates ``lo <= x <= hi`` per element, emitting f32 0/1 marks
+(kept float so the same artifact feeds the revenue aggregation matvec).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _filter_kernel(x_ref, bounds_ref, o_ref):
+    x = x_ref[...]
+    lo = bounds_ref[0]
+    hi = bounds_ref[1]
+    o_ref[...] = jnp.where((x >= lo) & (x <= hi), 1.0, 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def predicate_filter(
+    values: jax.Array, bounds: jax.Array, *, block_n: int = 4096
+) -> jax.Array:
+    """Range-predicate boolean marking.
+
+    Args:
+      values: (N,) column values (CCM-resident).
+      bounds: (2,) [lo, hi] inclusive range.
+      block_n: target elements per VMEM tile.
+
+    Returns:
+      (N,) float32 marks in {0, 1} — the reduced result back-streamed to the
+      host, which ANDs marks across predicates and aggregates revenue.
+    """
+    (n,) = values.shape
+    bn = pick_block(n, block_n)
+
+    return pl.pallas_call(
+        _filter_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(values.astype(jnp.float32), bounds.astype(jnp.float32))

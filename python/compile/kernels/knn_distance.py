@@ -1,0 +1,63 @@
+"""KNN squared-L2 distance Pallas kernel (VectorDB workload, Table I/IV).
+
+The paper's CCM offloads "vector distance calculation": for a query vector
+q ∈ R^D against a row database R ∈ R^{RxD}, the CCM streams rows from its
+local DRAM through the PNM MAC blocks and returns one 4-byte float per row
+(§III-B, Case #1). Here rows stream HBM→VMEM in (block_rows, D) tiles and
+the kernel emits the per-row distance — exactly the reduced result the CCM
+back-streams.
+
+Distances use the MXU-friendly expansion ||q - r||² = ||q||² - 2 q·r + ||r||²
+so the hot loop is a (block_rows, D) × (D,) matvec on the MXU rather than a
+subtract/square VPU pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _knn_kernel(q_ref, rows_ref, o_ref):
+    """One grid step: distances of a (block_rows, D) tile against q."""
+    q = q_ref[...]  # (D,)
+    rows = rows_ref[...]  # (block_rows, D)
+    q_sq = jnp.sum(q * q)
+    row_sq = jnp.sum(rows * rows, axis=1)
+    cross = jnp.dot(rows, q, preferred_element_type=jnp.float32)
+    o_ref[...] = q_sq - 2.0 * cross + row_sq
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def knn_squared_l2(
+    query: jax.Array, rows: jax.Array, *, block_rows: int = 128
+) -> jax.Array:
+    """Squared L2 distance of ``query`` to every row of ``rows``.
+
+    Args:
+      query: (D,) float vector.
+      rows: (R, D) row database.
+      block_rows: target rows per VMEM tile (clipped to a divisor of R).
+
+    Returns:
+      (R,) float32 distances — the per-row reduced result the CCM streams
+      back (4 bytes/row, matching the paper's data-movement model).
+    """
+    r, d = rows.shape
+    assert query.shape == (d,), f"query dim {query.shape} vs rows {rows.shape}"
+    br = pick_block(r, block_rows)
+
+    return pl.pallas_call(
+        _knn_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(query.astype(jnp.float32), rows.astype(jnp.float32))

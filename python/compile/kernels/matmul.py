@@ -1,0 +1,77 @@
+"""Tiled matmul Pallas kernel — the MXU-shaped workhorse.
+
+Used by the LLM workload for QKVProj / OutProj (Table I: "Attention block"),
+and as a building block elsewhere. The tiling maps the paper's CCM
+DRAM→subcore streaming onto a Pallas ``BlockSpec`` HBM→VMEM schedule:
+operand tiles of (bm, bk) × (bk, bn) stream through VMEM while the (bm, bn)
+output block stays resident across the k loop — the near-memory analogue of
+the CCM scheduler handing each μthread a fixed-size input slice.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o += x_tile @ y_tile.
+
+    The output block's index map ignores k, so Pallas keeps the same (i, j)
+    tile resident in VMEM across the whole k loop (standard revisiting
+    accumulator pattern — no scratch buffer needed).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps grids exact)."""
+    b = max(1, min(dim, target))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128, bk: int = 128
+) -> jax.Array:
+    """``x @ y`` via a tiled Pallas kernel (interpret mode).
+
+    Args:
+      x: (M, K) array.
+      y: (K, N) array.
+      bm/bn/bk: target VMEM tile sizes; clipped to exact divisors of the
+        corresponding dimension so the grid tiles exactly.
+
+    Returns:
+      (M, N) array in f32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,72 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are the ground truth: each function computes the same result as its
+Pallas counterpart using only ``jax.numpy`` (no pallas_call), so any
+divergence is a kernel bug. pytest (python/tests/test_kernel.py) sweeps
+shapes/dtypes with hypothesis and asserts allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul."""
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32)
+    )
+
+
+def knn_squared_l2(query: jax.Array, rows: jax.Array) -> jax.Array:
+    """Oracle for kernels.knn_squared_l2: direct (q - r)² reduction."""
+    diff = rows.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def sparse_length_sum(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Oracle for kernels.sparse_length_sum."""
+    return jnp.sum(
+        jnp.take(table.astype(jnp.float32), indices.astype(jnp.int32), axis=0),
+        axis=1,
+    )
+
+
+def predicate_filter(values: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Oracle for kernels.predicate_filter."""
+    v = values.astype(jnp.float32)
+    lo, hi = bounds.astype(jnp.float32)
+    return ((v >= lo) & (v <= hi)).astype(jnp.float32)
+
+
+def mha_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kernels.mha_decode_attention (per-head softmax(qKᵀ)V)."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("ht,htd->hd", p, v)
+
+
+def edge_gather_scale(
+    values: jax.Array, scales: jax.Array, src: jax.Array
+) -> jax.Array:
+    """Oracle for kernels.edge_gather_scale."""
+    s = src.astype(jnp.int32)
+    return jnp.take(values.astype(jnp.float32), s) * jnp.take(
+        scales.astype(jnp.float32), s
+    )
+
+
+def segment_sum(contrib: jax.Array, dst: jax.Array, num_vertices: int) -> jax.Array:
+    """Destination-side reduction used by the graph L2 model."""
+    return jax.ops.segment_sum(
+        contrib.astype(jnp.float32), dst.astype(jnp.int32), num_segments=num_vertices
+    )
+
+
+def top_k(distances: jax.Array, k: int):
+    """Host-side KNN downstream task oracle: smallest-k distances."""
+    neg_vals, idx = jax.lax.top_k(-distances.astype(jnp.float32), k)
+    return -neg_vals, idx

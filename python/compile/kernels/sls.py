@@ -1,0 +1,59 @@
+"""Sparse-Length-Sum (SLS) Pallas kernel (DLRM workload, Table I/IV).
+
+DLRM offloads "embedding table lookup → SLS" to the CCM: for each sample,
+gather L embedding rows and sum them into one (D,) pooled vector. The CCM
+keeps the (V, D) table in its local DRAM and returns only the pooled
+vectors — the canonical bandwidth-amplified offload.
+
+Pallas mapping: the table lives in the kernel's memory space whole (for the
+CPU interpret path); each grid step pools one block of samples. On a real
+TPU the table would sit in HBM with per-row DMA — the BlockSpec schedule
+below is the interpret-mode stand-in (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _sls_kernel(table_ref, idx_ref, o_ref):
+    """Pool one (block_b, L) index block against the full table."""
+    table = table_ref[...]  # (V, D)
+    idx = idx_ref[...]  # (block_b, L) int32
+    gathered = jnp.take(table, idx, axis=0)  # (block_b, L, D)
+    o_ref[...] = jnp.sum(gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sparse_length_sum(
+    table: jax.Array, indices: jax.Array, *, block_b: int = 64
+) -> jax.Array:
+    """Embedding lookup + pooled sum.
+
+    Args:
+      table: (V, D) embedding table (resides in CCM-local memory).
+      indices: (B, L) int32 row indices per sample.
+      block_b: target samples per grid step.
+
+    Returns:
+      (B, D) float32 pooled embeddings — the reduced result streamed back.
+    """
+    v, d = table.shape
+    b, l = indices.shape
+    bb = pick_block(b, block_b)
+
+    return pl.pallas_call(
+        _sls_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+            pl.BlockSpec((bb, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(table.astype(jnp.float32), indices.astype(jnp.int32))

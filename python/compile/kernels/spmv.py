@@ -1,0 +1,62 @@
+"""Edge-traversal gather/scale Pallas kernel (graph analytics, Table I/IV).
+
+Grudon-style graph offload (§III-B): the CCM traverses edges and computes
+per-edge contributions ``contrib[e] = value[src[e]] * scale[src[e]]``
+(e.g. PageRank: rank/out-degree; SSSP: dist + edge weight), returning the
+per-edge stream which the destination-side segment reduction consumes.
+The L2 model (model.py) applies the segment sum — keeping the kernel the
+pure gather/MAC hot loop that maps onto the CCM's ACC/MAC PFLs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _edge_kernel(values_ref, scales_ref, src_ref, o_ref):
+    """One grid step: gather+scale a block of edges against full values."""
+    values = values_ref[...]  # (V,)
+    scales = scales_ref[...]  # (V,)
+    src = src_ref[...]  # (block_e,) int32
+    o_ref[...] = jnp.take(values, src) * jnp.take(scales, src)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e",))
+def edge_gather_scale(
+    values: jax.Array, scales: jax.Array, src: jax.Array, *, block_e: int = 4096
+) -> jax.Array:
+    """Per-edge gathered, scaled source values.
+
+    Args:
+      values: (V,) per-vertex values (ranks / distances), CCM-resident.
+      scales: (V,) per-vertex multipliers (1/out-degree for PageRank, 1 for
+        unweighted traversal).
+      src: (E,) int32 source vertex per edge.
+      block_e: target edges per grid step.
+
+    Returns:
+      (E,) float32 per-edge contributions.
+    """
+    (e,) = src.shape
+    be = pick_block(e, block_e)
+
+    return pl.pallas_call(
+        _edge_kernel,
+        grid=(e // be,),
+        in_specs=[
+            pl.BlockSpec(values.shape, lambda i: (0,)),
+            pl.BlockSpec(scales.shape, lambda i: (0,)),
+            pl.BlockSpec((be,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((be,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.float32),
+        interpret=True,
+    )(
+        values.astype(jnp.float32),
+        scales.astype(jnp.float32),
+        src.astype(jnp.int32),
+    )

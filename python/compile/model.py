@@ -1,0 +1,184 @@
+"""Layer-2 JAX compute graphs for every AXLE workload (Table IV).
+
+Each workload is split at the paper's offload boundary (Table I) into a
+**CCM part** (executed by the simulated near-memory device) and a **host
+part** (the downstream task consuming back-streamed results). Both halves
+call the Layer-1 Pallas kernels where the hot loop lives and are AOT-lowered
+by :mod:`compile.aot` into separate HLO-text artifacts, which the Rust
+coordinator executes via PJRT for real numerics while the discrete-event
+simulator provides timing.
+
+Shapes are static at lowering time; :mod:`compile.aot` instantiates each
+model at the configured "exec scale" (see DESIGN.md — numerics at a scale
+the CPU PJRT client executes comfortably; the simulator's *timing* uses the
+paper-scale parameters independently).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# VectorDB / KNN (Table IV a-c): CCM computes distances, host selects top-k.
+# --------------------------------------------------------------------------
+
+def knn_ccm(query: jax.Array, rows: jax.Array) -> jax.Array:
+    """CCM half: per-row squared-L2 distance (Pallas MAC kernel)."""
+    return kernels.knn_squared_l2(query, rows)
+
+
+def knn_host(distances: jax.Array, *, k: int):
+    """Host half: smallest-k selection over back-streamed distances.
+
+    Lowered as a full sort + slice rather than ``lax.top_k``: jax emits the
+    dedicated ``topk(..., largest=true)`` HLO instruction, which the
+    xla_extension 0.5.1 text parser bundled in this image does not accept.
+    ``sort`` round-trips cleanly and is equivalent for correctness.
+    """
+    idx = jnp.argsort(distances)[:k]
+    return distances[idx], idx.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Graph analytics (Table IV d-e): CCM traverses edges, host updates frontier.
+# --------------------------------------------------------------------------
+
+def pagerank_ccm(ranks: jax.Array, inv_deg: jax.Array, src: jax.Array) -> jax.Array:
+    """CCM half: per-edge contribution rank[src]/deg[src] (Pallas gather)."""
+    return kernels.edge_gather_scale(ranks, inv_deg, src)
+
+
+def pagerank_host(
+    contrib: jax.Array, dst: jax.Array, *, num_vertices: int, damping: float = 0.85
+) -> jax.Array:
+    """Host half: destination segment-sum + damped rank update."""
+    sums = jax.ops.segment_sum(contrib, dst, num_segments=num_vertices)
+    return (1.0 - damping) / num_vertices + damping * sums
+
+
+def sssp_ccm(dist: jax.Array, ones: jax.Array, src: jax.Array, w: jax.Array) -> jax.Array:
+    """CCM half: per-edge relaxation candidates dist[src] + w[e]."""
+    return kernels.edge_gather_scale(dist, ones, src) + w
+
+
+def sssp_host(cand: jax.Array, dst: jax.Array, dist: jax.Array) -> jax.Array:
+    """Host half: per-destination min + monotone distance update."""
+    num_vertices = dist.shape[0]
+    best = jax.ops.segment_min(cand, dst, num_segments=num_vertices)
+    return jnp.minimum(dist, best)
+
+
+# --------------------------------------------------------------------------
+# OLAP / SSB Q1.x (Table IV f-g): CCM marks rows, host aggregates revenue.
+# --------------------------------------------------------------------------
+
+def ssb_q1_ccm(
+    discount: jax.Array,
+    quantity: jax.Array,
+    disc_bounds: jax.Array,
+    qty_bounds: jax.Array,
+) -> jax.Array:
+    """CCM half: conjunctive range predicates via the Pallas CMP kernel.
+
+    SSB Q1.1: d_year = 1993 AND lo_discount in [1,3] AND lo_quantity < 25.
+    SSB Q1.2: d_yearmonth AND lo_discount in [4,6] AND lo_quantity in [26,35].
+    The year/month predicate is folded into the generator's row selection;
+    discount/quantity are the CCM-scanned columns.
+    """
+    m1 = kernels.predicate_filter(discount, disc_bounds)
+    m2 = kernels.predicate_filter(quantity, qty_bounds)
+    return m1 * m2
+
+
+def ssb_q1_host(
+    marks: jax.Array, extendedprice: jax.Array, discount: jax.Array
+) -> jax.Array:
+    """Host half: sum(lo_extendedprice * lo_discount) over marked rows."""
+    return jnp.sum(marks * extendedprice * discount)
+
+
+# --------------------------------------------------------------------------
+# LLM inference / OPT attention block (Table IV h, Fig. 3).
+# --------------------------------------------------------------------------
+
+def _layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def attention_block_ccm(
+    x: jax.Array,  # (1, hidden) current-token hidden state
+    kcache: jax.Array,  # (H, T, d)
+    vcache: jax.Array,  # (H, T, d)
+    wqkv: jax.Array,  # (hidden, 3*hidden)
+    wo: jax.Array,  # (hidden, hidden)
+    ln_g: jax.Array,  # (hidden,)
+    ln_b: jax.Array,  # (hidden,)
+) -> jax.Array:
+    """CCM half: the paper's attention block in its Fig. 3 kernel order.
+
+    LayerNormQ → QKVProj (Pallas matmul) → Attention1+2 (fused Pallas SDPA)
+    → OutProj (Pallas matmul) → Residual. Returns the [1, hidden] output —
+    the "considerably small" intermediate of §V-B.
+    """
+    hidden = x.shape[-1]
+    h, t, d = kcache.shape
+    ln = _layernorm(x, ln_g, ln_b)
+    qkv = kernels.matmul(ln, wqkv)  # (1, 3*hidden)
+    q = qkv[0, :hidden].reshape(h, d)
+    # K/V of the current token extend the cache conceptually; for the static
+    # artifact we attend over the provided cache (prefill-style history).
+    attn = kernels.mha_decode_attention(q, kcache, vcache)  # (h, d)
+    out = kernels.matmul(attn.reshape(1, hidden), wo)  # (1, hidden)
+    return x + out
+
+
+def mlp_host(
+    x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array
+) -> jax.Array:
+    """Host half: the MLP the paper keeps on the host (fc1→gelu→fc2+res)."""
+    hfc = jax.nn.gelu(kernels.matmul(x, w1) + b1)
+    return x + kernels.matmul(hfc, w2) + b2
+
+
+# --------------------------------------------------------------------------
+# DLRM (Table IV i): CCM pools embeddings, host runs the interaction MLP.
+# --------------------------------------------------------------------------
+
+def dlrm_ccm(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """CCM half: embedding lookup → SLS (Pallas gather+sum kernel)."""
+    return kernels.sparse_length_sum(table, indices)
+
+
+def dlrm_host(pooled: jax.Array, dense: jax.Array, w: jax.Array) -> jax.Array:
+    """Host half: concat pooled sparse + dense features → top MLP layer."""
+    feat = jnp.concatenate([pooled, dense], axis=1)
+    return jax.nn.sigmoid(kernels.matmul(feat, w))
+
+
+# --------------------------------------------------------------------------
+# Reference (oracle) compositions used by pytest to validate whole models.
+# --------------------------------------------------------------------------
+
+def knn_ccm_ref(query, rows):
+    return ref.knn_squared_l2(query, rows)
+
+
+def pagerank_step_ref(ranks, inv_deg, src, dst, num_vertices, damping=0.85):
+    contrib = ref.edge_gather_scale(ranks, inv_deg, src)
+    return pagerank_host(contrib, dst, num_vertices=num_vertices, damping=damping)
+
+
+def attention_block_ccm_ref(x, kcache, vcache, wqkv, wo, ln_g, ln_b):
+    hidden = x.shape[-1]
+    h, t, d = kcache.shape
+    ln = _layernorm(x, ln_g, ln_b)
+    qkv = ref.matmul(ln, wqkv)
+    q = qkv[0, :hidden].reshape(h, d)
+    attn = ref.mha_decode_attention(q, kcache, vcache)
+    out = ref.matmul(attn.reshape(1, hidden), wo)
+    return x + out

@@ -1,0 +1,76 @@
+"""AOT pipeline tests: registry completeness, HLO-text shape, manifest.
+
+Ensures the artifacts the Rust runtime loads exist for every workload half
+and that the lowered HLO text is parseable interchange (ENTRY present, no
+serialized-proto path).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+EXPECTED_ARTIFACTS = {
+    "knn_a_ccm", "knn_a_host",
+    "knn_b_ccm", "knn_b_host",
+    "knn_c_ccm", "knn_c_host",
+    "pagerank_ccm", "pagerank_host",
+    "sssp_ccm", "sssp_host",
+    "ssb_q1_ccm", "ssb_q1_host",
+    "llm_attn_ccm", "llm_mlp_host",
+    "dlrm_ccm", "dlrm_host",
+}
+
+
+def test_registry_covers_all_workload_halves():
+    assert set(aot.build_registry().keys()) == EXPECTED_ARTIFACTS
+
+
+def test_registry_specs_traceable():
+    """Every registry entry must trace (eval_shape) without error."""
+    for name, (fn, specs, _meta) in aot.build_registry().items():
+        out = jax.eval_shape(fn, *specs)
+        assert out is not None, name
+
+
+def test_lower_one_artifact_is_hlo_text(tmp_path):
+    manifest = aot.lower_all(str(tmp_path), only=["knn_a_ccm"])
+    assert set(manifest) == {"knn_a_ccm"}
+    text = (tmp_path / "knn_a_ccm.hlo.txt").read_text()
+    assert "ENTRY" in text  # HLO text module, not proto bytes
+    assert "HloModule" in text
+    m = manifest["knn_a_ccm"]
+    assert m["inputs"][0]["shape"] == [2048]
+    assert m["inputs"][1]["shape"] == [128, 2048]
+    assert m["outputs"][0]["shape"] == [128]
+
+
+def test_manifest_written_and_consistent(tmp_path):
+    aot.lower_all(str(tmp_path), only=["ssb_q1_ccm", "ssb_q1_host"])
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    for name, entry in manifest.items():
+        assert os.path.exists(tmp_path / entry["file"]), name
+        assert entry["sha256"]
+        assert all("shape" in i and "dtype" in i for i in entry["inputs"])
+
+
+def test_knn_host_topk_outputs_tuple_shapes():
+    reg = aot.build_registry()
+    fn, specs, meta = reg["knn_a_host"]
+    vals, idx = jax.eval_shape(fn, *specs)
+    assert vals.shape == (aot.KNN_K,)
+    assert idx.shape == (aot.KNN_K,)
+    assert idx.dtype == jnp.int32
+
+
+def test_repo_artifacts_match_registry_if_built():
+    """If `make artifacts` has run, the manifest must match the registry."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.loads(open(path).read())
+    assert set(manifest.keys()) == EXPECTED_ARTIFACTS

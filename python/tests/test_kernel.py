@@ -1,0 +1,237 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the Pallas layer.
+
+Every Pallas kernel is checked against its pure-jnp oracle in
+``compile.kernels.ref`` over hypothesis-swept shapes, dtypes and block
+sizes. Failures here mean the HLO the Rust runtime executes is wrong.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RTOL = 2e-3
+ATOL = 2e-3
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.integers(1, 128),
+    bn=st.integers(1, 128),
+    bk=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_sweep(m, k, n, bm, bn, bk, seed):
+    r = _rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    y = r.standard_normal((k, n), dtype=np.float32)
+    got = np.asarray(K.matmul(jnp.array(x), jnp.array(y), bm=bm, bn=bn, bk=bk))
+    np.testing.assert_allclose(got, x @ y, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_matmul_dtypes(dtype):
+    r = _rng(7)
+    x = r.standard_normal((32, 48)).astype(dtype)
+    y = r.standard_normal((48, 16)).astype(dtype)
+    got = np.asarray(K.matmul(jnp.array(x), jnp.array(y)))
+    want = x.astype(np.float32) @ y.astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_matmul_identity():
+    x = np.eye(16, dtype=np.float32)
+    got = np.asarray(K.matmul(jnp.array(x), jnp.array(x)))
+    np.testing.assert_array_equal(got, x)
+
+
+# --------------------------------------------------------------------------
+# knn_squared_l2
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dim=st.integers(1, 256),
+    rows=st.integers(1, 256),
+    block=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_knn_sweep(dim, rows, block, seed):
+    r = _rng(seed)
+    q = r.standard_normal(dim, dtype=np.float32)
+    db = r.standard_normal((rows, dim), dtype=np.float32)
+    got = np.asarray(K.knn_squared_l2(jnp.array(q), jnp.array(db), block_rows=block))
+    want = np.asarray(ref.knn_squared_l2(jnp.array(q), jnp.array(db)))
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+def test_knn_zero_distance():
+    """A row equal to the query must yield (near-)zero distance."""
+    r = _rng(3)
+    q = r.standard_normal(64, dtype=np.float32)
+    db = r.standard_normal((8, 64), dtype=np.float32)
+    db[5] = q
+    got = np.asarray(K.knn_squared_l2(jnp.array(q), jnp.array(db)))
+    assert abs(got[5]) < 1e-3
+    assert np.argmin(got) == 5
+
+
+@pytest.mark.parametrize("dim,rows", [(2048, 128), (1024, 256), (512, 512)])
+def test_knn_paper_configs(dim, rows):
+    """Table IV (a)-(c) exact configurations."""
+    r = _rng(dim)
+    q = r.standard_normal(dim, dtype=np.float32)
+    db = r.standard_normal((rows, dim), dtype=np.float32)
+    got = np.asarray(K.knn_squared_l2(jnp.array(q), jnp.array(db)))
+    want = np.asarray(ref.knn_squared_l2(jnp.array(q), jnp.array(db)))
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-1)
+
+
+# --------------------------------------------------------------------------
+# sparse_length_sum
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vocab=st.integers(1, 512),
+    dim=st.integers(1, 64),
+    batch=st.integers(1, 64),
+    lookups=st.integers(1, 32),
+    block=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sls_sweep(vocab, dim, batch, lookups, block, seed):
+    r = _rng(seed)
+    table = r.standard_normal((vocab, dim), dtype=np.float32)
+    idx = r.integers(0, vocab, size=(batch, lookups)).astype(np.int32)
+    got = np.asarray(K.sparse_length_sum(jnp.array(table), jnp.array(idx), block_b=block))
+    want = np.asarray(ref.sparse_length_sum(jnp.array(table), jnp.array(idx)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_sls_repeated_index():
+    """Pooling the same row L times equals L * row."""
+    table = np.arange(20, dtype=np.float32).reshape(5, 4)
+    idx = np.full((1, 7), 3, dtype=np.int32)
+    got = np.asarray(K.sparse_length_sum(jnp.array(table), jnp.array(idx)))
+    np.testing.assert_allclose(got[0], 7 * table[3])
+
+
+# --------------------------------------------------------------------------
+# predicate_filter
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4096),
+    block=st.integers(1, 1024),
+    lo=st.floats(-3, 3, allow_nan=False, width=32),
+    width=st.floats(0, 4, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filter_sweep(n, block, lo, width, seed):
+    r = _rng(seed)
+    vals = r.standard_normal(n, dtype=np.float32)
+    bounds = np.array([lo, lo + width], dtype=np.float32)
+    got = np.asarray(K.predicate_filter(jnp.array(vals), jnp.array(bounds), block_n=block))
+    want = np.asarray(ref.predicate_filter(jnp.array(vals), jnp.array(bounds)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_filter_boundary_inclusive():
+    vals = np.array([1.0, 2.0, 3.0, 4.0], dtype=np.float32)
+    bounds = np.array([2.0, 3.0], dtype=np.float32)
+    got = np.asarray(K.predicate_filter(jnp.array(vals), jnp.array(bounds)))
+    np.testing.assert_array_equal(got, [0.0, 1.0, 1.0, 0.0])
+
+
+def test_filter_empty_range():
+    vals = np.linspace(-1, 1, 64).astype(np.float32)
+    bounds = np.array([5.0, -5.0], dtype=np.float32)  # lo > hi: nothing
+    got = np.asarray(K.predicate_filter(jnp.array(vals), jnp.array(bounds)))
+    assert got.sum() == 0.0
+
+
+# --------------------------------------------------------------------------
+# mha_decode_attention
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    heads=st.integers(1, 8),
+    tokens=st.integers(1, 128),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_sweep(heads, tokens, d, seed):
+    r = _rng(seed)
+    q = r.standard_normal((heads, d), dtype=np.float32)
+    k = r.standard_normal((heads, tokens, d), dtype=np.float32)
+    v = r.standard_normal((heads, tokens, d), dtype=np.float32)
+    got = np.asarray(K.mha_decode_attention(jnp.array(q), jnp.array(k), jnp.array(v)))
+    want = np.asarray(ref.mha_decode_attention(jnp.array(q), jnp.array(k), jnp.array(v)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_uniform_when_scores_equal():
+    """Identical keys ⇒ softmax uniform ⇒ output = mean of values."""
+    q = np.ones((2, 8), dtype=np.float32)
+    k = np.ones((2, 16, 8), dtype=np.float32)
+    v = np.random.default_rng(0).standard_normal((2, 16, 8)).astype(np.float32)
+    got = np.asarray(K.mha_decode_attention(jnp.array(q), jnp.array(k), jnp.array(v)))
+    np.testing.assert_allclose(got, v.mean(axis=1), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_softmax_stability_large_scores():
+    """Large-magnitude scores must not overflow (stable softmax)."""
+    q = np.full((1, 32), 50.0, dtype=np.float32)
+    k = np.full((1, 8, 32), 50.0, dtype=np.float32)
+    v = np.ones((1, 8, 32), dtype=np.float32)
+    got = np.asarray(K.mha_decode_attention(jnp.array(q), jnp.array(k), jnp.array(v)))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, 1.0, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# edge_gather_scale
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(1, 512),
+    e=st.integers(1, 2048),
+    block=st.integers(1, 512),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmv_sweep(v, e, block, seed):
+    r = _rng(seed)
+    values = r.standard_normal(v, dtype=np.float32)
+    scales = r.standard_normal(v, dtype=np.float32)
+    src = r.integers(0, v, size=e).astype(np.int32)
+    got = np.asarray(
+        K.edge_gather_scale(jnp.array(values), jnp.array(scales), jnp.array(src), block_e=block)
+    )
+    want = np.asarray(ref.edge_gather_scale(jnp.array(values), jnp.array(scales), jnp.array(src)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_spmv_unit_scales_is_gather():
+    values = np.arange(10, dtype=np.float32)
+    scales = np.ones(10, dtype=np.float32)
+    src = np.array([9, 0, 4, 4], dtype=np.int32)
+    got = np.asarray(K.edge_gather_scale(jnp.array(values), jnp.array(scales), jnp.array(src)))
+    np.testing.assert_array_equal(got, [9.0, 0.0, 4.0, 4.0])

@@ -1,0 +1,241 @@
+"""Layer-2 model correctness: workload compositions vs oracle compositions.
+
+Exercises each workload's CCM half + host half end-to-end in Python, the
+same graphs that aot.py lowers for the Rust runtime.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# KNN
+# --------------------------------------------------------------------------
+
+def test_knn_pipeline_finds_true_neighbors():
+    r = _rng(1)
+    dim, rows, k = 128, 512, 16
+    db = r.standard_normal((rows, dim)).astype(np.float32)
+    q = db[42] + 0.01 * r.standard_normal(dim).astype(np.float32)
+    dists = model.knn_ccm(jnp.array(q), jnp.array(db))
+    vals, idx = model.knn_host(dists, k=k)
+    assert int(np.asarray(idx)[0]) == 42
+    # Distances sorted ascending.
+    v = np.asarray(vals)
+    assert (np.diff(v) >= -1e-6).all()
+
+
+def test_knn_ccm_matches_ref():
+    r = _rng(2)
+    q = r.standard_normal(64).astype(np.float32)
+    db = r.standard_normal((32, 64)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(model.knn_ccm(jnp.array(q), jnp.array(db))),
+        np.asarray(model.knn_ccm_ref(jnp.array(q), jnp.array(db))),
+        rtol=1e-2,
+        atol=1e-2,
+    )
+
+
+# --------------------------------------------------------------------------
+# PageRank
+# --------------------------------------------------------------------------
+
+def _ring_graph(v):
+    """Directed ring: i -> (i+1) % v. Every vertex has out-degree 1."""
+    src = np.arange(v, dtype=np.int32)
+    dst = (src + 1) % v
+    return src, dst
+
+
+def test_pagerank_uniform_on_ring():
+    """On a symmetric ring the stationary distribution is uniform."""
+    v = 64
+    src, dst = _ring_graph(v)
+    ranks = np.full(v, 1.0 / v, dtype=np.float32)
+    inv_deg = np.ones(v, dtype=np.float32)  # out-degree 1
+    for _ in range(5):
+        contrib = model.pagerank_ccm(jnp.array(ranks), jnp.array(inv_deg), jnp.array(src))
+        ranks = np.asarray(model.pagerank_host(contrib, jnp.array(dst), num_vertices=v))
+    np.testing.assert_allclose(ranks, 1.0 / v, rtol=1e-5)
+
+
+def test_pagerank_mass_conservation():
+    """Total rank stays ~1 when every vertex has outgoing edges."""
+    r = _rng(3)
+    v, e = 128, 512
+    src = np.repeat(np.arange(v, dtype=np.int32), e // v)
+    dst = r.integers(0, v, size=e).astype(np.int32)
+    deg = np.bincount(src, minlength=v).astype(np.float32)
+    inv_deg = 1.0 / np.maximum(deg, 1.0)
+    ranks = np.full(v, 1.0 / v, dtype=np.float32)
+    for _ in range(3):
+        contrib = model.pagerank_ccm(jnp.array(ranks), jnp.array(inv_deg), jnp.array(src))
+        ranks = np.asarray(model.pagerank_host(contrib, jnp.array(dst), num_vertices=v))
+    assert abs(ranks.sum() - 1.0) < 1e-3
+
+
+def test_pagerank_step_matches_ref():
+    r = _rng(4)
+    v, e = 32, 128
+    src = r.integers(0, v, size=e).astype(np.int32)
+    dst = r.integers(0, v, size=e).astype(np.int32)
+    deg = np.bincount(src, minlength=v).astype(np.float32)
+    inv_deg = 1.0 / np.maximum(deg, 1.0)
+    ranks = r.random(v).astype(np.float32)
+    contrib = model.pagerank_ccm(jnp.array(ranks), jnp.array(inv_deg), jnp.array(src))
+    got = model.pagerank_host(contrib, jnp.array(dst), num_vertices=v)
+    want = model.pagerank_step_ref(
+        jnp.array(ranks), jnp.array(inv_deg), jnp.array(src), jnp.array(dst), v
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# SSSP
+# --------------------------------------------------------------------------
+
+def test_sssp_converges_on_path_graph():
+    """Path 0→1→2→…: dist[i] should converge to i (unit weights)."""
+    v = 16
+    src = np.arange(v - 1, dtype=np.int32)
+    dst = src + 1
+    w = np.ones(v - 1, dtype=np.float32)
+    inf = np.float32(1e9)
+    dist = np.full(v, inf, dtype=np.float32)
+    dist[0] = 0.0
+    ones = np.ones(v, dtype=np.float32)
+    for _ in range(v):
+        cand = model.sssp_ccm(jnp.array(dist), jnp.array(ones), jnp.array(src), jnp.array(w))
+        dist = np.asarray(model.sssp_host(cand, jnp.array(dst), jnp.array(dist)))
+    np.testing.assert_allclose(dist, np.arange(v, dtype=np.float32))
+
+
+def test_sssp_monotone_nonincreasing():
+    """Bellman-Ford relaxation never increases any distance."""
+    r = _rng(5)
+    v, e = 64, 256
+    src = r.integers(0, v, size=e).astype(np.int32)
+    dst = r.integers(0, v, size=e).astype(np.int32)
+    w = r.random(e).astype(np.float32)
+    dist = np.full(v, 1e9, dtype=np.float32)
+    dist[0] = 0.0
+    ones = np.ones(v, dtype=np.float32)
+    for _ in range(4):
+        prev = dist.copy()
+        cand = model.sssp_ccm(jnp.array(dist), jnp.array(ones), jnp.array(src), jnp.array(w))
+        dist = np.asarray(model.sssp_host(cand, jnp.array(dst), jnp.array(dist)))
+        assert (dist <= prev + 1e-6).all()
+
+
+# --------------------------------------------------------------------------
+# SSB / OLAP
+# --------------------------------------------------------------------------
+
+def test_ssb_q1_revenue_matches_numpy():
+    r = _rng(6)
+    n = 4096
+    discount = r.integers(0, 11, size=n).astype(np.float32)
+    quantity = r.integers(1, 51, size=n).astype(np.float32)
+    price = (1000 * r.random(n)).astype(np.float32)
+    # Q1.1: discount in [1,3], quantity < 25 (i.e. [1,24] over ints).
+    marks = model.ssb_q1_ccm(
+        jnp.array(discount),
+        jnp.array(quantity),
+        jnp.array([1.0, 3.0], dtype=np.float32),
+        jnp.array([1.0, 24.0], dtype=np.float32),
+    )
+    got = float(model.ssb_q1_host(marks, jnp.array(price), jnp.array(discount)))
+    sel = (discount >= 1) & (discount <= 3) & (quantity >= 1) & (quantity <= 24)
+    want = float((price[sel] * discount[sel]).sum())
+    assert abs(got - want) / max(abs(want), 1.0) < 1e-3
+
+
+def test_ssb_marks_are_conjunctive():
+    disc = np.array([2.0, 2.0, 9.0], dtype=np.float32)
+    qty = np.array([10.0, 40.0, 10.0], dtype=np.float32)
+    marks = np.asarray(
+        model.ssb_q1_ccm(
+            jnp.array(disc),
+            jnp.array(qty),
+            jnp.array([1.0, 3.0], dtype=np.float32),
+            jnp.array([1.0, 24.0], dtype=np.float32),
+        )
+    )
+    np.testing.assert_array_equal(marks, [1.0, 0.0, 0.0])
+
+
+# --------------------------------------------------------------------------
+# LLM attention block
+# --------------------------------------------------------------------------
+
+def _llm_params(hidden=64, heads=4, t=8, seed=7):
+    r = _rng(seed)
+    d = hidden // heads
+    return dict(
+        x=r.standard_normal((1, hidden)).astype(np.float32) * 0.1,
+        kcache=r.standard_normal((heads, t, d)).astype(np.float32) * 0.1,
+        vcache=r.standard_normal((heads, t, d)).astype(np.float32) * 0.1,
+        wqkv=r.standard_normal((hidden, 3 * hidden)).astype(np.float32) * 0.05,
+        wo=r.standard_normal((hidden, hidden)).astype(np.float32) * 0.05,
+        ln_g=np.ones(hidden, dtype=np.float32),
+        ln_b=np.zeros(hidden, dtype=np.float32),
+    )
+
+
+def test_attention_block_matches_ref():
+    p = {k: jnp.array(v) for k, v in _llm_params().items()}
+    got = model.attention_block_ccm(**p)
+    want = model.attention_block_ccm_ref(**p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_attention_block_residual_path():
+    """With zero output projection the block must be the identity."""
+    p = _llm_params()
+    p["wo"] = np.zeros_like(p["wo"])
+    out = model.attention_block_ccm(**{k: jnp.array(v) for k, v in p.items()})
+    np.testing.assert_allclose(np.asarray(out), p["x"], rtol=1e-6)
+
+
+def test_mlp_host_shapes():
+    r = _rng(8)
+    hidden, ffn = 32, 128
+    x = jnp.array(r.standard_normal((1, hidden)).astype(np.float32))
+    w1 = jnp.array(r.standard_normal((hidden, ffn)).astype(np.float32) * 0.05)
+    b1 = jnp.zeros(ffn)
+    w2 = jnp.array(r.standard_normal((ffn, hidden)).astype(np.float32) * 0.05)
+    b2 = jnp.zeros(hidden)
+    out = model.mlp_host(x, w1, b1, w2, b2)
+    assert out.shape == (1, hidden)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------------------------------------------
+# DLRM
+# --------------------------------------------------------------------------
+
+def test_dlrm_pipeline():
+    r = _rng(9)
+    vocab, dim, batch, lookups = 256, 16, 8, 4
+    table = r.standard_normal((vocab, dim)).astype(np.float32)
+    idx = r.integers(0, vocab, size=(batch, lookups)).astype(np.int32)
+    pooled = model.dlrm_ccm(jnp.array(table), jnp.array(idx))
+    np.testing.assert_allclose(
+        np.asarray(pooled),
+        np.asarray(ref.sparse_length_sum(jnp.array(table), jnp.array(idx))),
+        rtol=1e-4,
+    )
+    dense = r.standard_normal((batch, dim)).astype(np.float32)
+    w = r.standard_normal((2 * dim, 1)).astype(np.float32) * 0.1
+    out = model.dlrm_host(pooled, jnp.array(dense), jnp.array(w))
+    assert out.shape == (batch, 1)
+    o = np.asarray(out)
+    assert ((o > 0) & (o < 1)).all()  # sigmoid range

@@ -1,0 +1,133 @@
+//! Figure benches: one harness entry per paper table/figure.
+//!
+//! Each entry regenerates the experiment behind the figure (the printed
+//! simulated-cycle report lives in `axle-report`; here we measure the
+//! harness cost of regenerating it, one bench per table/figure, so
+//! `cargo bench` exercises the full evaluation matrix).
+
+mod harness;
+
+use axle::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
+use axle::protocol;
+use axle::workload::{by_annotation, knn, llm, ALL_ANNOTATIONS};
+use harness::bench;
+
+fn main() {
+    let cfg = SimConfig::m2ndp();
+
+    // Fig. 3: six attention kernels under RP and BS.
+    bench("fig03_attention_kernel_duality", || {
+        for k in llm::AttnKernel::ALL {
+            let w = llm::single_kernel(&cfg, k);
+            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
+            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+        }
+    });
+
+    // Fig. 4: KNN sweep on the real-hardware profile.
+    bench("fig04_knn_real_hw_sweep", || {
+        let hw = SimConfig::real_hw();
+        for (dim, rows) in [(2048, 128), (512, 512), (128, 2048), (32, 4096)] {
+            let w = knn::generate_queries(&hw, dim, rows, 4);
+            std::hint::black_box(protocol::run(Protocol::Rp, &w, &hw));
+        }
+    });
+
+    // Fig. 5 + Fig. 7: RP/BS breakdowns and idle times (same runs).
+    bench("fig05_fig07_breakdown_rp_bs", || {
+        for a in ['a', 'b', 'c', 'd', 'e'] {
+            let w = by_annotation(a, &cfg);
+            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
+            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+        }
+    });
+
+    // Fig. 10: the full end-to-end matrix (9 workloads × 6 variants).
+    bench("fig10_end_to_end_matrix", || {
+        for a in ALL_ANNOTATIONS {
+            let w = by_annotation(a, &cfg);
+            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
+            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+            std::hint::black_box(protocol::run(Protocol::AxleInterrupt, &w, &cfg));
+            for p in [poll_factors::P1, poll_factors::P10, poll_factors::P100] {
+                let c = cfg.clone().with_poll(p);
+                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+            }
+        }
+    });
+
+    // Fig. 11: LLM on baseline vs reduced hardware.
+    bench("fig11_llm_reduced_hw", || {
+        for c in [SimConfig::m2ndp(), SimConfig::reduced()] {
+            let w = by_annotation('h', &c);
+            std::hint::black_box(protocol::run(Protocol::Rp, &w, &c));
+            std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+        }
+    });
+
+    // Fig. 12: idle times at p10.
+    bench("fig12_idle_times_p10", || {
+        let c = cfg.clone().with_poll(poll_factors::P10);
+        for a in ALL_ANNOTATIONS {
+            let w = by_annotation(a, &c);
+            std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+        }
+    });
+
+    // Fig. 13: host-core stall at p10 and p100.
+    bench("fig13_host_stall_p10_p100", || {
+        for p in [poll_factors::P10, poll_factors::P100] {
+            let c = cfg.clone().with_poll(p);
+            for a in ALL_ANNOTATIONS {
+                let w = by_annotation(a, &c);
+                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+            }
+        }
+    });
+
+    // Fig. 14: streaming-factor sweep on (a), (d), (i).
+    bench("fig14_streaming_factor_sweep", || {
+        for a in ['a', 'd', 'i'] {
+            let w = by_annotation(a, &cfg);
+            for sf in [32u64, 64, 256, 1024, 2048] {
+                let mut c = cfg.clone();
+                c.axle.streaming_factor_bytes = sf;
+                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+            }
+        }
+    });
+
+    // Fig. 15: OoO × scheduler ablation.
+    bench("fig15_ooo_ablation", || {
+        for a in ['d', 'e', 'i'] {
+            for sched in [SchedPolicy::RoundRobin, SchedPolicy::Fifo] {
+                for ooo in [true, false] {
+                    let mut c = cfg.clone();
+                    c.sched = sched;
+                    c.axle.ooo_streaming = ooo;
+                    let w = by_annotation(a, &c);
+                    std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+                }
+            }
+        }
+    });
+
+    // Fig. 16: DMA slot capacity sweep (including the deadlock case).
+    bench("fig16_capacity_sweep", || {
+        for a in ['a', 'd', 'h', 'i'] {
+            for div in [1usize, 2, 4, 8] {
+                let mut c = cfg.clone();
+                c.axle.dma_slot_capacity /= div;
+                let w = by_annotation(a, &c);
+                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+            }
+        }
+    });
+
+    // Table IV: workload generation cost itself.
+    bench("table4_workload_generation", || {
+        for a in ALL_ANNOTATIONS {
+            std::hint::black_box(by_annotation(a, &cfg));
+        }
+    });
+}

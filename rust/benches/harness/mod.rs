@@ -1,0 +1,44 @@
+//! Minimal micro-benchmark harness (offline criterion stand-in).
+//!
+//! Measures wall time of a closure with warmup + repeated timed runs and
+//! prints mean / min / max per iteration. `cargo bench` runs both bench
+//! binaries (`harness = false`).
+
+use std::time::Instant;
+
+/// Benchmark `f`, printing a stats line tagged `name`.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) {
+    // Warmup + pick an iteration count targeting ~0.5 s total.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.5 / once) as usize).clamp(1, 1000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let max = samples.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "bench {name:<44} {:>10} iters  mean {:>12}  min {:>12}  max {:>12}",
+        iters,
+        fmt(mean),
+        fmt(min),
+        fmt(max)
+    );
+}
+
+fn fmt(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}

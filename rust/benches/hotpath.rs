@@ -1,0 +1,81 @@
+//! Hot-path micro-benchmarks: the simulator primitives the perf pass
+//! optimizes (EXPERIMENTS.md §Perf).
+
+mod harness;
+
+use axle::config::{Protocol, SimConfig};
+use axle::protocol;
+use axle::ring::{ProducerView, Ring};
+use axle::sim::{EventQueue, PuPool};
+use axle::util::rng::Pcg32;
+use axle::workload::by_annotation;
+use harness::bench;
+
+fn main() {
+    // Event queue: push/pop churn (the DES inner loop).
+    bench("event_queue_push_pop_100k", || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = Pcg32::seed_from_u64(1);
+        for i in 0..100_000u64 {
+            q.push_at(rng.below(1 << 30), i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    // Ring buffer: produce/consume churn with OoO gaps.
+    bench("ring_ooo_churn_100k", || {
+        let mut ring = Ring::new(1024);
+        let mut pv = ProducerView::new(1024);
+        let mut rng = Pcg32::seed_from_u64(2);
+        let mut outstanding: Vec<u64> = Vec::new();
+        for _ in 0..100_000 {
+            if outstanding.len() < 512 {
+                if let Some(first) = pv.try_claim(8) {
+                    ring.produce(8);
+                    outstanding.extend(first..first + 8);
+                }
+            }
+            if !outstanding.is_empty() {
+                let i = rng.below(outstanding.len() as u64) as usize;
+                let id = outstanding.swap_remove(i);
+                ring.consume(id);
+                pv.update_head(ring.head());
+            }
+        }
+    });
+
+    // PU pool dispatch.
+    bench("pu_pool_dispatch_100k", || {
+        let mut pool = PuPool::new(32);
+        let mut rng = Pcg32::seed_from_u64(3);
+        let mut ready = 0u64;
+        for _ in 0..100_000 {
+            ready += rng.below(100);
+            pool.dispatch(ready, rng.range(100, 10_000));
+        }
+    });
+
+    // Whole protocol runs on the heaviest workloads.
+    let cfg = SimConfig::m2ndp();
+    for (label, annot) in [("pagerank", 'e'), ("dlrm", 'i'), ("llm", 'h')] {
+        let w = by_annotation(annot, &cfg);
+        bench(&format!("axle_end_to_end_{label}"), || {
+            std::hint::black_box(protocol::run(Protocol::Axle, &w, &cfg));
+        });
+        bench(&format!("bs_end_to_end_{label}"), || {
+            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+        });
+    }
+
+    // Workload generation (RMAT etc. excluded — spec building only).
+    bench("workload_generation_all", || {
+        for a in axle::workload::ALL_ANNOTATIONS {
+            std::hint::black_box(by_annotation(a, &cfg));
+        }
+    });
+
+    // RMAT synthesis for the numerics path.
+    bench("rmat_generation_32k_edges", || {
+        std::hint::black_box(axle::workload::graph::SynthGraph::rmat(8192, 32_768, 7));
+    });
+}

@@ -1,0 +1,32 @@
+//! `axle-report`: regenerate every paper table/figure in one shot
+//! (used by `make fig-all`; thin alias over `axle report <which>`).
+
+use axle::config::SimConfig;
+use axle::report;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "all".to_string());
+    let cfg = SimConfig::m2ndp();
+    match which.as_str() {
+        "all" => report::all(),
+        "table1" => report::table1(),
+        "table2" => report::table2(),
+        "table4" => report::table4(&cfg),
+        "fig3" => report::fig3(&cfg),
+        "fig4" => report::fig4(),
+        "fig5" => report::fig5(&cfg),
+        "fig7" => report::fig7(&cfg),
+        "fig10" => report::fig10(&cfg),
+        "fig11" => report::fig11(),
+        "fig12" => report::fig12(&cfg),
+        "fig13" => report::fig13(&cfg),
+        "fig14" => report::fig14(&cfg),
+        "fig14-ext" => report::fig14_ext(&cfg),
+        "fig15" => report::fig15(&cfg),
+        "fig16" => report::fig16(&cfg),
+        other => {
+            eprintln!("unknown report {other:?}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Top-level coordinator: runs Table IV workloads under the offloading
+//! protocols, and validates the offloaded functions' numerics through the
+//! PJRT artifacts alongside the timing simulation.
+//!
+//! This is the leader process of the three-layer stack: it owns the
+//! simulation configs, compiles workload specs, drives the protocol
+//! engines, and (optionally) executes the AOT artifacts so that a run is
+//! both *timed* (discrete-event simulation at paper scale) and
+//! *functionally verified* (real kernel outputs at exec scale).
+
+pub mod numerics;
+
+use anyhow::Result;
+
+use crate::config::{Protocol, SimConfig};
+use crate::metrics::RunMetrics;
+use crate::protocol;
+use crate::runtime::Runtime;
+use crate::workload::{self, WorkloadSpec};
+
+pub use numerics::NumericsReport;
+
+/// Coordinates workload execution across protocols and the PJRT runtime.
+pub struct Coordinator {
+    cfg: SimConfig,
+    runtime: Option<Runtime>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Self { cfg, runtime: None }
+    }
+
+    /// Attach the AOT artifact runtime (enables numerics validation).
+    pub fn with_artifacts(mut self, dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        self.runtime = Some(Runtime::new(dir)?);
+        Ok(self)
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn set_config(&mut self, cfg: SimConfig) {
+        self.cfg = cfg;
+    }
+
+    /// Build the Table IV workload for `annot` under the current config.
+    pub fn workload(&self, annot: char) -> WorkloadSpec {
+        workload::by_annotation(annot, &self.cfg)
+    }
+
+    /// Run one workload under one protocol.
+    pub fn run(&self, annot: char, proto: Protocol) -> RunMetrics {
+        let w = self.workload(annot);
+        protocol::run(proto, &w, &self.cfg)
+    }
+
+    /// Run a prebuilt spec under one protocol (custom workloads).
+    pub fn run_spec(&self, w: &WorkloadSpec, proto: Protocol) -> RunMetrics {
+        protocol::run(proto, w, &self.cfg)
+    }
+
+    /// Run every Table IV workload under every requested protocol.
+    pub fn run_matrix(&self, protos: &[Protocol]) -> Vec<RunMetrics> {
+        let mut out = Vec::new();
+        for &a in &workload::ALL_ANNOTATIONS {
+            for &p in protos {
+                out.push(self.run(a, p));
+            }
+        }
+        out
+    }
+
+    /// Validate the offloaded numerics for workload `annot` through the
+    /// PJRT artifacts. Errors if artifacts are not attached/built.
+    pub fn validate_numerics(&mut self, annot: char) -> Result<NumericsReport> {
+        let rt = self
+            .runtime
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("no artifact runtime attached; run `make artifacts`"))?;
+        numerics::validate(rt, annot)
+    }
+
+    /// Validate numerics for all nine workloads.
+    pub fn validate_all_numerics(&mut self) -> Result<Vec<NumericsReport>> {
+        crate::workload::ALL_ANNOTATIONS
+            .iter()
+            .map(|&a| self.validate_numerics(a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Protocol;
+
+    #[test]
+    fn run_matrix_covers_everything() {
+        let c = Coordinator::new(SimConfig::m2ndp());
+        let ms = c.run_matrix(&[Protocol::Bs, Protocol::Axle]);
+        assert_eq!(ms.len(), 9 * 2);
+        assert!(ms.iter().all(|m| m.total > 0));
+    }
+
+    #[test]
+    fn custom_spec_runs() {
+        use crate::workload::{CcmTask, HostTask, IterSpec};
+        let c = Coordinator::new(SimConfig::m2ndp());
+        let w = WorkloadSpec {
+            name: "custom".into(),
+            annot: 'x',
+            domain: "test",
+            iters: vec![IterSpec {
+                ccm_tasks: vec![CcmTask { dur: 1000, result_bytes: 64 }],
+                host_tasks: vec![HostTask { dur: 1000, deps: vec![0] }],
+                host_serial: false,
+            }],
+        };
+        for p in Protocol::ALL {
+            let m = c.run_spec(&w, p);
+            assert!(m.total > 0, "{}", p.label());
+        }
+    }
+}

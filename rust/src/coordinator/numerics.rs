@@ -1,0 +1,450 @@
+//! Numerics validation: execute each workload's CCM-half and host-half
+//! artifacts through PJRT and check the results against straight Rust
+//! reference computations.
+//!
+//! This closes the loop across all three layers: the Pallas kernels (L1)
+//! were checked against jnp oracles at build time; here the *lowered HLO*
+//! the Rust coordinator actually runs is checked against an independent
+//! Rust implementation — any lowering, manifest, or marshaling bug fails
+//! loudly.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{literal_f32, literal_i32, prand_f32, prand_i32, Runtime};
+
+/// Outcome of one workload's numerics validation.
+#[derive(Debug, Clone)]
+pub struct NumericsReport {
+    pub annot: char,
+    pub artifacts: Vec<String>,
+    pub checks: u64,
+    pub max_rel_err: f64,
+}
+
+fn rel_err(got: f32, want: f32) -> f64 {
+    let denom = want.abs().max(1.0) as f64;
+    ((got - want).abs() as f64) / denom
+}
+
+/// Validate workload `annot`; see module docs.
+pub fn validate(rt: &mut Runtime, annot: char) -> Result<NumericsReport> {
+    match annot {
+        'a' => knn(rt, "knn_a", 2048, 128),
+        'b' => knn(rt, "knn_b", 1024, 256),
+        'c' => knn(rt, "knn_c", 512, 512),
+        'd' => sssp(rt),
+        'e' => pagerank(rt),
+        'f' | 'g' => ssb(rt, annot),
+        'h' => llm(rt),
+        'i' => dlrm(rt),
+        _ => Err(anyhow!("unknown annotation {annot:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// KNN: distances vs Rust; top-k must pick the true nearest rows sorted.
+// ---------------------------------------------------------------------
+
+fn knn(rt: &mut Runtime, prefix: &str, dim: usize, rows: usize) -> Result<NumericsReport> {
+    let q = prand_f32(dim, 11);
+    let db = prand_f32(rows * dim, 12);
+    let out = rt.execute_f32(&format!("{prefix}_ccm"), &[&q, &db])?;
+    let dists = &out[0];
+
+    let mut max_err = 0.0f64;
+    let mut want: Vec<f32> = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let w: f32 = (0..dim)
+            .map(|j| {
+                let d = db[r * dim + j] - q[j];
+                d * d
+            })
+            .sum();
+        max_err = max_err.max(rel_err(dists[r], w));
+        want.push(w);
+    }
+    if max_err > 1e-3 {
+        return Err(anyhow!("{prefix}_ccm distance error {max_err}"));
+    }
+
+    // Host half: top-k over the CCM's back-streamed distances.
+    let host = rt.execute_f32(&format!("{prefix}_host"), &[dists])?;
+    let (vals, idx) = (&host[0], &host[1]);
+    let k = vals.len();
+    let mut order: Vec<usize> = (0..rows).collect();
+    order.sort_by(|&a, &b| want[a].total_cmp(&want[b]));
+    for i in 0..k {
+        let got_i = idx[i] as usize;
+        // Equal distances may order arbitrarily; compare by value.
+        max_err = max_err.max(rel_err(vals[i], want[order[i]]));
+        max_err = max_err.max(rel_err(want[got_i], want[order[i]]));
+    }
+    if max_err > 1e-3 {
+        return Err(anyhow!("{prefix}_host top-k error {max_err}"));
+    }
+    Ok(NumericsReport {
+        annot: match prefix {
+            "knn_a" => 'a',
+            "knn_b" => 'b',
+            _ => 'c',
+        },
+        artifacts: vec![format!("{prefix}_ccm"), format!("{prefix}_host")],
+        checks: (rows + 2 * k) as u64,
+        max_rel_err: max_err,
+    })
+}
+
+// ---------------------------------------------------------------------
+// PageRank: one CCM+host step on an RMAT graph vs Rust reference.
+// ---------------------------------------------------------------------
+
+fn graph_scale(rt: &Runtime, name: &str) -> Result<(usize, usize)> {
+    let meta = &rt.entry(name)?.meta;
+    let v = meta.get("v").as_usize().ok_or_else(|| anyhow!("manifest meta.v"))?;
+    let e = meta.get("e").as_usize().ok_or_else(|| anyhow!("manifest meta.e"))?;
+    Ok((v, e))
+}
+
+fn pagerank(rt: &mut Runtime) -> Result<NumericsReport> {
+    let (v, e) = graph_scale(rt, "pagerank_ccm")?;
+    let g = crate::workload::graph::SynthGraph::rmat(v, e, 99);
+    let src: Vec<i32> = g.src.iter().map(|&x| x as i32).collect();
+    let dst: Vec<i32> = g.dst.iter().map(|&x| x as i32).collect();
+    let ranks: Vec<f32> = vec![1.0 / v as f32; v];
+    let inv_deg: Vec<f32> = g.out_deg.iter().map(|&d| 1.0 / (d.max(1) as f32)).collect();
+
+    // CCM half: per-edge contributions.
+    let contrib = {
+        let lits = vec![
+            literal_f32(&ranks, &[v])?,
+            literal_f32(&inv_deg, &[v])?,
+            literal_i32(&src, &[e])?,
+        ];
+        let out = rt.execute("pagerank_ccm", &lits)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+    };
+    let mut max_err = 0.0f64;
+    for i in 0..e {
+        let s = src[i] as usize;
+        let want = ranks[s] * inv_deg[s];
+        max_err = max_err.max(rel_err(contrib[i], want));
+    }
+    if max_err > 1e-4 {
+        return Err(anyhow!("pagerank_ccm contribution error {max_err}"));
+    }
+
+    // Host half: segment sum + damped update.
+    let new_ranks = {
+        let lits = vec![literal_f32(&contrib, &[e])?, literal_i32(&dst, &[e])?];
+        let out = rt.execute("pagerank_host", &lits)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+    };
+    let mut want = vec![0.0f32; v];
+    for i in 0..e {
+        want[dst[i] as usize] += contrib[i];
+    }
+    let damping = 0.85f32;
+    for x in want.iter_mut() {
+        *x = (1.0 - damping) / v as f32 + damping * *x;
+    }
+    for i in 0..v {
+        max_err = max_err.max(rel_err(new_ranks[i], want[i]));
+    }
+    if max_err > 1e-3 {
+        return Err(anyhow!("pagerank_host update error {max_err}"));
+    }
+    Ok(NumericsReport {
+        annot: 'e',
+        artifacts: vec!["pagerank_ccm".into(), "pagerank_host".into()],
+        checks: (e + v) as u64,
+        max_rel_err: max_err,
+    })
+}
+
+// ---------------------------------------------------------------------
+// SSSP: one relaxation round vs Rust Bellman-Ford step.
+// ---------------------------------------------------------------------
+
+fn sssp(rt: &mut Runtime) -> Result<NumericsReport> {
+    let (v, e) = graph_scale(rt, "sssp_ccm")?;
+    let g = crate::workload::graph::SynthGraph::rmat(v, e, 123);
+    let src: Vec<i32> = g.src.iter().map(|&x| x as i32).collect();
+    let dst: Vec<i32> = g.dst.iter().map(|&x| x as i32).collect();
+    let w: Vec<f32> = prand_f32(e, 5).iter().map(|x| x.abs() + 0.01).collect();
+    let inf = 1e9f32;
+    let mut dist = vec![inf; v];
+    dist[0] = 0.0;
+    // Seed a few more sources so one round relaxes many edges.
+    for i in 1..8 {
+        dist[(i * 37) % v] = i as f32;
+    }
+    let ones = vec![1.0f32; v];
+
+    let cand = {
+        let lits = vec![
+            literal_f32(&dist, &[v])?,
+            literal_f32(&ones, &[v])?,
+            literal_i32(&src, &[e])?,
+            literal_f32(&w, &[e])?,
+        ];
+        let out = rt.execute("sssp_ccm", &lits)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+    };
+    let mut max_err = 0.0f64;
+    for i in 0..e {
+        let want = dist[src[i] as usize] + w[i];
+        max_err = max_err.max(rel_err(cand[i], want));
+    }
+    if max_err > 1e-4 {
+        return Err(anyhow!("sssp_ccm candidate error {max_err}"));
+    }
+
+    let new_dist = {
+        let lits = vec![
+            literal_f32(&cand, &[e])?,
+            literal_i32(&dst, &[e])?,
+            literal_f32(&dist, &[v])?,
+        ];
+        let out = rt.execute("sssp_host", &lits)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+    };
+    let mut want = dist.clone();
+    for i in 0..e {
+        let d = dst[i] as usize;
+        want[d] = want[d].min(cand[i]);
+    }
+    let mut checks = e as u64;
+    for i in 0..v {
+        max_err = max_err.max(rel_err(new_dist[i], want[i]));
+        // Monotonicity: relaxation never increases distances.
+        if new_dist[i] > dist[i] * 1.0001 {
+            return Err(anyhow!("sssp_host increased dist[{i}]"));
+        }
+        checks += 1;
+    }
+    if max_err > 1e-3 {
+        return Err(anyhow!("sssp_host min-merge error {max_err}"));
+    }
+    Ok(NumericsReport {
+        annot: 'd',
+        artifacts: vec!["sssp_ccm".into(), "sssp_host".into()],
+        checks,
+        max_rel_err: max_err,
+    })
+}
+
+// ---------------------------------------------------------------------
+// SSB Q1: marks vs Rust predicate; revenue vs Rust aggregation.
+// ---------------------------------------------------------------------
+
+fn ssb(rt: &mut Runtime, annot: char) -> Result<NumericsReport> {
+    let n = rt.entry("ssb_q1_ccm")?.inputs[0].shape[0];
+    let q = if annot == 'f' {
+        crate::workload::olap::SsbQuery::Q1_1
+    } else {
+        crate::workload::olap::SsbQuery::Q1_2
+    };
+    let (db, qb) = q.bounds();
+    // Synthetic lineorder columns: integer-valued discounts 0..=10,
+    // quantities 1..=50, prices.
+    let discount: Vec<f32> = prand_i32(n, 11, 21).iter().map(|&x| x as f32).collect();
+    let quantity: Vec<f32> = prand_i32(n, 50, 22).iter().map(|&x| (x + 1) as f32).collect();
+    let price: Vec<f32> = prand_f32(n, 23).iter().map(|x| (x + 1.5) * 1000.0).collect();
+
+    let marks = {
+        let out = rt.execute_f32(
+            "ssb_q1_ccm",
+            &[&discount, &quantity, &[db[0], db[1]], &[qb[0], qb[1]]],
+        )?;
+        out.into_iter().next().unwrap()
+    };
+    let mut max_err = 0.0f64;
+    let mut want_marks = Vec::with_capacity(n);
+    for i in 0..n {
+        let m = (discount[i] >= db[0]
+            && discount[i] <= db[1]
+            && quantity[i] >= qb[0]
+            && quantity[i] <= qb[1]) as i32 as f32;
+        if marks[i] != m {
+            return Err(anyhow!("ssb mark mismatch at {i}: got {} want {m}", marks[i]));
+        }
+        want_marks.push(m);
+    }
+
+    let revenue = {
+        let out = rt.execute_f32("ssb_q1_host", &[&marks, &price, &discount])?;
+        out[0][0]
+    };
+    let want_rev: f64 = (0..n)
+        .map(|i| (want_marks[i] * price[i] * discount[i]) as f64)
+        .sum();
+    max_err = max_err.max((revenue as f64 - want_rev).abs() / want_rev.abs().max(1.0));
+    if max_err > 1e-3 {
+        return Err(anyhow!("ssb revenue error {max_err}: got {revenue}, want {want_rev}"));
+    }
+    Ok(NumericsReport {
+        annot,
+        artifacts: vec!["ssb_q1_ccm".into(), "ssb_q1_host".into()],
+        checks: n as u64 + 1,
+        max_rel_err: max_err,
+    })
+}
+
+// ---------------------------------------------------------------------
+// LLM: attention block vs Rust reference implementation; MLP sanity.
+// ---------------------------------------------------------------------
+
+fn llm(rt: &mut Runtime) -> Result<NumericsReport> {
+    let entry = rt.entry("llm_attn_ccm")?.clone();
+    let hidden = entry.inputs[0].shape[1];
+    let (heads, tokens, hd) = (
+        entry.inputs[1].shape[0],
+        entry.inputs[1].shape[1],
+        entry.inputs[1].shape[2],
+    );
+    let scale = 0.05f32;
+    let x: Vec<f32> = prand_f32(hidden, 31).iter().map(|v| v * 0.1).collect();
+    let kc: Vec<f32> = prand_f32(heads * tokens * hd, 32).iter().map(|v| v * 0.1).collect();
+    let vc: Vec<f32> = prand_f32(heads * tokens * hd, 33).iter().map(|v| v * 0.1).collect();
+    let wqkv: Vec<f32> = prand_f32(hidden * 3 * hidden, 34).iter().map(|v| v * scale).collect();
+    let wo: Vec<f32> = prand_f32(hidden * hidden, 35).iter().map(|v| v * scale).collect();
+    let ln_g = vec![1.0f32; hidden];
+    let ln_b = vec![0.0f32; hidden];
+
+    let out = rt.execute_f32(
+        "llm_attn_ccm",
+        &[&x, &kc, &vc, &wqkv, &wo, &ln_g, &ln_b],
+    )?;
+    let got = &out[0];
+    let want = attention_block_ref(&x, &kc, &vc, &wqkv, &wo, hidden, heads, tokens, hd);
+    let mut max_err = 0.0f64;
+    for i in 0..hidden {
+        max_err = max_err.max(rel_err(got[i], want[i]));
+    }
+    if max_err > 5e-3 {
+        return Err(anyhow!("llm_attn_ccm error {max_err}"));
+    }
+
+    // Host MLP: sanity (finite, residual-shaped).
+    let ffn = rt.entry("llm_mlp_host")?.inputs[1].shape[1];
+    let w1: Vec<f32> = prand_f32(hidden * ffn, 36).iter().map(|v| v * scale).collect();
+    let b1 = vec![0.0f32; ffn];
+    let w2: Vec<f32> = prand_f32(ffn * hidden, 37).iter().map(|v| v * scale).collect();
+    let b2 = vec![0.0f32; hidden];
+    let mlp = rt.execute_f32("llm_mlp_host", &[got, &w1, &b1, &w2, &b2])?;
+    if !mlp[0].iter().all(|v| v.is_finite()) {
+        return Err(anyhow!("llm_mlp_host produced non-finite values"));
+    }
+    Ok(NumericsReport {
+        annot: 'h',
+        artifacts: vec!["llm_attn_ccm".into(), "llm_mlp_host".into()],
+        checks: (hidden * 2) as u64,
+        max_rel_err: max_err,
+    })
+}
+
+/// Straight-Rust reference of the attention block (layernorm → qkv →
+/// per-head SDPA → out proj → residual), mirroring `model.attention_block_ccm`.
+#[allow(clippy::too_many_arguments)]
+fn attention_block_ref(
+    x: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    wqkv: &[f32],
+    wo: &[f32],
+    hidden: usize,
+    heads: usize,
+    tokens: usize,
+    hd: usize,
+) -> Vec<f32> {
+    // LayerNorm.
+    let mu: f32 = x.iter().sum::<f32>() / hidden as f32;
+    let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / hidden as f32;
+    let ln: Vec<f32> = x.iter().map(|v| (v - mu) / (var + 1e-5).sqrt()).collect();
+    // q = ln @ wqkv[:, :hidden].
+    let mut q = vec![0.0f32; hidden];
+    for (j, qj) in q.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for i in 0..hidden {
+            acc += ln[i] * wqkv[i * 3 * hidden + j];
+        }
+        *qj = acc;
+    }
+    // Per-head attention over the cache.
+    let mut attn = vec![0.0f32; hidden];
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..heads {
+        let qh = &q[h * hd..(h + 1) * hd];
+        let mut scores = vec![0.0f32; tokens];
+        for t in 0..tokens {
+            let base = h * tokens * hd + t * hd;
+            scores[t] = (0..hd).map(|j| kc[base + j] * qh[j]).sum::<f32>() * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut p: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+        let sum: f32 = p.iter().sum();
+        p.iter_mut().for_each(|v| *v /= sum);
+        for j in 0..hd {
+            attn[h * hd + j] = (0..tokens)
+                .map(|t| p[t] * vc[h * tokens * hd + t * hd + j])
+                .sum();
+        }
+    }
+    // Out projection + residual.
+    let mut out = vec![0.0f32; hidden];
+    for (j, oj) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for i in 0..hidden {
+            acc += attn[i] * wo[i * hidden + j];
+        }
+        *oj = x[j] + acc;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// DLRM: SLS vs Rust gather-sum; host MLP output in sigmoid range.
+// ---------------------------------------------------------------------
+
+fn dlrm(rt: &mut Runtime) -> Result<NumericsReport> {
+    let e = rt.entry("dlrm_ccm")?.clone();
+    let (vocab, dim) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+    let (batch, lookups) = (e.inputs[1].shape[0], e.inputs[1].shape[1]);
+    let table = prand_f32(vocab * dim, 41);
+    let idx = prand_i32(batch * lookups, vocab as i32, 42);
+
+    let pooled = {
+        let lits = vec![
+            literal_f32(&table, &[vocab, dim])?,
+            literal_i32(&idx, &[batch, lookups])?,
+        ];
+        let out = rt.execute("dlrm_ccm", &lits)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?
+    };
+    let mut max_err = 0.0f64;
+    for b in 0..batch {
+        for d in 0..dim {
+            let want: f32 = (0..lookups)
+                .map(|l| table[idx[b * lookups + l] as usize * dim + d])
+                .sum();
+            max_err = max_err.max(rel_err(pooled[b * dim + d], want));
+        }
+    }
+    if max_err > 1e-3 {
+        return Err(anyhow!("dlrm_ccm SLS error {max_err}"));
+    }
+
+    let dense = prand_f32(batch * dim, 43);
+    let w = prand_f32(2 * dim, 44);
+    let out = rt.execute_f32("dlrm_host", &[&pooled, &dense, &w])?;
+    // Sigmoid range [0, 1]; saturated logits legitimately hit the ends in f32.
+    if !out[0].iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)) {
+        return Err(anyhow!("dlrm_host sigmoid out of range"));
+    }
+    Ok(NumericsReport {
+        annot: 'i',
+        artifacts: vec!["dlrm_ccm".into(), "dlrm_host".into()],
+        checks: (batch * dim) as u64,
+        max_rel_err: max_err,
+    })
+}

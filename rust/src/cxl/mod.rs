@@ -1,0 +1,162 @@
+//! CXL link models: CXL.mem and CXL.io channels (§II, Table III).
+//!
+//! Both protocols ride the same PCIe PHY but with very different
+//! transaction-layer costs (the paper's central trade-off):
+//!
+//! - **CXL.mem** — byte-addressable loads/stores in 64 B flits, low
+//!   round-trip protocol latency (70 ns in Table III). Used by BS for
+//!   kernel launch + synchronous result loads, and by AXLE for launches
+//!   and flow-control messages.
+//! - **CXL.io** — PCIe-semantics messages/DMA, higher round-trip latency
+//!   (350 ns). Used by RP for mailbox commands + remote polling, and by
+//!   AXLE for device-initiated back-streaming posted writes.
+//!
+//! A link serializes payload bytes at its effective bandwidth and adds
+//! one-way (`rtt/2`) or full-RTT latency per message. Busy intervals feed
+//! the paper's "data movement time" (T_D) union statistic.
+
+use crate::sim::{transfer_ps, BusyTracker, Ps};
+
+/// Message classes, used for accounting and tracing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Kernel-launch store / descriptor write (CXL.mem).
+    Launch,
+    /// Synchronous result load (CXL.mem data flits).
+    ResultLoad,
+    /// Mailbox command or remote poll (CXL.io).
+    Mailbox,
+    /// Back-streamed DMA payload (CXL.io posted write).
+    DmaPayload,
+    /// DMA tail-update message (CXL.io).
+    DmaTailUpdate,
+    /// Flow-control head-index store (CXL.mem).
+    FlowControl,
+}
+
+/// A unidirectional-bandwidth, latency-padded channel.
+#[derive(Debug)]
+pub struct Link {
+    /// Round-trip protocol latency.
+    rtt: Ps,
+    /// Effective data bandwidth, GB/s.
+    bw_gbps: f64,
+    /// Serialization frontier: when the wire frees up.
+    wire_free: Ps,
+    busy: BusyTracker,
+    msgs: u64,
+    bytes: u64,
+}
+
+impl Link {
+    pub fn new(rtt: Ps, bw_gbps: f64) -> Self {
+        Self { rtt, bw_gbps, wire_free: 0, busy: BusyTracker::new(), msgs: 0, bytes: 0 }
+    }
+
+    #[inline]
+    pub fn rtt(&self) -> Ps {
+        self.rtt
+    }
+
+    /// One-way protocol latency.
+    #[inline]
+    pub fn one_way(&self) -> Ps {
+        self.rtt / 2
+    }
+
+    /// Send `bytes` at time `t`; returns the **arrival** time at the far
+    /// side (serialization + one-way latency). Wire occupancy counts
+    /// toward data-movement busy time only if `count_dm` (control
+    /// messages are protocol overhead, not data movement).
+    pub fn send(&mut self, t: Ps, bytes: u64, count_dm: bool) -> Ps {
+        let ser = transfer_ps(bytes, self.bw_gbps);
+        let start = t.max(self.wire_free);
+        let wire_done = start + ser;
+        self.wire_free = wire_done;
+        self.msgs += 1;
+        self.bytes += bytes;
+        if count_dm && bytes > 0 {
+            self.busy.record(start, wire_done + self.one_way());
+        }
+        wire_done + self.one_way()
+    }
+
+    /// Round-trip request/response of `bytes` payload returning at
+    /// `send(t, bytes) + one_way` (e.g. a synchronous CXL.mem load: the
+    /// request travels one way, data flits return).
+    pub fn round_trip(&mut self, t: Ps, bytes: u64, count_dm: bool) -> Ps {
+        // Request one-way, then data serialization + response one-way.
+        let req_arrive = t + self.one_way();
+        let ser = transfer_ps(bytes, self.bw_gbps);
+        let start = req_arrive.max(self.wire_free);
+        let done = start + ser;
+        self.wire_free = done;
+        self.msgs += 1;
+        self.bytes += bytes;
+        let arrive = done + self.one_way();
+        if count_dm && bytes > 0 {
+            self.busy.record(start, arrive);
+        }
+        arrive
+    }
+
+    /// Data-movement busy statistics (T_D accounting).
+    #[inline]
+    pub fn busy(&self) -> &BusyTracker {
+        &self.busy
+    }
+
+    #[inline]
+    pub fn messages(&self) -> u64 {
+        self.msgs
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+
+    #[test]
+    fn zero_byte_message_costs_latency_only() {
+        let mut l = Link::new(70 * NS, 32.0);
+        assert_eq!(l.send(0, 0, false), 35 * NS);
+    }
+
+    #[test]
+    fn serialization_adds_to_latency() {
+        let mut l = Link::new(70 * NS, 32.0);
+        // 64 B at 32 GB/s = 2 ns.
+        assert_eq!(l.send(0, 64, true), 2 * NS + 35 * NS);
+    }
+
+    #[test]
+    fn wire_serializes_back_to_back_messages() {
+        let mut l = Link::new(0, 1.0); // 1 GB/s, no latency
+        let a = l.send(0, 1_000_000, true); // 1 ms serialization
+        let b = l.send(0, 1_000_000, true); // queued behind the first
+        assert_eq!(a, 1_000_000 * NS);
+        assert_eq!(b, 2_000_000 * NS);
+    }
+
+    #[test]
+    fn round_trip_includes_both_directions() {
+        let mut l = Link::new(70 * NS, 32.0);
+        let back = l.round_trip(0, 64, true);
+        assert_eq!(back, 35 * NS + 2 * NS + 35 * NS);
+    }
+
+    #[test]
+    fn dm_accounting_only_when_requested() {
+        let mut l = Link::new(70 * NS, 32.0);
+        l.send(0, 4096, false);
+        assert_eq!(l.busy().total(), 0);
+        l.send(0, 4096, true);
+        assert!(l.busy().total() > 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # AXLE — Coordinated Offloading with Asynchronous Back-Streaming in
+//! # Computational Memory Systems (full-system reproduction)
+//!
+//! This crate reproduces the AXLE paper's system and evaluation:
+//!
+//! - a deterministic **discrete-event CCM simulator** standing in for the
+//!   M²NDP testbed ([`sim`], [`cxl`], [`mem`], [`ring`]);
+//! - the four **partial-offloading mechanisms** ([`protocol`]): Remote
+//!   Polling, Bulk-Synchronous flow, AXLE's Asynchronous Back-Streaming
+//!   and its interrupt-notification variant;
+//! - the nine **Table IV workloads** ([`workload`]);
+//! - a **PJRT runtime** ([`runtime`]) that executes the offloaded
+//!   functions' actual numerics from AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) — Python never runs at simulation time;
+//! - metrics and **figure/table regenerators** ([`metrics`], [`report`]);
+//! - the top-level [`coordinator`] that runs workloads × protocols and
+//!   validates numerics alongside timing.
+//!
+//! Start with `examples/quickstart.rs`, or `cargo run --release --bin
+//! axle-report -- all` to regenerate every paper figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod util;
+pub mod cxl;
+pub mod mem;
+pub mod metrics;
+pub mod protocol;
+pub mod report;
+pub mod ring;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+
+pub use config::{poll_factors, Protocol, SchedPolicy, SimConfig};
+pub use coordinator::Coordinator;
+pub use metrics::RunMetrics;
+pub use workload::{by_annotation, WorkloadSpec, ALL_ANNOTATIONS};

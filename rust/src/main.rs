@@ -1,0 +1,226 @@
+//! `axle` CLI: the leader entrypoint for the AXLE reproduction.
+//!
+//! ```text
+//! axle run --workload e --protocol axle --poll-ns 500
+//! axle matrix [--profile real-hw|reduced]
+//! axle validate [--artifacts DIR] [--workload e]
+//! axle report fig10 | all | ...
+//! axle list
+//! axle config [--out cfg.json] / axle run --config cfg.json ...
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use axle::config::{Protocol, SchedPolicy, SimConfig};
+use axle::sim::{ps_to_us, NS};
+use axle::util::args::Args;
+use axle::util::json::Json;
+use axle::{report, Coordinator};
+
+const USAGE: &str = "\
+axle — asynchronous back-streaming CCM offloading (paper reproduction)
+
+USAGE:
+  axle run --workload <a..i> [--protocol rp|bs|axle|axle-interrupt]
+           [--profile m2ndp|real-hw|reduced] [--config FILE.json]
+           [--poll-ns N] [--sf BYTES] [--adaptive-sf] [--capacity SLOTS]
+           [--no-ooo] [--fifo] [--seed N] [--json]
+  axle matrix [--profile ...]
+  axle validate [--artifacts DIR] [--workload <a..i>]
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16>
+  axle config [--out FILE.json]     # dump the Table III defaults
+  axle list
+";
+
+fn parse_protocol(s: &str) -> Result<Protocol> {
+    Ok(match s {
+        "rp" => Protocol::Rp,
+        "bs" => Protocol::Bs,
+        "axle" => Protocol::Axle,
+        "axle-interrupt" | "axle_interrupt" => Protocol::AxleInterrupt,
+        _ => bail!("unknown protocol {s:?} (rp|bs|axle|axle-interrupt)"),
+    })
+}
+
+fn parse_profile(s: &str) -> Result<SimConfig> {
+    Ok(match s {
+        "m2ndp" => SimConfig::m2ndp(),
+        "real-hw" | "real_hw" => SimConfig::real_hw(),
+        "reduced" => SimConfig::reduced(),
+        _ => bail!("unknown profile {s:?} (m2ndp|real-hw|reduced)"),
+    })
+}
+
+fn build_config(a: &Args) -> Result<SimConfig> {
+    let mut cfg = match a.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            SimConfig::from_json(&Json::parse(&text).context("parsing config JSON")?)
+        }
+        None => parse_profile(a.get("profile").unwrap_or("m2ndp"))?,
+    };
+    if let Some(p) = a.get_as::<u64>("poll-ns") {
+        cfg.axle.poll_interval = p * NS;
+    }
+    if let Some(s) = a.get_as::<u64>("sf") {
+        cfg.axle.streaming_factor_bytes = s;
+    }
+    if let Some(c) = a.get_as::<usize>("capacity") {
+        cfg.axle.dma_slot_capacity = c;
+    }
+    if let Some(s) = a.get_as::<u64>("seed") {
+        cfg.seed = s;
+    }
+    if a.has("no-ooo") {
+        cfg.axle.ooo_streaming = false;
+    }
+    if a.has("adaptive-sf") {
+        cfg.axle.sf_policy = axle::config::SfPolicy::Adaptive;
+    }
+    if a.has("fifo") {
+        cfg.sched = SchedPolicy::Fifo;
+    }
+    Ok(cfg)
+}
+
+fn workload_arg(a: &Args) -> Result<char> {
+    let s = a
+        .get("workload")
+        .or_else(|| a.get("w"))
+        .context("missing --workload <a..i>")?;
+    let c = s.chars().next().unwrap();
+    if !('a'..='i').contains(&c) {
+        bail!("workload must be a..i (Table IV)");
+    }
+    Ok(c)
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env();
+    match a.command() {
+        Some("run") => {
+            let cfg = build_config(&a)?;
+            let proto = parse_protocol(a.get("protocol").or_else(|| a.get("p")).unwrap_or("axle"))?;
+            let coord = Coordinator::new(cfg);
+            let m = coord.run(workload_arg(&a)?, proto);
+            if a.has("json") {
+                println!("{}", m.to_json());
+                return Ok(());
+            }
+            println!("{} under {}:", m.workload, m.protocol);
+            println!("  total          {:12.2} us", ps_to_us(m.total));
+            println!(
+                "  T_C (CCM busy) {:12.2} us ({:5.1}%)",
+                ps_to_us(m.ccm_busy),
+                100.0 * m.frac(m.ccm_busy)
+            );
+            println!(
+                "  T_D (data mv)  {:12.2} us ({:5.1}%)",
+                ps_to_us(m.dm_busy),
+                100.0 * m.frac(m.dm_busy)
+            );
+            println!(
+                "  T_H (host)     {:12.2} us ({:5.1}%)",
+                ps_to_us(m.host_busy),
+                100.0 * m.frac(m.host_busy)
+            );
+            println!(
+                "  CCM idle       {:12.2} us ({:5.1}%)",
+                ps_to_us(m.ccm_idle()),
+                100.0 * m.frac(m.ccm_idle())
+            );
+            println!(
+                "  host idle      {:12.2} us ({:5.1}%)",
+                ps_to_us(m.host_idle()),
+                100.0 * m.frac(m.host_idle())
+            );
+            let stall = m.host_stall.min(m.total);
+            println!(
+                "  host stall     {:12.2} us ({:5.1}%)",
+                ps_to_us(stall),
+                100.0 * m.frac(stall)
+            );
+            println!("  backpressure   {:12.2} us", ps_to_us(m.backpressure));
+            println!(
+                "  polls {}  dma batches {}  fc msgs {}  events {}",
+                m.polls, m.dma_batches, m.fc_messages, m.events
+            );
+            if m.deadlock {
+                println!("  !! DEADLOCK detected");
+            }
+        }
+        Some("matrix") => {
+            let coord = Coordinator::new(build_config(&a)?);
+            println!(
+                "{:<4} {:<16} {:>12} {:>8} {:>8} {:>8} {:>8}",
+                "WL", "protocol", "total(us)", "T_C%", "T_D%", "T_H%", "stall%"
+            );
+            for m in coord.run_matrix(&Protocol::ALL) {
+                println!(
+                    "({})  {:<16} {:>12.2} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%{}",
+                    m.annot,
+                    m.protocol,
+                    ps_to_us(m.total),
+                    100.0 * m.frac(m.ccm_busy),
+                    100.0 * m.frac(m.dm_busy),
+                    100.0 * m.frac(m.host_busy),
+                    100.0 * m.frac(m.host_stall.min(m.total)),
+                    if m.deadlock { "  DEADLOCK" } else { "" }
+                );
+            }
+        }
+        Some("validate") => {
+            let dir = a.get("artifacts").unwrap_or("artifacts");
+            let mut coord = Coordinator::new(SimConfig::m2ndp()).with_artifacts(dir)?;
+            let reports = match a.get("workload").or_else(|| a.get("w")) {
+                Some(_) => vec![coord.validate_numerics(workload_arg(&a)?)?],
+                None => coord.validate_all_numerics()?,
+            };
+            for r in reports {
+                println!(
+                    "({}) artifacts {:?}: {} checks, max rel err {:.2e} -- OK",
+                    r.annot, r.artifacts, r.checks, r.max_rel_err
+                );
+            }
+        }
+        Some("report") => {
+            let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let cfg = SimConfig::m2ndp();
+            match which {
+                "all" => report::all(),
+                "table1" => report::table1(),
+                "table2" => report::table2(),
+                "table4" => report::table4(&cfg),
+                "fig3" => report::fig3(&cfg),
+                "fig4" => report::fig4(),
+                "fig5" => report::fig5(&cfg),
+                "fig7" => report::fig7(&cfg),
+                "fig10" => report::fig10(&cfg),
+                "fig11" => report::fig11(),
+                "fig12" => report::fig12(&cfg),
+                "fig13" => report::fig13(&cfg),
+                "fig14" => report::fig14(&cfg),
+                "fig14-ext" => report::fig14_ext(&cfg),
+                "fig15" => report::fig15(&cfg),
+                "fig16" => report::fig16(&cfg),
+                other => bail!("unknown report {other:?}"),
+            }
+        }
+        Some("config") => {
+            let cfg = build_config(&a)?;
+            let text = cfg.to_json().to_string();
+            match a.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!("wrote {path}");
+                }
+                None => println!("{text}"),
+            }
+        }
+        Some("list") => report::table4(&SimConfig::m2ndp()),
+        _ => {
+            print!("{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! DRAM timing model (DDR5-4800, 16 channels on both sides — Table III).
+//!
+//! The workload cost models (`workload::cost`) use this to convert byte
+//! traffic into time. We model channel-level aggregate bandwidth with an
+//! access-pattern derate rather than per-bank state: the paper's
+//! conclusions depend on the *ratio* of memory-bound kernel time to data
+//! movement and host time, all of which scale with effective bandwidth.
+
+use crate::sim::{transfer_ps, Ps};
+
+/// Cache-line / DRAM burst granularity in bytes.
+pub const LINE_BYTES: u64 = 64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DramModel {
+    /// Peak aggregate bandwidth, GB/s (channels × per-channel rate).
+    pub peak_gbps: f64,
+    /// Sustained fraction of peak for streaming access.
+    pub stream_eff: f64,
+    /// Sustained fraction of peak for random line-granularity access.
+    pub random_eff: f64,
+    /// Idle access latency (closed-page) for a single line.
+    pub latency: Ps,
+}
+
+impl DramModel {
+    /// DDR5-4800 × `channels`: 4.8 GT/s × 8 B per channel.
+    pub fn ddr5_4800(channels: u32) -> Self {
+        Self {
+            peak_gbps: 4.8 * 8.0 * channels as f64,
+            stream_eff: 0.85,
+            // Line-granularity random sustained fraction. Together with
+            // the 16 GB/s effective CXL bandwidth this puts PageRank's
+            // T_C:T_D at 53:41 (paper Fig. 5b: 49.9:48) — the two terms
+            // that bound the headline end-to-end reduction.
+            random_eff: 0.35,
+            latency: 90_000, // 90 ns closed-page access
+        }
+    }
+
+    /// Effective streaming bandwidth, GB/s.
+    #[inline]
+    pub fn stream_gbps(&self) -> f64 {
+        self.peak_gbps * self.stream_eff
+    }
+
+    /// Time to stream `bytes` sequentially.
+    #[inline]
+    pub fn stream_time(&self, bytes: u64) -> Ps {
+        transfer_ps(bytes, self.stream_gbps())
+    }
+
+    /// Time for `accesses` random reads of `bytes_per_access` each:
+    /// every access occupies at least one full line of bandwidth.
+    pub fn random_time(&self, accesses: u64, bytes_per_access: u64) -> Ps {
+        let lines = accesses * bytes_per_access.div_ceil(LINE_BYTES).max(1);
+        transfer_ps(lines * LINE_BYTES, self.peak_gbps * self.random_eff)
+    }
+
+    /// Latency of one uncached access (e.g. the host's cache-bypass poll
+    /// of the metadata tail pointer, §IV-C cache-staleness design).
+    #[inline]
+    pub fn uncached_access(&self) -> Ps {
+        self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr5_16ch_peak() {
+        let d = DramModel::ddr5_4800(16);
+        assert!((d.peak_gbps - 614.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn stream_faster_than_random() {
+        let d = DramModel::ddr5_4800(16);
+        let bytes = 1 << 20;
+        assert!(d.stream_time(bytes) < d.random_time(bytes / 4, 4));
+    }
+
+    #[test]
+    fn random_access_rounds_to_lines() {
+        let d = DramModel::ddr5_4800(1);
+        // 100 accesses of 4 B each cost 100 lines, same as 100 of 64 B.
+        assert_eq!(d.random_time(100, 4), d.random_time(100, 64));
+        // ...but 100 of 65 B cost two lines each.
+        assert_eq!(d.random_time(100, 65), d.random_time(200, 64));
+    }
+
+    #[test]
+    fn zero_bytes_zero_time() {
+        let d = DramModel::ddr5_4800(16);
+        assert_eq!(d.stream_time(0), 0);
+    }
+}

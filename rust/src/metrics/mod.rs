@@ -1,0 +1,176 @@
+//! Run metrics: the quantities the paper's evaluation reports.
+//!
+//! - **end-to-end runtime** (Fig. 10/11): completion time of the last host
+//!   task of the last iteration;
+//! - **component times** T_C / T_D / T_H (Fig. 5): busy-union of the CCM
+//!   pool, CXL data movement, and the host pool;
+//! - **two idle times** (Fig. 7/12): `total - busy_union` per side — idle
+//!   aggregates launch latency, stalls and opposite-side waiting, exactly
+//!   the paper's §III-C accounting;
+//! - **host core stall time** (Fig. 13): cycles spent on CXL/local memory
+//!   operations of the offload interaction (remote polls, synchronous
+//!   loads, local uncached polls, flow-control stores);
+//! - **back-pressure cycles** (Fig. 16b): time the CCM's DMA executor is
+//!   blocked waiting for host ring credit.
+
+use std::collections::BTreeMap;
+
+use crate::sim::Ps;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub workload: String,
+    pub annot: char,
+    pub protocol: String,
+    /// End-to-end runtime.
+    pub total: Ps,
+    /// CCM processing busy-union (T_C).
+    pub ccm_busy: Ps,
+    /// Data movement busy-union (T_D).
+    pub dm_busy: Ps,
+    /// Host task busy-union (T_H).
+    pub host_busy: Ps,
+    /// Host core stall time (Fig. 13 metric).
+    pub host_stall: Ps,
+    /// CCM DMA executor blocked on ring credit (Fig. 16b metric).
+    pub backpressure: Ps,
+    /// Simulation event count (engine load, perf accounting).
+    pub events: u64,
+    /// Remote/local polls issued.
+    pub polls: u64,
+    /// Back-streaming DMA batches sent (AXLE).
+    pub dma_batches: u64,
+    /// Flow-control messages sent host→CCM (AXLE).
+    pub fc_messages: u64,
+    /// Result bytes moved CCM→host.
+    pub result_bytes: u64,
+    /// True if the run ended in a detected deadlock (Fig. 16's (h) case).
+    pub deadlock: bool,
+}
+
+impl RunMetrics {
+    /// CCM idle time (paper Observation #3): total − T_C.
+    pub fn ccm_idle(&self) -> Ps {
+        self.total.saturating_sub(self.ccm_busy)
+    }
+
+    /// Host idle time: total − T_H.
+    pub fn host_idle(&self) -> Ps {
+        self.total.saturating_sub(self.host_busy)
+    }
+
+    /// Fraction helpers (relative to this run's total).
+    pub fn frac(&self, x: Ps) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            x as f64 / self.total as f64
+        }
+    }
+
+    /// Ratio of this run's total to a baseline total (Fig. 10's
+    /// "normalized end-to-end runtime ratio").
+    pub fn ratio_to(&self, baseline: &RunMetrics) -> f64 {
+        if baseline.total == 0 {
+            f64::NAN
+        } else {
+            self.total as f64 / baseline.total as f64
+        }
+    }
+
+    /// JSON dump (machine-readable metric exports).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("workload".into(), Json::Str(self.workload.clone()));
+        o.insert("annot".into(), Json::Str(self.annot.to_string()));
+        o.insert("protocol".into(), Json::Str(self.protocol.clone()));
+        for (k, v) in [
+            ("total_ps", self.total),
+            ("ccm_busy_ps", self.ccm_busy),
+            ("dm_busy_ps", self.dm_busy),
+            ("host_busy_ps", self.host_busy),
+            ("host_stall_ps", self.host_stall),
+            ("backpressure_ps", self.backpressure),
+            ("events", self.events),
+            ("polls", self.polls),
+            ("dma_batches", self.dma_batches),
+            ("fc_messages", self.fc_messages),
+            ("result_bytes", self.result_bytes),
+        ] {
+            o.insert(k.into(), Json::Num(v as f64));
+        }
+        o.insert("deadlock".into(), Json::Bool(self.deadlock));
+        Json::Obj(o)
+    }
+}
+
+/// Geometric mean of a slice of positive ratios (Fig. 10j summary row).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(total: Ps, ccm: Ps, host: Ps) -> RunMetrics {
+        RunMetrics {
+            workload: "t".into(),
+            annot: 'a',
+            protocol: "BS".into(),
+            total,
+            ccm_busy: ccm,
+            dm_busy: 0,
+            host_busy: host,
+            host_stall: 0,
+            backpressure: 0,
+            events: 0,
+            polls: 0,
+            dma_batches: 0,
+            fc_messages: 0,
+            result_bytes: 0,
+            deadlock: false,
+        }
+    }
+
+    #[test]
+    fn idle_times_are_complements() {
+        let r = m(100, 30, 50);
+        assert_eq!(r.ccm_idle(), 70);
+        assert_eq!(r.host_idle(), 50);
+    }
+
+    #[test]
+    fn serialized_pipeline_idle_identity() {
+        // §III-C: in a fully serialized pipeline, host idle = T_C + T_D.
+        let mut r = m(100, 49, 2);
+        r.dm_busy = 49;
+        assert_eq!(r.host_idle(), r.ccm_busy + r.dm_busy);
+    }
+
+    #[test]
+    fn geomean_and_mean() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((mean(&[1.0, 3.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn ratio_to_baseline() {
+        let a = m(50, 0, 0);
+        let b = m(100, 0, 0);
+        assert!((a.ratio_to(&b) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,703 @@
+//! AXLE: Asynchronous Back-Streaming (§IV; Fig. 1c, Fig. 8, Fig. 9).
+//!
+//! The CCM device *pushes* partial results to host-local ring buffers via
+//! CXL.io DMA as they are produced; the host discovers them by polling a
+//! single local (cache-bypassed) metadata tail pointer, launches
+//! downstream tasks from the ready pool, and returns ring-head indexes to
+//! the CCM via posted CXL.mem flow-control stores. Nothing in the pipeline
+//! waits for an ACK (the paper's "fully asynchronous interaction").
+//!
+//! Implemented as a discrete-event simulation over the shared substrate:
+//!
+//! - CCM task completions feed the **DMA executor**, which forms slot
+//!   batches once `pending ≥ streaming factor` (batch = *all* pending —
+//!   the natural batching §V-E observes), pays the per-request
+//!   preparation latency, claims ring credit from its conservative
+//!   producer view, and posts the payload+metadata over CXL.io.
+//! - **OoO streaming** (default): results stream in completion order.
+//!   Disabled: the executor holds results until offset order is restored
+//!   (Fig. 15's ablation).
+//! - Host **poll processing** is quantized to the polling interval; the
+//!   aggregate cost of the spin polls themselves is charged to host core
+//!   stall time (Fig. 13).
+//! - **Back-pressure**: zero ring credit blocks the executor; cycles are
+//!   accounted (Fig. 16b) and a blocked executor with nothing in flight is
+//!   a detected **deadlock** (Fig. 16's (h) edge case).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::SimConfig;
+use crate::cxl::Link;
+use crate::metrics::RunMetrics;
+use crate::ring::{ProducerView, Ring};
+use crate::sim::{EventQueue, PuPool, Ps};
+use crate::workload::WorkloadSpec;
+
+use super::{dispatch_order, jittered_dur, POSTED_STORE_COST};
+
+/// Metadata record bytes on the wire (payload slot id + task tag).
+const META_RECORD_BYTES: u64 = 8;
+/// Per-batch tail-update message overhead on the wire.
+const BATCH_TAIL_BYTES: u64 = 64;
+/// Host cycles per poll iteration beyond the uncached tail read.
+const POLL_ROUTINE_CYCLES: f64 = 20.0;
+/// Host CPU cost charged per interrupt delivery (context switch slice of
+/// the 50 μs handling latency).
+const INTERRUPT_CPU: Ps = 5 * crate::sim::US;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// Launch store arrives at the CCM; iteration `i` begins.
+    CcmLaunch(u32),
+    CcmTaskDone { iter: u32, task: u32 },
+    /// DMA executor finished request preparation; may form the next batch.
+    DmaFree,
+    /// A back-streamed batch lands in the host DMA region (FIFO queue).
+    DmaArrive,
+    /// Host polling routine processes arrived metadata (tick-aligned).
+    PollProcess,
+    /// Interrupt-mode notification fires.
+    Interrupt,
+    HostTaskDone { iter: u32, h: u32 },
+    /// Flow-control store arrives at the CCM (FIFO queue).
+    FcArrive,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    task: u32,
+    slots: u32,
+    /// First payload slot id — the pointer each metadata record carries
+    /// (§IV-C: "each metadata record stores the corresponding payload
+    /// slot ID"). The simulator tracks ranges in `task_ranges`, so this
+    /// field exists for trace fidelity/debugging only.
+    #[allow(dead_code)]
+    first_slot: u64,
+}
+
+#[derive(Debug)]
+struct Batch {
+    segs: Vec<Seg>,
+    n_slots: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PendChunk {
+    task: u32,
+    slots_left: u32,
+}
+
+struct AxleSim<'a> {
+    cfg: &'a SimConfig,
+    w: &'a WorkloadSpec,
+    interrupt_mode: bool,
+
+    q: EventQueue<Ev>,
+    ccm_pool: PuPool,
+    host_pool: PuPool,
+    io: Link,
+    mem: Link,
+
+    // ---- current-iteration state ----
+    iter: usize,
+    task_slots: Vec<u32>,
+    delivered_slots: Vec<u32>,
+    task_ranges: Vec<Vec<(u64, u32)>>,
+    /// host tasks consuming each CCM task (disjoint in all Table IV specs).
+    consumers: Vec<Vec<u32>>,
+    hdeps_left: Vec<u32>,
+    host_done: usize,
+    emitted: usize,
+    emit_next: u32,
+    emit_hold: BTreeMap<u32, ()>,
+    chain_end: Ps,
+
+    // ---- DMA executor ----
+    pending: VecDeque<PendChunk>,
+    pending_slots: u64,
+    dma_busy: bool,
+    blocked_since: Option<Ps>,
+    pv_payload: ProducerView,
+    pv_meta: ProducerView,
+    inflight_batches: VecDeque<Batch>,
+    /// Adaptive-SF state: EWMA of result production rate (bytes/ps), the
+    /// last emission timestamp, and bytes accumulated at that timestamp
+    /// (same-cycle wave bursts are one rate sample, not N infinite ones).
+    emit_rate_ewma: f64,
+    last_emit_at: Ps,
+    burst_bytes: f64,
+
+    // ---- host side ----
+    ring_payload: Ring,
+    ring_meta: Ring,
+    arrived: VecDeque<Seg>,
+    fc_queue: VecDeque<(u64, u64)>,
+
+    // ---- inflight accounting (deadlock detection) ----
+    ccm_inflight: usize,
+    host_inflight: usize,
+    fc_inflight: usize,
+    launch_inflight: usize,
+    notify_inflight: usize,
+
+    // ---- metrics ----
+    stall: Ps,
+    backpressure: Ps,
+    dma_batches: u64,
+    fc_msgs: u64,
+    result_bytes: u64,
+    finished: bool,
+    deadlock: bool,
+    total: Ps,
+}
+
+pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetrics {
+    let cap = cfg.axle.dma_slot_capacity;
+    let mut sim = AxleSim {
+        cfg,
+        w,
+        interrupt_mode,
+        q: EventQueue::new(),
+        ccm_pool: PuPool::new(cfg.ccm.num_pus),
+        host_pool: PuPool::new(cfg.host.num_pus),
+        io: Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps),
+        mem: Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps),
+        iter: 0,
+        task_slots: Vec::new(),
+        delivered_slots: Vec::new(),
+        task_ranges: Vec::new(),
+        consumers: Vec::new(),
+        hdeps_left: Vec::new(),
+        host_done: 0,
+        emitted: 0,
+        emit_next: 0,
+        emit_hold: BTreeMap::new(),
+        chain_end: 0,
+        pending: VecDeque::new(),
+        pending_slots: 0,
+        dma_busy: false,
+        blocked_since: None,
+        pv_payload: ProducerView::new(cap),
+        pv_meta: ProducerView::new(cap),
+        inflight_batches: VecDeque::new(),
+        emit_rate_ewma: 0.0,
+        last_emit_at: 0,
+        burst_bytes: 0.0,
+        ring_payload: Ring::new(cap),
+        ring_meta: Ring::new(cap),
+        arrived: VecDeque::new(),
+        fc_queue: VecDeque::new(),
+        ccm_inflight: 0,
+        host_inflight: 0,
+        fc_inflight: 0,
+        launch_inflight: 0,
+        notify_inflight: 0,
+        stall: 0,
+        backpressure: 0,
+        dma_batches: 0,
+        fc_msgs: 0,
+        result_bytes: 0,
+        finished: false,
+        deadlock: false,
+        total: 0,
+    };
+    sim.run();
+
+    // Aggregate spin-poll cost: the host polls the local metadata tail for
+    // the whole run; each poll is an uncached read (the DMA region is
+    // cache-bypassed, §IV-C) plus the routine. A poll can't be shorter
+    // than its own memory access.
+    let (polls, poll_stall) = if interrupt_mode {
+        (0u64, 0)
+    } else {
+        let poll_cost = cfg.host.dram().uncached_access()
+            + crate::workload::cost::cycles_time(&cfg.host, POLL_ROUTINE_CYCLES);
+        let eff_interval = cfg.axle.poll_interval.max(poll_cost);
+        let n = sim.total / eff_interval.max(1);
+        (n, (n * poll_cost).min(sim.total))
+    };
+
+    RunMetrics {
+        workload: w.name.clone(),
+        annot: w.annot,
+        protocol: if interrupt_mode { "AXLE_Interrupt".into() } else { "AXLE".into() },
+        total: sim.total,
+        ccm_busy: sim.ccm_pool.busy().union(),
+        dm_busy: sim.io.busy().union(),
+        host_busy: sim.host_pool.busy().union(),
+        host_stall: sim.stall + poll_stall,
+        backpressure: sim.backpressure,
+        events: sim.q.popped(),
+        polls,
+        dma_batches: sim.dma_batches,
+        fc_messages: sim.fc_msgs,
+        result_bytes: sim.result_bytes,
+        deadlock: sim.deadlock,
+    }
+}
+
+impl<'a> AxleSim<'a> {
+    fn run(&mut self) {
+        let slot = self.cfg.axle.dma_slot_bytes;
+        self.result_bytes = self.w.total_result_bytes();
+        let _ = slot;
+        // First launch: posted CXL.mem store, one-way latency.
+        self.stall += POSTED_STORE_COST;
+        self.launch_inflight += 1;
+        self.q.push_at(self.mem.one_way(), Ev::CcmLaunch(0));
+
+        while let Some((t, ev)) = self.q.pop() {
+            if self.finished {
+                break;
+            }
+            self.handle(t, ev);
+            if self.finished {
+                break;
+            }
+            if self.is_stuck() {
+                self.deadlock = true;
+                self.total = t;
+                break;
+            }
+        }
+        if !self.finished && !self.deadlock {
+            // Queue drained without completing: also a deadlock.
+            self.deadlock = true;
+            self.total = self.q.now();
+        }
+    }
+
+    /// True when no event can ever cause progress again.
+    fn is_stuck(&self) -> bool {
+        !self.finished
+            && self.ccm_inflight == 0
+            && self.host_inflight == 0
+            && self.inflight_batches.is_empty()
+            && self.fc_inflight == 0
+            && self.launch_inflight == 0
+            && self.notify_inflight == 0
+            && !self.dma_busy
+            && self.arrived.is_empty()
+    }
+
+    fn handle(&mut self, t: Ps, ev: Ev) {
+        match ev {
+            Ev::CcmLaunch(i) => self.on_launch(t, i as usize),
+            Ev::CcmTaskDone { iter, task } => self.on_ccm_done(t, iter as usize, task),
+            Ev::DmaFree => {
+                self.dma_busy = false;
+                self.try_dma(t);
+            }
+            Ev::DmaArrive => self.on_dma_arrive(t),
+            Ev::PollProcess => self.process_arrivals(t),
+            Ev::Interrupt => {
+                self.notify_inflight -= 1;
+                self.stall += INTERRUPT_CPU;
+                self.process_arrivals(t);
+            }
+            Ev::HostTaskDone { iter, h } => self.on_host_done(t, iter as usize, h),
+            Ev::FcArrive => self.on_fc_arrive(t),
+        }
+    }
+
+    fn on_launch(&mut self, t: Ps, i: usize) {
+        self.launch_inflight -= 1;
+        self.iter = i;
+        let iter = &self.w.iters[i];
+        let n = iter.ccm_tasks.len();
+        let slot = self.cfg.axle.dma_slot_bytes;
+        // Reuse per-iteration buffers (§Perf: fresh Vec-of-Vec allocations
+        // per iteration dominated the LLM run's 32×4096-task setup).
+        self.task_slots.clear();
+        self.task_slots.extend(
+            iter.ccm_tasks.iter().map(|ct| (ct.result_bytes.div_ceil(slot).max(1)) as u32),
+        );
+        self.delivered_slots.clear();
+        self.delivered_slots.resize(n, 0);
+        if self.task_ranges.len() < n {
+            self.task_ranges.resize_with(n, Vec::new);
+        }
+        if self.consumers.len() < n {
+            self.consumers.resize_with(n, Vec::new);
+        }
+        for v in self.task_ranges.iter_mut().take(n) {
+            v.clear();
+        }
+        for v in self.consumers.iter_mut().take(n) {
+            v.clear();
+        }
+        self.hdeps_left.clear();
+        self.hdeps_left.extend(iter.host_tasks.iter().map(|h| h.deps.len() as u32));
+        for (hi, h) in iter.host_tasks.iter().enumerate() {
+            for &d in &h.deps {
+                self.consumers[d as usize].push(hi as u32);
+            }
+        }
+        self.host_done = 0;
+        self.emitted = 0;
+        self.emit_next = 0;
+        self.emit_hold.clear();
+
+        let order = dispatch_order(n, self.cfg.sched, self.cfg.seed, i as u64);
+        for &task in &order {
+            let dur = jittered_dur(self.cfg, iter.ccm_tasks[task as usize].dur, i, task);
+            let (_, end) = self.ccm_pool.dispatch(t, dur);
+            self.ccm_inflight += 1;
+            self.q.push_at(end, Ev::CcmTaskDone { iter: i as u32, task });
+        }
+    }
+
+    fn on_ccm_done(&mut self, t: Ps, iter: usize, task: u32) {
+        debug_assert_eq!(iter, self.iter);
+        self.ccm_inflight -= 1;
+        if self.cfg.axle.ooo_streaming {
+            self.emit(t, task);
+        } else {
+            // In-order streaming: hold completed results until the next
+            // offset in sequence is available (Fig. 15, OoO disabled).
+            self.emit_hold.insert(task, ());
+            while self.emit_hold.remove(&self.emit_next).is_some() {
+                let e = self.emit_next;
+                self.emit(t, e);
+                self.emit_next += 1;
+            }
+        }
+        self.try_dma(t);
+    }
+
+    fn emit(&mut self, t: Ps, task: u32) {
+        let slots = self.task_slots[task as usize];
+        self.pending.push_back(PendChunk { task, slots_left: slots });
+        self.pending_slots += slots as u64;
+        self.emitted += 1;
+        // Adaptive-SF bookkeeping: EWMA of the production rate, sampling
+        // once per distinct timestamp (wave bursts coalesce).
+        let bytes = slots as f64 * self.cfg.axle.dma_slot_bytes as f64;
+        if t > self.last_emit_at {
+            if self.burst_bytes > 0.0 {
+                let dt = (t - self.last_emit_at) as f64;
+                let inst = self.burst_bytes / dt;
+                self.emit_rate_ewma = if self.emit_rate_ewma == 0.0 {
+                    inst
+                } else {
+                    0.75 * self.emit_rate_ewma + 0.25 * inst
+                };
+            }
+            self.last_emit_at = t;
+            self.burst_bytes = bytes;
+        } else {
+            self.burst_bytes += bytes;
+        }
+    }
+
+    /// Current back-stream trigger threshold in bytes. Fixed policy uses
+    /// the configured streaming factor; the adaptive policy targets the
+    /// bytes produced during one DMA-preparation period — streaming
+    /// immediately when results trickle, batching just enough to amortize
+    /// the per-request overhead when they pour (the paper's §V-E "dynamic
+    /// SF" future-work knob).
+    fn sf_threshold(&self) -> u64 {
+        match self.cfg.axle.sf_policy {
+            crate::config::SfPolicy::Fixed => self.cfg.axle.streaming_factor_bytes,
+            crate::config::SfPolicy::Adaptive => {
+                let per_prep = self.emit_rate_ewma * self.cfg.axle.dma_prep as f64;
+                let cap = self.cfg.axle.dma_slot_bytes
+                    * (self.cfg.axle.dma_slot_capacity as u64 / 4).max(1);
+                (per_prep as u64)
+                    .clamp(self.cfg.axle.dma_slot_bytes, cap.max(self.cfg.axle.dma_slot_bytes))
+            }
+        }
+    }
+
+    fn try_dma(&mut self, t: Ps) {
+        if self.dma_busy || self.finished || self.pending_slots == 0 {
+            return;
+        }
+        let slot = self.cfg.axle.dma_slot_bytes;
+        let flush = self.emitted == self.w.iters[self.iter].ccm_tasks.len();
+        if !flush && self.pending_slots * slot < self.sf_threshold() {
+            return;
+        }
+        let credit = self.pv_payload.credit().min(self.pv_meta.credit());
+        if credit == 0 {
+            // Back-pressure: the conservative producer view has no slots.
+            if self.blocked_since.is_none() {
+                self.blocked_since = Some(t);
+            }
+            return;
+        }
+        if let Some(since) = self.blocked_since.take() {
+            self.backpressure += t - since;
+        }
+        let claim = self.pending_slots.min(credit);
+        let first = self.pv_payload.try_claim(claim).expect("credit checked");
+        let mfirst = self.pv_meta.try_claim(claim).expect("credit checked");
+        debug_assert_eq!(first, mfirst);
+
+        // Carve the claimed slots out of pending chunks (chunks may split
+        // across batches when credit runs short).
+        let mut segs = Vec::new();
+        let mut off = 0u64;
+        let mut left = claim;
+        while left > 0 {
+            let chunk = self.pending.front_mut().expect("pending_slots > 0");
+            let take = (chunk.slots_left as u64).min(left) as u32;
+            segs.push(Seg { task: chunk.task, slots: take, first_slot: first + off });
+            self.task_ranges[chunk.task as usize].push((first + off, take));
+            chunk.slots_left -= take;
+            off += take as u64;
+            left -= take as u64;
+            if chunk.slots_left == 0 {
+                self.pending.pop_front();
+            }
+        }
+        self.pending_slots -= claim;
+
+        // DMA request: preparation latency, then posted write over CXL.io
+        // (payload slots + metadata records + tail-update messages).
+        self.dma_batches += 1;
+        self.dma_busy = true;
+        let prep_done = t + self.cfg.axle.dma_prep;
+        self.q.push_at(prep_done, Ev::DmaFree);
+        let wire_bytes = claim * slot + claim * META_RECORD_BYTES + BATCH_TAIL_BYTES;
+        let arrive = self.io.send(prep_done, wire_bytes, true);
+        self.inflight_batches.push_back(Batch { segs, n_slots: claim });
+        self.q.push_at(arrive, Ev::DmaArrive);
+    }
+
+    fn on_dma_arrive(&mut self, t: Ps) {
+        let batch = self.inflight_batches.pop_front().expect("batch FIFO");
+        // Ordering invariant (§IV-C): payload slots are fully written
+        // before their metadata records become visible — modelled by
+        // producing payload first, then metadata, atomically at arrival.
+        self.ring_payload.produce(batch.n_slots);
+        self.ring_meta.produce(batch.n_slots);
+        self.arrived.extend(batch.segs.iter().copied());
+        if self.interrupt_mode {
+            self.notify_inflight += 1;
+            self.q.push_at(t + self.cfg.axle.interrupt_latency, Ev::Interrupt);
+        } else {
+            // The polling routine observes the new metadata tail at the
+            // next polling tick.
+            let iv = self.cfg.axle.poll_interval.max(1);
+            let tick = t.div_ceil(iv) * iv;
+            self.q.push_at(tick, Ev::PollProcess);
+        }
+    }
+
+    fn process_arrivals(&mut self, t: Ps) {
+        if self.arrived.is_empty() {
+            return;
+        }
+        let n_slots: u64 = self.arrived.iter().map(|s| s.slots as u64).sum();
+        // Metadata is consumed FIFO into the ready pool; its ring head
+        // advances immediately.
+        let mhead = self.ring_meta.head();
+        self.ring_meta.consume_range(mhead, n_slots);
+        // Reading the metadata block from the local DMA region.
+        self.stall += self.cfg.host.dram().stream_time(n_slots * META_RECORD_BYTES);
+
+        let segs: Vec<Seg> = self.arrived.drain(..).collect();
+        let iter = &self.w.iters[self.iter];
+        for seg in segs {
+            self.delivered_slots[seg.task as usize] += seg.slots;
+            if self.delivered_slots[seg.task as usize] >= self.task_slots[seg.task as usize] {
+                for ci in 0..self.consumers[seg.task as usize].len() {
+                    let h = self.consumers[seg.task as usize][ci];
+                    self.hdeps_left[h as usize] -= 1;
+                    if self.hdeps_left[h as usize] == 0 {
+                        // Ready pool → host scheduler: dispatch downstream task.
+                        let ready = if iter.host_serial { self.chain_end.max(t) } else { t };
+                        let dur = iter.host_tasks[h as usize].dur;
+                        let (_, end) = self.host_pool.dispatch(ready, dur);
+                        self.chain_end = end;
+                        self.host_inflight += 1;
+                        self.q.push_at(end, Ev::HostTaskDone { iter: self.iter as u32, h });
+                    }
+                }
+            }
+        }
+        // Flow control: posted CXL.mem store with the updated metadata
+        // head (payload head rides along).
+        self.send_fc(t);
+    }
+
+    fn send_fc(&mut self, t: Ps) {
+        self.fc_msgs += 1;
+        self.stall += POSTED_STORE_COST;
+        self.fc_inflight += 1;
+        self.fc_queue.push_back((self.ring_payload.head(), self.ring_meta.head()));
+        self.q.push_at(t + self.mem.one_way(), Ev::FcArrive);
+    }
+
+    fn on_fc_arrive(&mut self, t: Ps) {
+        self.fc_inflight -= 1;
+        let (ph, mh) = self.fc_queue.pop_front().expect("fc FIFO");
+        self.pv_payload.update_head(ph);
+        self.pv_meta.update_head(mh);
+        self.try_dma(t);
+    }
+
+    fn on_host_done(&mut self, t: Ps, iter: usize, h: u32) {
+        debug_assert_eq!(iter, self.iter);
+        self.host_inflight -= 1;
+        // Consume the payload slots of this task's dependencies
+        // (gap-aware: the head only passes contiguous consumed prefixes).
+        let deps = self.w.iters[iter].host_tasks[h as usize].deps.clone();
+        for d in deps {
+            for (first, n) in std::mem::take(&mut self.task_ranges[d as usize]) {
+                self.ring_payload.consume_range(first, n as u64);
+            }
+        }
+        self.send_fc(t);
+        self.host_done += 1;
+        if self.host_done == self.w.iters[iter].host_tasks.len() {
+            if iter + 1 == self.w.iters.len() {
+                self.finished = true;
+                self.total = t;
+            } else {
+                // Next offload iteration: posted CXL.mem launch store.
+                self.stall += POSTED_STORE_COST;
+                self.launch_inflight += 1;
+                self.q.push_at(t + self.mem.one_way(), Ev::CcmLaunch(iter as u32 + 1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{poll_factors, Protocol, SimConfig};
+    use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn tiny(ccm_dur: Ps, host_dur: Ps, result: u64, iters: usize, tasks: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "tiny".into(),
+            annot: 'x',
+            domain: "test",
+            iters: (0..iters)
+                .map(|_| IterSpec {
+                    ccm_tasks: (0..tasks)
+                        .map(|_| CcmTask { dur: ccm_dur, result_bytes: result })
+                        .collect(),
+                    host_tasks: (0..tasks)
+                        .map(|i| HostTask { dur: host_dur, deps: vec![i as u32] })
+                        .collect(),
+                    host_serial: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn completes_and_overlaps() {
+        // Wave-structured workload with comparable T_C / T_D / T_H — the
+        // shape back-streaming exists for: results of wave i stream and
+        // feed host tasks while wave i+1 computes.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(100_000_000, 50_000_000, 65_536, 2, 128); // 100 μs CCM, 64 KB results
+        let m = run(&w, &cfg, false);
+        assert!(!m.deadlock);
+        let bs = super::super::run(Protocol::Bs, &w, &cfg);
+        // Clear pipelining win (BS serializes 8 CCM waves + full load + host).
+        assert!(
+            (m.total as f64) < 0.8 * bs.total as f64,
+            "AXLE {} vs BS {}",
+            m.total,
+            bs.total
+        );
+    }
+
+    #[test]
+    fn longer_poll_interval_slows_fine_grained_work() {
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(500_000, 200_000, 256, 8, 16);
+        let fast = run(&w, &cfg.clone().with_poll(poll_factors::P1), false);
+        let slow = run(&w, &cfg.clone().with_poll(poll_factors::P100), false);
+        assert!(slow.total > fast.total, "p100 {} <= p1 {}", slow.total, fast.total);
+    }
+
+    #[test]
+    fn interrupt_mode_much_slower_for_light_tasks() {
+        // Fig. 10(a)-(d): 50 μs interrupt handling dwarfs light kernels.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(500_000, 100_000, 256, 8, 16);
+        let polled = run(&w, &cfg, false);
+        let interrupted = run(&w, &cfg, true);
+        assert!(
+            interrupted.total > 2 * polled.total,
+            "interrupt {} vs polled {}",
+            interrupted.total,
+            polled.total
+        );
+    }
+
+    #[test]
+    fn tight_ring_capacity_causes_backpressure_not_deadlock() {
+        // Ring (4 slots) much smaller than a wave's total results (16
+        // slots) but each dependency set (2 slots) fits: the ring must
+        // churn through under back-pressure without deadlocking.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        cfg.axle.dma_slot_capacity = 4;
+        // Slow consumers (5 μs host tasks) against fast producers: credit
+        // runs dry while earlier payloads are still being processed.
+        let w = tiny(100_000, 5_000_000, 64, 2, 8); // 2 slots per task
+        let m = run(&w, &cfg, false);
+        assert!(!m.deadlock, "1:1 deps must drain");
+        assert!(m.backpressure > 0, "expected credit stalls");
+    }
+
+    #[test]
+    fn gather_deps_with_tiny_ring_deadlock() {
+        // A host task needing ALL results while the ring can hold only a
+        // fraction of them can never launch: Fig. 16's deadlock case.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        cfg.axle.dma_slot_capacity = 4;
+        let w = WorkloadSpec {
+            name: "gather".into(),
+            annot: 'x',
+            domain: "test",
+            iters: vec![IterSpec {
+                ccm_tasks: (0..8).map(|_| CcmTask { dur: 1000, result_bytes: 64 }).collect(),
+                host_tasks: vec![HostTask { dur: 1000, deps: (0..8).collect() }],
+                host_serial: false,
+            }],
+        };
+        let m = run(&w, &cfg, false);
+        assert!(m.deadlock);
+    }
+
+    #[test]
+    fn all_table_iv_workloads_beat_or_match_bs() {
+        let cfg = SimConfig::m2ndp().with_poll(poll_factors::P1);
+        for a in crate::workload::ALL_ANNOTATIONS {
+            let w = by_annotation(a, &cfg);
+            let axle = run(&w, &cfg, false);
+            let bs = super::super::run(Protocol::Bs, &w, &cfg);
+            assert!(!axle.deadlock, "workload {a} deadlocked");
+            assert!(
+                axle.total <= bs.total * 102 / 100,
+                "workload {a}: AXLE {} vs BS {}",
+                axle.total,
+                bs.total
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = SimConfig::m2ndp();
+        let w = by_annotation('e', &cfg);
+        let a = run(&w, &cfg, false);
+        let b = run(&w, &cfg, false);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.dma_batches, b.dma_batches);
+    }
+}

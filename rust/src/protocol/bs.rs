@@ -1,0 +1,152 @@
+//! Bulk-Synchronous flow (BS): memory-centric offloading over CXL.mem
+//! (Fig. 1b, M²NDP's native mechanism).
+//!
+//! The host launches the remote kernel with a single CXL.mem store to the
+//! kernel-launch address range (the packet filter distinguishes it from a
+//! plain store); the hardware barrier suspends the host until the store
+//! response returns at kernel completion, then the synchronous result
+//! load brings the data over. Protocol overhead is minimal — but the host
+//! processing unit stalls for the entire T_C + T_D (§III-C, Fig. 6).
+
+use crate::config::SimConfig;
+use crate::cxl::Link;
+use crate::metrics::RunMetrics;
+use crate::sim::{PuPool, Ps};
+use crate::workload::WorkloadSpec;
+
+use super::{dispatch_order, jittered_dur};
+
+pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+    let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
+    let mut host_pool = PuPool::new(cfg.host.num_pus);
+    let mut mem = Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps);
+
+    let mut t: Ps = 0;
+    let mut stall: Ps = 0;
+    let mut result_bytes: u64 = 0;
+
+    for (ii, iter) in w.iters.iter().enumerate() {
+        // Kernel launch: CXL.mem store; the launch reaches the CCM after a
+        // one-way latency, and the response is held by the barrier until
+        // the remote kernel completes.
+        let launch_t = t + cfg.cxl_mem_rtt / 2;
+
+        let order = dispatch_order(iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
+        let mut complete: Ps = launch_t;
+        for &task in &order {
+            let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);
+            let (_, end) = ccm_pool.dispatch(launch_t, dur);
+            complete = complete.max(end);
+        }
+
+        // Store response returns (kernel completion ACK).
+        let ack = complete + cfg.cxl_mem_rtt / 2;
+
+        // Synchronous result load over CXL.mem.
+        let bytes = iter.result_bytes();
+        result_bytes += bytes;
+        let done = mem.round_trip(ack, bytes, true);
+
+        // The host core was stalled from issue to load completion.
+        stall += done - t;
+        t = done;
+
+        // Downstream host tasks.
+        let mut chain_end: Ps = t;
+        let mut iter_end: Ps = t;
+        for h in &iter.host_tasks {
+            let ready = if iter.host_serial { chain_end } else { t };
+            let (_, end) = host_pool.dispatch(ready, h.dur);
+            chain_end = end;
+            iter_end = iter_end.max(end);
+        }
+        t = iter_end;
+    }
+
+    RunMetrics {
+        workload: w.name.clone(),
+        annot: w.annot,
+        protocol: "BS".into(),
+        total: t,
+        ccm_busy: ccm_pool.busy().union(),
+        dm_busy: mem.busy().union(),
+        host_busy: host_pool.busy().union(),
+        host_stall: stall,
+        backpressure: 0,
+        events: 0,
+        polls: 0,
+        dma_batches: 0,
+        fc_messages: 0,
+        result_bytes,
+        deadlock: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Protocol, SimConfig};
+    use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn tiny(ccm_dur: Ps, host_dur: Ps, result: u64, iters: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "tiny".into(),
+            annot: 'x',
+            domain: "test",
+            iters: (0..iters)
+                .map(|_| IterSpec {
+                    ccm_tasks: vec![CcmTask { dur: ccm_dur, result_bytes: result }],
+                    host_tasks: vec![HostTask { dur: host_dur, deps: vec![0] }],
+                    host_serial: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn bs_beats_rp_on_fine_grained_tasks() {
+        // Fig. 3(b): lightweight kernels under BS take a small fraction of
+        // their RP cycle count (≈17% in the paper).
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(100_000, 10_000, 64, 4); // 100 ns kernels
+        let bs = run(&w, &cfg);
+        let rp = super::super::run(Protocol::Rp, &w, &cfg);
+        let ratio = bs.total as f64 / rp.total as f64;
+        assert!(ratio < 0.4, "BS/RP = {ratio}");
+    }
+
+    #[test]
+    fn bs_close_to_rp_on_heavy_tasks() {
+        // Fig. 3(a): for ~450 μs kernels, BS ≈ RP (897K vs 888K cycles).
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(448_000_000, 10_000, 64, 1);
+        let bs = run(&w, &cfg);
+        let rp = super::super::run(Protocol::Rp, &w, &cfg);
+        let ratio = bs.total as f64 / rp.total as f64;
+        assert!(ratio > 0.97 && ratio <= 1.0, "BS/RP = {ratio}");
+    }
+
+    #[test]
+    fn host_stalls_entire_ccm_and_load_time() {
+        // §III-C: host idle (and stall) ≈ T_C + T_D.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny(1_000_000, 100_000, 1 << 20, 1);
+        let m = run(&w, &cfg);
+        assert!(m.host_stall >= m.ccm_busy + m.dm_busy);
+        assert_eq!(m.host_idle(), m.total - 100_000);
+    }
+
+    #[test]
+    fn runs_all_table_iv_workloads_faster_or_equal_to_rp() {
+        let cfg = SimConfig::m2ndp();
+        for a in crate::workload::ALL_ANNOTATIONS {
+            let w = by_annotation(a, &cfg);
+            let bs = run(&w, &cfg);
+            let rp = super::super::run(Protocol::Rp, &w, &cfg);
+            assert!(bs.total <= rp.total, "workload {a}: BS {} > RP {}", bs.total, rp.total);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! The four partial-offloading mechanisms (§III, §IV).
+//!
+//! | Module | Mechanism | CXL use | Fig. 1 |
+//! |---|---|---|---|
+//! | [`rp`] | Remote Polling (device-centric) | CXL.io mailbox + remote polls | (a) |
+//! | [`bs`] | Bulk-Synchronous flow (memory-centric, M²NDP) | synchronous CXL.mem | (b) |
+//! | [`axle`] | Asynchronous Back-Streaming (this paper) | CXL.mem control + CXL.io DMA | (c) |
+//!
+//! `AXLE_Interrupt` is [`axle`] with interrupt-based notification
+//! (§V-B's additional baseline).
+//!
+//! RP and BS are *fully serialized* pipelines by construction (Fig. 6),
+//! so they compose directly over the resource models; AXLE runs on the
+//! discrete-event engine because overlap, back-pressure and OoO delivery
+//! are dynamic.
+
+pub mod axle;
+pub mod bs;
+pub mod rp;
+
+use crate::config::{Protocol, SchedPolicy, SimConfig};
+use crate::metrics::RunMetrics;
+use crate::sim::Ps;
+use crate::workload::WorkloadSpec;
+
+/// Host-core cost of one posted-store issue (launch, flow control).
+pub(crate) const POSTED_STORE_COST: Ps = 10_000; // 10 ns
+
+/// Firmware cycles to process a mailbox command (RP).
+pub(crate) const FIRMWARE_CYCLES: f64 = 200.0;
+
+/// Run `w` under `proto` with `cfg`; returns the full metric set.
+pub fn run(proto: Protocol, w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+    match proto {
+        Protocol::Rp => rp::run(w, cfg),
+        Protocol::Bs => bs::run(w, cfg),
+        Protocol::Axle => axle::run(w, cfg, false),
+        Protocol::AxleInterrupt => axle::run(w, cfg, true),
+    }
+}
+
+/// CCM dispatch order for one iteration's `n` tasks under `policy`.
+///
+/// - FIFO: offset order — the fine-grained multithreaded pipeline drains
+///   tasks in order, so results are emitted in offset order (§V-E).
+/// - Round-robin: the scheduler deals partitions across μthread groups,
+///   so completion (and hence streaming) order is scrambled relative to
+///   offsets — the situation OoO streaming exists for.
+pub(crate) fn dispatch_order(n: usize, policy: SchedPolicy, seed: u64, salt: u64) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if policy == SchedPolicy::RoundRobin {
+        // Deterministic shuffle: sort by splitmix64 hash of (seed, salt, i).
+        idx.sort_by_key(|&i| {
+            let mut z = seed ^ salt.rotate_left(17) ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        });
+    }
+    idx
+}
+
+/// Jittered duration of CCM task `task` in iteration `iter`.
+pub(crate) fn jittered_dur(cfg: &SimConfig, base: Ps, iter: usize, task: u32) -> Ps {
+    crate::workload::cost::jitter(
+        base,
+        cfg.jitter,
+        cfg.seed,
+        ((iter as u64) << 32) | task as u64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_is_identity() {
+        assert_eq!(dispatch_order(5, SchedPolicy::Fifo, 1, 2), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rr_order_is_deterministic_permutation() {
+        let a = dispatch_order(64, SchedPolicy::RoundRobin, 7, 3);
+        let b = dispatch_order(64, SchedPolicy::RoundRobin, 7, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, (0..64).collect::<Vec<u32>>());
+        let mut sorted = a.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn rr_differs_across_iterations() {
+        let a = dispatch_order(64, SchedPolicy::RoundRobin, 7, 0);
+        let b = dispatch_order(64, SchedPolicy::RoundRobin, 7, 1);
+        assert_ne!(a, b);
+    }
+}

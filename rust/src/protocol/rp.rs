@@ -1,0 +1,175 @@
+//! Remote Polling (RP): device-centric offloading over CXL.io (Fig. 1a).
+//!
+//! Per iteration (§III-A): the host writes the kernel descriptor via
+//! CXL.mem, enqueues the offload command via a CXL.io mailbox write, then
+//! **remote-polls** the device mailbox every `rp_poll_interval` — each
+//! poll a full CXL.io round trip that stalls the issuing core. After the
+//! completion descriptor is observed, the host dequeues the command
+//! (CXL.io) and synchronously loads the results via CXL.mem before
+//! running its downstream tasks. Everything is serialized (Fig. 6).
+
+use crate::config::SimConfig;
+use crate::cxl::Link;
+use crate::metrics::RunMetrics;
+use crate::sim::{secs_to_ps, PuPool, Ps};
+use crate::workload::WorkloadSpec;
+
+use super::{dispatch_order, jittered_dur, FIRMWARE_CYCLES};
+
+pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+    let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
+    let mut host_pool = PuPool::new(cfg.host.num_pus);
+    let mut mem = Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps);
+    let io = Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps);
+    let fw_delay: Ps = secs_to_ps(FIRMWARE_CYCLES / (cfg.firmware_freq_ghz * 1e9));
+
+    let mut t: Ps = 0;
+    let mut stall: Ps = 0;
+    let mut polls: u64 = 0;
+    let mut result_bytes: u64 = 0;
+
+    for (ii, iter) in w.iters.iter().enumerate() {
+        // (0) Kernel descriptor write to CXL memory (CXL.mem store, sync).
+        stall += cfg.cxl_mem_rtt;
+        t += cfg.cxl_mem_rtt;
+
+        // (1) Enqueue offload command via CXL.io mailbox (MMIO round trip).
+        stall += cfg.cxl_io_rtt;
+        t += cfg.cxl_io_rtt;
+
+        // Firmware dequeues and launches the kernel.
+        let launch_t = t + fw_delay;
+
+        // CCM task execution (scheduler-ordered, jittered).
+        let order = dispatch_order(iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
+        let mut complete: Ps = launch_t;
+        for &task in &order {
+            let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);
+            let (_, end) = ccm_pool.dispatch(launch_t, dur);
+            complete = complete.max(end);
+        }
+        // Firmware writes the completion descriptor to the mailbox.
+        let descriptor_ready = complete + fw_delay;
+
+        // (2..n) Remote polling: polls at launch_t + k·interval; each poll
+        // is a CXL.io RTT of core stall. Detection happens at the first
+        // poll whose response observes the completion descriptor.
+        let mut poll_t = launch_t + cfg.rp_poll_interval;
+        loop {
+            polls += 1;
+            stall += cfg.cxl_io_rtt;
+            let response_at = poll_t + cfg.cxl_io_rtt;
+            if poll_t >= descriptor_ready {
+                t = response_at;
+                break;
+            }
+            poll_t += cfg.rp_poll_interval;
+        }
+
+        // (n+1) Dequeue the offload command (CXL.io).
+        stall += cfg.cxl_io_rtt;
+        t += cfg.cxl_io_rtt;
+
+        // Result load over CXL.mem (synchronous, counted as data movement).
+        let bytes = iter.result_bytes();
+        result_bytes += bytes;
+        let done = mem.round_trip(t, bytes, true);
+        stall += done - t;
+        t = done;
+
+        // Downstream host tasks: all dependencies are satisfied.
+        let mut chain_end: Ps = t;
+        let mut iter_end: Ps = t;
+        for h in &iter.host_tasks {
+            let ready = if iter.host_serial { chain_end } else { t };
+            let (_, end) = host_pool.dispatch(ready, h.dur);
+            chain_end = end;
+            iter_end = iter_end.max(end);
+        }
+        t = iter_end;
+    }
+
+    RunMetrics {
+        workload: w.name.clone(),
+        annot: w.annot,
+        protocol: "RP".into(),
+        total: t,
+        ccm_busy: ccm_pool.busy().union(),
+        dm_busy: mem.busy().union() + io.busy().union(),
+        host_busy: host_pool.busy().union(),
+        host_stall: stall,
+        backpressure: 0,
+        events: 0,
+        polls,
+        dma_batches: 0,
+        fc_messages: 0,
+        result_bytes,
+        deadlock: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn tiny_workload(cfg: &SimConfig, ccm_dur: Ps, host_dur: Ps, result: u64) -> WorkloadSpec {
+        let _ = cfg;
+        WorkloadSpec {
+            name: "tiny".into(),
+            annot: 'x',
+            domain: "test",
+            iters: vec![IterSpec {
+                ccm_tasks: vec![CcmTask { dur: ccm_dur, result_bytes: result }],
+                host_tasks: vec![HostTask { dur: host_dur, deps: vec![0] }],
+                host_serial: false,
+            }],
+        }
+    }
+
+    #[test]
+    fn pipeline_is_serialized() {
+        // Total must be ≥ T_C + T_D + T_H + protocol overheads.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny_workload(&cfg, 1_000_000, 500_000, 4096);
+        let m = run(&w, &cfg);
+        assert!(m.total >= m.ccm_busy + m.dm_busy + m.host_busy);
+        // Host idle = everything except its own task.
+        assert_eq!(m.host_idle(), m.total - 500_000);
+    }
+
+    #[test]
+    fn poll_count_scales_with_kernel_length() {
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let short = run(&tiny_workload(&cfg, 1_000_000, 0, 64), &cfg); // 1 μs kernel
+        let long = run(&tiny_workload(&cfg, 10_000_000, 0, 64), &cfg); // 10 μs kernel
+        assert!(long.polls > short.polls);
+        // ~1 poll per μs of kernel time.
+        assert!((long.polls as i64 - 10).abs() <= 2, "polls={}", long.polls);
+    }
+
+    #[test]
+    fn fine_grained_tasks_dominated_by_polling() {
+        // §III-A: a ~100 ns kernel still pays ≥ one full polling interval.
+        let mut cfg = SimConfig::m2ndp();
+        cfg.jitter = 0.0;
+        let w = tiny_workload(&cfg, 100_000, 0, 64);
+        let m = run(&w, &cfg);
+        assert!(m.total > cfg.rp_poll_interval, "total={}", m.total);
+        assert!(m.total > 10 * 100_000);
+    }
+
+    #[test]
+    fn runs_all_table_iv_workloads() {
+        let cfg = SimConfig::m2ndp();
+        for a in crate::workload::ALL_ANNOTATIONS {
+            let w = by_annotation(a, &cfg);
+            let m = run(&w, &cfg);
+            assert!(m.total > 0, "workload {a}");
+            assert!(!m.deadlock);
+        }
+    }
+}

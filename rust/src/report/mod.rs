@@ -1,0 +1,480 @@
+//! Figure/table regenerators: print the same rows and series the paper
+//! reports (simulated cycles/ratios; see DESIGN.md per-experiment index).
+//!
+//! Every `fig*` function runs the corresponding experiment configuration
+//! and prints a table whose *shape* should match the paper's figure —
+//! who wins, by what factor, where the crossovers fall. `cargo run
+//! --release --bin axle-report -- all` regenerates everything.
+
+use crate::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
+use crate::metrics::{geomean, mean, RunMetrics};
+use crate::protocol;
+use crate::sim::ps_to_us;
+use crate::workload::{self, llm, olap};
+
+fn pct(x: f64) -> String {
+    format!("{:6.2}%", 100.0 * x)
+}
+
+fn header(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Breakdown of one run relative to a baseline total.
+fn breakdown(m: &RunMetrics, base_total: u64) -> String {
+    let f = |x: u64| 100.0 * x as f64 / base_total as f64;
+    format!(
+        "CCM {:6.2}%  DM {:6.2}%  Host {:6.2}%  | total {:7.2}% ({:9.2} us)",
+        f(m.ccm_busy),
+        f(m.dm_busy),
+        f(m.host_busy),
+        f(m.total),
+        ps_to_us(m.total)
+    )
+}
+
+/// Table II: qualitative trade-off matrix (printed for completeness).
+pub fn table2() {
+    header("Table II: trade-offs across partial offloading mechanisms");
+    println!("{:<28} {:^12} {:^10} {:^8}", "Mechanism", "Fine-grained", "Overhead", "Async");
+    println!("{:<28} {:^12} {:^10} {:^8}", "Remote Polling (RP)", "no", "high", "yes");
+    println!("{:<28} {:^12} {:^10} {:^8}", "Bulk Synchronous (BS)", "yes", "low", "no");
+    println!("{:<28} {:^12} {:^10} {:^8}", "Async Back-Streaming", "yes", "hidden", "yes");
+}
+
+/// Table IV: the workload roster actually generated.
+pub fn table4(cfg: &SimConfig) {
+    header("Table IV: workloads");
+    println!(
+        "{:<6} {:<16} {:<44} {:>9} {:>9} {:>12}",
+        "Annot", "Domain", "Application", "CCM tasks", "Host tasks", "Result bytes"
+    );
+    for a in workload::ALL_ANNOTATIONS {
+        let w = workload::by_annotation(a, cfg);
+        println!(
+            "({})    {:<16} {:<44} {:>9} {:>9} {:>12}",
+            a,
+            w.domain,
+            w.name,
+            w.total_ccm_tasks(),
+            w.total_host_tasks(),
+            w.total_result_bytes()
+        );
+    }
+}
+
+/// Fig. 3: attention-block kernels under RP vs BS (heavy vs light).
+pub fn fig3(cfg: &SimConfig) {
+    header("Fig. 3: LLM attention kernels, RP vs BS (CCM kcycles)");
+    println!(
+        "{:<12} {:>12} {:>12} {:>8}  {}",
+        "Kernel", "RP kcyc", "BS kcyc", "BS/RP", "class"
+    );
+    for k in llm::AttnKernel::ALL {
+        let w = llm::single_kernel(cfg, k);
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let kc = |t: u64| t as f64 / cfg.ccm.cycle() as f64 / 1e3;
+        println!(
+            "{:<12} {:>12.1} {:>12.1} {:>8.3}  {}",
+            k.label(),
+            kc(rp.total),
+            kc(bs.total),
+            bs.total as f64 / rp.total as f64,
+            if k.is_heavy() { "heavy" } else { "light" }
+        );
+    }
+}
+
+/// Fig. 4: KNN on the real-hardware profile across (dim, rows).
+pub fn fig4() {
+    header("Fig. 4: KNN real-hardware profile, CCM vs host runtime ratio");
+    let cfg = SimConfig::real_hw();
+    println!("{:<20} {:>10} {:>10}", "(dim, rows)", "CCM %", "Host %");
+    for (dim, rows) in [
+        (2048, 128),
+        (1024, 256),
+        (512, 512),
+        (256, 1024),
+        (128, 2048),
+        (64, 4096),
+        (32, 4096),
+    ] {
+        let w = workload::knn::generate_queries(&cfg, dim, rows, 4);
+        let m = protocol::run(Protocol::Rp, &w, &cfg);
+        let busy = (m.ccm_busy + m.host_busy) as f64;
+        println!(
+            "({:>5}, {:>5})       {:>9.2}% {:>9.2}%",
+            dim,
+            rows,
+            100.0 * m.ccm_busy as f64 / busy,
+            100.0 * m.host_busy as f64 / busy
+        );
+    }
+}
+
+/// Fig. 5: KNN + graph component breakdowns under RP and BS.
+pub fn fig5(cfg: &SimConfig) {
+    header("Fig. 5: runtime breakdown (normalized to RP total), RP vs BS");
+    for a in ['a', 'b', 'c', 'd', 'e'] {
+        let w = workload::by_annotation(a, cfg);
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        println!("({a}) {}", w.name);
+        println!("    RP: {}", breakdown(&rp, rp.total));
+        println!("    BS: {}", breakdown(&bs, rp.total));
+    }
+}
+
+/// Fig. 7: CCM and host idle times for the Fig. 5 setups.
+pub fn fig7(cfg: &SimConfig) {
+    header("Fig. 7: idle times (fraction of each run's total)");
+    println!(
+        "{:<4} {:<6} {:>10} {:>10} {:>12}",
+        "WL", "proto", "CCM idle", "Host idle", "total(us)"
+    );
+    for a in ['a', 'b', 'c', 'd', 'e'] {
+        let w = workload::by_annotation(a, cfg);
+        for p in [Protocol::Rp, Protocol::Bs] {
+            let m = protocol::run(p, &w, cfg);
+            println!(
+                "({a})  {:<6} {:>10} {:>10} {:>12.2}",
+                m.protocol,
+                pct(m.frac(m.ccm_idle())),
+                pct(m.frac(m.host_idle())),
+                ps_to_us(m.total)
+            );
+        }
+    }
+}
+
+/// Fig. 10: end-to-end runtime, all workloads × {RP, BS, AXLE_Int, AXLE p1/p10/p100}.
+pub fn fig10(cfg: &SimConfig) {
+    header("Fig. 10: normalized end-to-end runtime ratio (RP = 100%)");
+    println!(
+        "{:<4} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8}",
+        "WL", "RP", "BS", "AXLE_Int", "p1", "p10", "p100"
+    );
+    let mut red_rp = [Vec::new(), Vec::new(), Vec::new()];
+    let mut red_bs = [Vec::new(), Vec::new(), Vec::new()];
+    for a in workload::ALL_ANNOTATIONS {
+        let w = workload::by_annotation(a, cfg);
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let int = protocol::run(Protocol::AxleInterrupt, &w, cfg);
+        let polls = [poll_factors::P1, poll_factors::P10, poll_factors::P100];
+        let axles: Vec<RunMetrics> = polls
+            .iter()
+            .map(|&p| {
+                let c = cfg.clone().with_poll(p);
+                protocol::run(Protocol::Axle, &w, &c)
+            })
+            .collect();
+        for (i, m) in axles.iter().enumerate() {
+            red_rp[i].push(1.0 - m.ratio_to(&rp));
+            red_bs[i].push(1.0 - m.ratio_to(&bs));
+        }
+        println!(
+            "({a})  {:>7.2}% {:>7.2}% {:>9.2}% {:>7.2}% {:>7.2}% {:>7.2}%",
+            100.0,
+            100.0 * bs.ratio_to(&rp),
+            100.0 * int.ratio_to(&rp),
+            100.0 * axles[0].ratio_to(&rp),
+            100.0 * axles[1].ratio_to(&rp),
+            100.0 * axles[2].ratio_to(&rp),
+        );
+    }
+    println!("(j) end-to-end time-ratio reduction of AXLE:");
+    for (i, lbl) in ["p1", "p10", "p100"].iter().enumerate() {
+        println!(
+            "    {lbl:<5} vs RP: avg {} geomean {} max {} | vs BS: avg {} geomean {} max {}",
+            pct(mean(&red_rp[i])),
+            pct(geomean(&red_rp[i].iter().map(|x| x.max(1e-9)).collect::<Vec<_>>())),
+            pct(red_rp[i].iter().cloned().fold(f64::MIN, f64::max)),
+            pct(mean(&red_bs[i])),
+            pct(geomean(&red_bs[i].iter().map(|x| x.max(1e-9)).collect::<Vec<_>>())),
+            pct(red_bs[i].iter().cloned().fold(f64::MIN, f64::max)),
+        );
+    }
+}
+
+/// Fig. 11: the LLM case under the reduced-PU hardware profile.
+pub fn fig11() {
+    header("Fig. 11: LLM with reduced processing units (CCM/4, host/4)");
+    for (label, cfg) in [("Table III baseline", SimConfig::m2ndp()), ("reduced", SimConfig::reduced())]
+    {
+        let w = workload::by_annotation('h', &cfg);
+        let rp = protocol::run(Protocol::Rp, &w, &cfg);
+        let bs = protocol::run(Protocol::Bs, &w, &cfg);
+        let axle = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P10));
+        println!(
+            "{label:<20} RP 100.00%  BS {:>7.2}%  AXLE(p10) {:>7.2}%",
+            100.0 * bs.ratio_to(&rp),
+            100.0 * axle.ratio_to(&rp)
+        );
+    }
+}
+
+/// Fig. 12: idle-time comparison, all workloads, p10.
+pub fn fig12(cfg: &SimConfig) {
+    header("Fig. 12: idle time ratios (p10), RP vs BS vs AXLE");
+    println!(
+        "{:<4} {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10}",
+        "WL", "CCM:RP", "CCM:BS", "CCM:AXLE", "Host:RP", "Host:BS", "Host:AXLE"
+    );
+    let c10 = cfg.clone().with_poll(poll_factors::P10);
+    let mut ccm_red_rp = Vec::new();
+    let mut ccm_red_bs = Vec::new();
+    let mut host_red_rp = Vec::new();
+    let mut host_red_bs = Vec::new();
+    for a in workload::ALL_ANNOTATIONS {
+        let w = workload::by_annotation(a, cfg);
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let ax = protocol::run(Protocol::Axle, &w, &c10);
+        println!(
+            "({a})  {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10}",
+            pct(rp.frac(rp.ccm_idle())),
+            pct(bs.frac(bs.ccm_idle())),
+            pct(ax.frac(ax.ccm_idle())),
+            pct(rp.frac(rp.host_idle())),
+            pct(bs.frac(bs.host_idle())),
+            pct(ax.frac(ax.host_idle())),
+        );
+        let safe = |x: u64| (x.max(1)) as f64;
+        ccm_red_rp.push(safe(rp.ccm_idle()) * ax.total as f64 / (safe(ax.ccm_idle()) * rp.total as f64));
+        ccm_red_bs.push(safe(bs.ccm_idle()) * ax.total as f64 / (safe(ax.ccm_idle()) * bs.total as f64));
+        host_red_rp.push(safe(rp.host_idle()) * ax.total as f64 / (safe(ax.host_idle()) * rp.total as f64));
+        host_red_bs.push(safe(bs.host_idle()) * ax.total as f64 / (safe(ax.host_idle()) * bs.total as f64));
+    }
+    println!(
+        "avg idle-ratio reduction: CCM {:.2}x (vs RP) {:.2}x (vs BS) | host {:.2}x (vs RP) {:.2}x (vs BS)",
+        mean(&ccm_red_rp),
+        mean(&ccm_red_bs),
+        mean(&host_red_rp),
+        mean(&host_red_bs)
+    );
+}
+
+/// Fig. 13: host core stall time, p10 and p100.
+pub fn fig13(cfg: &SimConfig) {
+    header("Fig. 13: host core stall time / end-to-end runtime");
+    println!(
+        "{:<4} {:>10} {:>10} {:>12} {:>12}",
+        "WL", "RP", "BS", "AXLE p10", "AXLE p100"
+    );
+    for a in workload::ALL_ANNOTATIONS {
+        let w = workload::by_annotation(a, cfg);
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let a10 = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P10));
+        let a100 = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P100));
+        println!(
+            "({a})  {:>10} {:>10} {:>12} {:>12}",
+            pct(rp.frac(rp.host_stall.min(rp.total))),
+            pct(bs.frac(bs.host_stall.min(bs.total))),
+            pct(a10.frac(a10.host_stall.min(a10.total))),
+            pct(a100.frac(a100.host_stall.min(a100.total))),
+        );
+    }
+}
+
+/// Fig. 14: streaming-factor sweep.
+pub fn fig14(cfg: &SimConfig) {
+    header("Fig. 14: end-to-end runtime vs streaming factor (normalized to SF1)");
+    for a in ['a', 'd', 'i'] {
+        let w = workload::by_annotation(a, cfg);
+        let total_result = w.total_result_bytes() / w.iters.len() as u64;
+        let base = {
+            let mut c = cfg.clone();
+            c.axle.streaming_factor_bytes = 32;
+            protocol::run(Protocol::Axle, &w, &c)
+        };
+        print!("({a}) ");
+        for (label, sf) in [
+            ("SF1", 32u64),
+            ("SF2", 64),
+            ("SF8", 256),
+            ("SF32", 1024),
+            ("SF64", 2048),
+            ("SF_25%", total_result / 4),
+            ("SF_50%", total_result / 2),
+            ("SF_100%", total_result),
+        ] {
+            let mut c = cfg.clone();
+            c.axle.streaming_factor_bytes = sf.max(32);
+            let m = protocol::run(Protocol::Axle, &w, &c);
+            print!("{label} {:.3}  ", m.total as f64 / base.total as f64);
+        }
+        let rp = protocol::run(Protocol::Rp, &w, cfg);
+        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        println!(
+            "| RP {:.3} BS {:.3}",
+            rp.total as f64 / base.total as f64,
+            bs.total as f64 / base.total as f64
+        );
+    }
+}
+
+/// Fig. 14-ext (extension): fixed vs adaptive streaming factor.
+///
+/// The paper flags "dynamically selecting an optimal SF" as future work
+/// (§V-E). The adaptive policy targets one DMA-prep period's worth of
+/// production; this report compares it against the best and worst fixed
+/// settings per workload.
+pub fn fig14_ext(cfg: &SimConfig) {
+    header("Fig. 14-ext: adaptive streaming factor vs fixed (normalized to fixed SF1)");
+    println!(
+        "{:<4} {:>10} {:>10} {:>10} {:>10} {:>14} {:>14}",
+        "WL", "SF1", "SF64", "SF_100%", "adaptive", "SF1 batches", "adapt batches"
+    );
+    for a in ['a', 'b', 'd', 'e', 'i'] {
+        let w = workload::by_annotation(a, cfg);
+        let base = protocol::run(Protocol::Axle, &w, cfg);
+        let run_sf = |sf: u64| {
+            let mut c = cfg.clone();
+            c.axle.streaming_factor_bytes = sf.max(32);
+            protocol::run(Protocol::Axle, &w, &c)
+        };
+        let sf64 = run_sf(2048);
+        let sf_all = run_sf(w.iters[0].result_bytes());
+        let adaptive = {
+            let mut c = cfg.clone();
+            c.axle.sf_policy = crate::config::SfPolicy::Adaptive;
+            protocol::run(Protocol::Axle, &w, &c)
+        };
+        println!(
+            "({a})  {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>14} {:>14}",
+            1.0,
+            sf64.total as f64 / base.total as f64,
+            sf_all.total as f64 / base.total as f64,
+            adaptive.total as f64 / base.total as f64,
+            base.dma_batches,
+            adaptive.dma_batches,
+        );
+    }
+}
+
+/// Fig. 15: OoO streaming on/off × RR/FIFO.
+pub fn fig15(cfg: &SimConfig) {
+    header("Fig. 15: runtime without OoO streaming / with OoO (per scheduler)");
+    println!("{:<4} {:>10} {:>10}", "WL", "RR", "FIFO");
+    for a in ['d', 'e', 'i'] {
+        let w = workload::by_annotation(a, cfg);
+        let mut row = Vec::new();
+        for sched in [SchedPolicy::RoundRobin, SchedPolicy::Fifo] {
+            let mut on = cfg.clone();
+            on.sched = sched;
+            on.axle.ooo_streaming = true;
+            let mut off = on.clone();
+            off.axle.ooo_streaming = false;
+            let m_on = protocol::run(Protocol::Axle, &workload::by_annotation(a, &on), &on);
+            let m_off = protocol::run(Protocol::Axle, &workload::by_annotation(a, &off), &off);
+            row.push(m_off.total as f64 / m_on.total as f64);
+        }
+        let _ = &w;
+        println!("({a})  {:>9.2}x {:>9.2}x", row[0], row[1]);
+    }
+}
+
+/// Fig. 16: DMA slot capacity sweep + back-pressure cycles.
+pub fn fig16(cfg: &SimConfig) {
+    header("Fig. 16: runtime and back-pressure vs DMA slot capacity");
+    println!(
+        "{:<4} {:>10} {:>18} {:>18} {:>18}",
+        "WL", "cap=100%", "50%", "25%", "12.5%"
+    );
+    for a in ['a', 'd', 'h', 'i'] {
+        let w = workload::by_annotation(a, cfg);
+        let base = protocol::run(Protocol::Axle, &w, cfg);
+        print!("({a})  {:>9.3} ", 1.0);
+        for div in [2usize, 4, 8] {
+            let mut c = cfg.clone();
+            c.axle.dma_slot_capacity = cfg.axle.dma_slot_capacity / div;
+            let m = protocol::run(Protocol::Axle, &w, &c);
+            if m.deadlock {
+                print!("{:>18} ", "DEADLOCK");
+            } else {
+                print!(
+                    "{:>9.3} (bp {:>4.1}%) ",
+                    m.total as f64 / base.total as f64,
+                    100.0 * m.frac(m.backpressure)
+                );
+            }
+        }
+        println!();
+    }
+}
+
+/// Table I echo: what each workload offloads.
+pub fn table1() {
+    header("Table I: offloaded functions");
+    for (dom, f) in [
+        ("OLAP/OLTP", "Filtering (within SELECT)"),
+        ("Graph Analytics", "Edge traversal -> Vertex update"),
+        ("KNN/ANN", "Vector distance calculation"),
+        ("LLM Inference", "Attention block"),
+        ("DLRM", "Embedding lookup -> Sparse Length Sum"),
+    ] {
+        println!("{dom:<18} {f}");
+    }
+    let _ = olap::SsbQuery::Q1_1; // referenced by the generators
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Smoke tests: every emitter runs without panicking on the default
+    // config (output goes to the test harness's captured stdout).
+    #[test]
+    fn fast_reports_run() {
+        let cfg = SimConfig::m2ndp();
+        table1();
+        table2();
+        table4(&cfg);
+        fig3(&cfg);
+        fig4();
+        fig5(&cfg);
+        fig7(&cfg);
+    }
+
+    #[test]
+    fn sweep_reports_run() {
+        let cfg = SimConfig::m2ndp();
+        fig11();
+        fig14(&cfg);
+        fig14_ext(&cfg);
+        fig15(&cfg);
+        fig16(&cfg);
+    }
+
+    #[test]
+    fn fig10_and_idle_reports_run() {
+        let cfg = SimConfig::m2ndp();
+        fig10(&cfg);
+        fig12(&cfg);
+        fig13(&cfg);
+    }
+}
+
+/// Run every figure/table with the default Table III config.
+pub fn all() {
+    let cfg = SimConfig::m2ndp();
+    table1();
+    table2();
+    table4(&cfg);
+    fig3(&cfg);
+    fig4();
+    fig5(&cfg);
+    fig7(&cfg);
+    fig10(&cfg);
+    fig11();
+    fig12(&cfg);
+    fig13(&cfg);
+    fig14(&cfg);
+    fig14_ext(&cfg);
+    fig15(&cfg);
+    fig16(&cfg);
+}

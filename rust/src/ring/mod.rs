@@ -1,0 +1,361 @@
+//! Metadata / payload ring buffers with gap-aware OoO consumption.
+//!
+//! AXLE partitions the host-local DMA region into two fixed-size ring
+//! buffers (§IV-B): a **payload** ring holding back-streamed result data
+//! (32 B slots by default) and a **metadata** ring holding one record per
+//! payload slot (payload slot id + task tag), which is what the host's
+//! polling routine watches.
+//!
+//! Slot ids are monotonically increasing `u64` sequence numbers; the
+//! physical slot is `id % capacity`. The paper's correctness invariants
+//! (§IV-C) map onto this type as:
+//!
+//! - *visibility / flow control*: a producer may only claim slots while
+//!   `tail - head_view < capacity`, where `head_view` is its (possibly
+//!   stale) view of the consumer head — stale views are **conservative**,
+//!   so no overwrite of unconsumed data is possible;
+//! - *gap-aware head (OoO)*: consuming slot `s > head` marks it consumed
+//!   but the head only advances past the maximal contiguous consumed
+//!   prefix;
+//! - *monotonicity / wraparound*: `head` and `tail` never decrease and
+//!   `tail - head <= capacity` at all times (asserted in debug builds,
+//!   property-tested in `rust/tests/proptests.rs`).
+
+/// Host-side ring state: the authoritative head/tail plus the consumed map.
+///
+/// The consumed map is a bitset indexed by `slot_id % bit_capacity`, where
+/// `bit_capacity` is the capacity rounded up to a 64-bit word multiple —
+/// since the live window `[head, tail)` never exceeds `capacity ≤
+/// bit_capacity`, two live slots can never collide. Bits are cleared as
+/// the head passes them, so the words are clean for the next wrap. This
+/// keeps produce/consume at O(1) amortized with word-level constants
+/// (the §Perf pass replaced a per-slot `VecDeque<bool>` with this).
+#[derive(Debug, Clone)]
+pub struct Ring {
+    capacity: u64,
+    bit_capacity: u64,
+    head: u64,
+    tail: u64,
+    consumed: Vec<u64>,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring capacity must be positive");
+        let words = capacity.div_ceil(64);
+        Self {
+            capacity: capacity as u64,
+            bit_capacity: (words * 64) as u64,
+            head: 0,
+            tail: 0,
+            consumed: vec![0u64; words],
+        }
+    }
+
+    #[inline]
+    fn bit(&self, id: u64) -> bool {
+        let b = id % self.bit_capacity;
+        (self.consumed[(b / 64) as usize] >> (b % 64)) & 1 == 1
+    }
+
+    #[inline]
+    fn set_bit(&mut self, id: u64) {
+        let b = id % self.bit_capacity;
+        self.consumed[(b / 64) as usize] |= 1 << (b % 64);
+    }
+
+
+    #[inline]
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Oldest unreleased slot id (contiguous consumption frontier).
+    #[inline]
+    pub fn head(&self) -> u64 {
+        self.head
+    }
+
+    /// Next slot id a producer will write.
+    #[inline]
+    pub fn tail(&self) -> u64 {
+        self.tail
+    }
+
+    /// Slots currently held (written or claimed, not yet released).
+    #[inline]
+    pub fn occupancy(&self) -> u64 {
+        self.tail - self.head
+    }
+
+    #[inline]
+    pub fn free(&self) -> u64 {
+        self.capacity - self.occupancy()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.occupancy() == self.capacity
+    }
+
+    /// Producer writes `n` slots. Returns the first slot id written.
+    /// Panics if the write would overflow — callers must gate on credit
+    /// (the producer-side view), so an overflow is a flow-control bug.
+    pub fn produce(&mut self, n: u64) -> u64 {
+        assert!(
+            self.occupancy() + n <= self.capacity,
+            "ring overflow: occupancy {} + {} > capacity {} (flow-control violation)",
+            self.occupancy(),
+            n,
+            self.capacity
+        );
+        let first = self.tail;
+        self.tail += n;
+        first
+    }
+
+    /// Consumer marks slot `id` consumed (possibly out of order), then
+    /// advances the head past the maximal contiguous consumed prefix.
+    /// Returns the (possibly unchanged) new head.
+    pub fn consume(&mut self, id: u64) -> u64 {
+        self.mark(id);
+        self.advance_head()
+    }
+
+    /// Consume a contiguous range `[first, first+n)` with word-level bit
+    /// fills (§Perf: ranges are how the AXLE host releases payload slots,
+    /// hundreds of thousands per run — per-slot loops dominated profiles).
+    pub fn consume_range(&mut self, first: u64, n: u64) -> u64 {
+        if n == 0 {
+            return self.head;
+        }
+        assert!(
+            first >= self.head && first + n <= self.tail,
+            "consume of unwritten/released range [{first}, {}) (head {}, tail {})",
+            first + n,
+            self.head,
+            self.tail
+        );
+        let mut id = first;
+        let end = first + n;
+        while id < end {
+            let b = id % self.bit_capacity;
+            let w = (b / 64) as usize;
+            let bit = b % 64;
+            let count = (64 - bit).min(end - id);
+            let mask = if count == 64 { !0u64 } else { ((1u64 << count) - 1) << bit };
+            assert!(self.consumed[w] & mask == 0, "double consume within [{first}, {end})");
+            self.consumed[w] |= mask;
+            id += count;
+        }
+        self.advance_head()
+    }
+
+    #[inline]
+    fn mark(&mut self, id: u64) {
+        assert!(
+            id >= self.head && id < self.tail,
+            "consume of unwritten/released slot {id} (head {}, tail {})",
+            self.head,
+            self.tail
+        );
+        assert!(!self.bit(id), "double consume of slot {id}");
+        self.set_bit(id);
+    }
+
+    /// Advance the head past the maximal contiguous consumed prefix,
+    /// clearing bits as it passes — word-at-a-time via trailing-ones runs.
+    fn advance_head(&mut self) -> u64 {
+        while self.head < self.tail {
+            let b = self.head % self.bit_capacity;
+            let w = (b / 64) as usize;
+            let bit = (b % 64) as u32;
+            let run = (((!self.consumed[w]) >> bit).trailing_zeros()).min(64 - bit) as u64;
+            if run == 0 {
+                break;
+            }
+            let adv = run.min(self.tail - self.head);
+            let mask = if adv == 64 { !0u64 } else { ((1u64 << adv) - 1) << bit };
+            self.consumed[w] &= !mask;
+            self.head += adv;
+            if adv < run || (bit as u64 + run) < 64 {
+                // Clamped by tail, or the consumed run ended mid-word.
+                break;
+            }
+        }
+        self.head
+    }
+
+    /// Check invariants (used by tests/assertions).
+    pub fn check_invariants(&self) {
+        assert!(self.tail >= self.head);
+        assert!(self.tail - self.head <= self.capacity);
+        // Head is maximal contiguous: the first pending slot is unconsumed.
+        if self.head < self.tail {
+            assert!(!self.bit(self.head), "head not advanced past consumed prefix");
+        }
+        // Consumed bits only within the live window.
+        let set: u64 = self.consumed.iter().map(|w| w.count_ones() as u64).sum();
+        assert!(set <= self.occupancy(), "stray consumed bits outside window");
+    }
+}
+
+/// Producer-side (CCM) view of a ring: the true `tail` it owns plus a
+/// possibly-stale `head_view` refreshed by flow-control messages. The view
+/// is conservative — `head_view <= true head` always — so gating on it can
+/// cause back-pressure but never overwrite (§IV-C "stale CCM head index
+/// remains conservative enough").
+#[derive(Debug, Clone)]
+pub struct ProducerView {
+    capacity: u64,
+    head_view: u64,
+    tail: u64,
+}
+
+impl ProducerView {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity: capacity as u64, head_view: 0, tail: 0 }
+    }
+
+    #[inline]
+    pub fn credit(&self) -> u64 {
+        self.capacity - (self.tail - self.head_view)
+    }
+
+    #[inline]
+    pub fn tail(&self) -> u64 {
+        self.tail
+    }
+
+    #[inline]
+    pub fn head_view(&self) -> u64 {
+        self.head_view
+    }
+
+    /// Try to claim `n` slots; returns the first claimed id, or `None`
+    /// (back-pressure) if credit is insufficient.
+    pub fn try_claim(&mut self, n: u64) -> Option<u64> {
+        if self.credit() < n {
+            return None;
+        }
+        let first = self.tail;
+        self.tail += n;
+        Some(first)
+    }
+
+    /// Apply a flow-control message carrying the host's head index.
+    /// Out-of-order/stale messages are ignored (monotone update).
+    pub fn update_head(&mut self, head: u64) {
+        debug_assert!(head <= self.tail, "host head beyond producer tail");
+        self.head_view = self.head_view.max(head);
+    }
+}
+
+/// The paired AXLE rings: metadata + payload, sized per config.
+#[derive(Debug, Clone)]
+pub struct DmaRegion {
+    pub payload: Ring,
+    pub metadata: Ring,
+}
+
+impl DmaRegion {
+    pub fn new(payload_slots: usize, metadata_slots: usize) -> Self {
+        Self { payload: Ring::new(payload_slots), metadata: Ring::new(metadata_slots) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produce_consume_in_order() {
+        let mut r = Ring::new(4);
+        assert_eq!(r.produce(3), 0);
+        assert_eq!(r.occupancy(), 3);
+        assert_eq!(r.consume(0), 1);
+        assert_eq!(r.consume(1), 2);
+        assert_eq!(r.consume(2), 3);
+        assert_eq!(r.occupancy(), 0);
+        r.check_invariants();
+    }
+
+    #[test]
+    fn gap_aware_head_stays_put() {
+        // Paper §IV-C example: results consumed OoO; head stays at 0 even
+        // after slot 1 is consumed, until slot 0 is.
+        let mut r = Ring::new(8);
+        r.produce(3);
+        assert_eq!(r.consume(1), 0); // gap at 0: head unchanged
+        assert_eq!(r.consume(2), 0);
+        assert_eq!(r.consume(0), 3); // prefix complete: head jumps to 3
+        r.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "flow-control violation")]
+    fn overflow_panics() {
+        let mut r = Ring::new(2);
+        r.produce(3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double consume")]
+    fn double_consume_panics() {
+        let mut r = Ring::new(2);
+        r.produce(1);
+        r.consume(0);
+        // Slot 0 was released by head advance; consuming it again must trip
+        // the released-slot assertion... produce another to keep id valid:
+        // (directly assert double consume on an unreleased slot)
+        let mut r2 = Ring::new(4);
+        r2.produce(2);
+        r2.consume(1);
+        r2.consume(1);
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let mut r = Ring::new(4);
+        for round in 0..100u64 {
+            let first = r.produce(4);
+            assert_eq!(first, round * 4);
+            r.consume_range(first, 4);
+            r.check_invariants();
+        }
+        assert_eq!(r.head(), 400);
+    }
+
+    #[test]
+    fn producer_view_backpressure_and_refresh() {
+        let mut p = ProducerView::new(4);
+        assert_eq!(p.try_claim(4), Some(0));
+        assert_eq!(p.try_claim(1), None); // no credit
+        p.update_head(2); // host consumed 2 slots
+        assert_eq!(p.credit(), 2);
+        assert_eq!(p.try_claim(2), Some(4));
+        assert_eq!(p.try_claim(1), None);
+    }
+
+    #[test]
+    fn producer_view_ignores_stale_fc() {
+        let mut p = ProducerView::new(4);
+        p.try_claim(4).unwrap();
+        p.update_head(3);
+        p.update_head(1); // stale, reordered message
+        assert_eq!(p.head_view(), 3);
+    }
+
+    #[test]
+    fn stale_view_is_conservative_not_unsafe() {
+        // Host has consumed everything but producer never saw FC: producer
+        // stalls (conservative) instead of overwriting.
+        let mut host = Ring::new(2);
+        let mut prod = ProducerView::new(2);
+        let first = prod.try_claim(2).unwrap();
+        host.produce(2);
+        host.consume_range(first, 2);
+        // No update_head: credit still zero.
+        assert_eq!(prod.try_claim(1), None);
+    }
+}

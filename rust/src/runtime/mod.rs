@@ -1,0 +1,286 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build-time Python pipeline (`python/compile/aot.py`) lowers every
+//! workload's CCM half and host half to **HLO text** under `artifacts/`,
+//! with a `manifest.json` describing shapes. This module wraps the `xla`
+//! crate's PJRT CPU client to compile and execute those artifacts from
+//! Rust — the offloaded functions' real numerics, with Python never on
+//! the execution path.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py docstring and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One manifest entry (see aot.py).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+    pub sha256: String,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest entry missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: j
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest entry missing file"))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            meta: j.get("meta").clone(),
+            sha256: j.get("sha256").as_str().unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// The artifact registry + PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactEntry>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `dir` (default `artifacts/`), parse `manifest.json`, create
+    /// the PJRT CPU client.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let manifest: HashMap<String, ArtifactEntry> = doc
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest.json is not an object"))?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), ArtifactEntry::from_json(v)?)))
+            .collect::<Result<_>>()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Artifact names available (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name:?}"))
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named artifact on `inputs`; returns the tuple elements
+    /// as literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                entry.inputs.len()
+            ));
+        }
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result.to_tuple().map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    /// Execute with f32 slices in / f32 vectors out (convenience for the
+    /// all-f32 artifacts).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.entry(name)?.clone();
+        let lits = inputs
+            .iter()
+            .zip(&entry.inputs)
+            .map(|(data, spec)| literal_f32(data, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.execute(name, &lits)?;
+        out.iter()
+            .map(|l| {
+                // Non-f32 outputs (e.g. top-k's i32 indices) convert to
+                // f32 for the uniform convenience signature.
+                let l32 = l
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("output convert: {e:?}"))?;
+                l32.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// Build an f32 literal of `shape` from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        return Err(anyhow!("literal_f32: {} elements for shape {shape:?}", data.len()));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal of `shape` from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        return Err(anyhow!("literal_i32: {} elements for shape {shape:?}", data.len()));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Deterministic pseudo-random f32 in [-1, 1) (numerics test inputs).
+pub fn prand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut z = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..n)
+        .map(|_| {
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z ^= z >> 27;
+            ((z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+        .collect()
+}
+
+/// Deterministic pseudo-random i32 in [0, bound) (index inputs).
+pub fn prand_i32(n: usize, bound: i32, seed: u64) -> Vec<i32> {
+    let mut z = seed.wrapping_mul(0xD1B5_4A32_D192_ED03) | 1;
+    (0..n)
+        .map(|_| {
+            z = (z ^ (z >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            z ^= z >> 29;
+            ((z >> 16) % bound as u64) as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(dir).unwrap();
+        assert!(rt.names().contains(&"knn_a_ccm"));
+        let e = rt.entry("knn_a_ccm").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2048]);
+    }
+
+    #[test]
+    fn knn_artifact_executes_with_correct_numerics() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = Runtime::new(dir).unwrap();
+        let (dim, rows) = (2048usize, 128usize);
+        let q = prand_f32(dim, 1);
+        let db = prand_f32(rows * dim, 2);
+        let out = rt.execute_f32("knn_a_ccm", &[&q, &db]).unwrap();
+        assert_eq!(out.len(), 1);
+        let dists = &out[0];
+        assert_eq!(dists.len(), rows);
+        // Verify against a direct Rust computation.
+        for r in 0..rows {
+            let want: f32 = (0..dim)
+                .map(|j| {
+                    let d = db[r * dim + j] - q[j];
+                    d * d
+                })
+                .sum();
+            let got = dists[r];
+            assert!(
+                (got - want).abs() / want.max(1.0) < 1e-3,
+                "row {r}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn prand_is_deterministic() {
+        assert_eq!(prand_f32(16, 3), prand_f32(16, 3));
+        assert_ne!(prand_f32(16, 3), prand_f32(16, 4));
+        assert!(prand_i32(100, 50, 1).iter().all(|&x| (0..50).contains(&x)));
+    }
+}

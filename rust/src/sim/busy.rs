@@ -1,0 +1,141 @@
+//! Busy-interval accounting for simulated resources.
+//!
+//! Tracks two quantities per resource:
+//! - **aggregate busy time** — the sum of all busy intervals across all
+//!   servers (used for utilization),
+//! - **union busy time** — wall-clock time during which *any* server was
+//!   busy (the paper's per-component times T_C / T_D / T_H are unions:
+//!   "CCM processing time" is the span the CCM is doing work, regardless
+//!   of how many μthreads are active).
+//!
+//! Intervals must be recorded with non-decreasing start times, which holds
+//! for every caller because the event queue delivers events in time order.
+
+use super::Ps;
+
+/// Accumulates busy intervals; see module docs.
+#[derive(Debug, Default, Clone)]
+pub struct BusyTracker {
+    total: Ps,
+    union: Ps,
+    covered_end: Ps,
+    first_start: Option<Ps>,
+    last_end: Ps,
+    intervals: u64,
+}
+
+impl BusyTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a busy interval `[start, end)`. Starts must be non-decreasing
+    /// across calls (debug-asserted); overlapping intervals are merged for
+    /// the union statistic.
+    pub fn record(&mut self, start: Ps, end: Ps) {
+        debug_assert!(end >= start, "negative interval");
+        if end == start {
+            return;
+        }
+        self.total += end - start;
+        self.intervals += 1;
+        if self.first_start.is_none() {
+            self.first_start = Some(start);
+        }
+        self.last_end = self.last_end.max(end);
+        if start >= self.covered_end {
+            self.union += end - start;
+            self.covered_end = end;
+        } else if end > self.covered_end {
+            self.union += end - self.covered_end;
+            self.covered_end = end;
+        }
+    }
+
+    /// Sum of busy time across all servers.
+    #[inline]
+    pub fn total(&self) -> Ps {
+        self.total
+    }
+
+    /// Wall-clock time during which at least one server was busy.
+    #[inline]
+    pub fn union(&self) -> Ps {
+        self.union
+    }
+
+    /// End of the last recorded interval.
+    #[inline]
+    pub fn last_end(&self) -> Ps {
+        self.last_end
+    }
+
+    /// Start of the first recorded interval (None if never busy).
+    #[inline]
+    pub fn first_start(&self) -> Option<Ps> {
+        self.first_start
+    }
+
+    /// Number of recorded intervals.
+    #[inline]
+    pub fn intervals(&self) -> u64 {
+        self.intervals
+    }
+
+    /// Idle time within `[0, horizon)` w.r.t. the union statistic.
+    #[inline]
+    pub fn idle_within(&self, horizon: Ps) -> Ps {
+        horizon.saturating_sub(self.union)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_intervals() {
+        let mut b = BusyTracker::new();
+        b.record(0, 10);
+        b.record(20, 30);
+        assert_eq!(b.total(), 20);
+        assert_eq!(b.union(), 20);
+        assert_eq!(b.idle_within(40), 20);
+    }
+
+    #[test]
+    fn overlapping_intervals_merge_in_union() {
+        let mut b = BusyTracker::new();
+        b.record(0, 10);
+        b.record(5, 15); // overlaps by 5
+        assert_eq!(b.total(), 20);
+        assert_eq!(b.union(), 15);
+    }
+
+    #[test]
+    fn contained_interval_adds_nothing_to_union() {
+        let mut b = BusyTracker::new();
+        b.record(0, 100);
+        b.record(10, 20);
+        assert_eq!(b.union(), 100);
+        assert_eq!(b.total(), 110);
+    }
+
+    #[test]
+    fn zero_length_ignored() {
+        let mut b = BusyTracker::new();
+        b.record(5, 5);
+        assert_eq!(b.total(), 0);
+        assert_eq!(b.intervals(), 0);
+        assert_eq!(b.first_start(), None);
+    }
+
+    #[test]
+    fn bounds_tracked() {
+        let mut b = BusyTracker::new();
+        b.record(7, 9);
+        b.record(12, 40);
+        assert_eq!(b.first_start(), Some(7));
+        assert_eq!(b.last_end(), 40);
+    }
+}

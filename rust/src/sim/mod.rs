@@ -1,0 +1,86 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! This is the substrate standing in for the paper's M²NDP testbed
+//! (Ramulator + BookSim2): a picosecond-resolution event queue plus the
+//! resource primitives ([`PuPool`], busy-interval accounting) every
+//! offloading protocol is built from. Determinism is a hard requirement —
+//! the same `(workload, protocol, config, seed)` tuple must produce the
+//! same timeline on every run, which the property tests assert.
+
+pub mod queue;
+pub mod pool;
+pub mod busy;
+
+pub use busy::BusyTracker;
+pub use pool::PuPool;
+pub use queue::EventQueue;
+
+/// Simulation time in **picoseconds**.
+///
+/// Picoseconds keep every Table III clock exact: a 3 GHz host cycle is
+/// 333 ps (we round to whole ps), a 2 GHz CCM cycle 500 ps, CXL.mem RTT
+/// 70_000 ps. `u64` picoseconds overflow after ~213 days of simulated
+/// time — far beyond any workload here.
+pub type Ps = u64;
+
+/// One nanosecond in [`Ps`].
+pub const NS: Ps = 1_000;
+/// One microsecond in [`Ps`].
+pub const US: Ps = 1_000_000;
+/// One millisecond in [`Ps`].
+pub const MS: Ps = 1_000_000_000;
+
+/// Convert a frequency in GHz to a cycle time in [`Ps`].
+#[inline]
+pub fn cycle_ps(freq_ghz: f64) -> Ps {
+    (1_000.0 / freq_ghz).round() as Ps
+}
+
+/// Convert seconds (f64) to [`Ps`], saturating.
+#[inline]
+pub fn secs_to_ps(s: f64) -> Ps {
+    (s * 1e12).round() as Ps
+}
+
+/// Convert [`Ps`] to fractional microseconds (for reports).
+#[inline]
+pub fn ps_to_us(t: Ps) -> f64 {
+    t as f64 / US as f64
+}
+
+/// Time to move `bytes` at `gbps` GB/s, in [`Ps`].
+#[inline]
+pub fn transfer_ps(bytes: u64, gbps: f64) -> Ps {
+    if bytes == 0 || gbps <= 0.0 {
+        return 0;
+    }
+    ((bytes as f64 / (gbps * 1e9)) * 1e12).round() as Ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversion() {
+        assert_eq!(cycle_ps(2.0), 500);
+        assert_eq!(cycle_ps(1.0), 1000);
+        // 3 GHz rounds to 333 ps.
+        assert_eq!(cycle_ps(3.0), 333);
+    }
+
+    #[test]
+    fn transfer_times() {
+        // 1 GB at 1 GB/s = 1 s = 1e12 ps.
+        assert_eq!(transfer_ps(1_000_000_000, 1.0), 1_000_000_000_000);
+        // 64 B at 32 GB/s = 2 ns.
+        assert_eq!(transfer_ps(64, 32.0), 2 * NS);
+        assert_eq!(transfer_ps(0, 32.0), 0);
+    }
+
+    #[test]
+    fn unit_constants() {
+        assert_eq!(NS * 1000, US);
+        assert_eq!(US * 1000, MS);
+    }
+}

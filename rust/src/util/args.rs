@@ -1,0 +1,107 @@
+//! Tiny flag-style CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, `-k value`, and bare
+//! positionals. The `axle` binary builds its subcommands on top.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--").or_else(|| a.strip_prefix('-')) {
+                if rest.is_empty() {
+                    out.positional.push(a);
+                    continue;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // Value-taking if the next token isn't a flag.
+                    let takes_value =
+                        it.peek().map(|n| !n.starts_with('-') || n.parse::<f64>().is_ok());
+                    if takes_value == Some(true) {
+                        let v = it.next().unwrap();
+                        out.flags.entry(rest.to_string()).or_default().push(v);
+                    } else {
+                        out.flags.entry(rest.to_string()).or_default().push(String::new());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Present at all (with or without value)?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Last value of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    /// Parse the value of `--key` as `T`.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// First positional (subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run --workload e --protocol axle --poll-ns 500 --no-ooo");
+        assert_eq!(a.command(), Some("run"));
+        assert_eq!(a.get("workload"), Some("e"));
+        assert_eq!(a.get_as::<u64>("poll-ns"), Some(500));
+        assert!(a.has("no-ooo"));
+        assert!(!a.has("fifo"));
+    }
+
+    #[test]
+    fn equals_form_and_short() {
+        let a = parse("run --sf=64 -w e");
+        assert_eq!(a.get_as::<u64>("sf"), Some(64));
+        assert_eq!(a.get("w"), Some("e"));
+    }
+
+    #[test]
+    fn boolean_flag_followed_by_flag() {
+        let a = parse("run --no-ooo --fifo");
+        assert!(a.has("no-ooo") && a.has("fifo"));
+        assert_eq!(a.get("no-ooo"), None);
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse("run --offset -5");
+        assert_eq!(a.get_as::<i64>("offset"), Some(-5));
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline against a minimal vendored crate set, so the
+//! facilities a crates.io project would pull in are implemented here:
+//!
+//! - [`rng`] — deterministic PCG32 / splitmix64 PRNG (workload synthesis,
+//!   property tests)
+//! - [`json`] — a small recursive-descent JSON parser + writer (artifact
+//!   manifest, config files, metric dumps)
+//! - [`args`] — flag-style CLI argument parsing for the `axle` binary
+//! - [`prop`] — a miniature property-based testing harness (random case
+//!   generation with seed-reported failures, used by rust/tests/proptests.rs)
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;

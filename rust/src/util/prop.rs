@@ -1,0 +1,85 @@
+//! Miniature property-based testing harness (offline proptest stand-in).
+//!
+//! `run_prop(name, cases, |rng| { ... })` executes the closure `cases`
+//! times with independent deterministic RNG streams; on panic it reports
+//! the failing case index and seed so the case can be replayed exactly:
+//!
+//! ```text
+//! property 'ring_no_overflow' failed at case 317 (seed 0x51b3...): <panic>
+//! ```
+//!
+//! Used by `rust/tests/proptests.rs` for the ring-buffer / flow-control /
+//! scheduler invariants (DESIGN.md §Memory-correctness invariants).
+
+use super::rng::{splitmix64, Pcg32};
+
+/// Base seed: override with `AXLE_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("AXLE_PROP_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim_start_matches("0x");
+            u64::from_str_radix(s, 16).ok().or_else(|| s.parse().ok())
+        })
+        .unwrap_or(0xA81E_5EED)
+}
+
+/// Run `f` across `cases` random cases. Panics (with replay info) on the
+/// first failing case.
+pub fn run_prop<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(name: &str, cases: u32, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = splitmix64(base ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::seed_from_u64(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, base {base:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u32);
+        // Cell is not RefUnwindSafe-friendly inside catch_unwind closures,
+        // so use an atomic.
+        let n = std::sync::atomic::AtomicU32::new(0);
+        run_prop("trivial", 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+            n.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(n.load(std::sync::atomic::Ordering::Relaxed), 50);
+        let _ = count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_reports_seed() {
+        run_prop("always_fails", 10, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn cases_get_distinct_streams() {
+        let seen = std::sync::Mutex::new(std::collections::HashSet::new());
+        run_prop("distinct", 20, |rng| {
+            seen.lock().unwrap().insert(rng.next_u64());
+        });
+        assert!(seen.lock().unwrap().len() >= 19);
+    }
+}

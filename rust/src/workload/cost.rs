@@ -1,0 +1,138 @@
+//! Analytic task cost model: FLOPs + byte traffic → per-PU task time.
+//!
+//! The paper's μthreaded PUs (16 μthreads on CCM, 2 on host) interleave
+//! execution to hide memory latency, so a PU's achievable throughput is
+//! the min of its issue rate and its share of DRAM bandwidth — the classic
+//! roofline, evaluated per task. The [`PuPool`](crate::sim::PuPool) then
+//! models PU-level parallelism and queueing on top.
+//!
+//! Calibration anchors (DESIGN.md §Timing model):
+//! - CCM `flops_per_cycle = 2.75` reproduces Fig. 3(a)'s ≈897K-cycle
+//!   QKVProj for OPT-2.7B on 16 PUs.
+//! - Bandwidth derates (0.85 stream / 0.35 random) are standard DDR5
+//!   sustained fractions.
+
+use crate::config::PuConfig;
+use crate::sim::{secs_to_ps, Ps};
+
+/// Byte traffic of one task against its side's DRAM.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    /// Sequentially streamed bytes (reads + writes).
+    pub stream_bytes: u64,
+    /// Random accesses (line-granularity) and their payload size.
+    pub random_accesses: u64,
+    pub random_access_bytes: u64,
+}
+
+/// Time for one task on ONE processing unit of `pu`, given `flops` of
+/// compute and `traffic` of memory work, with the DRAM shared equally
+/// across the array's PUs (steady-state share).
+pub fn task_time(pu: &PuConfig, flops: f64, traffic: Traffic) -> Ps {
+    let compute_s = flops / (pu.freq_ghz * pu.flops_per_cycle * 1e9);
+    let dram = pu.dram();
+    let share = pu.num_pus as f64;
+    let stream_s = traffic.stream_bytes as f64 / (dram.stream_gbps() * 1e9 / share);
+    let lines = traffic.random_accesses
+        * traffic.random_access_bytes.div_ceil(crate::mem::LINE_BYTES).max(1);
+    let random_s = (lines * crate::mem::LINE_BYTES) as f64
+        / (dram.peak_gbps * dram.random_eff * 1e9 / share);
+    // μthread interleaving overlaps compute with memory: the task is bound
+    // by whichever dominates, not their sum.
+    let t = compute_s.max(stream_s + random_s);
+    secs_to_ps(t).max(1)
+}
+
+/// Time for `cycles` of straight-line work on one PU (host-side scalar
+/// task segments such as top-k heap updates, hash probes, rank updates).
+pub fn cycles_time(pu: &PuConfig, cycles: f64) -> Ps {
+    secs_to_ps(cycles / (pu.freq_ghz * 1e9)).max(1)
+}
+
+/// Deterministic per-task duration jitter modelling μthread interleave
+/// and bank-conflict variance: multiplier in `[1 - j/2, 1 + j/2]` from a
+/// splitmix64 hash of `(seed, id)`. Same seed ⇒ same timeline.
+pub fn jitter(dur: Ps, amplitude: f64, seed: u64, id: u64) -> Ps {
+    if amplitude <= 0.0 {
+        return dur;
+    }
+    let mut z = seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let unit = (z >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+    let mult = 1.0 + amplitude * (unit - 0.5);
+    ((dur as f64 * mult).round() as Ps).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::US;
+
+    fn ccm() -> PuConfig {
+        SimConfig::m2ndp().ccm
+    }
+
+    #[test]
+    fn compute_bound_task() {
+        // 5.5 MFLOP on one CCM PU @ 5.5 GFLOP/s = 1 ms.
+        let t = task_time(&ccm(), 5.5e6, Traffic::default());
+        assert_eq!(t, 1000 * US);
+    }
+
+    #[test]
+    fn memory_bound_task_uses_bandwidth_share() {
+        // Stream 32 MB with no compute: share = 614.4*0.85/16 ≈ 32.6 GB/s
+        // per PU → ~0.98 ms.
+        let t = task_time(
+            &ccm(),
+            0.0,
+            Traffic { stream_bytes: 32 << 20, ..Default::default() },
+        );
+        let expect_s = (32u64 << 20) as f64 / (614.4e9 * 0.85 / 16.0);
+        let expect = secs_to_ps(expect_s);
+        let diff = (t as i64 - expect as i64).abs();
+        assert!(diff < 1000, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn roofline_takes_max_not_sum() {
+        let tr = Traffic { stream_bytes: 1 << 20, ..Default::default() };
+        let c = task_time(&ccm(), 1e9, Traffic::default());
+        let m = task_time(&ccm(), 0.0, tr);
+        let both = task_time(&ccm(), 1e9, tr);
+        assert_eq!(both, c.max(m));
+    }
+
+    #[test]
+    fn qkvproj_calibration_matches_fig3() {
+        // OPT-2.7B QKVProj: 2*2560*7680 FLOPs across the 16-PU array should
+        // be ≈897K CCM cycles (Fig. 3a). Whole-array time = per-task time
+        // when the work is split into 16 equal tasks.
+        let cfg = SimConfig::m2ndp();
+        let flops_total = 2.0 * 2560.0 * 7680.0;
+        let per_pu = flops_total / 16.0;
+        let t = task_time(&cfg.ccm, per_pu, Traffic::default());
+        let cycles = t as f64 / cfg.ccm.cycle() as f64;
+        assert!((cycles - 897_000.0).abs() / 897_000.0 < 0.02, "cycles={cycles}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        for id in 0..1000u64 {
+            let a = jitter(1_000_000, 0.2, 42, id);
+            let b = jitter(1_000_000, 0.2, 42, id);
+            assert_eq!(a, b);
+            assert!(a >= 900_000 && a <= 1_100_000, "a={a}");
+        }
+        // Different seeds give different timelines.
+        assert_ne!(jitter(1_000_000, 0.2, 1, 7), jitter(1_000_000, 0.2, 2, 7));
+    }
+
+    #[test]
+    fn zero_jitter_identity() {
+        assert_eq!(jitter(12345, 0.0, 9, 9), 12345);
+    }
+}

@@ -1,0 +1,111 @@
+//! DLRM workload: Criteo-style embedding offload (Table IV i).
+//!
+//! Offload boundary (Table I, CLAY-style): the CCM performs embedding
+//! table lookups + Sparse-Length-Sum over a 1M-row, 256-dim table resident
+//! in CXL memory, streaming back one pooled vector per sample; the host
+//! runs the small interaction/top MLP. DLRM is the paper's CCM-dominated
+//! case (§V-A: "DLRM is dominated by CCM-side computation").
+
+use crate::config::SimConfig;
+use crate::workload::cost::{cycles_time, task_time, Traffic};
+use crate::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DlrmConfig {
+    /// Embedding table rows (Table IV: 1M).
+    pub table_rows: usize,
+    /// Embedding dimension (Table IV: 256).
+    pub dim: usize,
+    /// Multi-hot lookups pooled per sample.
+    pub lookups_per_sample: usize,
+    /// Samples per inference batch.
+    pub batch: usize,
+    /// Inference batches (offload iterations).
+    pub batches: usize,
+    /// Host cycles per sample for the top-MLP interaction.
+    pub host_cycles_per_sample: f64,
+}
+
+impl DlrmConfig {
+    /// The paper's Table IV row: Criteo-style, Dim 256, 1M rows.
+    pub fn paper() -> Self {
+        Self {
+            table_rows: 1_000_000,
+            dim: 256,
+            lookups_per_sample: 80,
+            batch: 2048,
+            batches: 4,
+            host_cycles_per_sample: 300.0,
+        }
+    }
+}
+
+/// Build the Table IV (i) workload.
+pub fn criteo(cfg: &SimConfig, d: DlrmConfig) -> WorkloadSpec {
+    let row_bytes = (d.dim * 4) as u64;
+    let target_tasks = (cfg.ccm.num_pus * 8).min(d.batch);
+    let spt = d.batch.div_ceil(target_tasks); // samples per task
+    let mut iters = Vec::with_capacity(d.batches);
+    for _ in 0..d.batches {
+        let mut ccm_tasks = Vec::new();
+        let mut host_tasks = Vec::new();
+        let mut done = 0usize;
+        while done < d.batch {
+            let n = spt.min(d.batch - done);
+            let accesses = (n * d.lookups_per_sample) as u64;
+            let traffic = Traffic {
+                // Pooled output written sequentially.
+                stream_bytes: n as u64 * row_bytes,
+                // Each lookup is a random row read (row = dim×4 bytes).
+                random_accesses: accesses,
+                random_access_bytes: row_bytes,
+            };
+            // SLS adds dim floats per lookup.
+            let flops = (accesses * d.dim as u64) as f64;
+            let dur = task_time(&cfg.ccm, flops, traffic);
+            ccm_tasks.push(CcmTask { dur, result_bytes: n as u64 * row_bytes });
+            host_tasks.push(HostTask {
+                dur: cycles_time(&cfg.host, d.host_cycles_per_sample * n as f64),
+                deps: vec![(ccm_tasks.len() - 1) as u32],
+            });
+            done += n;
+        }
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: false });
+    }
+    WorkloadSpec {
+        name: format!(
+            "DLRM Criteo (dim {}, rows {}, batch {})",
+            d.dim, d.table_rows, d.batch
+        ),
+        annot: 'i',
+        domain: "DLRM",
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Ps;
+
+    #[test]
+    fn ccm_dominates() {
+        let cfg = SimConfig::m2ndp();
+        let w = criteo(&cfg, DlrmConfig::paper());
+        let it = &w.iters[0];
+        let t_c: Ps = it.ccm_tasks.iter().map(|t| t.dur).sum::<Ps>() / cfg.ccm.num_pus as u64;
+        let t_h: Ps = it.host_tasks.iter().map(|t| t.dur).sum::<Ps>() / cfg.host.num_pus as u64;
+        let t_d = crate::sim::transfer_ps(it.result_bytes(), cfg.cxl_bw_gbps);
+        assert!(t_c > 2 * t_d, "T_C {t_c} vs T_D {t_d}");
+        assert!(t_c > 10 * t_h, "T_C {t_c} vs T_H {t_h}");
+    }
+
+    #[test]
+    fn result_is_one_pooled_vector_per_sample() {
+        let cfg = SimConfig::m2ndp();
+        let d = DlrmConfig::paper();
+        let w = criteo(&cfg, d);
+        assert_eq!(w.iters.len(), d.batches);
+        assert_eq!(w.iters[0].result_bytes(), (d.batch * d.dim * 4) as u64);
+    }
+}

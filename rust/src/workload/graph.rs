@@ -1,0 +1,218 @@
+//! Graph analytics workloads: SSSP and PageRank (Table IV d–e; Fig. 5b).
+//!
+//! Offload boundary (Table I, Grudon-style): the CCM performs edge
+//! traversal — gathering source-vertex values from CCM-resident arrays and
+//! producing per-edge contributions — while the host applies the
+//! destination-side updates (segment reduction + rank/distance update).
+//! Per-edge intermediate results make these the paper's data-movement-heavy
+//! cases (§III-B Case #2: up to ~48% of runtime is data movement).
+//!
+//! This module also hosts the RMAT generator used by the numerics path
+//! (runtime tests / e2e example) so timing and numerics share one graph
+//! model.
+
+use crate::config::SimConfig;
+use crate::util::rng::Pcg32;
+use crate::workload::cost::{cycles_time, task_time, Traffic};
+use crate::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+
+/// PageRank iterations simulated (fixed-point style).
+pub const PR_ITERS: usize = 5;
+
+/// Host cycles per edge contribution (segment add into the rank array).
+const HOST_CYCLES_PER_EDGE: f64 = 2.0;
+/// Host cycles per vertex for the damped rank update.
+const HOST_CYCLES_PER_VERTEX: f64 = 4.0;
+/// Host cycles per relaxation candidate (min-merge) in SSSP.
+const HOST_CYCLES_PER_CAND: f64 = 3.0;
+
+/// Bellman-Ford frontier profile: fraction of |E| traversed per round
+/// (bell-shaped expansion/contraction typical of low-diameter graphs).
+pub const SSSP_FRONTIER: [f64; 12] =
+    [0.01, 0.03, 0.08, 0.15, 0.22, 0.20, 0.13, 0.08, 0.05, 0.03, 0.015, 0.005];
+
+fn edge_tasks(
+    cfg: &SimConfig,
+    edges: usize,
+    result_bytes_per_edge: u64,
+    random_accesses_per_edge: u64,
+    stream_bytes_per_edge: u64,
+) -> (Vec<CcmTask>, Vec<usize>) {
+    // Partition into 8 waves of the CCM array (load-balanced blocks).
+    let target_tasks = (cfg.ccm.num_pus * 8).min(edges.max(1));
+    let ept = edges.div_ceil(target_tasks);
+    let mut tasks = Vec::new();
+    let mut sizes = Vec::new();
+    let mut done = 0usize;
+    while done < edges {
+        let n = ept.min(edges - done);
+        let traffic = Traffic {
+            stream_bytes: stream_bytes_per_edge * n as u64,
+            random_accesses: random_accesses_per_edge * n as u64,
+            random_access_bytes: 8, // vertex-value gather (value + aux)
+        };
+        // Gather/scale is ~2 FLOPs per edge — never compute-bound.
+        let dur = task_time(&cfg.ccm, 2.0 * n as f64, traffic);
+        tasks.push(CcmTask { dur, result_bytes: result_bytes_per_edge * n as u64 });
+        sizes.push(n);
+        done += n;
+    }
+    (tasks, sizes)
+}
+
+/// PageRank over |V| vertices, |E| edges.
+pub fn pagerank(cfg: &SimConfig, vertices: usize, edges: usize) -> WorkloadSpec {
+    let mut iters = Vec::with_capacity(PR_ITERS);
+    for _ in 0..PR_ITERS {
+        // CCM: per edge, gather (rank, 1/deg) — one 8 B random access —
+        // stream the src index in and the 4 B contribution out.
+        let (ccm_tasks, sizes) = edge_tasks(cfg, edges, 4, 1, 8);
+        // Host: apply each block's contributions + its share of the
+        // per-vertex damped update.
+        let vshare = vertices as f64 / ccm_tasks.len() as f64;
+        let host_tasks = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| HostTask {
+                dur: cycles_time(
+                    &cfg.host,
+                    HOST_CYCLES_PER_EDGE * n as f64 + HOST_CYCLES_PER_VERTEX * vshare,
+                ),
+                deps: vec![i as u32],
+            })
+            .collect();
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: false });
+    }
+    WorkloadSpec {
+        name: format!("PageRank (V {vertices}, E {edges})"),
+        annot: 'e',
+        domain: "Graph Analytics",
+        iters,
+    }
+}
+
+/// SSSP (Bellman-Ford frontier rounds) over |V| vertices, |E| edges.
+pub fn sssp(cfg: &SimConfig, vertices: usize, edges: usize) -> WorkloadSpec {
+    let _ = vertices;
+    let mut iters = Vec::with_capacity(SSSP_FRONTIER.len());
+    for w in SSSP_FRONTIER {
+        let frontier_edges = ((edges as f64) * w).ceil() as usize;
+        if frontier_edges == 0 {
+            continue;
+        }
+        // CCM: per frontier edge, gather dist[src] (random) + read edge
+        // (src, dst, w: 12 B stream) + write candidate; result carries
+        // (dst, cand) = 8 B per edge.
+        let (ccm_tasks, sizes) = edge_tasks(cfg, frontier_edges, 8, 1, 16);
+        let host_tasks = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| HostTask {
+                dur: cycles_time(&cfg.host, HOST_CYCLES_PER_CAND * n as f64),
+                deps: vec![i as u32],
+            })
+            .collect();
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: false });
+    }
+    WorkloadSpec {
+        name: format!("SSSP (V {vertices}, E {edges})"),
+        annot: 'd',
+        domain: "Graph Analytics",
+        iters,
+    }
+}
+
+/// A synthetic RMAT-style graph with a power-law-ish degree distribution,
+/// shared by the timing model and the numerics path.
+#[derive(Debug, Clone)]
+pub struct SynthGraph {
+    pub vertices: usize,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub out_deg: Vec<u32>,
+}
+
+impl SynthGraph {
+    /// RMAT(a=0.57, b=0.19, c=0.19) edge sampling.
+    pub fn rmat(vertices: usize, edges: usize, seed: u64) -> Self {
+        assert!(vertices.is_power_of_two(), "RMAT needs power-of-two |V|");
+        let levels = vertices.trailing_zeros();
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut src = Vec::with_capacity(edges);
+        let mut dst = Vec::with_capacity(edges);
+        let mut out_deg = vec![0u32; vertices];
+        for _ in 0..edges {
+            let (mut r, mut c) = (0usize, 0usize);
+            for _ in 0..levels {
+                let p: f64 = rng.next_f64();
+                let (dr, dc) = if p < 0.57 {
+                    (0, 0)
+                } else if p < 0.76 {
+                    (0, 1)
+                } else if p < 0.95 {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                r = (r << 1) | dr;
+                c = (c << 1) | dc;
+            }
+            src.push(r as u32);
+            dst.push(c as u32);
+            out_deg[r] += 1;
+        }
+        Self { vertices, src, dst, out_deg }
+    }
+
+    pub fn edges(&self) -> usize {
+        self.src.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Ps;
+
+    #[test]
+    fn pagerank_is_data_movement_heavy() {
+        // §III-B Case #2: T_D should be comparable to T_C (≈ 50/48 in the
+        // paper). Check the per-iteration byte/time composition.
+        let cfg = SimConfig::m2ndp();
+        let w = pagerank(&cfg, 299_067, 977_676);
+        let it = &w.iters[0];
+        let t_c: Ps = it.ccm_tasks.iter().map(|t| t.dur).sum::<Ps>() / cfg.ccm.num_pus as u64;
+        let bytes = it.result_bytes();
+        assert_eq!(bytes, 4 * 977_676);
+        let t_d = crate::sim::transfer_ps(bytes, cfg.cxl_bw_gbps);
+        let ratio = t_d as f64 / t_c as f64;
+        assert!(ratio > 0.5 && ratio < 2.0, "T_D/T_C = {ratio}");
+    }
+
+    #[test]
+    fn sssp_frontier_rounds_vary_in_size() {
+        let cfg = SimConfig::m2ndp();
+        let w = sssp(&cfg, 264_346, 733_846);
+        assert_eq!(w.iters.len(), SSSP_FRONTIER.len());
+        let sizes: Vec<u64> = w.iters.iter().map(|i| i.result_bytes()).collect();
+        assert!(sizes.iter().max() > sizes.iter().min());
+        // Total traversed ≈ Σ frontier fractions × E × 8 B.
+        let total: u64 = sizes.iter().sum();
+        let expect = (SSSP_FRONTIER.iter().sum::<f64>() * 733_846.0 * 8.0) as u64;
+        assert!((total as f64 - expect as f64).abs() / (expect as f64) < 0.01);
+    }
+
+    #[test]
+    fn rmat_structure() {
+        let g = SynthGraph::rmat(1024, 8192, 7);
+        assert_eq!(g.edges(), 8192);
+        assert!(g.src.iter().all(|&v| (v as usize) < 1024));
+        assert!(g.dst.iter().all(|&v| (v as usize) < 1024));
+        // Power-law-ish: max degree well above mean (8).
+        let max_deg = *g.out_deg.iter().max().unwrap();
+        assert!(max_deg > 24, "max_deg={max_deg}");
+        // Deterministic for equal seeds.
+        let g2 = SynthGraph::rmat(1024, 8192, 7);
+        assert_eq!(g.src, g2.src);
+    }
+}

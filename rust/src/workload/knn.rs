@@ -1,0 +1,120 @@
+//! VectorDB / KNN workload (Table IV a–c; Fig. 4, Fig. 5a).
+//!
+//! Offload boundary (Table I): the CCM computes per-row vector distances
+//! (MAC PFLs streaming the row database from CCM-local DRAM); the host
+//! receives one 4-byte float per row and selects the top-K — an
+//! inherently sequential heap merge, so host tasks run serially (§III-B
+//! Case #1: as dimensionality shrinks and rows grow, KNN becomes
+//! host-processing-intensive).
+
+use crate::config::SimConfig;
+use crate::sim::Ps;
+use crate::workload::cost::{cycles_time, task_time, Traffic};
+use crate::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+
+/// Queries per run: each query is one offload iteration (iterations are
+/// dependent — the application issues the next query's offload after
+/// consuming the previous results, §III-C).
+pub const QUERIES: usize = 16;
+
+/// Top-K selection size.
+pub const K: usize = 16;
+
+/// Host cycles per distance value for streaming top-K maintenance
+/// (load + compare + branchy heap sift on hit, K=16). Calibrated against
+/// the paper's host shares: ≈30% of (a)'s runtime and up to ~65% for
+/// host-heavy shapes (Fig. 4b, Fig. 5a).
+pub const TOPK_CYCLES_PER_ELEM: f64 = 100.0;
+
+/// Build the KNN workload for a `dim`-dimensional database of `rows` rows.
+pub fn generate(cfg: &SimConfig, dim: usize, rows: usize) -> WorkloadSpec {
+    generate_queries(cfg, dim, rows, QUERIES)
+}
+
+/// As [`generate`] with an explicit query count (used by Fig. 4's sweep).
+pub fn generate_queries(
+    cfg: &SimConfig,
+    dim: usize,
+    rows: usize,
+    queries: usize,
+) -> WorkloadSpec {
+    // CCM scheduler partition: spread rows across 2 waves of the PU array,
+    // at least 4 rows per task so a task is a meaningful μthread batch.
+    let target_tasks = (cfg.ccm.num_pus * 2).min(rows / 4).max(1);
+    let rows_per_task = rows.div_ceil(target_tasks);
+    let mut iters = Vec::with_capacity(queries);
+    for _ in 0..queries {
+        let mut ccm_tasks = Vec::new();
+        let mut host_tasks = Vec::new();
+        let mut done = 0usize;
+        while done < rows {
+            let rpt = rows_per_task.min(rows - done);
+            // 3 FLOPs per (row, dim) element: sub, mul, add (MAC form).
+            let flops = 3.0 * dim as f64 * rpt as f64;
+            let traffic = Traffic {
+                stream_bytes: (rpt * dim * 4) as u64, // row data streamed
+                ..Default::default()
+            };
+            let dur = task_time(&cfg.ccm, flops, traffic);
+            ccm_tasks.push(CcmTask { dur, result_bytes: (rpt * 4) as u64 });
+            // Host consumes this chunk's distances into the running top-K.
+            let hdur: Ps = cycles_time(&cfg.host, TOPK_CYCLES_PER_ELEM * rpt as f64);
+            host_tasks.push(HostTask { dur: hdur, deps: vec![(ccm_tasks.len() - 1) as u32] });
+            done += rpt;
+        }
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: true });
+    }
+    WorkloadSpec {
+        name: format!("KNN (Dim {dim}, Rows {rows})"),
+        annot: match (dim, rows) {
+            (2048, 128) => 'a',
+            (1024, 256) => 'b',
+            (512, 512) => 'c',
+            _ => '?',
+        },
+        domain: "VectorDB",
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_have_expected_structure() {
+        let cfg = SimConfig::m2ndp();
+        let w = generate(&cfg, 2048, 128);
+        assert_eq!(w.annot, 'a');
+        assert_eq!(w.iters.len(), QUERIES);
+        // Every query moves rows*4 bytes of distances.
+        assert_eq!(w.iters[0].result_bytes(), 128 * 4);
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn host_share_grows_as_dim_shrinks() {
+        // §III-B Case #1: (512, 512) is more host-heavy than (2048, 128).
+        let cfg = SimConfig::m2ndp();
+        let ratio = |dim, rows| {
+            let w = generate(&cfg, dim, rows);
+            let it = &w.iters[0];
+            let ccm: Ps = it.ccm_tasks.iter().map(|t| t.dur).sum();
+            let host: Ps = it.host_tasks.iter().map(|t| t.dur).sum();
+            host as f64 / ccm as f64
+        };
+        assert!(ratio(512, 512) > 2.0 * ratio(2048, 128));
+    }
+
+    #[test]
+    fn host_tasks_are_serial_and_one_to_one() {
+        let cfg = SimConfig::m2ndp();
+        let w = generate(&cfg, 1024, 256);
+        let it = &w.iters[0];
+        assert!(it.host_serial);
+        assert_eq!(it.ccm_tasks.len(), it.host_tasks.len());
+        for (i, h) in it.host_tasks.iter().enumerate() {
+            assert_eq!(h.deps, vec![i as u32]);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! LLM inference workload: OPT-2.7B attention-block offload (Table IV h;
+//! Fig. 3, Fig. 11).
+//!
+//! Offload boundary (Table I, NeuPIMs-style): the CCM executes the
+//! attention block — LayerNormQ → QKVProj → Attention1 → Attention2 →
+//! OutProj → Residual (the Fig. 3 kernel order) — over the 1K-token KV
+//! cache in CXL memory; the host runs the fully-connected MLP layers.
+//!
+//! The batch decodes `batch` requests; each layer is one offload
+//! iteration (layer l+1's attention consumes layer l's MLP output — the
+//! iterative dependency of §III-C). Within a layer, each request's
+//! attention is partitioned into head-group CCM tasks and its MLP is ONE
+//! host task depending on all of them — the paper's "sparse data
+//! dependency" that makes (h) a marginal-improvement case and the Fig. 16
+//! deadlock candidate.
+
+use crate::config::SimConfig;
+use crate::workload::cost::{task_time, Traffic};
+use crate::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+
+#[derive(Debug, Clone, Copy)]
+pub struct OptConfig {
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub tokens: usize,
+    pub layers: usize,
+    /// Decode requests in flight (batched inference).
+    pub batch: usize,
+    /// Head-group CCM tasks per request per layer.
+    pub head_groups: usize,
+}
+
+impl OptConfig {
+    /// OPT-2.7B with the paper's 1K-token context.
+    pub fn opt_2_7b() -> Self {
+        Self {
+            hidden: 2560,
+            heads: 32,
+            head_dim: 80,
+            ffn: 10240,
+            tokens: 1024,
+            layers: 32,
+            batch: 32,
+            head_groups: 4,
+        }
+    }
+
+    /// Attention-block FLOPs per request per layer (decode, 1 token).
+    pub fn attn_flops(&self) -> f64 {
+        let h = self.hidden as f64;
+        let t = self.tokens as f64;
+        let qkv = 2.0 * h * (3.0 * h); // QKVProj
+        let attn = 2.0 * 2.0 * t * h; // Attention1 + Attention2
+        let out = 2.0 * h * h; // OutProj
+        let ln_res = 10.0 * h; // LayerNormQ + Residual
+        qkv + attn + out + ln_res
+    }
+
+    /// MLP FLOPs per request per layer (fc1 + fc2).
+    pub fn mlp_flops(&self) -> f64 {
+        2.0 * 2.0 * self.hidden as f64 * self.ffn as f64
+    }
+
+    /// Attention weight bytes per layer (QKV + output proj, f32).
+    pub fn attn_weight_bytes(&self) -> u64 {
+        ((self.hidden * 3 * self.hidden + self.hidden * self.hidden) * 4) as u64
+    }
+
+    /// KV-cache bytes per request per layer.
+    pub fn kv_bytes(&self) -> u64 {
+        (2 * self.heads * self.tokens * self.head_dim * 4) as u64
+    }
+
+    /// MLP weight bytes per layer.
+    pub fn mlp_weight_bytes(&self) -> u64 {
+        (2 * self.hidden * self.ffn * 4) as u64
+    }
+}
+
+/// Build the Table IV (h) workload.
+pub fn opt_attention(cfg: &SimConfig, opt: OptConfig) -> WorkloadSpec {
+    let tasks_per_layer = opt.batch * opt.head_groups;
+    let flops_per_task = opt.attn_flops() / opt.head_groups as f64;
+    // Weights stream once per layer, shared across the task partition;
+    // each task additionally streams its head-group's KV panel.
+    let weight_share = opt.attn_weight_bytes() / tasks_per_layer as u64;
+    let kv_share = opt.kv_bytes() / opt.head_groups as u64;
+    let result_bytes = (opt.hidden * 4 / opt.head_groups) as u64;
+
+    let mut iters = Vec::with_capacity(opt.layers);
+    for _ in 0..opt.layers {
+        let mut ccm_tasks = Vec::with_capacity(tasks_per_layer);
+        let mut host_tasks = Vec::with_capacity(opt.batch);
+        for r in 0..opt.batch {
+            let first = (r * opt.head_groups) as u32;
+            for _ in 0..opt.head_groups {
+                let dur = task_time(
+                    &cfg.ccm,
+                    flops_per_task,
+                    Traffic {
+                        stream_bytes: weight_share + kv_share,
+                        ..Default::default()
+                    },
+                );
+                ccm_tasks.push(CcmTask { dur, result_bytes });
+            }
+            // One MLP per request, needing ALL of its head-group results.
+            let mlp_dur = task_time(
+                &cfg.host,
+                opt.mlp_flops(),
+                Traffic {
+                    stream_bytes: opt.mlp_weight_bytes() / opt.batch as u64,
+                    ..Default::default()
+                },
+            );
+            host_tasks.push(HostTask {
+                dur: mlp_dur,
+                deps: (first..first + opt.head_groups as u32).collect(),
+            });
+        }
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: false });
+    }
+    WorkloadSpec {
+        name: format!(
+            "OPT-2.7B attention offload (batch {}, {} tokens)",
+            opt.batch, opt.tokens
+        ),
+        annot: 'h',
+        domain: "LLM Inference",
+        iters,
+    }
+}
+
+/// The six Fig. 3 kernels, each runnable as a standalone single-kernel
+/// offload (used by the Fig. 3 duality bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnKernel {
+    LayerNormQ,
+    QkvProj,
+    Attention1,
+    Attention2,
+    OutProj,
+    Residual,
+}
+
+impl AttnKernel {
+    pub const ALL: [AttnKernel; 6] = [
+        AttnKernel::LayerNormQ,
+        AttnKernel::QkvProj,
+        AttnKernel::Attention1,
+        AttnKernel::Attention2,
+        AttnKernel::OutProj,
+        AttnKernel::Residual,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttnKernel::LayerNormQ => "LayerNormQ",
+            AttnKernel::QkvProj => "QKVProj",
+            AttnKernel::Attention1 => "Attention1",
+            AttnKernel::Attention2 => "Attention2",
+            AttnKernel::OutProj => "OutProj",
+            AttnKernel::Residual => "Residual",
+        }
+    }
+
+    /// Fig. 3's split: computationally heavy vs lightweight kernels.
+    pub fn is_heavy(&self) -> bool {
+        matches!(
+            self,
+            AttnKernel::QkvProj | AttnKernel::Attention1 | AttnKernel::OutProj
+        )
+    }
+
+    /// (FLOPs, streamed bytes, result bytes) per kernel at OPT-2.7B / 1K
+    /// tokens, decode.
+    pub fn costs(&self, opt: &OptConfig) -> (f64, u64, u64) {
+        let h = opt.hidden as f64;
+        let t = opt.tokens as f64;
+        let hb = (opt.hidden * 4) as u64;
+        match self {
+            AttnKernel::LayerNormQ => (8.0 * h, 2 * hb, hb),
+            AttnKernel::QkvProj => (2.0 * h * 3.0 * h, (opt.hidden * 3 * opt.hidden * 4) as u64, 3 * hb),
+            AttnKernel::Attention1 => (2.0 * t * h, opt.kv_bytes() / 2, (opt.heads * opt.tokens * 4) as u64),
+            AttnKernel::Attention2 => (2.0 * t * h, opt.kv_bytes() / 2, hb),
+            AttnKernel::OutProj => (2.0 * h * h, (opt.hidden * opt.hidden * 4) as u64, hb),
+            AttnKernel::Residual => (h, 2 * hb, hb),
+        }
+    }
+}
+
+/// A single attention kernel as a 1-iteration workload (Fig. 3 harness).
+pub fn single_kernel(cfg: &SimConfig, k: AttnKernel) -> WorkloadSpec {
+    let opt = OptConfig::opt_2_7b();
+    let (flops, bytes, result) = k.costs(&opt);
+    let n = cfg.ccm.num_pus;
+    let ccm_tasks: Vec<CcmTask> = (0..n)
+        .map(|_| CcmTask {
+            dur: task_time(
+                &cfg.ccm,
+                flops / n as f64,
+                Traffic { stream_bytes: bytes / n as u64, ..Default::default() },
+            ),
+            result_bytes: (result / n as u64).max(4),
+        })
+        .collect();
+    // Downstream consumer: a trivial host task that touches the result.
+    let host_tasks = vec![HostTask {
+        dur: crate::workload::cost::cycles_time(&cfg.host, result as f64 / 8.0),
+        deps: (0..n as u32).collect(),
+    }];
+    WorkloadSpec {
+        name: format!("OPT-2.7B kernel {}", k.label()),
+        annot: 'h',
+        domain: "LLM Inference",
+        iters: vec![IterSpec { ccm_tasks, host_tasks, host_serial: false }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Ps;
+
+    #[test]
+    fn qkvproj_is_fig3_calibrated() {
+        // The QKVProj single-kernel CCM wall time should be ≈897K CCM
+        // cycles (Fig. 3a) — the calibration anchor.
+        let cfg = SimConfig::m2ndp();
+        let w = single_kernel(&cfg, AttnKernel::QkvProj);
+        let dur = w.iters[0].ccm_tasks[0].dur; // equal tasks, 1 wave
+        let cycles = dur as f64 / cfg.ccm.cycle() as f64;
+        assert!(
+            (cycles - 897_000.0).abs() / 897_000.0 < 0.05,
+            "QKVProj wall cycles = {cycles}"
+        );
+    }
+
+    #[test]
+    fn heavy_kernels_dwarf_light_ones() {
+        let cfg = SimConfig::m2ndp();
+        let dur = |k: AttnKernel| -> Ps {
+            single_kernel(&cfg, k).iters[0].ccm_tasks[0].dur
+        };
+        assert!(dur(AttnKernel::QkvProj) > 20 * dur(AttnKernel::Residual));
+        assert!(dur(AttnKernel::OutProj) > 10 * dur(AttnKernel::LayerNormQ));
+    }
+
+    #[test]
+    fn workload_dependency_shape() {
+        let cfg = SimConfig::m2ndp();
+        let opt = OptConfig::opt_2_7b();
+        let w = opt_attention(&cfg, opt);
+        assert_eq!(w.iters.len(), opt.layers);
+        let it = &w.iters[0];
+        assert_eq!(it.ccm_tasks.len(), opt.batch * opt.head_groups);
+        assert_eq!(it.host_tasks.len(), opt.batch);
+        // Request r depends exactly on its own head-group tasks.
+        for (r, h) in it.host_tasks.iter().enumerate() {
+            let first = (r * opt.head_groups) as u32;
+            assert_eq!(h.deps, (first..first + opt.head_groups as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn intermediate_results_are_small() {
+        // §V-B: attention output is [1, hidden] — result sparsity.
+        let cfg = SimConfig::m2ndp();
+        let w = opt_attention(&cfg, OptConfig::opt_2_7b());
+        let per_request: u64 = w.iters[0].ccm_tasks[..4].iter().map(|t| t.result_bytes).sum();
+        assert_eq!(per_request, 2560 * 4);
+    }
+}

@@ -1,0 +1,167 @@
+//! Workload generators for the nine Table IV benchmarks.
+//!
+//! A workload is compiled into a [`WorkloadSpec`]: a sequence of offload
+//! **iterations** (the paper's iterative-kernel structure, §III-C — the
+//! next iteration launches only after the previous iteration's host tasks
+//! complete). Each iteration holds the CCM task partition produced by the
+//! CCM scheduler (one fixed-size input slice per task, §IV-B) and the host
+//! downstream tasks with their data dependencies on CCM task results.
+//!
+//! Task durations come from the analytic cost model in [`cost`]: FLOP and
+//! byte counts through the Table III hardware parameters. The *numerics*
+//! of every offloaded function are executed separately through the AOT
+//! artifacts (see `runtime`); the spec here is the timing skeleton.
+
+pub mod cost;
+pub mod dlrm;
+pub mod graph;
+pub mod knn;
+pub mod llm;
+pub mod olap;
+
+use crate::config::SimConfig;
+use crate::sim::Ps;
+
+/// One CCM task: a scheduler-partitioned slice of the offloaded kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CcmTask {
+    /// Execution time on one CCM PU (μthread-interleaved throughput).
+    pub dur: Ps,
+    /// Result bytes this task back-streams / the host loads.
+    pub result_bytes: u64,
+}
+
+/// One host downstream task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostTask {
+    /// Execution time on one host PU.
+    pub dur: Ps,
+    /// Indices (within the same iteration) of the CCM tasks whose results
+    /// this task consumes. LLM's sparse dependency is many-to-one here.
+    pub deps: Vec<u32>,
+}
+
+/// One offload iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterSpec {
+    pub ccm_tasks: Vec<CcmTask>,
+    pub host_tasks: Vec<HostTask>,
+    /// If true, host tasks execute on a single PU in order (inherently
+    /// sequential consumers such as KNN's top-k heap merge).
+    pub host_serial: bool,
+}
+
+impl IterSpec {
+    pub fn result_bytes(&self) -> u64 {
+        self.ccm_tasks.iter().map(|t| t.result_bytes).sum()
+    }
+}
+
+/// A full workload: Table IV row compiled against a [`SimConfig`].
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    /// Table IV annotation, 'a'..='i'.
+    pub annot: char,
+    pub domain: &'static str,
+    pub iters: Vec<IterSpec>,
+}
+
+impl WorkloadSpec {
+    pub fn total_ccm_tasks(&self) -> usize {
+        self.iters.iter().map(|i| i.ccm_tasks.len()).sum()
+    }
+
+    pub fn total_host_tasks(&self) -> usize {
+        self.iters.iter().map(|i| i.host_tasks.len()).sum()
+    }
+
+    pub fn total_result_bytes(&self) -> u64 {
+        self.iters.iter().map(|i| i.result_bytes()).sum()
+    }
+
+    /// Sanity-check the dependency structure (host deps in range, every
+    /// CCM result consumed by at most the iteration's host tasks).
+    pub fn validate(&self) -> Result<(), String> {
+        for (ii, it) in self.iters.iter().enumerate() {
+            if it.ccm_tasks.is_empty() {
+                return Err(format!("iteration {ii} has no CCM tasks"));
+            }
+            for (hi, h) in it.host_tasks.iter().enumerate() {
+                if h.deps.is_empty() {
+                    return Err(format!("iter {ii} host task {hi} has no deps"));
+                }
+                for &d in &h.deps {
+                    if d as usize >= it.ccm_tasks.len() {
+                        return Err(format!(
+                            "iter {ii} host task {hi} dep {d} out of range ({} ccm tasks)",
+                            it.ccm_tasks.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the Table IV workload for annotation `annot` under `cfg`.
+pub fn by_annotation(annot: char, cfg: &SimConfig) -> WorkloadSpec {
+    match annot {
+        'a' => knn::generate(cfg, 2048, 128),
+        'b' => knn::generate(cfg, 1024, 256),
+        'c' => knn::generate(cfg, 512, 512),
+        'd' => graph::sssp(cfg, 264_346, 733_846),
+        'e' => graph::pagerank(cfg, 299_067, 977_676),
+        'f' => olap::ssb_q1(cfg, olap::SsbQuery::Q1_1),
+        'g' => olap::ssb_q1(cfg, olap::SsbQuery::Q1_2),
+        'h' => llm::opt_attention(cfg, llm::OptConfig::opt_2_7b()),
+        'i' => dlrm::criteo(cfg, dlrm::DlrmConfig::paper()),
+        _ => panic!("unknown workload annotation {annot:?} (expected 'a'..='i')"),
+    }
+}
+
+/// All Table IV annotations in order.
+pub const ALL_ANNOTATIONS: [char; 9] = ['a', 'b', 'c', 'd', 'e', 'f', 'g', 'h', 'i'];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_generate_and_validate() {
+        let cfg = SimConfig::m2ndp();
+        for a in ALL_ANNOTATIONS {
+            let w = by_annotation(a, &cfg);
+            assert_eq!(w.annot, a);
+            w.validate().unwrap_or_else(|e| panic!("workload {a}: {e}"));
+            assert!(w.total_ccm_tasks() > 0);
+            assert!(w.total_result_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_deps() {
+        let w = WorkloadSpec {
+            name: "bad".into(),
+            annot: 'x',
+            domain: "test",
+            iters: vec![IterSpec {
+                ccm_tasks: vec![CcmTask { dur: 1, result_bytes: 4 }],
+                host_tasks: vec![HostTask { dur: 1, deps: vec![7] }],
+                host_serial: false,
+            }],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn llm_has_sparse_dependencies() {
+        let cfg = SimConfig::m2ndp();
+        let w = by_annotation('h', &cfg);
+        // Host tasks are far fewer than CCM tasks (§V-B result sparsity).
+        assert!(w.total_host_tasks() * 2 <= w.total_ccm_tasks());
+        let it = &w.iters[0];
+        assert!(it.host_tasks[0].deps.len() > 1, "LLM host tasks need many CCM results");
+    }
+}

@@ -1,0 +1,153 @@
+//! OLAP workload: Star Schema Benchmark Q1.1 / Q1.2 (Table IV f–g).
+//!
+//! Offload boundary (Table I, M²NDP-style): the CCM scans the lineorder
+//! discount/quantity columns resident in CXL memory and produces boolean
+//! marks (CMP PFLs); the host runs the rest of the query — predicate-mark
+//! consumption, revenue aggregation and the remaining operators — which
+//! dominates runtime (§V-A: "OLAP ... dominated by host-side execution";
+//! Fig. 10f shows ≈76% host share under BS).
+
+use crate::config::SimConfig;
+use crate::workload::cost::{cycles_time, task_time, Traffic};
+use crate::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+
+/// Lineorder rows scanned (SF1 is ~6M rows; we keep the paper's
+/// simulation-constrained scale).
+pub const LINEORDER_ROWS: usize = 6_001_171;
+
+/// Query repetitions (the app's offload iterations).
+pub const QUERY_RUNS: usize = 2;
+
+/// Host cycles per scanned row for downstream operators (mark test, date
+/// join probe, aggregation bookkeeping).
+const HOST_CYCLES_PER_ROW: f64 = 12.0;
+/// Extra host cycles per *selected* row (revenue multiply-accumulate +
+/// group bookkeeping).
+const HOST_CYCLES_PER_SELECTED: f64 = 30.0;
+/// CCM predicate ops per row (two range compares + AND + mark store).
+const CCM_FLOPS_PER_ROW: f64 = 4.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(non_camel_case_types)]
+pub enum SsbQuery {
+    Q1_1,
+    Q1_2,
+}
+
+impl SsbQuery {
+    /// Combined selectivity of the Q1 predicates [30].
+    pub fn selectivity(&self) -> f64 {
+        match self {
+            // d_year = 1993 (1/7) × discount 1..3 (3/11) × quantity < 25 (24/50)
+            SsbQuery::Q1_1 => (1.0 / 7.0) * (3.0 / 11.0) * (24.0 / 50.0),
+            // d_yearmonth (1/84) × discount 4..6 (3/11) × quantity 26..35 (10/50)
+            SsbQuery::Q1_2 => (1.0 / 84.0) * (3.0 / 11.0) * (10.0 / 50.0),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SsbQuery::Q1_1 => "Q1_1",
+            SsbQuery::Q1_2 => "Q1_2",
+        }
+    }
+
+    /// Inclusive [lo, hi] bounds on (discount, quantity) — the columns the
+    /// CCM filter kernel scans (the date predicate folds into row
+    /// pre-selection, see `model.ssb_q1_ccm`).
+    pub fn bounds(&self) -> ([f32; 2], [f32; 2]) {
+        match self {
+            SsbQuery::Q1_1 => ([1.0, 3.0], [1.0, 24.0]),
+            SsbQuery::Q1_2 => ([4.0, 6.0], [26.0, 35.0]),
+        }
+    }
+}
+
+/// Build the SSB Q1 workload.
+pub fn ssb_q1(cfg: &SimConfig, q: SsbQuery) -> WorkloadSpec {
+    ssb_q1_rows(cfg, q, LINEORDER_ROWS)
+}
+
+/// As [`ssb_q1`] with an explicit row count (scaling studies).
+pub fn ssb_q1_rows(cfg: &SimConfig, q: SsbQuery, rows: usize) -> WorkloadSpec {
+    let sel = q.selectivity();
+    let target_tasks = (cfg.ccm.num_pus * 8).min(rows.max(1));
+    let rpt = rows.div_ceil(target_tasks);
+    let mut iters = Vec::with_capacity(QUERY_RUNS);
+    for _ in 0..QUERY_RUNS {
+        let mut ccm_tasks = Vec::new();
+        let mut host_tasks = Vec::new();
+        let mut done = 0usize;
+        while done < rows {
+            let n = rpt.min(rows - done);
+            // CCM: stream both predicate columns + write the mark bitmap.
+            let traffic = Traffic {
+                stream_bytes: (n * 8) as u64 + (n as u64).div_ceil(8),
+                ..Default::default()
+            };
+            let dur = task_time(&cfg.ccm, CCM_FLOPS_PER_ROW * n as f64, traffic);
+            // Result: this block's mark bitmap.
+            ccm_tasks.push(CcmTask { dur, result_bytes: (n as u64).div_ceil(8) });
+            let selected = sel * n as f64;
+            host_tasks.push(HostTask {
+                dur: cycles_time(
+                    &cfg.host,
+                    HOST_CYCLES_PER_ROW * n as f64 + HOST_CYCLES_PER_SELECTED * selected,
+                ),
+                deps: vec![(ccm_tasks.len() - 1) as u32],
+            });
+            done += n;
+        }
+        iters.push(IterSpec { ccm_tasks, host_tasks, host_serial: false });
+    }
+    WorkloadSpec {
+        name: format!("SSB {} (rows {rows})", q.label()),
+        annot: match q {
+            SsbQuery::Q1_1 => 'f',
+            SsbQuery::Q1_2 => 'g',
+        },
+        domain: "OLAP",
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Ps;
+
+    #[test]
+    fn host_dominates_ccm() {
+        // Fig. 10(f): host ≈ 76%, CCM ≈ 22% under BS — host should be
+        // roughly 3× the CCM time.
+        let cfg = SimConfig::m2ndp();
+        let w = ssb_q1(&cfg, SsbQuery::Q1_1);
+        let it = &w.iters[0];
+        let t_c: Ps = it.ccm_tasks.iter().map(|t| t.dur).sum::<Ps>() / cfg.ccm.num_pus as u64;
+        let t_h: Ps = it.host_tasks.iter().map(|t| t.dur).sum::<Ps>() / cfg.host.num_pus as u64;
+        let ratio = t_h as f64 / t_c as f64;
+        assert!(ratio > 2.0 && ratio < 6.0, "T_H/T_C = {ratio}");
+    }
+
+    #[test]
+    fn marks_are_bitmap_sized() {
+        let cfg = SimConfig::m2ndp();
+        let w = ssb_q1(&cfg, SsbQuery::Q1_1);
+        // Total back-streamed bytes ≈ rows/8 per query run.
+        let per_run = w.iters[0].result_bytes();
+        let expect = (LINEORDER_ROWS as u64).div_ceil(8);
+        assert!((per_run as i64 - expect as i64).unsigned_abs() < 1024);
+    }
+
+    #[test]
+    fn q1_2_is_more_selective() {
+        assert!(SsbQuery::Q1_2.selectivity() < SsbQuery::Q1_1.selectivity() / 10.0);
+    }
+
+    #[test]
+    fn bounds_match_query_definitions() {
+        let (d, q) = SsbQuery::Q1_1.bounds();
+        assert_eq!(d, [1.0, 3.0]);
+        assert_eq!(q, [1.0, 24.0]);
+    }
+}

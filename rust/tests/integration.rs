@@ -1,0 +1,400 @@
+//! Integration tests: whole-system behaviour across protocols, workloads
+//! and configurations — the paper's claims as executable assertions.
+
+use axle::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
+use axle::metrics::RunMetrics;
+use axle::workload::{by_annotation, llm, olap, ALL_ANNOTATIONS};
+use axle::{protocol, Coordinator};
+
+fn run(annot: char, proto: Protocol, cfg: &SimConfig) -> RunMetrics {
+    protocol::run(proto, &by_annotation(annot, cfg), cfg)
+}
+
+// ------------------------------------------------------------------
+// Headline claims (abstract / §V-B).
+// ------------------------------------------------------------------
+
+#[test]
+fn axle_reduces_end_to_end_runtime_up_to_forty_percent_vs_rp() {
+    // Paper: up to 50.14% (PageRank). Our substrate reaches >40%; the
+    // exact ceiling depends on the T_C share (EXPERIMENTS.md).
+    let cfg = SimConfig::m2ndp().with_poll(poll_factors::P1);
+    let best = ALL_ANNOTATIONS
+        .iter()
+        .map(|&a| {
+            let rp = run(a, Protocol::Rp, &cfg);
+            let ax = run(a, Protocol::Axle, &cfg);
+            1.0 - ax.ratio_to(&rp)
+        })
+        .fold(f64::MIN, f64::max);
+    assert!(best > 0.40, "best reduction vs RP = {best}");
+}
+
+#[test]
+fn axle_never_loses_meaningfully_to_either_baseline() {
+    let cfg = SimConfig::m2ndp().with_poll(poll_factors::P1);
+    for a in ALL_ANNOTATIONS {
+        let rp = run(a, Protocol::Rp, &cfg);
+        let bs = run(a, Protocol::Bs, &cfg);
+        let ax = run(a, Protocol::Axle, &cfg);
+        assert!(!ax.deadlock, "({a}) deadlocked");
+        assert!(ax.total as f64 <= 1.02 * rp.total as f64, "({a}) vs RP");
+        assert!(ax.total as f64 <= 1.02 * bs.total as f64, "({a}) vs BS");
+    }
+}
+
+#[test]
+fn axle_reduces_both_idle_times_on_average() {
+    // Paper: CCM idle ↓ 13.99×/14.53× and host idle ↓ 3.93×/3.85× on
+    // average. Assert substantial average reductions (> 3× CCM, > 2× host).
+    let cfg = SimConfig::m2ndp().with_poll(poll_factors::P10);
+    let mut ccm_red = Vec::new();
+    let mut host_red = Vec::new();
+    for a in ALL_ANNOTATIONS {
+        let rp = run(a, Protocol::Rp, &cfg);
+        let ax = run(a, Protocol::Axle, &cfg);
+        let ratio = |idle_base: u64, total_base: u64, idle_ax: u64, total_ax: u64| {
+            (idle_base as f64 / total_base as f64) / (idle_ax.max(1) as f64 / total_ax as f64)
+        };
+        ccm_red.push(ratio(rp.ccm_idle(), rp.total, ax.ccm_idle(), ax.total));
+        host_red.push(ratio(rp.host_idle(), rp.total, ax.host_idle(), ax.total));
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(avg(&ccm_red) > 3.0, "avg CCM idle reduction {:.2}x", avg(&ccm_red));
+    assert!(avg(&host_red) > 2.0, "avg host idle reduction {:.2}x", avg(&host_red));
+}
+
+#[test]
+fn axle_cuts_host_core_stall_time_severalfold_vs_bs() {
+    // Paper Fig. 13: up to 6× reduction; BS stalls ≈ the whole runtime.
+    let cfg = SimConfig::m2ndp().with_poll(poll_factors::P10);
+    let mut best = 0.0f64;
+    for a in ALL_ANNOTATIONS {
+        let bs = run(a, Protocol::Bs, &cfg);
+        let ax = run(a, Protocol::Axle, &cfg);
+        let bs_frac = bs.host_stall.min(bs.total) as f64 / bs.total as f64;
+        let ax_frac = ax.host_stall.min(ax.total) as f64 / ax.total as f64;
+        best = best.max(bs_frac / ax_frac.max(1e-9));
+        assert!(bs_frac > ax_frac, "({a}) AXLE must stall less than BS");
+    }
+    // BS stalls the host for T_C + T_D: near-total for CCM/DM-bound cases.
+    let e_bs = run('e', Protocol::Bs, &cfg);
+    assert!(e_bs.frac(e_bs.host_stall.min(e_bs.total)) > 0.9);
+    assert!(best > 3.0, "best stall reduction {best:.2}x");
+}
+
+// ------------------------------------------------------------------
+// Duality (§III): RP vs BS trade-off.
+// ------------------------------------------------------------------
+
+#[test]
+fn bs_dominates_rp_for_fine_grained_light_kernels() {
+    let cfg = SimConfig::m2ndp();
+    for k in [llm::AttnKernel::LayerNormQ, llm::AttnKernel::Residual] {
+        let w = llm::single_kernel(&cfg, k);
+        let rp = protocol::run(Protocol::Rp, &w, &cfg);
+        let bs = protocol::run(Protocol::Bs, &w, &cfg);
+        let ratio = bs.total as f64 / rp.total as f64;
+        assert!(ratio < 0.5, "{}: BS/RP = {ratio}", k.label());
+    }
+}
+
+#[test]
+fn bs_and_rp_converge_for_heavy_kernels() {
+    let cfg = SimConfig::m2ndp();
+    let w = llm::single_kernel(&cfg, llm::AttnKernel::QkvProj);
+    let rp = protocol::run(Protocol::Rp, &w, &cfg);
+    let bs = protocol::run(Protocol::Bs, &w, &cfg);
+    let ratio = bs.total as f64 / rp.total as f64;
+    assert!(ratio > 0.97, "QKVProj: BS/RP = {ratio}");
+}
+
+// ------------------------------------------------------------------
+// §III-C: the two idle times of serialized pipelines.
+// ------------------------------------------------------------------
+
+#[test]
+fn serialized_pipelines_idle_identity() {
+    // For BS, host idle ≈ T_C + T_D.
+    let mut cfg = SimConfig::m2ndp();
+    cfg.jitter = 0.0;
+    for a in ['a', 'e', 'f'] {
+        let m = run(a, Protocol::Bs, &cfg);
+        let host_idle = m.host_idle() as f64;
+        let expect = (m.ccm_busy + m.dm_busy) as f64;
+        let err = (host_idle - expect).abs() / m.total as f64;
+        assert!(err < 0.05, "({a}) host idle {host_idle} vs T_C+T_D {expect}");
+    }
+}
+
+// ------------------------------------------------------------------
+// Interrupt notification (§IV-A / §V-B).
+// ------------------------------------------------------------------
+
+#[test]
+fn interrupts_hurt_fine_grained_but_not_heavy_workloads() {
+    let cfg = SimConfig::m2ndp();
+    // (a) KNN: fine-grained -> interrupt delay dominates.
+    let a_int = run('a', Protocol::AxleInterrupt, &cfg);
+    let a_rp = run('a', Protocol::Rp, &cfg);
+    assert!(a_int.total > 2 * a_rp.total, "(a) interrupt should blow up");
+    // (e) PageRank: long tasks hide interrupt latency.
+    let e_int = run('e', Protocol::AxleInterrupt, &cfg);
+    let e_rp = run('e', Protocol::Rp, &cfg);
+    assert!(
+        (e_int.total as f64) < 0.8 * e_rp.total as f64,
+        "(e) interrupt variant should still beat RP"
+    );
+}
+
+// ------------------------------------------------------------------
+// Fig. 11: reduced hardware makes the LLM case overlap-friendly.
+// ------------------------------------------------------------------
+
+#[test]
+fn llm_marginal_on_baseline_but_wins_on_reduced_hardware() {
+    let base = SimConfig::m2ndp().with_poll(poll_factors::P10);
+    let rp = run('h', Protocol::Rp, &base);
+    let ax = run('h', Protocol::Axle, &base);
+    let ratio = ax.ratio_to(&rp);
+    assert!(ratio > 0.97, "baseline LLM should be marginal, got {ratio}");
+
+    let reduced = SimConfig::reduced().with_poll(poll_factors::P10);
+    let rp_r = run('h', Protocol::Rp, &reduced);
+    let ax_r = run('h', Protocol::Axle, &reduced);
+    let ratio_r = ax_r.ratio_to(&rp_r);
+    assert!(ratio_r < 0.9, "reduced-HW LLM should benefit, got {ratio_r}");
+}
+
+// ------------------------------------------------------------------
+// Fig. 14: streaming factor.
+// ------------------------------------------------------------------
+
+#[test]
+fn huge_streaming_factor_degrades_to_bulk_behavior() {
+    // SF = 100% of a KNN query's result defeats overlap: runtime drifts
+    // toward (and can exceed) SF1.
+    let cfg = SimConfig::m2ndp();
+    let w = by_annotation('a', &cfg);
+    let sf1 = protocol::run(Protocol::Axle, &w, &cfg);
+    let mut big = cfg.clone();
+    big.axle.streaming_factor_bytes = w.iters[0].result_bytes();
+    let sfall = protocol::run(Protocol::Axle, &w, &big);
+    assert!(sfall.total > sf1.total, "SF_100% {} <= SF1 {}", sfall.total, sf1.total);
+}
+
+#[test]
+fn moderate_streaming_factors_are_safe() {
+    // SF2..SF32 stay within a few percent of SF1 (natural batching).
+    let cfg = SimConfig::m2ndp();
+    for a in ['d', 'i'] {
+        let w = by_annotation(a, &cfg);
+        let base = protocol::run(Protocol::Axle, &w, &cfg);
+        for sf in [64u64, 256, 1024] {
+            let mut c = cfg.clone();
+            c.axle.streaming_factor_bytes = sf;
+            let m = protocol::run(Protocol::Axle, &w, &c);
+            let ratio = m.total as f64 / base.total as f64;
+            assert!(ratio < 1.1, "({a}) SF{} ratio {ratio}", sf / 32);
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Fig. 15 / Fig. 16 ablations.
+// ------------------------------------------------------------------
+
+#[test]
+fn disabling_ooo_streaming_hurts_under_rr_not_fifo() {
+    let cfg = SimConfig::m2ndp();
+    for a in ['d', 'e'] {
+        let mut rr_on = cfg.clone();
+        rr_on.sched = SchedPolicy::RoundRobin;
+        let mut rr_off = rr_on.clone();
+        rr_off.axle.ooo_streaming = false;
+        let w = by_annotation(a, &cfg);
+        let on = protocol::run(Protocol::Axle, &w, &rr_on);
+        let off = protocol::run(Protocol::Axle, &w, &rr_off);
+        assert!(
+            off.total as f64 > 1.15 * on.total as f64,
+            "({a}) RR OoO-off should cost >15%: {} vs {}",
+            off.total,
+            on.total
+        );
+
+        let mut fifo_on = cfg.clone();
+        fifo_on.sched = SchedPolicy::Fifo;
+        let mut fifo_off = fifo_on.clone();
+        fifo_off.axle.ooo_streaming = false;
+        let f_on = protocol::run(Protocol::Axle, &w, &fifo_on);
+        let f_off = protocol::run(Protocol::Axle, &w, &fifo_off);
+        let ratio = f_off.total as f64 / f_on.total as f64;
+        assert!(ratio < 1.05, "({a}) FIFO should be insensitive, got {ratio}");
+    }
+}
+
+#[test]
+fn llm_deadlocks_at_eighth_capacity_and_only_llm() {
+    let mut cfg = SimConfig::m2ndp();
+    cfg.axle.dma_slot_capacity /= 8;
+    for a in ALL_ANNOTATIONS {
+        let m = run(a, Protocol::Axle, &cfg);
+        if a == 'h' {
+            assert!(m.deadlock, "(h) must deadlock at 12.5% capacity (Fig. 16)");
+        } else {
+            assert!(!m.deadlock, "({a}) must not deadlock at 12.5% capacity");
+        }
+    }
+}
+
+#[test]
+fn backpressure_appears_under_tight_capacity_without_slowdown() {
+    // Fig. 16: (d) absorbs heavy back-pressure with ~no runtime change.
+    let cfg = SimConfig::m2ndp();
+    let base = run('d', Protocol::Axle, &cfg);
+    let mut tight = cfg.clone();
+    tight.axle.dma_slot_capacity /= 8;
+    let m = run('d', Protocol::Axle, &tight);
+    assert!(!m.deadlock);
+    assert!(m.backpressure > 0);
+    assert!(
+        (m.total as f64) < 1.1 * base.total as f64,
+        "back-pressure amortized: {} vs {}",
+        m.total,
+        base.total
+    );
+}
+
+// ------------------------------------------------------------------
+// Determinism & config plumbing.
+// ------------------------------------------------------------------
+
+#[test]
+fn identical_configs_are_bit_deterministic() {
+    let cfg = SimConfig::m2ndp();
+    for a in ['b', 'e', 'h'] {
+        for p in Protocol::ALL {
+            let m1 = run(a, p, &cfg);
+            let m2 = run(a, p, &cfg);
+            assert_eq!(m1.total, m2.total, "({a}) {}", p.label());
+            assert_eq!(m1.host_stall, m2.host_stall);
+            assert_eq!(m1.events, m2.events);
+        }
+    }
+}
+
+#[test]
+fn different_seeds_change_axle_timelines() {
+    // Use the CCM-bound DLRM (i): its critical path ends at jittered CCM
+    // completions. (PageRank's AXLE total is wire-saturated and KNN's is
+    // gated by the unjittered serial top-k chain — totals there are
+    // legitimately seed-invariant.)
+    let mut c1 = SimConfig::m2ndp();
+    let mut c2 = SimConfig::m2ndp();
+    c1.seed = 1;
+    c2.seed = 2;
+    let m1 = protocol::run(Protocol::Axle, &by_annotation('i', &c1), &c1);
+    let m2 = protocol::run(Protocol::Axle, &by_annotation('i', &c2), &c2);
+    assert_ne!(m1.total, m2.total);
+}
+
+#[test]
+fn coordinator_matrix_and_counters() {
+    let mut cfg = SimConfig::m2ndp();
+    cfg.axle.poll_interval = poll_factors::P1;
+    let coord = Coordinator::new(cfg);
+    let ms = coord.run_matrix(&[Protocol::Axle]);
+    assert_eq!(ms.len(), 9);
+    for m in &ms {
+        assert!(m.result_bytes > 0);
+        assert!(m.dma_batches > 0);
+        assert!(m.fc_messages > 0);
+    }
+}
+
+// ------------------------------------------------------------------
+// Real-hardware profile (Fig. 4 trend).
+// ------------------------------------------------------------------
+
+#[test]
+fn real_hw_knn_host_share_grows_with_rows() {
+    let cfg = SimConfig::real_hw();
+    let share = |dim, rows| {
+        let w = axle::workload::knn::generate_queries(&cfg, dim, rows, 4);
+        let m = protocol::run(Protocol::Rp, &w, &cfg);
+        m.host_busy as f64 / (m.ccm_busy + m.host_busy) as f64
+    };
+    let high_dim = share(2048, 128);
+    let low_dim = share(32, 4096);
+    assert!(low_dim > 0.5, "low-dim KNN should be host-heavy, got {low_dim}");
+    assert!(low_dim > 2.0 * high_dim);
+}
+
+// ------------------------------------------------------------------
+// OLAP selectivity plumbing.
+// ------------------------------------------------------------------
+
+#[test]
+fn ssb_queries_differ_only_in_host_selected_work() {
+    let cfg = SimConfig::m2ndp();
+    let f = protocol::run(Protocol::Bs, &olap::ssb_q1(&cfg, olap::SsbQuery::Q1_1), &cfg);
+    let g = protocol::run(Protocol::Bs, &olap::ssb_q1(&cfg, olap::SsbQuery::Q1_2), &cfg);
+    // Q1.2 selects ~30× fewer rows: slightly less host work, same scans.
+    assert!(g.host_busy < f.host_busy);
+    assert_eq!(f.result_bytes, g.result_bytes);
+}
+
+// ------------------------------------------------------------------
+// Extension: dynamic streaming-factor selection (§V-E future work).
+// ------------------------------------------------------------------
+
+#[test]
+fn adaptive_sf_avoids_pathological_batching_and_cuts_dma_requests() {
+    use axle::config::SfPolicy;
+    let cfg = SimConfig::m2ndp();
+    for a in ['a', 'd', 'e', 'i'] {
+        let w = by_annotation(a, &cfg);
+        let fixed = protocol::run(Protocol::Axle, &w, &cfg);
+        // Pathological fixed setting: SF = an entire iteration's result.
+        let mut big = cfg.clone();
+        big.axle.streaming_factor_bytes = w.iters[0].result_bytes();
+        let worst = protocol::run(Protocol::Axle, &w, &big);
+        let mut ad = cfg.clone();
+        ad.axle.sf_policy = SfPolicy::Adaptive;
+        let adaptive = protocol::run(Protocol::Axle, &w, &ad);
+        assert!(!adaptive.deadlock);
+        // Within 25% of SF1 everywhere...
+        assert!(
+            (adaptive.total as f64) < 1.25 * fixed.total as f64,
+            "({a}) adaptive {} vs SF1 {}",
+            adaptive.total,
+            fixed.total
+        );
+        // ...and never worse than the pathological fixed choice by >5%.
+        assert!(
+            (adaptive.total as f64) < 1.05 * worst.total as f64,
+            "({a}) adaptive {} vs SF_100% {}",
+            adaptive.total,
+            worst.total
+        );
+        // Fewer DMA requests than SF1 (link-sharing benefit).
+        assert!(
+            adaptive.dma_batches <= fixed.dma_batches,
+            "({a}) adaptive batches {} vs SF1 {}",
+            adaptive.dma_batches,
+            fixed.dma_batches
+        );
+    }
+}
+
+#[test]
+fn adaptive_sf_is_deterministic() {
+    use axle::config::SfPolicy;
+    let mut cfg = SimConfig::m2ndp();
+    cfg.axle.sf_policy = SfPolicy::Adaptive;
+    let w = by_annotation('e', &cfg);
+    let a = protocol::run(Protocol::Axle, &w, &cfg);
+    let b = protocol::run(Protocol::Axle, &w, &cfg);
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.dma_batches, b.dma_batches);
+}

@@ -1,0 +1,291 @@
+//! Property-based tests over the paper's memory-correctness invariants
+//! (§IV-C) and the simulator substrate, using the in-tree harness
+//! (`axle::util::prop`). Replay a failure with `AXLE_PROP_SEED=<hex>`.
+
+use axle::config::{Protocol, SchedPolicy, SimConfig};
+use axle::ring::{ProducerView, Ring};
+use axle::sim::{BusyTracker, EventQueue, PuPool};
+use axle::util::prop::run_prop;
+use axle::util::rng::Pcg32;
+use axle::workload::{CcmTask, HostTask, IterSpec, WorkloadSpec};
+use axle::protocol;
+
+// ------------------------------------------------------------------
+// Ring buffer invariants (gap-aware OoO, wraparound, monotonicity).
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_ring_invariants_under_random_ops() {
+    run_prop("ring_invariants", 300, |rng| {
+        let cap = rng.range(1, 64) as usize;
+        let mut ring = Ring::new(cap);
+        let mut outstanding: Vec<u64> = Vec::new();
+        let mut last_head = 0u64;
+        for _ in 0..rng.range(10, 400) {
+            if rng.next_f64() < 0.5 && ring.free() > 0 {
+                let n = rng.range(1, ring.free());
+                let first = ring.produce(n);
+                outstanding.extend(first..first + n);
+            } else if !outstanding.is_empty() {
+                // Consume a random outstanding slot (OoO).
+                let i = rng.below(outstanding.len() as u64) as usize;
+                let id = outstanding.swap_remove(i);
+                let head = ring.consume(id);
+                // Head is monotone.
+                assert!(head >= last_head);
+                last_head = head;
+                // Gap-aware: head never passes an unconsumed slot.
+                if let Some(&min_out) = outstanding.iter().min() {
+                    assert!(head <= min_out);
+                }
+            }
+            ring.check_invariants();
+            assert!(ring.occupancy() <= cap as u64);
+        }
+    });
+}
+
+#[test]
+fn prop_producer_view_never_allows_overwrite() {
+    // The conservative stale head can *stall* the producer but never let
+    // tail overtake the true consumption frontier by more than capacity.
+    run_prop("producer_view_safety", 300, |rng| {
+        let cap = rng.range(1, 32) as usize;
+        let mut host = Ring::new(cap);
+        let mut pv = ProducerView::new(cap);
+        let mut in_flight: Vec<(u64, u64)> = Vec::new(); // (first, n) sent, unarrived
+        let mut unconsumed: Vec<u64> = Vec::new();
+        for _ in 0..rng.range(10, 300) {
+            match rng.below(4) {
+                0 => {
+                    let n = rng.range(1, cap as u64);
+                    if let Some(first) = pv.try_claim(n) {
+                        in_flight.push((first, n));
+                    }
+                }
+                1 => {
+                    if !in_flight.is_empty() {
+                        // Arrival (FIFO, like the wire).
+                        let (first, n) = in_flight.remove(0);
+                        // Must never overflow the host ring: the claim was
+                        // gated by the (possibly stale) head view.
+                        assert!(host.occupancy() + n <= cap as u64, "overwrite!");
+                        let f2 = host.produce(n);
+                        assert_eq!(f2, first);
+                        unconsumed.extend(first..first + n);
+                    }
+                }
+                2 => {
+                    if !unconsumed.is_empty() {
+                        let i = rng.below(unconsumed.len() as u64) as usize;
+                        let id = unconsumed.swap_remove(i);
+                        host.consume(id);
+                    }
+                }
+                _ => {
+                    // Flow-control message (possibly stale/reordered).
+                    let head = if rng.next_f64() < 0.3 {
+                        rng.range(0, host.head())
+                    } else {
+                        host.head()
+                    };
+                    pv.update_head(head.min(host.head()));
+                }
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------------
+// Event queue and pool.
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_total_order() {
+    run_prop("event_queue_order", 200, |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = rng.range(1, 500);
+        for i in 0..n {
+            q.push_at(rng.below(1000), i);
+        }
+        let mut last_t = 0;
+        let mut seen = 0;
+        let mut at_time: Vec<(u64, u64)> = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            assert!(t >= last_t, "time went backwards");
+            at_time.push((t, ev));
+            last_t = t;
+            seen += 1;
+        }
+        assert_eq!(seen, n);
+        // FIFO within equal timestamps: insertion ids ascending.
+        for w in at_time.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "FIFO tie-break violated");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pool_conservation_and_capacity() {
+    run_prop("pool_conservation", 200, |rng| {
+        let n_pus = rng.range(1, 16) as usize;
+        let mut pool = PuPool::new(n_pus);
+        let mut total: u64 = 0;
+        let mut makespan: u64 = 0;
+        let tasks = rng.range(1, 200);
+        let mut ready = 0u64;
+        for _ in 0..tasks {
+            ready += rng.below(50);
+            let dur = rng.range(1, 1000);
+            let (start, end) = pool.dispatch(ready, dur);
+            assert!(start >= ready);
+            assert_eq!(end - start, dur);
+            total += dur;
+            makespan = makespan.max(end);
+        }
+        // Work conservation: makespan bounds.
+        assert!(makespan >= total / n_pus as u64);
+        assert!(pool.busy().total() == total);
+        assert!(pool.busy().union() <= makespan);
+    });
+}
+
+#[test]
+fn prop_busy_tracker_union_le_total() {
+    run_prop("busy_union", 200, |rng| {
+        let mut b = BusyTracker::new();
+        let mut start = 0u64;
+        for _ in 0..rng.range(1, 100) {
+            start += rng.below(100);
+            let end = start + rng.below(100);
+            b.record(start, end);
+        }
+        assert!(b.union() <= b.total());
+        assert!(b.union() <= b.last_end());
+    });
+}
+
+// ------------------------------------------------------------------
+// Whole-protocol properties over random workloads.
+// ------------------------------------------------------------------
+
+fn random_workload(rng: &mut Pcg32) -> WorkloadSpec {
+    let iters = rng.range(1, 4) as usize;
+    let spec = WorkloadSpec {
+        name: "prop".into(),
+        annot: 'x',
+        domain: "prop",
+        iters: (0..iters)
+            .map(|_| {
+                let n = rng.range(1, 40) as usize;
+                let ccm_tasks: Vec<CcmTask> = (0..n)
+                    .map(|_| CcmTask {
+                        dur: rng.range(1_000, 10_000_000),
+                        result_bytes: rng.range(4, 4096),
+                    })
+                    .collect();
+                // Random dependency structure: either 1:1 or gathered.
+                let gathered = rng.next_f64() < 0.3;
+                let host_tasks: Vec<HostTask> = if gathered {
+                    let groups = rng.range(1, (n as u64).min(8)) as usize;
+                    (0..groups)
+                        .map(|g| HostTask {
+                            dur: rng.range(1_000, 5_000_000),
+                            deps: (0..n as u32).filter(|t| *t as usize % groups == g).collect(),
+                        })
+                        .collect()
+                } else {
+                    (0..n)
+                        .map(|i| HostTask {
+                            dur: rng.range(1_000, 5_000_000),
+                            deps: vec![i as u32],
+                        })
+                        .collect()
+                };
+                IterSpec { ccm_tasks, host_tasks, host_serial: rng.next_f64() < 0.2 }
+            })
+            .collect(),
+    };
+    spec.validate().expect("generated spec valid");
+    spec
+}
+
+#[test]
+fn prop_all_protocols_complete_random_workloads() {
+    run_prop("protocols_complete", 60, |rng| {
+        let w = random_workload(rng);
+        let mut cfg = SimConfig::m2ndp();
+        cfg.seed = rng.next_u64();
+        cfg.sched = if rng.next_f64() < 0.5 { SchedPolicy::RoundRobin } else { SchedPolicy::Fifo };
+        cfg.axle.ooo_streaming = rng.next_f64() < 0.8;
+        for p in Protocol::ALL {
+            let m = protocol::run(p, &w, &cfg);
+            assert!(!m.deadlock, "{} deadlocked (ample capacity)", p.label());
+            assert!(m.total > 0);
+            // Physicality: component busy-unions never exceed the total.
+            assert!(m.ccm_busy <= m.total);
+            assert!(m.host_busy <= m.total);
+            assert!(m.dm_busy <= m.total + cfg.cxl_io_rtt + cfg.cxl_mem_rtt);
+            // The pipeline can't beat its longest component.
+            assert!(m.total >= m.ccm_busy.max(m.host_busy));
+        }
+    });
+}
+
+#[test]
+fn prop_axle_not_slower_than_bs_beyond_overheads() {
+    // AXLE's overhead vs BS is bounded: per-batch DMA prep and polling
+    // quantization. Allow 25% + fixed slack; typically AXLE wins.
+    run_prop("axle_vs_bs_bound", 40, |rng| {
+        let w = random_workload(rng);
+        let mut cfg = SimConfig::m2ndp();
+        cfg.seed = rng.next_u64();
+        let ax = protocol::run(Protocol::Axle, &w, &cfg);
+        let bs = protocol::run(Protocol::Bs, &w, &cfg);
+        let slack = 1.25 * bs.total as f64 + 2e8; // +200 μs fixed
+        assert!(
+            (ax.total as f64) < slack,
+            "AXLE {} vs BS {} (workload {:?} iters)",
+            ax.total,
+            bs.total,
+            w.iters.len()
+        );
+    });
+}
+
+#[test]
+fn prop_axle_deterministic_per_seed() {
+    run_prop("axle_determinism", 30, |rng| {
+        let w = random_workload(rng);
+        let mut cfg = SimConfig::m2ndp();
+        cfg.seed = rng.next_u64();
+        let a = protocol::run(Protocol::Axle, &w, &cfg);
+        let b = protocol::run(Protocol::Axle, &w, &cfg);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.backpressure, b.backpressure);
+        assert_eq!(a.dma_batches, b.dma_batches);
+    });
+}
+
+#[test]
+fn prop_jitter_bounded_effect_on_serial_protocols() {
+    // Jitter redistributes task durations by ±10%; RP/BS totals must stay
+    // within that envelope of the jitter-free run.
+    run_prop("jitter_envelope", 30, |rng| {
+        let w = random_workload(rng);
+        let mut cfg = SimConfig::m2ndp();
+        cfg.seed = rng.next_u64();
+        cfg.jitter = 0.2;
+        let mut flat = cfg.clone();
+        flat.jitter = 0.0;
+        for p in [Protocol::Rp, Protocol::Bs] {
+            let j = protocol::run(p, &w, &cfg);
+            let f = protocol::run(p, &w, &flat);
+            let ratio = j.total as f64 / f.total as f64;
+            assert!((0.85..=1.15).contains(&ratio), "{}: ratio {ratio}", p.label());
+        }
+    });
+}

@@ -1,0 +1,84 @@
+//! End-to-end numerics through the PJRT runtime: every workload's AOT
+//! artifacts execute from Rust and match independent Rust references.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent
+//! (CI without Python). `make test` always builds artifacts first.
+
+use std::path::PathBuf;
+
+use axle::config::SimConfig;
+use axle::runtime::{prand_f32, Runtime};
+use axle::workload::ALL_ANNOTATIONS;
+use axle::Coordinator;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+#[test]
+fn manifest_covers_all_nine_workloads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let names = rt.names();
+    for prefix in [
+        "knn_a", "knn_b", "knn_c", "pagerank", "sssp", "ssb_q1", "dlrm",
+    ] {
+        assert!(
+            names.iter().any(|n| n.starts_with(prefix) && n.ends_with("_ccm")),
+            "missing {prefix}_ccm"
+        );
+    }
+    assert!(names.contains(&"llm_attn_ccm"));
+    assert!(names.contains(&"llm_mlp_host"));
+}
+
+#[test]
+fn all_workload_numerics_validate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut coord = Coordinator::new(SimConfig::m2ndp()).with_artifacts(dir).unwrap();
+    for a in ALL_ANNOTATIONS {
+        let r = coord.validate_numerics(a).unwrap_or_else(|e| panic!("({a}): {e:#}"));
+        assert!(r.checks > 0, "({a}) no checks ran");
+        assert!(r.max_rel_err < 5e-3, "({a}) err {}", r.max_rel_err);
+        assert_eq!(r.artifacts.len(), 2, "({a}) must exercise both halves");
+    }
+}
+
+#[test]
+fn executables_are_cached_and_rerunnable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let q = prand_f32(2048, 7);
+    let db = prand_f32(128 * 2048, 8);
+    let first = rt.execute_f32("knn_a_ccm", &[&q, &db]).unwrap();
+    // Second execution reuses the compiled executable and must agree.
+    let second = rt.execute_f32("knn_a_ccm", &[&q, &db]).unwrap();
+    assert_eq!(first[0], second[0]);
+}
+
+#[test]
+fn artifact_outputs_match_manifest_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let entry = rt.entry("ssb_q1_ccm").unwrap().clone();
+    let n = entry.inputs[0].shape[0];
+    let disc = prand_f32(n, 1);
+    let qty = prand_f32(n, 2);
+    let out = rt
+        .execute_f32("ssb_q1_ccm", &[&disc, &qty, &[0.0, 0.5], &[0.0, 0.5]])
+        .unwrap();
+    assert_eq!(out.len(), entry.outputs.len());
+    assert_eq!(out[0].len(), entry.outputs[0].elements());
+    // Marks are boolean-valued.
+    assert!(out[0].iter().all(|&m| m == 0.0 || m == 1.0));
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let q = prand_f32(2048, 7);
+    assert!(rt.execute_f32("knn_a_ccm", &[&q]).is_err());
+    assert!(rt.execute_f32("no_such_artifact", &[&q]).is_err());
+}
