@@ -1,0 +1,25 @@
+# Convenience targets; the CI gate is `build` + `test` + `lint`.
+CARGO ?= cargo
+
+.PHONY: build test lint bench artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Warnings are errors: keep the tree clippy-clean.
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Runs both bench binaries; figures.rs writes rust/BENCH_sweep.json
+# (machine-readable wall-time per figure bench, incl. the serial vs
+# parallel fig10 matrix pair).
+bench:
+	$(CARGO) bench
+
+# AOT-compile the workload kernels to HLO text (needs the Python/JAX
+# toolchain; the simulator itself never requires this).
+artifacts:
+	cd python/compile && python3 aot.py --out ../../rust/artifacts

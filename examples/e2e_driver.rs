@@ -98,7 +98,7 @@ fn main() -> Result<()> {
         ccm_red.push(fr(rp.ccm_idle(), rp) / fr(ax.ccm_idle(), ax));
         host_red.push(fr(rp.host_idle(), rp) / fr(ax.host_idle(), ax));
         stall_red.push(
-            fr(rp.host_stall.min(rp.total), rp) / fr(ax.host_stall.min(ax.total), ax),
+            fr(rp.host_stall_clamped(), rp) / fr(ax.host_stall_clamped(), ax),
         );
     }
     println!(

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             100.0 * m.frac(m.ccm_busy),
             100.0 * m.frac(m.dm_busy),
             100.0 * m.frac(m.host_busy),
-            100.0 * m.frac(m.host_stall.min(m.total)),
+            100.0 * m.frac(m.host_stall_clamped()),
             m.total as f64 / base as f64,
         );
     }

@@ -2,132 +2,167 @@
 //!
 //! Each entry regenerates the experiment behind the figure (the printed
 //! simulated-cycle report lives in `axle-report`; here we measure the
-//! harness cost of regenerating it, one bench per table/figure, so
-//! `cargo bench` exercises the full evaluation matrix).
+//! harness cost of regenerating it). Everything routes through the
+//! parallel sweep engine (`axle::sweep`) on all available cores; the
+//! `fig10_end_to_end_matrix` entry also runs with a single worker
+//! (`*_serial`) so the serial/parallel ratio is recorded alongside.
+//!
+//! Results are written to `BENCH_sweep.json` (schema `axle-bench-v1`,
+//! see `harness::write_json`) to give future PRs a perf trajectory.
 
 mod harness;
 
+use std::sync::Arc;
+
 use axle::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
-use axle::protocol;
+use axle::report;
+use axle::sweep::{self, ConfigDelta, SpecJob, SweepPoint, WorkloadCache};
 use axle::workload::{by_annotation, knn, llm, ALL_ANNOTATIONS};
-use harness::bench;
+use harness::{bench, write_json, BenchStat};
 
 fn main() {
     let cfg = SimConfig::m2ndp();
+    let jobs = sweep::available_jobs();
+    let mut stats: Vec<BenchStat> = Vec::new();
 
-    // Fig. 3: six attention kernels under RP and BS.
-    bench("fig03_attention_kernel_duality", || {
+    // Fig. 3: six attention kernels under RP and BS (custom specs).
+    stats.push(bench("fig03_attention_kernel_duality", || {
+        let shared = Arc::new(cfg.clone());
+        let mut list = Vec::new();
         for k in llm::AttnKernel::ALL {
-            let w = llm::single_kernel(&cfg, k);
-            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
-            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+            let w = Arc::new(llm::single_kernel(&cfg, k));
+            for proto in [Protocol::Rp, Protocol::Bs] {
+                list.push(SpecJob { w: Arc::clone(&w), proto, cfg: Arc::clone(&shared) });
+            }
         }
-    });
+        std::hint::black_box(sweep::run_jobs(&list, jobs));
+    }));
 
-    // Fig. 4: KNN sweep on the real-hardware profile.
-    bench("fig04_knn_real_hw_sweep", || {
+    // Fig. 4: KNN sweep on the real-hardware profile (custom specs).
+    stats.push(bench("fig04_knn_real_hw_sweep", || {
         let hw = SimConfig::real_hw();
-        for (dim, rows) in [(2048, 128), (512, 512), (128, 2048), (32, 4096)] {
-            let w = knn::generate_queries(&hw, dim, rows, 4);
-            std::hint::black_box(protocol::run(Protocol::Rp, &w, &hw));
-        }
-    });
+        let shared = Arc::new(hw.clone());
+        let list: Vec<SpecJob> = [(2048, 128), (512, 512), (128, 2048), (32, 4096)]
+            .iter()
+            .map(|&(dim, rows)| SpecJob {
+                w: Arc::new(knn::generate_queries(&hw, dim, rows, 4)),
+                proto: Protocol::Rp,
+                cfg: Arc::clone(&shared),
+            })
+            .collect();
+        std::hint::black_box(sweep::run_jobs(&list, jobs));
+    }));
 
     // Fig. 5 + Fig. 7: RP/BS breakdowns and idle times (same runs).
-    bench("fig05_fig07_breakdown_rp_bs", || {
+    stats.push(bench("fig05_fig07_breakdown_rp_bs", || {
+        let mut points = Vec::new();
         for a in ['a', 'b', 'c', 'd', 'e'] {
-            let w = by_annotation(a, &cfg);
-            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
-            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
+            points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+            points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
         }
-    });
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
-    // Fig. 10: the full end-to-end matrix (9 workloads × 6 variants).
-    bench("fig10_end_to_end_matrix", || {
-        for a in ALL_ANNOTATIONS {
-            let w = by_annotation(a, &cfg);
-            std::hint::black_box(protocol::run(Protocol::Rp, &w, &cfg));
-            std::hint::black_box(protocol::run(Protocol::Bs, &w, &cfg));
-            std::hint::black_box(protocol::run(Protocol::AxleInterrupt, &w, &cfg));
-            for p in [poll_factors::P1, poll_factors::P10, poll_factors::P100] {
-                let c = cfg.clone().with_poll(p);
-                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
-            }
-        }
-    });
+    // Fig. 10: the full end-to-end matrix (9 workloads × 6 variants) —
+    // parallel, plus the single-worker baseline for the speedup record.
+    let fig10_points = report::fig10_points();
+    stats.push(bench("fig10_end_to_end_matrix", || {
+        std::hint::black_box(sweep::run_points(&cfg, &fig10_points, jobs));
+    }));
+    stats.push(bench("fig10_end_to_end_matrix_serial", || {
+        std::hint::black_box(sweep::run_points(&cfg, &fig10_points, 1));
+    }));
 
     // Fig. 11: LLM on baseline vs reduced hardware.
-    bench("fig11_llm_reduced_hw", || {
+    stats.push(bench("fig11_llm_reduced_hw", || {
         for c in [SimConfig::m2ndp(), SimConfig::reduced()] {
-            let w = by_annotation('h', &c);
-            std::hint::black_box(protocol::run(Protocol::Rp, &w, &c));
-            std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+            let points = [
+                SweepPoint::new('h', Protocol::Rp, ConfigDelta::identity()),
+                SweepPoint::new('h', Protocol::Axle, ConfigDelta::identity()),
+            ];
+            std::hint::black_box(sweep::run_points(&c, &points, jobs));
         }
-    });
+    }));
 
     // Fig. 12: idle times at p10.
-    bench("fig12_idle_times_p10", || {
-        let c = cfg.clone().with_poll(poll_factors::P10);
-        for a in ALL_ANNOTATIONS {
-            let w = by_annotation(a, &c);
-            std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
-        }
-    });
+    stats.push(bench("fig12_idle_times_p10", || {
+        let p10 = ConfigDelta::identity().with_poll(poll_factors::P10);
+        let points: Vec<SweepPoint> =
+            ALL_ANNOTATIONS.iter().map(|&a| SweepPoint::new(a, Protocol::Axle, p10)).collect();
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
     // Fig. 13: host-core stall at p10 and p100.
-    bench("fig13_host_stall_p10_p100", || {
+    stats.push(bench("fig13_host_stall_p10_p100", || {
+        let mut points = Vec::new();
         for p in [poll_factors::P10, poll_factors::P100] {
-            let c = cfg.clone().with_poll(p);
             for a in ALL_ANNOTATIONS {
-                let w = by_annotation(a, &c);
-                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+                points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(p)));
             }
         }
-    });
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
     // Fig. 14: streaming-factor sweep on (a), (d), (i).
-    bench("fig14_streaming_factor_sweep", || {
+    stats.push(bench("fig14_streaming_factor_sweep", || {
+        let mut points = Vec::new();
         for a in ['a', 'd', 'i'] {
-            let w = by_annotation(a, &cfg);
             for sf in [32u64, 64, 256, 1024, 2048] {
-                let mut c = cfg.clone();
-                c.axle.streaming_factor_bytes = sf;
-                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+                points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_sf(sf)));
             }
         }
-    });
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
     // Fig. 15: OoO × scheduler ablation.
-    bench("fig15_ooo_ablation", || {
+    stats.push(bench("fig15_ooo_ablation", || {
+        let mut points = Vec::new();
         for a in ['d', 'e', 'i'] {
             for sched in [SchedPolicy::RoundRobin, SchedPolicy::Fifo] {
                 for ooo in [true, false] {
-                    let mut c = cfg.clone();
-                    c.sched = sched;
-                    c.axle.ooo_streaming = ooo;
-                    let w = by_annotation(a, &c);
-                    std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+                    points.push(SweepPoint::new(
+                        a,
+                        Protocol::Axle,
+                        ConfigDelta::identity().with_sched(sched).with_ooo(ooo),
+                    ));
                 }
             }
         }
-    });
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
     // Fig. 16: DMA slot capacity sweep (including the deadlock case).
-    bench("fig16_capacity_sweep", || {
+    stats.push(bench("fig16_capacity_sweep", || {
+        let mut points = Vec::new();
         for a in ['a', 'd', 'h', 'i'] {
             for div in [1usize, 2, 4, 8] {
-                let mut c = cfg.clone();
-                c.axle.dma_slot_capacity /= div;
-                let w = by_annotation(a, &c);
-                std::hint::black_box(protocol::run(Protocol::Axle, &w, &c));
+                points.push(SweepPoint::new(
+                    a,
+                    Protocol::Axle,
+                    ConfigDelta::identity().with_capacity(cfg.axle.dma_slot_capacity / div),
+                ));
             }
         }
-    });
+        std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
+    }));
 
-    // Table IV: workload generation cost itself.
-    bench("table4_workload_generation", || {
+    // Table IV: workload generation cost itself (uncached vs cached).
+    stats.push(bench("table4_workload_generation", || {
         for a in ALL_ANNOTATIONS {
             std::hint::black_box(by_annotation(a, &cfg));
         }
-    });
+    }));
+    stats.push(bench("table4_workload_generation_cached", || {
+        let mut cache = WorkloadCache::new();
+        for _ in 0..2 {
+            for a in ALL_ANNOTATIONS {
+                std::hint::black_box(cache.get(a, &cfg));
+            }
+        }
+    }));
+
+    match write_json("BENCH_sweep.json", jobs, &stats) {
+        Ok(()) => println!("wrote BENCH_sweep.json ({} entries, {jobs} worker threads)", stats.len()),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
 }

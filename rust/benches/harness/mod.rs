@@ -2,12 +2,33 @@
 //!
 //! Measures wall time of a closure with warmup + repeated timed runs and
 //! prints mean / min / max per iteration. `cargo bench` runs both bench
-//! binaries (`harness = false`).
+//! binaries (`harness = false`). Each [`bench`] call returns its
+//! [`BenchStat`]; a bench binary can collect those and emit a
+//! machine-readable JSON trajectory file via [`write_json`] (the figures
+//! bench writes `BENCH_sweep.json`) so future changes have a perf
+//! baseline to compare against.
 
+// Shared by multiple bench binaries; not every binary uses every item.
+#![allow(dead_code)]
+
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Benchmark `f`, printing a stats line tagged `name`.
-pub fn bench<F: FnMut()>(name: &str, mut f: F) {
+use axle::util::json::Json;
+
+/// Wall-time statistics of one benchmark entry (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStat {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Benchmark `f`, printing a stats line tagged `name` and returning the
+/// measured statistics.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStat {
     // Warmup + pick an iteration count targeting ~0.5 s total.
     let t0 = Instant::now();
     f();
@@ -29,6 +50,29 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) {
         fmt(min),
         fmt(max)
     );
+    BenchStat { name: name.to_string(), iters, mean_s: mean, min_s: min, max_s: max }
+}
+
+/// Write the collected stats as JSON:
+/// `{"schema": ..., "worker_threads": N, "benches": [{name, iters, mean_s, min_s, max_s}]}`.
+pub fn write_json(path: &str, worker_threads: usize, stats: &[BenchStat]) -> std::io::Result<()> {
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("axle-bench-v1".into()));
+    root.insert("worker_threads".to_string(), Json::Num(worker_threads as f64));
+    let benches: Vec<Json> = stats
+        .iter()
+        .map(|s| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(s.name.clone()));
+            o.insert("iters".to_string(), Json::Num(s.iters as f64));
+            o.insert("mean_s".to_string(), Json::Num(s.mean_s));
+            o.insert("min_s".to_string(), Json::Num(s.min_s));
+            o.insert("max_s".to_string(), Json::Num(s.max_s));
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("benches".to_string(), Json::Arr(benches));
+    std::fs::write(path, Json::Obj(root).to_string())
 }
 
 fn fmt(s: f64) -> String {

@@ -16,6 +16,7 @@ use crate::config::{Protocol, SimConfig};
 use crate::metrics::RunMetrics;
 use crate::protocol;
 use crate::runtime::Runtime;
+use crate::sweep::{self, ConfigDelta, SweepSpec};
 use crate::workload::{self, WorkloadSpec};
 
 pub use numerics::NumericsReport;
@@ -62,7 +63,30 @@ impl Coordinator {
     }
 
     /// Run every Table IV workload under every requested protocol.
+    ///
+    /// Fans out across all available cores through the [`crate::sweep`]
+    /// engine; results come back in deterministic (workload, protocol)
+    /// order, bit-identical to [`Coordinator::run_matrix_serial`].
     pub fn run_matrix(&self, protos: &[Protocol]) -> Vec<RunMetrics> {
+        self.run_matrix_jobs(protos, sweep::available_jobs())
+    }
+
+    /// [`Coordinator::run_matrix`] with an explicit worker count
+    /// (`jobs = 1` runs inline on the calling thread).
+    pub fn run_matrix_jobs(&self, protos: &[Protocol], jobs: usize) -> Vec<RunMetrics> {
+        SweepSpec::matrix(
+            self.cfg.clone(),
+            &workload::ALL_ANNOTATIONS,
+            protos,
+            &[ConfigDelta::identity()],
+        )
+        .run(jobs)
+    }
+
+    /// The original single-threaded reference path, kept as the
+    /// determinism baseline the sweep executor is tested against
+    /// (`tests/sweep_determinism.rs`).
+    pub fn run_matrix_serial(&self, protos: &[Protocol]) -> Vec<RunMetrics> {
         let mut out = Vec::new();
         for &a in &workload::ALL_ANNOTATIONS {
             for &p in protos {
@@ -102,6 +126,17 @@ mod tests {
         let ms = c.run_matrix(&[Protocol::Bs, Protocol::Axle]);
         assert_eq!(ms.len(), 9 * 2);
         assert!(ms.iter().all(|m| m.total > 0));
+    }
+
+    #[test]
+    fn parallel_matrix_matches_serial_reference() {
+        let c = Coordinator::new(SimConfig::m2ndp());
+        let parallel = c.run_matrix(&[Protocol::Bs]);
+        let serial = c.run_matrix_serial(&[Protocol::Bs]);
+        assert_eq!(parallel.len(), serial.len());
+        for (p, s) in parallel.iter().zip(&serial) {
+            assert_eq!(p.to_json().to_string(), s.to_json().to_string());
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! axle run --workload e --protocol axle --poll-ns 500
 //! axle matrix [--profile real-hw|reduced]
+//! axle sweep [--jobs N] [--workloads adei] [--protocol axle] [--json]
 //! axle validate [--artifacts DIR] [--workload e]
 //! axle report fig10 | all | ...
 //! axle list
@@ -13,9 +14,10 @@ use anyhow::{bail, Context, Result};
 
 use axle::config::{Protocol, SchedPolicy, SimConfig};
 use axle::sim::{ps_to_us, NS};
+use axle::sweep::{self, ConfigDelta, SweepSpec};
 use axle::util::args::Args;
 use axle::util::json::Json;
-use axle::{report, Coordinator};
+use axle::{report, Coordinator, RunMetrics};
 
 const USAGE: &str = "\
 axle — asynchronous back-streaming CCM offloading (paper reproduction)
@@ -26,6 +28,10 @@ USAGE:
            [--poll-ns N] [--sf BYTES] [--adaptive-sf] [--capacity SLOTS]
            [--no-ooo] [--fifo] [--seed N] [--json]
   axle matrix [--profile ...]
+  axle sweep [--jobs N] [--workloads <subset, e.g. adei>]
+             [--protocol rp|bs|axle|axle-interrupt] [--profile ...] [--json]
+        # the evaluation matrix on N worker threads (default: all cores);
+        # results are bit-identical to the serial path in spec order
   axle validate [--artifacts DIR] [--workload <a..i>]
   axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16>
   axle config [--out FILE.json]     # dump the Table III defaults
@@ -83,6 +89,27 @@ fn build_config(a: &Args) -> Result<SimConfig> {
     Ok(cfg)
 }
 
+/// The matrix/sweep results table (shared by both subcommands).
+fn print_metrics_table(ms: &[RunMetrics]) {
+    println!(
+        "{:<4} {:<16} {:>12} {:>8} {:>8} {:>8} {:>8}",
+        "WL", "protocol", "total(us)", "T_C%", "T_D%", "T_H%", "stall%"
+    );
+    for m in ms {
+        println!(
+            "({})  {:<16} {:>12.2} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%{}",
+            m.annot,
+            m.protocol,
+            ps_to_us(m.total),
+            100.0 * m.frac(m.ccm_busy),
+            100.0 * m.frac(m.dm_busy),
+            100.0 * m.frac(m.host_busy),
+            100.0 * m.frac(m.host_stall_clamped()),
+            if m.deadlock { "  DEADLOCK" } else { "" }
+        );
+    }
+}
+
 fn workload_arg(a: &Args) -> Result<char> {
     let s = a
         .get("workload")
@@ -134,7 +161,7 @@ fn main() -> Result<()> {
                 ps_to_us(m.host_idle()),
                 100.0 * m.frac(m.host_idle())
             );
-            let stall = m.host_stall.min(m.total);
+            let stall = m.host_stall_clamped();
             println!(
                 "  host stall     {:12.2} us ({:5.1}%)",
                 ps_to_us(stall),
@@ -151,23 +178,43 @@ fn main() -> Result<()> {
         }
         Some("matrix") => {
             let coord = Coordinator::new(build_config(&a)?);
-            println!(
-                "{:<4} {:<16} {:>12} {:>8} {:>8} {:>8} {:>8}",
-                "WL", "protocol", "total(us)", "T_C%", "T_D%", "T_H%", "stall%"
-            );
-            for m in coord.run_matrix(&Protocol::ALL) {
-                println!(
-                    "({})  {:<16} {:>12.2} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%{}",
-                    m.annot,
-                    m.protocol,
-                    ps_to_us(m.total),
-                    100.0 * m.frac(m.ccm_busy),
-                    100.0 * m.frac(m.dm_busy),
-                    100.0 * m.frac(m.host_busy),
-                    100.0 * m.frac(m.host_stall.min(m.total)),
-                    if m.deadlock { "  DEADLOCK" } else { "" }
-                );
+            print_metrics_table(&coord.run_matrix(&Protocol::ALL));
+        }
+        Some("sweep") => {
+            let cfg = build_config(&a)?;
+            let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
+            let protos: Vec<Protocol> = match a.get("protocol").or_else(|| a.get("p")) {
+                Some(s) => vec![parse_protocol(s)?],
+                None => Protocol::ALL.to_vec(),
+            };
+            let workloads: Vec<char> = match a.get("workloads") {
+                Some(s) => {
+                    let ws: Vec<char> = s.chars().collect();
+                    for &c in &ws {
+                        if !('a'..='i').contains(&c) {
+                            bail!("workload subset must use letters a..i, got {c:?}");
+                        }
+                    }
+                    ws
+                }
+                None => axle::workload::ALL_ANNOTATIONS.to_vec(),
+            };
+            let spec = SweepSpec::matrix(cfg, &workloads, &protos, &[ConfigDelta::identity()]);
+            let n_points = spec.len();
+            let t0 = std::time::Instant::now();
+            let ms = spec.run(jobs);
+            let wall = t0.elapsed();
+            if a.has("json") {
+                let arr = Json::Arr(ms.iter().map(|m| m.to_json()).collect());
+                println!("{arr}");
+            } else {
+                print_metrics_table(&ms);
             }
+            // Stderr so the stdout stream stays bit-comparable across runs.
+            eprintln!(
+                "swept {n_points} points on {jobs} worker thread(s) in {:.1} ms",
+                wall.as_secs_f64() * 1e3
+            );
         }
         Some("validate") => {
             let dir = a.get("artifacts").unwrap_or("artifacts");

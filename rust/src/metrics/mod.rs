@@ -60,6 +60,14 @@ impl RunMetrics {
         self.total.saturating_sub(self.host_busy)
     }
 
+    /// Host stall time clamped to the end-to-end total (Fig. 13's
+    /// reported quantity). The aggregate spin-poll accounting can
+    /// nominally exceed a short run's total, so every consumer reports
+    /// this clamped value rather than `host_stall` directly.
+    pub fn host_stall_clamped(&self) -> Ps {
+        self.host_stall.min(self.total)
+    }
+
     /// Fraction helpers (relative to this run's total).
     pub fn frac(&self, x: Ps) -> f64 {
         if self.total == 0 {
@@ -158,6 +166,15 @@ mod tests {
         let mut r = m(100, 49, 2);
         r.dm_busy = 49;
         assert_eq!(r.host_idle(), r.ccm_busy + r.dm_busy);
+    }
+
+    #[test]
+    fn host_stall_clamps_to_total() {
+        let mut r = m(100, 0, 0);
+        r.host_stall = 250;
+        assert_eq!(r.host_stall_clamped(), 100);
+        r.host_stall = 40;
+        assert_eq!(r.host_stall_clamped(), 40);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //!   accounted (Fig. 16b) and a blocked executor with nothing in flight is
 //!   a detected **deadlock** (Fig. 16's (h) edge case).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::SimConfig;
 use crate::cxl::Link;
@@ -33,7 +33,7 @@ use crate::ring::{ProducerView, Ring};
 use crate::sim::{EventQueue, PuPool, Ps};
 use crate::workload::WorkloadSpec;
 
-use super::{dispatch_order, jittered_dur, POSTED_STORE_COST};
+use super::{dispatch_order_into, jittered_dur, POSTED_STORE_COST};
 
 /// Metadata record bytes on the wire (payload slot id + task tag).
 const META_RECORD_BYTES: u64 = 8;
@@ -109,8 +109,11 @@ struct AxleSim<'a> {
     host_done: usize,
     emitted: usize,
     emit_next: u32,
-    emit_hold: BTreeMap<u32, ()>,
+    /// In-order-streaming hold flags, indexed by task (reused per iter).
+    emit_hold: Vec<bool>,
     chain_end: Ps,
+    /// Reusable dispatch-order scratch (one fill per iteration).
+    order_buf: Vec<u32>,
 
     // ---- DMA executor ----
     pending: VecDeque<PendChunk>,
@@ -132,6 +135,10 @@ struct AxleSim<'a> {
     ring_meta: Ring,
     arrived: VecDeque<Seg>,
     fc_queue: VecDeque<(u64, u64)>,
+    /// Reusable drain buffer for poll processing (no per-poll allocation).
+    scratch_segs: Vec<Seg>,
+    /// Recycled batch segment vectors (DMA batches churn constantly).
+    seg_pool: Vec<Vec<Seg>>,
 
     // ---- inflight accounting (deadlock detection) ----
     ccm_inflight: usize,
@@ -153,6 +160,12 @@ struct AxleSim<'a> {
 
 pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetrics {
     let cap = cfg.axle.dma_slot_capacity;
+    // Pre-size every per-iteration buffer from the spec's task counts so
+    // the event loop itself never grows a container (§Perf: the LLM row
+    // re-ran the allocator tens of thousands of times per simulation
+    // before buffers were pooled).
+    let max_ccm = w.iters.iter().map(|i| i.ccm_tasks.len()).max().unwrap_or(0);
+    let max_host = w.iters.iter().map(|i| i.host_tasks.len()).max().unwrap_or(0);
     let mut sim = AxleSim {
         cfg,
         w,
@@ -163,17 +176,18 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetric
         io: Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps),
         mem: Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps),
         iter: 0,
-        task_slots: Vec::new(),
-        delivered_slots: Vec::new(),
-        task_ranges: Vec::new(),
-        consumers: Vec::new(),
-        hdeps_left: Vec::new(),
+        task_slots: Vec::with_capacity(max_ccm),
+        delivered_slots: Vec::with_capacity(max_ccm),
+        task_ranges: vec![Vec::new(); max_ccm],
+        consumers: vec![Vec::new(); max_ccm],
+        hdeps_left: Vec::with_capacity(max_host),
         host_done: 0,
         emitted: 0,
         emit_next: 0,
-        emit_hold: BTreeMap::new(),
+        emit_hold: Vec::with_capacity(max_ccm),
         chain_end: 0,
-        pending: VecDeque::new(),
+        order_buf: Vec::with_capacity(max_ccm),
+        pending: VecDeque::with_capacity(max_ccm),
         pending_slots: 0,
         dma_busy: false,
         blocked_since: None,
@@ -185,8 +199,10 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetric
         burst_bytes: 0.0,
         ring_payload: Ring::new(cap),
         ring_meta: Ring::new(cap),
-        arrived: VecDeque::new(),
+        arrived: VecDeque::with_capacity(max_ccm),
         fc_queue: VecDeque::new(),
+        scratch_segs: Vec::with_capacity(max_ccm),
+        seg_pool: Vec::new(),
         ccm_inflight: 0,
         host_inflight: 0,
         fc_inflight: 0,
@@ -238,9 +254,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetric
 
 impl<'a> AxleSim<'a> {
     fn run(&mut self) {
-        let slot = self.cfg.axle.dma_slot_bytes;
         self.result_bytes = self.w.total_result_bytes();
-        let _ = slot;
         // First launch: posted CXL.mem store, one-way latency.
         self.stall += POSTED_STORE_COST;
         self.launch_inflight += 1;
@@ -337,14 +351,19 @@ impl<'a> AxleSim<'a> {
         self.emitted = 0;
         self.emit_next = 0;
         self.emit_hold.clear();
+        self.emit_hold.resize(n, false);
 
-        let order = dispatch_order(n, self.cfg.sched, self.cfg.seed, i as u64);
+        // Reusable dispatch-order buffer: take it out of `self` for the
+        // duration of the dispatch loop (the loop mutates other fields).
+        let mut order = std::mem::take(&mut self.order_buf);
+        dispatch_order_into(&mut order, n, self.cfg.sched, self.cfg.seed, i as u64);
         for &task in &order {
             let dur = jittered_dur(self.cfg, iter.ccm_tasks[task as usize].dur, i, task);
             let (_, end) = self.ccm_pool.dispatch(t, dur);
             self.ccm_inflight += 1;
             self.q.push_at(end, Ev::CcmTaskDone { iter: i as u32, task });
         }
+        self.order_buf = order;
     }
 
     fn on_ccm_done(&mut self, t: Ps, iter: usize, task: u32) {
@@ -355,8 +374,11 @@ impl<'a> AxleSim<'a> {
         } else {
             // In-order streaming: hold completed results until the next
             // offset in sequence is available (Fig. 15, OoO disabled).
-            self.emit_hold.insert(task, ());
-            while self.emit_hold.remove(&self.emit_next).is_some() {
+            self.emit_hold[task as usize] = true;
+            while (self.emit_next as usize) < self.emit_hold.len()
+                && self.emit_hold[self.emit_next as usize]
+            {
+                self.emit_hold[self.emit_next as usize] = false;
                 let e = self.emit_next;
                 self.emit(t, e);
                 self.emit_next += 1;
@@ -435,8 +457,9 @@ impl<'a> AxleSim<'a> {
         debug_assert_eq!(first, mfirst);
 
         // Carve the claimed slots out of pending chunks (chunks may split
-        // across batches when credit runs short).
-        let mut segs = Vec::new();
+        // across batches when credit runs short). Segment vectors are
+        // recycled through `seg_pool` across batches.
+        let mut segs = self.seg_pool.pop().unwrap_or_default();
         let mut off = 0u64;
         let mut left = claim;
         while left > 0 {
@@ -466,13 +489,15 @@ impl<'a> AxleSim<'a> {
     }
 
     fn on_dma_arrive(&mut self, t: Ps) {
-        let batch = self.inflight_batches.pop_front().expect("batch FIFO");
+        let Batch { mut segs, n_slots } = self.inflight_batches.pop_front().expect("batch FIFO");
         // Ordering invariant (§IV-C): payload slots are fully written
         // before their metadata records become visible — modelled by
         // producing payload first, then metadata, atomically at arrival.
-        self.ring_payload.produce(batch.n_slots);
-        self.ring_meta.produce(batch.n_slots);
-        self.arrived.extend(batch.segs.iter().copied());
+        self.ring_payload.produce(n_slots);
+        self.ring_meta.produce(n_slots);
+        self.arrived.extend(segs.iter().copied());
+        segs.clear();
+        self.seg_pool.push(segs);
         if self.interrupt_mode {
             self.notify_inflight += 1;
             self.q.push_at(t + self.cfg.axle.interrupt_latency, Ev::Interrupt);
@@ -497,9 +522,13 @@ impl<'a> AxleSim<'a> {
         // Reading the metadata block from the local DMA region.
         self.stall += self.cfg.host.dram().stream_time(n_slots * META_RECORD_BYTES);
 
-        let segs: Vec<Seg> = self.arrived.drain(..).collect();
+        // Drain into the reusable scratch buffer (no per-poll allocation;
+        // the loop below dispatches host tasks, which mutates `self`).
+        let mut segs = std::mem::take(&mut self.scratch_segs);
+        segs.clear();
+        segs.extend(self.arrived.drain(..));
         let iter = &self.w.iters[self.iter];
-        for seg in segs {
+        for seg in &segs {
             self.delivered_slots[seg.task as usize] += seg.slots;
             if self.delivered_slots[seg.task as usize] >= self.task_slots[seg.task as usize] {
                 for ci in 0..self.consumers[seg.task as usize].len() {
@@ -517,6 +546,8 @@ impl<'a> AxleSim<'a> {
                 }
             }
         }
+        segs.clear();
+        self.scratch_segs = segs;
         // Flow control: posted CXL.mem store with the updated metadata
         // head (payload head rides along).
         self.send_fc(t);
@@ -543,11 +574,14 @@ impl<'a> AxleSim<'a> {
         self.host_inflight -= 1;
         // Consume the payload slots of this task's dependencies
         // (gap-aware: the head only passes contiguous consumed prefixes).
-        let deps = self.w.iters[iter].host_tasks[h as usize].deps.clone();
-        for d in deps {
-            for (first, n) in std::mem::take(&mut self.task_ranges[d as usize]) {
+        // `deps` borrows the workload spec, not `self`, so no clone.
+        let deps = &self.w.iters[iter].host_tasks[h as usize].deps;
+        for &d in deps {
+            let d = d as usize;
+            for &(first, n) in &self.task_ranges[d] {
                 self.ring_payload.consume_range(first, n as u64);
             }
+            self.task_ranges[d].clear();
         }
         self.send_fc(t);
         self.host_done += 1;

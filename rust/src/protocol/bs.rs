@@ -14,7 +14,7 @@ use crate::metrics::RunMetrics;
 use crate::sim::{PuPool, Ps};
 use crate::workload::WorkloadSpec;
 
-use super::{dispatch_order, jittered_dur};
+use super::{dispatch_order_into, jittered_dur};
 
 pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
     let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
@@ -24,6 +24,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
     let mut t: Ps = 0;
     let mut stall: Ps = 0;
     let mut result_bytes: u64 = 0;
+    let mut order: Vec<u32> = Vec::new();
 
     for (ii, iter) in w.iters.iter().enumerate() {
         // Kernel launch: CXL.mem store; the launch reaches the CCM after a
@@ -31,7 +32,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         // the remote kernel completes.
         let launch_t = t + cfg.cxl_mem_rtt / 2;
 
-        let order = dispatch_order(iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
+        dispatch_order_into(&mut order, iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
         let mut complete: Ps = launch_t;
         for &task in &order {
             let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);

@@ -46,18 +46,28 @@ pub fn run(proto: Protocol, w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
 /// - Round-robin: the scheduler deals partitions across μthread groups,
 ///   so completion (and hence streaming) order is scrambled relative to
 ///   offsets — the situation OoO streaming exists for.
-pub(crate) fn dispatch_order(n: usize, policy: SchedPolicy, seed: u64, salt: u64) -> Vec<u32> {
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+///
+/// Fills a reusable buffer: the protocol engines call this once per
+/// iteration, so recycling the `Vec` keeps the per-run allocation count
+/// independent of the iteration count.
+pub(crate) fn dispatch_order_into(
+    out: &mut Vec<u32>,
+    n: usize,
+    policy: SchedPolicy,
+    seed: u64,
+    salt: u64,
+) {
+    out.clear();
+    out.extend(0..n as u32);
     if policy == SchedPolicy::RoundRobin {
         // Deterministic shuffle: sort by splitmix64 hash of (seed, salt, i).
-        idx.sort_by_key(|&i| {
+        out.sort_by_key(|&i| {
             let mut z = seed ^ salt.rotate_left(17) ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
             z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
             z ^ (z >> 31)
         });
     }
-    idx
 }
 
 /// Jittered duration of CCM task `task` in iteration `iter`.
@@ -73,6 +83,12 @@ pub(crate) fn jittered_dur(cfg: &SimConfig, base: Ps, iter: usize, task: u32) ->
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn dispatch_order(n: usize, policy: SchedPolicy, seed: u64, salt: u64) -> Vec<u32> {
+        let mut idx = Vec::with_capacity(n);
+        dispatch_order_into(&mut idx, n, policy, seed, salt);
+        idx
+    }
 
     #[test]
     fn fifo_order_is_identity() {
@@ -95,5 +111,15 @@ mod tests {
         let a = dispatch_order(64, SchedPolicy::RoundRobin, 7, 0);
         let b = dispatch_order(64, SchedPolicy::RoundRobin, 7, 1);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn order_into_reuses_buffer_and_matches() {
+        let mut buf = Vec::new();
+        dispatch_order_into(&mut buf, 32, SchedPolicy::RoundRobin, 7, 3);
+        assert_eq!(buf, dispatch_order(32, SchedPolicy::RoundRobin, 7, 3));
+        // Refill with different params: fully overwritten, same length rules.
+        dispatch_order_into(&mut buf, 5, SchedPolicy::Fifo, 1, 2);
+        assert_eq!(buf, vec![0, 1, 2, 3, 4]);
     }
 }

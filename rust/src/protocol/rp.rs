@@ -14,7 +14,7 @@ use crate::metrics::RunMetrics;
 use crate::sim::{secs_to_ps, PuPool, Ps};
 use crate::workload::WorkloadSpec;
 
-use super::{dispatch_order, jittered_dur, FIRMWARE_CYCLES};
+use super::{dispatch_order_into, jittered_dur, FIRMWARE_CYCLES};
 
 pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
     let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
@@ -27,6 +27,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
     let mut stall: Ps = 0;
     let mut polls: u64 = 0;
     let mut result_bytes: u64 = 0;
+    let mut order: Vec<u32> = Vec::new();
 
     for (ii, iter) in w.iters.iter().enumerate() {
         // (0) Kernel descriptor write to CXL memory (CXL.mem store, sync).
@@ -41,7 +42,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         let launch_t = t + fw_delay;
 
         // CCM task execution (scheduler-ordered, jittered).
-        let order = dispatch_order(iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
+        dispatch_order_into(&mut order, iter.ccm_tasks.len(), cfg.sched, cfg.seed, ii as u64);
         let mut complete: Ps = launch_t;
         for &task in &order {
             let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);

@@ -5,11 +5,19 @@
 //! and prints a table whose *shape* should match the paper's figure —
 //! who wins, by what factor, where the crossovers fall. `cargo run
 //! --release --bin axle-report -- all` regenerates everything.
+//!
+//! All simulations route through the [`crate::sweep`] engine: each
+//! generator declares its (workload, protocol, config-delta) points,
+//! fans them out across every available core, and prints from the
+//! deterministically ordered results — output is bit-identical to the
+//! old serial loops, several times faster on multicore hosts.
+
+use std::sync::Arc;
 
 use crate::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
 use crate::metrics::{geomean, mean, RunMetrics};
-use crate::protocol;
 use crate::sim::ps_to_us;
+use crate::sweep::{self, ConfigDelta, SpecJob, SweepPoint};
 use crate::workload::{self, llm, olap};
 
 fn pct(x: f64) -> String {
@@ -19,6 +27,16 @@ fn pct(x: f64) -> String {
 fn header(title: &str) {
     println!();
     println!("=== {title} ===");
+}
+
+/// Run sweep points on every available core (spec-order results).
+fn par(cfg: &SimConfig, points: &[SweepPoint]) -> Vec<RunMetrics> {
+    sweep::run_points(cfg, points, sweep::available_jobs())
+}
+
+/// Run prebuilt (spec, protocol, config) jobs on every available core.
+fn par_jobs(jobs: &[SpecJob]) -> Vec<RunMetrics> {
+    sweep::run_jobs(jobs, sweep::available_jobs())
 }
 
 /// Breakdown of one run relative to a baseline total.
@@ -71,10 +89,17 @@ pub fn fig3(cfg: &SimConfig) {
         "{:<12} {:>12} {:>12} {:>8}  {}",
         "Kernel", "RP kcyc", "BS kcyc", "BS/RP", "class"
     );
+    let shared = Arc::new(cfg.clone());
+    let mut jobs = Vec::new();
     for k in llm::AttnKernel::ALL {
-        let w = llm::single_kernel(cfg, k);
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let w = Arc::new(llm::single_kernel(cfg, k));
+        for proto in [Protocol::Rp, Protocol::Bs] {
+            jobs.push(SpecJob { w: Arc::clone(&w), proto, cfg: Arc::clone(&shared) });
+        }
+    }
+    let ms = par_jobs(&jobs);
+    for (k, pair) in llm::AttnKernel::ALL.into_iter().zip(ms.chunks(2)) {
+        let (rp, bs) = (&pair[0], &pair[1]);
         let kc = |t: u64| t as f64 / cfg.ccm.cycle() as f64 / 1e3;
         println!(
             "{:<12} {:>12.1} {:>12.1} {:>8.3}  {}",
@@ -92,7 +117,7 @@ pub fn fig4() {
     header("Fig. 4: KNN real-hardware profile, CCM vs host runtime ratio");
     let cfg = SimConfig::real_hw();
     println!("{:<20} {:>10} {:>10}", "(dim, rows)", "CCM %", "Host %");
-    for (dim, rows) in [
+    const GRID: [(usize, usize); 7] = [
         (2048, 128),
         (1024, 256),
         (512, 512),
@@ -100,9 +125,17 @@ pub fn fig4() {
         (128, 2048),
         (64, 4096),
         (32, 4096),
-    ] {
-        let w = workload::knn::generate_queries(&cfg, dim, rows, 4);
-        let m = protocol::run(Protocol::Rp, &w, &cfg);
+    ];
+    let shared = Arc::new(cfg.clone());
+    let jobs: Vec<SpecJob> = GRID
+        .iter()
+        .map(|&(dim, rows)| SpecJob {
+            w: Arc::new(workload::knn::generate_queries(&cfg, dim, rows, 4)),
+            proto: Protocol::Rp,
+            cfg: Arc::clone(&shared),
+        })
+        .collect();
+    for (&(dim, rows), m) in GRID.iter().zip(par_jobs(&jobs)) {
         let busy = (m.ccm_busy + m.host_busy) as f64;
         println!(
             "({:>5}, {:>5})       {:>9.2}% {:>9.2}%",
@@ -117,13 +150,18 @@ pub fn fig4() {
 /// Fig. 5: KNN + graph component breakdowns under RP and BS.
 pub fn fig5(cfg: &SimConfig) {
     header("Fig. 5: runtime breakdown (normalized to RP total), RP vs BS");
-    for a in ['a', 'b', 'c', 'd', 'e'] {
-        let w = workload::by_annotation(a, cfg);
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
-        println!("({a}) {}", w.name);
-        println!("    RP: {}", breakdown(&rp, rp.total));
-        println!("    BS: {}", breakdown(&bs, rp.total));
+    let annots = ['a', 'b', 'c', 'd', 'e'];
+    let mut points = Vec::new();
+    for a in annots {
+        points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
+    }
+    let ms = par(cfg, &points);
+    for (a, pair) in annots.into_iter().zip(ms.chunks(2)) {
+        let (rp, bs) = (&pair[0], &pair[1]);
+        println!("({a}) {}", rp.workload);
+        println!("    RP: {}", breakdown(rp, rp.total));
+        println!("    BS: {}", breakdown(bs, rp.total));
     }
 }
 
@@ -134,10 +172,15 @@ pub fn fig7(cfg: &SimConfig) {
         "{:<4} {:<6} {:>10} {:>10} {:>12}",
         "WL", "proto", "CCM idle", "Host idle", "total(us)"
     );
-    for a in ['a', 'b', 'c', 'd', 'e'] {
-        let w = workload::by_annotation(a, cfg);
-        for p in [Protocol::Rp, Protocol::Bs] {
-            let m = protocol::run(p, &w, cfg);
+    let annots = ['a', 'b', 'c', 'd', 'e'];
+    let mut points = Vec::new();
+    for a in annots {
+        points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
+    }
+    let ms = par(cfg, &points);
+    for (a, pair) in annots.into_iter().zip(ms.chunks(2)) {
+        for m in pair {
             println!(
                 "({a})  {:<6} {:>10} {:>10} {:>12.2}",
                 m.protocol,
@@ -156,33 +199,23 @@ pub fn fig10(cfg: &SimConfig) {
         "{:<4} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8}",
         "WL", "RP", "BS", "AXLE_Int", "p1", "p10", "p100"
     );
+    let ms = par(cfg, &fig10_points());
     let mut red_rp = [Vec::new(), Vec::new(), Vec::new()];
     let mut red_bs = [Vec::new(), Vec::new(), Vec::new()];
-    for a in workload::ALL_ANNOTATIONS {
-        let w = workload::by_annotation(a, cfg);
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
-        let int = protocol::run(Protocol::AxleInterrupt, &w, cfg);
-        let polls = [poll_factors::P1, poll_factors::P10, poll_factors::P100];
-        let axles: Vec<RunMetrics> = polls
-            .iter()
-            .map(|&p| {
-                let c = cfg.clone().with_poll(p);
-                protocol::run(Protocol::Axle, &w, &c)
-            })
-            .collect();
+    for (a, row) in workload::ALL_ANNOTATIONS.into_iter().zip(ms.chunks(6)) {
+        let (rp, bs, int, axles) = (&row[0], &row[1], &row[2], &row[3..6]);
         for (i, m) in axles.iter().enumerate() {
-            red_rp[i].push(1.0 - m.ratio_to(&rp));
-            red_bs[i].push(1.0 - m.ratio_to(&bs));
+            red_rp[i].push(1.0 - m.ratio_to(rp));
+            red_bs[i].push(1.0 - m.ratio_to(bs));
         }
         println!(
             "({a})  {:>7.2}% {:>7.2}% {:>9.2}% {:>7.2}% {:>7.2}% {:>7.2}%",
             100.0,
-            100.0 * bs.ratio_to(&rp),
-            100.0 * int.ratio_to(&rp),
-            100.0 * axles[0].ratio_to(&rp),
-            100.0 * axles[1].ratio_to(&rp),
-            100.0 * axles[2].ratio_to(&rp),
+            100.0 * bs.ratio_to(rp),
+            100.0 * int.ratio_to(rp),
+            100.0 * axles[0].ratio_to(rp),
+            100.0 * axles[1].ratio_to(rp),
+            100.0 * axles[2].ratio_to(rp),
         );
     }
     println!("(j) end-to-end time-ratio reduction of AXLE:");
@@ -199,19 +232,37 @@ pub fn fig10(cfg: &SimConfig) {
     }
 }
 
+/// The Fig. 10 sweep matrix (also benchmarked by `benches/figures.rs`):
+/// per workload, RP/BS/AXLE_Interrupt at defaults plus AXLE at p1/p10/p100.
+pub fn fig10_points() -> Vec<SweepPoint> {
+    let mut points = Vec::new();
+    for a in workload::ALL_ANNOTATIONS {
+        points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::AxleInterrupt, ConfigDelta::identity()));
+        for p in [poll_factors::P1, poll_factors::P10, poll_factors::P100] {
+            points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(p)));
+        }
+    }
+    points
+}
+
 /// Fig. 11: the LLM case under the reduced-PU hardware profile.
 pub fn fig11() {
     header("Fig. 11: LLM with reduced processing units (CCM/4, host/4)");
     for (label, cfg) in [("Table III baseline", SimConfig::m2ndp()), ("reduced", SimConfig::reduced())]
     {
-        let w = workload::by_annotation('h', &cfg);
-        let rp = protocol::run(Protocol::Rp, &w, &cfg);
-        let bs = protocol::run(Protocol::Bs, &w, &cfg);
-        let axle = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P10));
+        let points = [
+            SweepPoint::new('h', Protocol::Rp, ConfigDelta::identity()),
+            SweepPoint::new('h', Protocol::Bs, ConfigDelta::identity()),
+            SweepPoint::new('h', Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P10)),
+        ];
+        let ms = par(&cfg, &points);
+        let (rp, bs, axle) = (&ms[0], &ms[1], &ms[2]);
         println!(
             "{label:<20} RP 100.00%  BS {:>7.2}%  AXLE(p10) {:>7.2}%",
-            100.0 * bs.ratio_to(&rp),
-            100.0 * axle.ratio_to(&rp)
+            100.0 * bs.ratio_to(rp),
+            100.0 * axle.ratio_to(rp)
         );
     }
 }
@@ -223,16 +274,20 @@ pub fn fig12(cfg: &SimConfig) {
         "{:<4} {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10}",
         "WL", "CCM:RP", "CCM:BS", "CCM:AXLE", "Host:RP", "Host:BS", "Host:AXLE"
     );
-    let c10 = cfg.clone().with_poll(poll_factors::P10);
+    let p10 = ConfigDelta::identity().with_poll(poll_factors::P10);
+    let mut points = Vec::new();
+    for a in workload::ALL_ANNOTATIONS {
+        points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Axle, p10));
+    }
+    let ms = par(cfg, &points);
     let mut ccm_red_rp = Vec::new();
     let mut ccm_red_bs = Vec::new();
     let mut host_red_rp = Vec::new();
     let mut host_red_bs = Vec::new();
-    for a in workload::ALL_ANNOTATIONS {
-        let w = workload::by_annotation(a, cfg);
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
-        let ax = protocol::run(Protocol::Axle, &w, &c10);
+    for (a, row) in workload::ALL_ANNOTATIONS.into_iter().zip(ms.chunks(3)) {
+        let (rp, bs, ax) = (&row[0], &row[1], &row[2]);
         println!(
             "({a})  {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10}",
             pct(rp.frac(rp.ccm_idle())),
@@ -264,18 +319,22 @@ pub fn fig13(cfg: &SimConfig) {
         "{:<4} {:>10} {:>10} {:>12} {:>12}",
         "WL", "RP", "BS", "AXLE p10", "AXLE p100"
     );
+    let mut points = Vec::new();
     for a in workload::ALL_ANNOTATIONS {
-        let w = workload::by_annotation(a, cfg);
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
-        let a10 = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P10));
-        let a100 = protocol::run(Protocol::Axle, &w, &cfg.clone().with_poll(poll_factors::P100));
+        points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
+        points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P10)));
+        points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P100)));
+    }
+    let ms = par(cfg, &points);
+    for (a, row) in workload::ALL_ANNOTATIONS.into_iter().zip(ms.chunks(4)) {
+        let (rp, bs, a10, a100) = (&row[0], &row[1], &row[2], &row[3]);
         println!(
             "({a})  {:>10} {:>10} {:>12} {:>12}",
-            pct(rp.frac(rp.host_stall.min(rp.total))),
-            pct(bs.frac(bs.host_stall.min(bs.total))),
-            pct(a10.frac(a10.host_stall.min(a10.total))),
-            pct(a100.frac(a100.host_stall.min(a100.total))),
+            pct(rp.frac(rp.host_stall_clamped())),
+            pct(bs.frac(bs.host_stall_clamped())),
+            pct(a10.frac(a10.host_stall_clamped())),
+            pct(a100.frac(a100.host_stall_clamped())),
         );
     }
 }
@@ -284,15 +343,11 @@ pub fn fig13(cfg: &SimConfig) {
 pub fn fig14(cfg: &SimConfig) {
     header("Fig. 14: end-to-end runtime vs streaming factor (normalized to SF1)");
     for a in ['a', 'd', 'i'] {
-        let w = workload::by_annotation(a, cfg);
+        // One spec build per workload (needed up front for the
+        // result-byte-relative SF settings), shared by every job below.
+        let w = Arc::new(workload::by_annotation(a, cfg));
         let total_result = w.total_result_bytes() / w.iters.len() as u64;
-        let base = {
-            let mut c = cfg.clone();
-            c.axle.streaming_factor_bytes = 32;
-            protocol::run(Protocol::Axle, &w, &c)
-        };
-        print!("({a}) ");
-        for (label, sf) in [
+        let sweep_sfs = [
             ("SF1", 32u64),
             ("SF2", 64),
             ("SF8", 256),
@@ -301,14 +356,24 @@ pub fn fig14(cfg: &SimConfig) {
             ("SF_25%", total_result / 4),
             ("SF_50%", total_result / 2),
             ("SF_100%", total_result),
-        ] {
-            let mut c = cfg.clone();
-            c.axle.streaming_factor_bytes = sf.max(32);
-            let m = protocol::run(Protocol::Axle, &w, &c);
+        ];
+        let sf_cfg = |sf: u64| Arc::new(ConfigDelta::identity().with_sf(sf.max(32)).apply(cfg));
+        let shared = Arc::new(cfg.clone());
+        // Job 0 is the SF1 baseline; then the labelled sweep; then RP/BS.
+        let mut jobs =
+            vec![SpecJob { w: Arc::clone(&w), proto: Protocol::Axle, cfg: sf_cfg(32) }];
+        for (_, sf) in sweep_sfs {
+            jobs.push(SpecJob { w: Arc::clone(&w), proto: Protocol::Axle, cfg: sf_cfg(sf) });
+        }
+        jobs.push(SpecJob { w: Arc::clone(&w), proto: Protocol::Rp, cfg: Arc::clone(&shared) });
+        jobs.push(SpecJob { w: Arc::clone(&w), proto: Protocol::Bs, cfg: Arc::clone(&shared) });
+        let ms = par_jobs(&jobs);
+        let base = &ms[0];
+        print!("({a}) ");
+        for ((label, _), m) in sweep_sfs.into_iter().zip(&ms[1..1 + sweep_sfs.len()]) {
             print!("{label} {:.3}  ", m.total as f64 / base.total as f64);
         }
-        let rp = protocol::run(Protocol::Rp, &w, cfg);
-        let bs = protocol::run(Protocol::Bs, &w, cfg);
+        let (rp, bs) = (&ms[1 + sweep_sfs.len()], &ms[2 + sweep_sfs.len()]);
         println!(
             "| RP {:.3} BS {:.3}",
             rp.total as f64 / base.total as f64,
@@ -330,20 +395,18 @@ pub fn fig14_ext(cfg: &SimConfig) {
         "WL", "SF1", "SF64", "SF_100%", "adaptive", "SF1 batches", "adapt batches"
     );
     for a in ['a', 'b', 'd', 'e', 'i'] {
-        let w = workload::by_annotation(a, cfg);
-        let base = protocol::run(Protocol::Axle, &w, cfg);
-        let run_sf = |sf: u64| {
-            let mut c = cfg.clone();
-            c.axle.streaming_factor_bytes = sf.max(32);
-            protocol::run(Protocol::Axle, &w, &c)
-        };
-        let sf64 = run_sf(2048);
-        let sf_all = run_sf(w.iters[0].result_bytes());
-        let adaptive = {
-            let mut c = cfg.clone();
-            c.axle.sf_policy = crate::config::SfPolicy::Adaptive;
-            protocol::run(Protocol::Axle, &w, &c)
-        };
+        // One spec build per workload, shared by the four jobs.
+        let w = Arc::new(workload::by_annotation(a, cfg));
+        let axle_job =
+            |d: ConfigDelta| SpecJob { w: Arc::clone(&w), proto: Protocol::Axle, cfg: Arc::new(d.apply(cfg)) };
+        let jobs = [
+            axle_job(ConfigDelta::identity()),
+            axle_job(ConfigDelta::identity().with_sf(2048)),
+            axle_job(ConfigDelta::identity().with_sf(w.iters[0].result_bytes().max(32))),
+            axle_job(ConfigDelta::identity().with_sf_policy(crate::config::SfPolicy::Adaptive)),
+        ];
+        let ms = par_jobs(&jobs);
+        let (base, sf64, sf_all, adaptive) = (&ms[0], &ms[1], &ms[2], &ms[3]);
         println!(
             "({a})  {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>14} {:>14}",
             1.0,
@@ -360,21 +423,25 @@ pub fn fig14_ext(cfg: &SimConfig) {
 pub fn fig15(cfg: &SimConfig) {
     header("Fig. 15: runtime without OoO streaming / with OoO (per scheduler)");
     println!("{:<4} {:>10} {:>10}", "WL", "RR", "FIFO");
-    for a in ['d', 'e', 'i'] {
-        let w = workload::by_annotation(a, cfg);
-        let mut row = Vec::new();
+    let mut points = Vec::new();
+    let annots = ['d', 'e', 'i'];
+    for a in annots {
         for sched in [SchedPolicy::RoundRobin, SchedPolicy::Fifo] {
-            let mut on = cfg.clone();
-            on.sched = sched;
-            on.axle.ooo_streaming = true;
-            let mut off = on.clone();
-            off.axle.ooo_streaming = false;
-            let m_on = protocol::run(Protocol::Axle, &workload::by_annotation(a, &on), &on);
-            let m_off = protocol::run(Protocol::Axle, &workload::by_annotation(a, &off), &off);
-            row.push(m_off.total as f64 / m_on.total as f64);
+            for ooo in [true, false] {
+                points.push(SweepPoint::new(
+                    a,
+                    Protocol::Axle,
+                    ConfigDelta::identity().with_sched(sched).with_ooo(ooo),
+                ));
+            }
         }
-        let _ = &w;
-        println!("({a})  {:>9.2}x {:>9.2}x", row[0], row[1]);
+    }
+    let ms = par(cfg, &points);
+    for (a, row) in annots.into_iter().zip(ms.chunks(4)) {
+        // Per scheduler: [on, off] pairs in declaration order.
+        let rr = row[1].total as f64 / row[0].total as f64;
+        let fifo = row[3].total as f64 / row[2].total as f64;
+        println!("({a})  {:>9.2}x {:>9.2}x", rr, fifo);
     }
 }
 
@@ -385,14 +452,23 @@ pub fn fig16(cfg: &SimConfig) {
         "{:<4} {:>10} {:>18} {:>18} {:>18}",
         "WL", "cap=100%", "50%", "25%", "12.5%"
     );
-    for a in ['a', 'd', 'h', 'i'] {
-        let w = workload::by_annotation(a, cfg);
-        let base = protocol::run(Protocol::Axle, &w, cfg);
-        print!("({a})  {:>9.3} ", 1.0);
+    let annots = ['a', 'd', 'h', 'i'];
+    let mut points = Vec::new();
+    for a in annots {
+        points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity()));
         for div in [2usize, 4, 8] {
-            let mut c = cfg.clone();
-            c.axle.dma_slot_capacity = cfg.axle.dma_slot_capacity / div;
-            let m = protocol::run(Protocol::Axle, &w, &c);
+            points.push(SweepPoint::new(
+                a,
+                Protocol::Axle,
+                ConfigDelta::identity().with_capacity(cfg.axle.dma_slot_capacity / div),
+            ));
+        }
+    }
+    let ms = par(cfg, &points);
+    for (a, row) in annots.into_iter().zip(ms.chunks(4)) {
+        let base = &row[0];
+        print!("({a})  {:>9.3} ", 1.0);
+        for m in &row[1..] {
             if m.deadlock {
                 print!("{:>18} ", "DEADLOCK");
             } else {
@@ -456,6 +532,17 @@ mod tests {
         fig10(&cfg);
         fig12(&cfg);
         fig13(&cfg);
+    }
+
+    #[test]
+    fn fig10_points_cover_the_matrix() {
+        let pts = fig10_points();
+        assert_eq!(pts.len(), 9 * 6);
+        // Workload-major, 6 variants per workload.
+        assert!(pts[..6].iter().all(|p| p.annot == 'a'));
+        assert_eq!(pts[0].proto, Protocol::Rp);
+        assert_eq!(pts[5].proto, Protocol::Axle);
+        assert_eq!(pts[5].delta.poll_interval, Some(poll_factors::P100));
     }
 }
 

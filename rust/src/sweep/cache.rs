@@ -1,0 +1,150 @@
+//! Workload-spec cache.
+//!
+//! `workload::by_annotation` compiles a Table IV row into a
+//! [`WorkloadSpec`] — thousands of cost-model evaluations for the heavy
+//! rows (see the `table4_workload_generation` bench). Sweep points
+//! overwhelmingly share specs: spec generation reads only the hardware
+//! half of the config (`host`, `ccm`, `cxl_bw_gbps` — see
+//! [`SimConfig::workload_fingerprint`]), so a poll-factor or
+//! streaming-factor sweep needs each workload built exactly once.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{PuConfig, SimConfig};
+use crate::workload::{self, WorkloadSpec};
+
+/// Exact cache key: the verbatim bit patterns of every config field
+/// workload generation reads (rather than a lossy hash of them), so a
+/// key collision between distinct configs is impossible. Mirrors
+/// [`SimConfig::workload_fingerprint`] — **keep both in sync** with
+/// what `workload/` generators read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct WorkloadKey {
+    host: PuKey,
+    ccm: PuKey,
+    cxl_bw_bits: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PuKey {
+    num_pus: usize,
+    uthreads: usize,
+    freq_bits: u64,
+    flops_bits: u64,
+    dram_channels: u32,
+}
+
+impl PuKey {
+    fn of(p: &PuConfig) -> Self {
+        Self {
+            num_pus: p.num_pus,
+            uthreads: p.uthreads,
+            freq_bits: p.freq_ghz.to_bits(),
+            flops_bits: p.flops_per_cycle.to_bits(),
+            dram_channels: p.dram_channels,
+        }
+    }
+}
+
+impl WorkloadKey {
+    fn of(cfg: &SimConfig) -> Self {
+        Self {
+            host: PuKey::of(&cfg.host),
+            ccm: PuKey::of(&cfg.ccm),
+            cxl_bw_bits: cfg.cxl_bw_gbps.to_bits(),
+        }
+    }
+}
+
+/// Memoizes workload generation on `(annot, generation-relevant config
+/// fields)`. Specs are handed out as `Arc`s so parallel sweep jobs
+/// share them without copies.
+#[derive(Debug, Default)]
+pub struct WorkloadCache {
+    map: HashMap<(char, WorkloadKey), Arc<WorkloadSpec>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl WorkloadCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The spec for `annot` under `cfg`, building it on first use.
+    pub fn get(&mut self, annot: char, cfg: &SimConfig) -> Arc<WorkloadSpec> {
+        let key = (annot, WorkloadKey::of(cfg));
+        if let Some(w) = self.map.get(&key) {
+            self.hits += 1;
+            return Arc::clone(w);
+        }
+        self.misses += 1;
+        let w = Arc::new(workload::by_annotation(annot, cfg));
+        self.map.insert(key, Arc::clone(&w));
+        w
+    }
+
+    /// Distinct specs built so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that had to build a spec.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::poll_factors;
+
+    #[test]
+    fn shares_specs_across_protocol_knob_changes() {
+        let base = SimConfig::m2ndp();
+        let mut polled = base.clone();
+        polled.axle.poll_interval = poll_factors::P100;
+        let mut cache = WorkloadCache::new();
+        let a = cache.get('a', &base);
+        let b = cache.get('a', &polled);
+        // Same underlying spec object: poll interval is simulation-time.
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn distinct_hardware_rebuilds() {
+        let base = SimConfig::m2ndp();
+        let reduced = SimConfig::reduced();
+        let mut cache = WorkloadCache::new();
+        let a = cache.get('a', &base);
+        let b = cache.get('a', &reduced);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn cached_spec_matches_direct_generation() {
+        let cfg = SimConfig::m2ndp();
+        let mut cache = WorkloadCache::new();
+        let cached = cache.get('e', &cfg);
+        let direct = workload::by_annotation('e', &cfg);
+        assert_eq!(cached.name, direct.name);
+        assert_eq!(cached.iters.len(), direct.iters.len());
+        assert_eq!(cached.total_ccm_tasks(), direct.total_ccm_tasks());
+        assert_eq!(cached.total_result_bytes(), direct.total_result_bytes());
+    }
+}

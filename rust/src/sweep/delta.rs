@@ -1,0 +1,154 @@
+//! Sparse config overrides for sweep points.
+//!
+//! A [`ConfigDelta`] describes how one sweep point's configuration
+//! differs from the sweep's base [`SimConfig`]. Deltas are tiny `Copy`
+//! values with `Eq + Hash`, so the executor can deduplicate them and
+//! clone the (much larger) `SimConfig` once per *distinct* delta
+//! instead of once per sweep point.
+
+use crate::config::{SchedPolicy, SfPolicy, SimConfig};
+use crate::sim::Ps;
+
+/// Sparse override set applied to a base [`SimConfig`]. `None` fields
+/// keep the base value. Covers every knob the paper's figures sweep;
+/// extend it (and [`ConfigDelta::apply`]) when a new axis appears.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct ConfigDelta {
+    /// AXLE host local-polling interval (Fig. 10's p1/p10/p100 axis).
+    pub poll_interval: Option<Ps>,
+    /// Streaming factor in bytes (Fig. 14 axis).
+    pub streaming_factor_bytes: Option<u64>,
+    /// Ring capacity in slots (Fig. 16 axis).
+    pub dma_slot_capacity: Option<usize>,
+    /// Fixed vs adaptive streaming factor (Fig. 14-ext axis).
+    pub sf_policy: Option<SfPolicy>,
+    /// Out-of-order streaming on/off (Fig. 15 axis).
+    pub ooo_streaming: Option<bool>,
+    /// Scheduler policy (Fig. 15 axis).
+    pub sched: Option<SchedPolicy>,
+    /// Duration-jitter seed.
+    pub seed: Option<u64>,
+}
+
+impl ConfigDelta {
+    /// The identity delta (every field inherited from the base).
+    pub fn identity() -> Self {
+        Self::default()
+    }
+
+    /// True when this delta changes nothing.
+    pub fn is_identity(&self) -> bool {
+        *self == Self::default()
+    }
+
+    pub fn with_poll(mut self, interval: Ps) -> Self {
+        self.poll_interval = Some(interval);
+        self
+    }
+
+    pub fn with_sf(mut self, bytes: u64) -> Self {
+        self.streaming_factor_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_capacity(mut self, slots: usize) -> Self {
+        self.dma_slot_capacity = Some(slots);
+        self
+    }
+
+    pub fn with_sf_policy(mut self, policy: SfPolicy) -> Self {
+        self.sf_policy = Some(policy);
+        self
+    }
+
+    pub fn with_ooo(mut self, on: bool) -> Self {
+        self.ooo_streaming = Some(on);
+        self
+    }
+
+    pub fn with_sched(mut self, sched: SchedPolicy) -> Self {
+        self.sched = Some(sched);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Materialize the derived config: one clone of `base`, patched.
+    pub fn apply(&self, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        if let Some(p) = self.poll_interval {
+            cfg.axle.poll_interval = p;
+        }
+        if let Some(sf) = self.streaming_factor_bytes {
+            cfg.axle.streaming_factor_bytes = sf;
+        }
+        if let Some(cap) = self.dma_slot_capacity {
+            cfg.axle.dma_slot_capacity = cap;
+        }
+        if let Some(pol) = self.sf_policy {
+            cfg.axle.sf_policy = pol;
+        }
+        if let Some(ooo) = self.ooo_streaming {
+            cfg.axle.ooo_streaming = ooo;
+        }
+        if let Some(s) = self.sched {
+            cfg.sched = s;
+        }
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::poll_factors;
+
+    #[test]
+    fn identity_applies_to_equal_fingerprint() {
+        let base = SimConfig::m2ndp();
+        let d = ConfigDelta::identity();
+        assert!(d.is_identity());
+        assert_eq!(d.apply(&base).fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn apply_patches_exactly_the_set_fields() {
+        let base = SimConfig::m2ndp();
+        let d = ConfigDelta::identity()
+            .with_poll(poll_factors::P100)
+            .with_sf(2048)
+            .with_capacity(625)
+            .with_sf_policy(SfPolicy::Adaptive)
+            .with_ooo(false)
+            .with_sched(SchedPolicy::Fifo)
+            .with_seed(99);
+        assert!(!d.is_identity());
+        let cfg = d.apply(&base);
+        assert_eq!(cfg.axle.poll_interval, poll_factors::P100);
+        assert_eq!(cfg.axle.streaming_factor_bytes, 2048);
+        assert_eq!(cfg.axle.dma_slot_capacity, 625);
+        assert_eq!(cfg.axle.sf_policy, SfPolicy::Adaptive);
+        assert!(!cfg.axle.ooo_streaming);
+        assert_eq!(cfg.sched, SchedPolicy::Fifo);
+        assert_eq!(cfg.seed, 99);
+        // Untouched fields inherit.
+        assert_eq!(cfg.host.num_pus, base.host.num_pus);
+        assert_eq!(cfg.cxl_mem_rtt, base.cxl_mem_rtt);
+        // Delta-equal points would share this derived config.
+        let d2 = ConfigDelta::identity()
+            .with_poll(poll_factors::P100)
+            .with_sf(2048)
+            .with_capacity(625)
+            .with_sf_policy(SfPolicy::Adaptive)
+            .with_ooo(false)
+            .with_sched(SchedPolicy::Fifo)
+            .with_seed(99);
+        assert_eq!(d, d2);
+    }
+}

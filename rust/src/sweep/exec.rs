@@ -1,0 +1,220 @@
+//! Sweep executor: declarative spec → resolved jobs → scoped worker
+//! pool with work stealing → results in deterministic spec order.
+//!
+//! Each job is a pure function of `(workload, protocol, config)`, so the
+//! schedule (which worker runs which job, in what real-time order) can
+//! never change a result — parallel output is bit-identical to the
+//! serial path. Workers steal the next job index from a shared atomic
+//! counter, which load-balances the very uneven per-job costs (the LLM
+//! row costs orders of magnitude more than a single KNN query batch).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::config::{Protocol, SimConfig};
+use crate::metrics::RunMetrics;
+use crate::protocol;
+use crate::workload::WorkloadSpec;
+
+use super::{ConfigDelta, WorkloadCache};
+
+/// One point of a declarative sweep: a Table IV workload under one
+/// protocol with a sparse config override.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SweepPoint {
+    pub annot: char,
+    pub proto: Protocol,
+    pub delta: ConfigDelta,
+}
+
+impl SweepPoint {
+    pub fn new(annot: char, proto: Protocol, delta: ConfigDelta) -> Self {
+        Self { annot, proto, delta }
+    }
+}
+
+/// A declarative sweep: base config plus an ordered list of points.
+/// Results always come back in `points` order.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub base: SimConfig,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepSpec {
+    pub fn new(base: SimConfig) -> Self {
+        Self { base, points: Vec::new() }
+    }
+
+    /// Full cross product `workloads × protocols × deltas`, ordered with
+    /// the workload as the outermost axis — for the identity delta this
+    /// is exactly the serial `Coordinator::run_matrix_serial` order.
+    pub fn matrix(
+        base: SimConfig,
+        workloads: &[char],
+        protos: &[Protocol],
+        deltas: &[ConfigDelta],
+    ) -> Self {
+        let mut spec = Self::new(base);
+        spec.points.reserve(workloads.len() * protos.len() * deltas.len());
+        for &annot in workloads {
+            for &proto in protos {
+                for &delta in deltas {
+                    spec.points.push(SweepPoint { annot, proto, delta });
+                }
+            }
+        }
+        spec
+    }
+
+    /// Append one point.
+    pub fn push(&mut self, annot: char, proto: Protocol, delta: ConfigDelta) {
+        self.points.push(SweepPoint { annot, proto, delta });
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Execute on `jobs` worker threads (1 = run inline, serially).
+    pub fn run(&self, jobs: usize) -> Vec<RunMetrics> {
+        run_points(&self.base, &self.points, jobs)
+    }
+}
+
+/// A fully resolved job: prebuilt spec + derived config, shared via
+/// `Arc` across however many points reference them. Used directly for
+/// sweeps over custom (non-Table IV) specs such as Fig. 3's single
+/// attention kernels.
+#[derive(Debug, Clone)]
+pub struct SpecJob {
+    pub w: Arc<WorkloadSpec>,
+    pub proto: Protocol,
+    pub cfg: Arc<SimConfig>,
+}
+
+/// Default worker count: the host's available parallelism.
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Expand `points` against `base` — deduplicating derived configs by
+/// delta and workload builds through the [`WorkloadCache`] — then run
+/// them on `jobs` workers. Results are in `points` order.
+pub fn run_points(base: &SimConfig, points: &[SweepPoint], jobs: usize) -> Vec<RunMetrics> {
+    let mut cfgs: HashMap<ConfigDelta, Arc<SimConfig>> = HashMap::new();
+    let mut cache = WorkloadCache::new();
+    let mut list: Vec<SpecJob> = Vec::with_capacity(points.len());
+    for p in points {
+        let cfg = cfgs.entry(p.delta).or_insert_with(|| Arc::new(p.delta.apply(base)));
+        let w = cache.get(p.annot, cfg);
+        list.push(SpecJob { w, proto: p.proto, cfg: Arc::clone(cfg) });
+    }
+    run_jobs(&list, jobs)
+}
+
+/// Run prebuilt jobs on `jobs` workers; results are in `list` order and
+/// bit-identical to running the list serially.
+pub fn run_jobs(list: &[SpecJob], jobs: usize) -> Vec<RunMetrics> {
+    let workers = jobs.max(1).min(list.len().max(1));
+    if workers <= 1 {
+        return list.iter().map(|j| protocol::run(j.proto, &j.w, &j.cfg)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, RunMetrics)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                // Work stealing: claim the next unclaimed job index.
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= list.len() {
+                    break;
+                }
+                let job = &list[i];
+                let m = protocol::run(job.proto, &job.w, &job.cfg);
+                if tx.send((i, m)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut out: Vec<Option<RunMetrics>> = vec![None; list.len()];
+    for (i, m) in rx {
+        out[i] = Some(m);
+    }
+    out.into_iter().map(|m| m.expect("every sweep job reported a result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::poll_factors;
+
+    #[test]
+    fn available_jobs_is_positive() {
+        assert!(available_jobs() >= 1);
+    }
+
+    #[test]
+    fn matrix_order_is_workload_major() {
+        let spec = SweepSpec::matrix(
+            SimConfig::m2ndp(),
+            &['a', 'b'],
+            &[Protocol::Rp, Protocol::Bs],
+            &[ConfigDelta::identity()],
+        );
+        let got: Vec<(char, Protocol)> = spec.points.iter().map(|p| (p.annot, p.proto)).collect();
+        assert_eq!(
+            got,
+            vec![
+                ('a', Protocol::Rp),
+                ('a', Protocol::Bs),
+                ('b', Protocol::Rp),
+                ('b', Protocol::Bs),
+            ]
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_small_sweep() {
+        let base = SimConfig::m2ndp();
+        let mut spec = SweepSpec::new(base);
+        for &a in &['a', 'f'] {
+            for &p in &[Protocol::Bs, Protocol::Axle] {
+                spec.push(a, p, ConfigDelta::identity());
+                spec.push(a, p, ConfigDelta::identity().with_poll(poll_factors::P1));
+            }
+        }
+        let serial = spec.run(1);
+        let parallel = spec.run(4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.to_json().to_string(), p.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn sweep_points_match_direct_protocol_runs() {
+        let base = SimConfig::m2ndp();
+        let mut spec = SweepSpec::new(base.clone());
+        spec.push('f', Protocol::Rp, ConfigDelta::identity());
+        spec.push('f', Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P100));
+        let ms = spec.run(2);
+        let w = crate::workload::by_annotation('f', &base);
+        let rp = protocol::run(Protocol::Rp, &w, &base);
+        let axle_cfg = base.clone().with_poll(poll_factors::P100);
+        let axle = protocol::run(Protocol::Axle, &w, &axle_cfg);
+        assert_eq!(ms[0].to_json().to_string(), rp.to_json().to_string());
+        assert_eq!(ms[1].to_json().to_string(), axle.to_json().to_string());
+    }
+}

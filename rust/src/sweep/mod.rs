@@ -1,0 +1,36 @@
+//! Parallel sweep engine: the evaluation matrix as a first-class,
+//! cached, multicore pipeline.
+//!
+//! The paper's evaluation is a large matrix of *independent,
+//! deterministic* simulations — 9 Table IV workloads × 4 protocols ×
+//! poll-factor / streaming-factor / capacity / scheduler sweeps. This
+//! module turns that matrix into data:
+//!
+//! - [`ConfigDelta`] ([`delta`]): a sparse, hashable override set applied
+//!   to a base [`SimConfig`](crate::config::SimConfig). One derived
+//!   config is materialized per *distinct* delta, not per sweep point,
+//!   so a 9-workload poll sweep clones the config 3 times, not 27.
+//! - [`WorkloadCache`] ([`cache`]): memoizes `workload::by_annotation`
+//!   on `(annot, exact generation-relevant config fields)` (the lossy
+//!   `SimConfig::workload_fingerprint()` exists for labelling) — spec
+//!   generation is measurably hot (see `table4_workload_generation` in
+//!   `benches/figures.rs`) and most sweep points share specs.
+//! - [`SweepSpec`] / [`run_points`] / [`run_jobs`] ([`exec`]): expand a
+//!   declarative spec into jobs and fan them out across a
+//!   `std::thread::scope` worker pool with work stealing over an atomic
+//!   job index. Results return in **deterministic spec order** and are
+//!   bit-identical to the serial path (each simulation is a pure
+//!   function of `(workload, protocol, config)`), which
+//!   `tests/sweep_determinism.rs` asserts for jobs ∈ {1, 2, 8}.
+//!
+//! The coordinator's matrix, every `report::fig*` generator, the `axle
+//! sweep` CLI subcommand and `benches/figures.rs` all run on this
+//! engine.
+
+pub mod cache;
+pub mod delta;
+pub mod exec;
+
+pub use cache::WorkloadCache;
+pub use delta::ConfigDelta;
+pub use exec::{available_jobs, run_jobs, run_points, SpecJob, SweepPoint, SweepSpec};

@@ -72,14 +72,14 @@ fn axle_cuts_host_core_stall_time_severalfold_vs_bs() {
     for a in ALL_ANNOTATIONS {
         let bs = run(a, Protocol::Bs, &cfg);
         let ax = run(a, Protocol::Axle, &cfg);
-        let bs_frac = bs.host_stall.min(bs.total) as f64 / bs.total as f64;
-        let ax_frac = ax.host_stall.min(ax.total) as f64 / ax.total as f64;
+        let bs_frac = bs.host_stall_clamped() as f64 / bs.total as f64;
+        let ax_frac = ax.host_stall_clamped() as f64 / ax.total as f64;
         best = best.max(bs_frac / ax_frac.max(1e-9));
         assert!(bs_frac > ax_frac, "({a}) AXLE must stall less than BS");
     }
     // BS stalls the host for T_C + T_D: near-total for CCM/DM-bound cases.
     let e_bs = run('e', Protocol::Bs, &cfg);
-    assert!(e_bs.frac(e_bs.host_stall.min(e_bs.total)) > 0.9);
+    assert!(e_bs.frac(e_bs.host_stall_clamped()) > 0.9);
     assert!(best > 3.0, "best stall reduction {best:.2}x");
 }
 

@@ -1,0 +1,89 @@
+//! Sweep determinism: the parallel executor must be bit-identical to
+//! the serial path — same `RunMetrics`, same JSON, for every worker
+//! count. Each simulation is a pure function of (workload, protocol,
+//! config), so any divergence here means shared mutable state leaked
+//! into the engine.
+
+use axle::config::{poll_factors, Protocol, SimConfig};
+use axle::metrics::RunMetrics;
+use axle::sweep::{ConfigDelta, SweepSpec};
+use axle::util::prop::run_prop;
+use axle::workload::ALL_ANNOTATIONS;
+use axle::Coordinator;
+
+fn jsons(ms: &[RunMetrics]) -> Vec<String> {
+    ms.iter().map(|m| m.to_json().to_string()).collect()
+}
+
+#[test]
+fn parallel_sweep_bit_identical_to_serial_matrix() {
+    // All 9 workloads × all 4 protocols, against the pre-sweep serial
+    // reference loop, at 1, 2 and 8 workers.
+    let cfg = SimConfig::m2ndp();
+    let coord = Coordinator::new(cfg.clone());
+    let baseline = jsons(&coord.run_matrix_serial(&Protocol::ALL));
+    let spec =
+        SweepSpec::matrix(cfg, &ALL_ANNOTATIONS, &Protocol::ALL, &[ConfigDelta::identity()]);
+    for threads in [1usize, 2, 8] {
+        let got = jsons(&spec.run(threads));
+        assert_eq!(got.len(), baseline.len());
+        for (i, (g, b)) in got.iter().zip(&baseline).enumerate() {
+            assert_eq!(g, b, "threads={threads}, point {i}");
+        }
+    }
+}
+
+#[test]
+fn sweep_with_deltas_matches_direct_cloned_config_runs() {
+    // Poll-factor deltas must reproduce the clone-and-override pattern
+    // the report code used before the sweep engine existed.
+    let cfg = SimConfig::m2ndp();
+    let deltas = [
+        ConfigDelta::identity().with_poll(poll_factors::P1),
+        ConfigDelta::identity().with_poll(poll_factors::P100),
+    ];
+    let spec = SweepSpec::matrix(cfg.clone(), &['a', 'e'], &[Protocol::Axle], &deltas);
+    let ms = spec.run(8);
+    let mut k = 0;
+    for a in ['a', 'e'] {
+        let w = axle::workload::by_annotation(a, &cfg);
+        for p in [poll_factors::P1, poll_factors::P100] {
+            let direct_cfg = cfg.clone().with_poll(p);
+            let direct = axle::protocol::run(Protocol::Axle, &w, &direct_cfg);
+            assert_eq!(
+                ms[k].to_json().to_string(),
+                direct.to_json().to_string(),
+                "workload {a}, poll {p}"
+            );
+            k += 1;
+        }
+    }
+}
+
+#[test]
+fn prop_random_subsets_identical_across_worker_counts() {
+    // Property flavor: random workload subsets, protocols, and deltas —
+    // jobs ∈ {2, 8} must match jobs = 1 exactly.
+    run_prop("sweep_worker_count_invariance", 6, |rng| {
+        let cfg = SimConfig::m2ndp();
+        let all = ALL_ANNOTATIONS;
+        let w1 = all[rng.below(all.len() as u64) as usize];
+        let w2 = all[rng.below(all.len() as u64) as usize];
+        let protos = [Protocol::ALL[rng.below(4) as usize], Protocol::Bs];
+        let mut delta = ConfigDelta::identity();
+        if rng.next_f64() < 0.5 {
+            delta = delta.with_poll(poll_factors::P1);
+        }
+        if rng.next_f64() < 0.5 {
+            delta = delta.with_sf(rng.range(32, 2048));
+        }
+        if rng.next_f64() < 0.3 {
+            delta = delta.with_seed(rng.next_u64());
+        }
+        let spec = SweepSpec::matrix(cfg, &[w1, w2], &protos, &[delta]);
+        let serial = jsons(&spec.run(1));
+        for threads in [2usize, 8] {
+            assert_eq!(jsons(&spec.run(threads)), serial, "threads={threads}");
+        }
+    });
+}
