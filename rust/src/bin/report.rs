@@ -24,6 +24,7 @@ fn main() {
         "fig14-ext" => report::fig14_ext(&cfg),
         "fig15" => report::fig15(&cfg),
         "fig16" => report::fig16(&cfg),
+        "fig17" | "tenants" => report::fig17(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

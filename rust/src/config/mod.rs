@@ -398,6 +398,94 @@ impl SimConfig {
     }
 }
 
+/// Tenant→device placement policy for multi-tenant topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// Stream `i` lands on device `i mod D`.
+    RoundRobin,
+    /// Greedy: each stream lands on the device with the least accumulated
+    /// solo service demand (ties broken by lowest device id).
+    LeastLoaded,
+}
+
+impl Placement {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Placement::RoundRobin => "rr",
+            Placement::LeastLoaded => "least-loaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" | "round_robin" => Some(Placement::RoundRobin),
+            "least-loaded" | "least_loaded" | "ll" => Some(Placement::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
+/// Shared-fabric topology: how many CCM devices hang off the host, how
+/// they are shared, and whether an upstream fabric link serializes their
+/// aggregate traffic (the multi-tenant scenarios UDON/CXLMemUring argue
+/// for). Parsed from JSON (`axle tenants --topo FILE.json`) or CLI flags;
+/// consumed by [`crate::topo::Topology`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySpec {
+    /// Number of identical CCM devices (each with its own PU pool and
+    /// CXL.mem/CXL.io links built from the base [`SimConfig`]).
+    pub devices: usize,
+    /// Effective bandwidth of the shared upstream fabric link, GB/s.
+    /// `None` ⇒ dedicated per-device uplinks (no cross-device contention).
+    pub fabric_bw_gbps: Option<f64>,
+    /// Tenant→device placement policy.
+    pub placement: Placement,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        Self { devices: 1, fabric_bw_gbps: None, placement: Placement::RoundRobin }
+    }
+}
+
+impl TopologySpec {
+    /// `devices` CCMs behind one shared fabric link of `bw_gbps`.
+    pub fn shared_fabric(devices: usize, bw_gbps: f64) -> Self {
+        Self { devices, fabric_bw_gbps: Some(bw_gbps), placement: Placement::RoundRobin }
+    }
+
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("devices".into(), Json::Num(self.devices as f64));
+        match self.fabric_bw_gbps {
+            Some(bw) => o.insert("fabric_bw_gbps".into(), Json::Num(bw)),
+            None => o.insert("fabric_bw_gbps".into(), Json::Null),
+        };
+        o.insert("placement".into(), Json::Str(self.placement.label().into()));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the defaults (sparse files work).
+    pub fn from_json(j: &Json) -> Self {
+        let mut s = Self::default();
+        if let Some(v) = j.get("devices").as_usize() {
+            s.devices = v.max(1);
+        }
+        if let Some(v) = j.get("fabric_bw_gbps").as_f64() {
+            s.fabric_bw_gbps = Some(v);
+        }
+        if let Some(p) = j.get("placement").as_str().and_then(Placement::parse) {
+            s.placement = p;
+        }
+        s
+    }
+}
+
 /// Order-sensitive 64-bit fold step for the config fingerprints.
 #[inline]
 fn fp_fold(h: u64, word: u64) -> u64 {
@@ -516,6 +604,31 @@ mod tests {
         let mut bw = base.clone();
         bw.cxl_bw_gbps = 8.0;
         assert_ne!(base.workload_fingerprint(), bw.workload_fingerprint());
+    }
+
+    #[test]
+    fn topology_spec_json_roundtrip() {
+        let t = TopologySpec::shared_fabric(4, 16.0).with_placement(Placement::LeastLoaded);
+        let s = t.to_json().to_string();
+        let t2 = TopologySpec::from_json(&Json::parse(&s).unwrap());
+        assert_eq!(t2, t);
+        // No-fabric spec: Null round-trips back to None.
+        let solo = TopologySpec::default();
+        let s2 = solo.to_json().to_string();
+        assert_eq!(TopologySpec::from_json(&Json::parse(&s2).unwrap()), solo);
+        // Sparse override keeps defaults.
+        let sparse = TopologySpec::from_json(&Json::parse(r#"{"devices": 2}"#).unwrap());
+        assert_eq!(sparse.devices, 2);
+        assert_eq!(sparse.placement, Placement::RoundRobin);
+        assert_eq!(sparse.fabric_bw_gbps, None);
+    }
+
+    #[test]
+    fn placement_parse_labels() {
+        for p in [Placement::RoundRobin, Placement::LeastLoaded] {
+            assert_eq!(Placement::parse(p.label()), Some(p));
+        }
+        assert_eq!(Placement::parse("nope"), None);
     }
 
     #[test]

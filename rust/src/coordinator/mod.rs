@@ -12,11 +12,12 @@ pub mod numerics;
 
 use anyhow::Result;
 
-use crate::config::{Protocol, SimConfig};
+use crate::config::{Protocol, SimConfig, TopologySpec};
 use crate::metrics::RunMetrics;
 use crate::protocol;
 use crate::runtime::Runtime;
 use crate::sweep::{self, ConfigDelta, SweepSpec};
+use crate::topo::{self, TenantReport, TenantSpec};
 use crate::workload::{self, WorkloadSpec};
 
 pub use numerics::NumericsReport;
@@ -96,6 +97,25 @@ impl Coordinator {
         out
     }
 
+    /// Run a multi-tenant mix over a shared-fabric topology: K concurrent
+    /// streams with open-loop arrivals placed across `topo.devices`
+    /// devices, link/fabric contention arbitrated deterministically (see
+    /// [`crate::topo::tenant`]). Solo simulations fan out across all
+    /// available cores.
+    pub fn run_tenants(&self, topo: &TopologySpec, tenants: &TenantSpec) -> TenantReport {
+        self.run_tenants_jobs(topo, tenants, sweep::available_jobs())
+    }
+
+    /// [`Coordinator::run_tenants`] with an explicit worker count.
+    pub fn run_tenants_jobs(
+        &self,
+        topo: &TopologySpec,
+        tenants: &TenantSpec,
+        jobs: usize,
+    ) -> TenantReport {
+        topo::run_tenants(&self.cfg, topo, tenants, jobs)
+    }
+
     /// Validate the offloaded numerics for workload `annot` through the
     /// PJRT artifacts. Errors if artifacts are not attached/built.
     pub fn validate_numerics(&mut self, annot: char) -> Result<NumericsReport> {
@@ -137,6 +157,17 @@ mod tests {
         for (p, s) in parallel.iter().zip(&serial) {
             assert_eq!(p.to_json().to_string(), s.to_json().to_string());
         }
+    }
+
+    #[test]
+    fn tenant_mix_through_coordinator_is_worker_count_invariant() {
+        let c = Coordinator::new(SimConfig::m2ndp());
+        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps);
+        let tenants = crate::topo::TenantSpec::new(4).with_workloads(vec!['a', 'd']);
+        let r1 = c.run_tenants_jobs(&topo, &tenants, 1);
+        let r4 = c.run_tenants_jobs(&topo, &tenants, 4);
+        assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
+        assert_eq!(r1.tenants.len(), 4);
     }
 
     #[test]

@@ -34,6 +34,20 @@ pub enum MsgKind {
     FlowControl,
 }
 
+/// One data-bearing wire occupancy, recorded when tracing is enabled:
+/// the serialization interval is `[start, start + transfer_ps(bytes))`.
+///
+/// Traces feed the topology layer's shared-fabric arbitration
+/// ([`crate::topo::fabric`]): a tenant's solo-run wire starts are
+/// replayed against other tenants' traffic to compute contention delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireMsg {
+    /// Time the wire began transmitting (post any same-link queueing).
+    pub start: Ps,
+    /// Payload bytes serialized.
+    pub bytes: u64,
+}
+
 /// A unidirectional-bandwidth, latency-padded channel.
 #[derive(Debug)]
 pub struct Link {
@@ -46,11 +60,42 @@ pub struct Link {
     busy: BusyTracker,
     msgs: u64,
     bytes: u64,
+    /// Optional wire-occupancy trace (`None` ⇒ zero overhead). Only
+    /// data-bearing messages (`bytes > 0`) are recorded — zero-byte
+    /// control messages occupy no wire time.
+    trace: Option<Vec<WireMsg>>,
 }
 
 impl Link {
     pub fn new(rtt: Ps, bw_gbps: f64) -> Self {
-        Self { rtt, bw_gbps, wire_free: 0, busy: BusyTracker::new(), msgs: 0, bytes: 0 }
+        Self {
+            rtt,
+            bw_gbps,
+            wire_free: 0,
+            busy: BusyTracker::new(),
+            msgs: 0,
+            bytes: 0,
+            trace: None,
+        }
+    }
+
+    /// Start recording data-bearing wire occupancies. Tracing never
+    /// changes timing — it only observes the `(start, bytes)` pairs the
+    /// link already computes.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Vec::new());
+        }
+    }
+
+    /// Take the recorded trace (empty if tracing was never enabled).
+    pub fn take_trace(&mut self) -> Vec<WireMsg> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    /// The recorded trace so far (empty slice if tracing is disabled).
+    pub fn trace(&self) -> &[WireMsg] {
+        self.trace.as_deref().unwrap_or(&[])
     }
 
     #[inline]
@@ -75,6 +120,11 @@ impl Link {
         self.wire_free = wire_done;
         self.msgs += 1;
         self.bytes += bytes;
+        if bytes > 0 {
+            if let Some(tr) = self.trace.as_mut() {
+                tr.push(WireMsg { start, bytes });
+            }
+        }
         if count_dm && bytes > 0 {
             self.busy.record(start, wire_done + self.one_way());
         }
@@ -93,6 +143,11 @@ impl Link {
         self.wire_free = done;
         self.msgs += 1;
         self.bytes += bytes;
+        if bytes > 0 {
+            if let Some(tr) = self.trace.as_mut() {
+                tr.push(WireMsg { start, bytes });
+            }
+        }
         let arrive = done + self.one_way();
         if count_dm && bytes > 0 {
             self.busy.record(start, arrive);
@@ -149,6 +204,26 @@ mod tests {
         let mut l = Link::new(70 * NS, 32.0);
         let back = l.round_trip(0, 64, true);
         assert_eq!(back, 35 * NS + 2 * NS + 35 * NS);
+    }
+
+    #[test]
+    fn trace_records_wire_starts_without_changing_timing() {
+        let mut plain = Link::new(70 * NS, 32.0);
+        let mut traced = Link::new(70 * NS, 32.0);
+        traced.enable_trace();
+        for (t, b) in [(0, 64u64), (0, 0), (5 * NS, 4096), (5 * NS, 128)] {
+            assert_eq!(plain.send(t, b, true), traced.send(t, b, true));
+        }
+        assert_eq!(plain.round_trip(10 * NS, 256, true), traced.round_trip(10 * NS, 256, true));
+        assert!(plain.trace().is_empty());
+        let tr = traced.take_trace();
+        // Zero-byte control message is not traced.
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr[0], WireMsg { start: 0, bytes: 64 });
+        // Starts are monotone and non-overlapping on the wire.
+        for w in tr.windows(2) {
+            assert!(w[1].start >= w[0].start + transfer_ps(w[0].bytes, 32.0));
+        }
     }
 
     #[test]

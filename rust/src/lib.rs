@@ -1,13 +1,25 @@
 //! # AXLE — Coordinated Offloading with Asynchronous Back-Streaming in
 //! # Computational Memory Systems (full-system reproduction)
 //!
-//! This crate reproduces the AXLE paper's system and evaluation:
+//! This crate reproduces the AXLE paper's system and evaluation, grown
+//! toward shared-fabric, multi-tenant deployments:
 //!
 //! - a deterministic **discrete-event CCM simulator** standing in for the
 //!   M²NDP testbed ([`sim`], [`cxl`], [`mem`], [`ring`]);
-//! - the four **partial-offloading mechanisms** ([`protocol`]): Remote
-//!   Polling, Bulk-Synchronous flow, AXLE's Asynchronous Back-Streaming
-//!   and its interrupt-notification variant;
+//! - a **resource/topology layer** ([`topo`]): [`DeviceCtx`] bundles one
+//!   CCM device's PU pool and CXL.mem/CXL.io links with the host PU
+//!   pool; [`Topology`] describes N devices behind an optional shared
+//!   upstream fabric link ([`TopologySpec`]); the tenant driver
+//!   ([`topo::tenant`]) runs K concurrent workload streams with
+//!   deterministic open-loop arrivals, places them across devices
+//!   (round-robin / least-loaded) and arbitrates link contention by
+//!   deterministic wire-trace replay ([`topo::fabric`]) —
+//!   `axle tenants --devices D --streams K`;
+//! - the four **partial-offloading mechanisms** ([`protocol`]) as
+//!   strategies over borrowed [`DeviceCtx`] resources: Remote Polling,
+//!   Bulk-Synchronous flow, AXLE's Asynchronous Back-Streaming and its
+//!   interrupt-notification variant — single-device runs are
+//!   bit-identical to the pre-topology engines;
 //! - the nine **Table IV workloads** ([`workload`]);
 //! - a **parallel sweep engine** ([`sweep`]): the evaluation matrix
 //!   (workloads × protocols × config overrides) expanded from a
@@ -18,9 +30,10 @@
 //! - a **PJRT runtime** ([`runtime`]) that executes the offloaded
 //!   functions' actual numerics from AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) — Python never runs at simulation time;
-//! - metrics and **figure/table regenerators** ([`metrics`], [`report`]);
-//! - the top-level [`coordinator`] that runs workloads × protocols and
-//!   validates numerics alongside timing.
+//! - metrics and **figure/table regenerators** ([`metrics`], [`report`]),
+//!   including the multi-tenant contention figure (`axle report fig17`);
+//! - the top-level [`coordinator`] that runs workloads × protocols (and
+//!   tenant mixes) and validates numerics alongside timing.
 //!
 //! Start with `examples/quickstart.rs`, or `cargo run --release --bin
 //! axle-report -- all` to regenerate every paper figure.
@@ -37,10 +50,12 @@ pub mod ring;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod topo;
 pub mod workload;
 
-pub use config::{poll_factors, Protocol, SchedPolicy, SimConfig};
+pub use config::{poll_factors, Placement, Protocol, SchedPolicy, SimConfig, TopologySpec};
 pub use coordinator::Coordinator;
 pub use metrics::RunMetrics;
 pub use sweep::{ConfigDelta, SweepSpec, WorkloadCache};
+pub use topo::{DeviceCtx, TenantReport, TenantSpec, Topology};
 pub use workload::{by_annotation, WorkloadSpec, ALL_ANNOTATIONS};

@@ -4,17 +4,19 @@
 //! axle run --workload e --protocol axle --poll-ns 500
 //! axle matrix [--profile real-hw|reduced]
 //! axle sweep [--jobs N] [--workloads adei] [--protocol axle] [--json]
+//! axle tenants --devices 2 --streams 8 [--placement least-loaded] [--json]
 //! axle validate [--artifacts DIR] [--workload e]
-//! axle report fig10 | all | ...
+//! axle report fig10 | fig17 | all | ...
 //! axle list
 //! axle config [--out cfg.json] / axle run --config cfg.json ...
 //! ```
 
 use anyhow::{bail, Context, Result};
 
-use axle::config::{Protocol, SchedPolicy, SimConfig};
+use axle::config::{Placement, Protocol, SchedPolicy, SimConfig, TopologySpec};
 use axle::sim::{ps_to_us, NS};
 use axle::sweep::{self, ConfigDelta, SweepSpec};
+use axle::topo::{self, TenantSpec};
 use axle::util::args::Args;
 use axle::util::json::Json;
 use axle::{report, Coordinator, RunMetrics};
@@ -32,8 +34,15 @@ USAGE:
              [--protocol rp|bs|axle|axle-interrupt] [--profile ...] [--json]
         # the evaluation matrix on N worker threads (default: all cores);
         # results are bit-identical to the serial path in spec order
+  axle tenants [--devices D] [--streams K] [--placement rr|least-loaded]
+               [--fabric-gbps X | --no-fabric] [--topo FILE.json]
+               [--workloads <mix, e.g. adei>] [--protocol ...] [--load F]
+               [--tenant-seed N] [--jobs N] [--profile ...] [--json]
+        # K concurrent streams over D CCM devices behind a shared CXL
+        # fabric: deterministic open-loop arrivals, per-tenant slowdown
+        # vs solo, fabric/device contention stats
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
@@ -216,6 +225,101 @@ fn main() -> Result<()> {
                 wall.as_secs_f64() * 1e3
             );
         }
+        Some("tenants") => {
+            let cfg = build_config(&a)?;
+            // Topology: file base (if given), then flag overrides. Default
+            // is a shared upstream fabric of one device-link width — the
+            // single x8 port a multi-headed expander shares upstream.
+            let mut topo = match a.get("topo") {
+                Some(path) => {
+                    let text =
+                        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+                    TopologySpec::from_json(&Json::parse(&text).context("parsing topology JSON")?)
+                }
+                None => TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps),
+            };
+            if let Some(d) = a.get_as::<usize>("devices") {
+                topo.devices = d.max(1);
+            }
+            if let Some(bw) = a.get_as::<f64>("fabric-gbps") {
+                if bw <= 0.0 || bw.is_nan() {
+                    bail!("--fabric-gbps must be positive (got {bw}); use --no-fabric to disable");
+                }
+                topo.fabric_bw_gbps = Some(bw);
+            }
+            if a.has("no-fabric") {
+                topo.fabric_bw_gbps = None;
+            }
+            if let Some(p) = a.get("placement") {
+                topo.placement =
+                    Placement::parse(p).with_context(|| format!("unknown placement {p:?}"))?;
+            }
+            let mut tenants = TenantSpec::new(a.get_as::<usize>("streams").unwrap_or(8).max(1));
+            if let Some(s) = a.get("workloads") {
+                let ws: Vec<char> = s.chars().collect();
+                for &c in &ws {
+                    if !('a'..='i').contains(&c) {
+                        bail!("workload mix must use letters a..i, got {c:?}");
+                    }
+                }
+                tenants = tenants.with_workloads(ws);
+            }
+            if let Some(p) = a.get("protocol").or_else(|| a.get("p")) {
+                tenants = tenants.with_proto(parse_protocol(p)?);
+            }
+            if let Some(l) = a.get_as::<f64>("load") {
+                if l <= 0.0 || l.is_nan() {
+                    bail!("--load must be positive (got {l})");
+                }
+                tenants = tenants.with_load(l);
+            }
+            if let Some(s) = a.get_as::<u64>("tenant-seed") {
+                tenants = tenants.with_seed(s);
+            }
+            let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
+            let r = topo::run_tenants(&cfg, &topo, &tenants, jobs);
+            if a.has("json") {
+                println!("{}", r.to_json());
+                return Ok(());
+            }
+            println!(
+                "{} stream(s) on {} device(s), {} placement, protocol {}:",
+                r.tenants.len(),
+                topo.devices,
+                topo.placement.label(),
+                tenants.proto.label()
+            );
+            for t in &r.tenants {
+                println!("  {}", topo::tenant::format_tenant_row(t));
+            }
+            for (d, dev) in r.devices.iter().enumerate() {
+                println!(
+                    "  device {d}: {} tenant(s), link busy {:.2} us, added wait {:.2} us, {} data bytes",
+                    dev.tenants,
+                    ps_to_us(dev.link_busy),
+                    ps_to_us(dev.mem_wait + dev.io_wait),
+                    dev.bytes
+                );
+            }
+            match topo.fabric_bw_gbps {
+                Some(bw) => println!(
+                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {:.2} us, wait {:.2} us, util {:.1}%",
+                    r.fabric.messages,
+                    r.fabric.bytes,
+                    ps_to_us(r.fabric.busy),
+                    ps_to_us(r.fabric.wait),
+                    100.0 * r.fabric.utilization
+                ),
+                None => println!("  fabric: none (dedicated per-device uplinks)"),
+            }
+            println!(
+                "  makespan {:.2} us | slowdown p50 {:.3} p99 {:.3} max {:.3}",
+                ps_to_us(r.makespan),
+                r.p50_slowdown,
+                r.p99_slowdown,
+                r.max_slowdown
+            );
+        }
         Some("validate") => {
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let mut coord = Coordinator::new(SimConfig::m2ndp()).with_artifacts(dir)?;
@@ -250,6 +354,7 @@ fn main() -> Result<()> {
                 "fig14-ext" => report::fig14_ext(&cfg),
                 "fig15" => report::fig15(&cfg),
                 "fig16" => report::fig16(&cfg),
+                "fig17" | "tenants" => report::fig17(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

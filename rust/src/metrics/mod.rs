@@ -50,6 +50,32 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Zero-initialized metrics for `w` under `protocol` — the single
+    /// construction point for the four protocol engines. Engines set only
+    /// the quantities they actually measure; a field added to
+    /// `RunMetrics` defaults to zero/false *here*, in one place, instead
+    /// of being hand-stuffed (and silently mis-defaulted) in four
+    /// engine-local struct literals.
+    pub fn base(w: &crate::workload::WorkloadSpec, protocol: impl Into<String>) -> Self {
+        Self {
+            workload: w.name.clone(),
+            annot: w.annot,
+            protocol: protocol.into(),
+            total: 0,
+            ccm_busy: 0,
+            dm_busy: 0,
+            host_busy: 0,
+            host_stall: 0,
+            backpressure: 0,
+            events: 0,
+            polls: 0,
+            dma_batches: 0,
+            fc_messages: 0,
+            result_bytes: 0,
+            deadlock: false,
+        }
+    }
+
     /// CCM idle time (paper Observation #3): total − T_C.
     pub fn ccm_idle(&self) -> Ps {
         self.total.saturating_sub(self.ccm_busy)
@@ -129,6 +155,21 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Rounded linear-index percentile of `xs` (`q` in 0..=100): sorts and
+/// returns `sorted[round(q/100 · (len−1))]` — NOT the textbook
+/// nearest-rank `sorted[ceil(q/100 · len) − 1]` (p50 of [1,2,3,4] is 3.0
+/// here, 2.0 under nearest-rank). NaN on empty input. Used for the
+/// multi-tenant p50/p99 slowdown aggregates.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = (q.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +230,35 @@ mod tests {
         let a = m(50, 0, 0);
         let b = m(100, 0, 0);
         assert!((a.ratio_to(&b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn base_constructor_zeroes_everything() {
+        let w = crate::workload::WorkloadSpec {
+            name: "t".into(),
+            annot: 'z',
+            domain: "test",
+            iters: vec![],
+        };
+        let b = RunMetrics::base(&w, "AXLE");
+        assert_eq!(b.workload, "t");
+        assert_eq!(b.annot, 'z');
+        assert_eq!(b.protocol, "AXLE");
+        assert_eq!(
+            (b.total, b.ccm_busy, b.dm_busy, b.host_busy, b.host_stall, b.backpressure),
+            (0, 0, 0, 0, 0, 0)
+        );
+        assert_eq!((b.events, b.polls, b.dma_batches, b.fc_messages, b.result_bytes), (0, 0, 0, 0, 0));
+        assert!(!b.deadlock);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12); // round(1.5) = 2 → 3.0
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!((percentile(&[7.0], 99.0) - 7.0).abs() < 1e-12);
     }
 }

@@ -27,10 +27,10 @@
 use std::collections::VecDeque;
 
 use crate::config::SimConfig;
-use crate::cxl::Link;
 use crate::metrics::RunMetrics;
 use crate::ring::{ProducerView, Ring};
-use crate::sim::{EventQueue, PuPool, Ps};
+use crate::sim::{EventQueue, Ps};
+use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
 use super::{dispatch_order_into, jittered_dur, POSTED_STORE_COST};
@@ -93,10 +93,8 @@ struct AxleSim<'a> {
     interrupt_mode: bool,
 
     q: EventQueue<Ev>,
-    ccm_pool: PuPool,
-    host_pool: PuPool,
-    io: Link,
-    mem: Link,
+    /// Borrowed device resources (host/CCM pools, CXL.mem/CXL.io links).
+    ctx: &'a mut DeviceCtx,
 
     // ---- current-iteration state ----
     iter: usize,
@@ -158,7 +156,12 @@ struct AxleSim<'a> {
     total: Ps,
 }
 
-pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetrics {
+pub fn run(
+    w: &WorkloadSpec,
+    cfg: &SimConfig,
+    interrupt_mode: bool,
+    ctx: &mut DeviceCtx,
+) -> RunMetrics {
     let cap = cfg.axle.dma_slot_capacity;
     // Pre-size every per-iteration buffer from the spec's task counts so
     // the event loop itself never grows a container (§Perf: the LLM row
@@ -171,10 +174,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetric
         w,
         interrupt_mode,
         q: EventQueue::new(),
-        ccm_pool: PuPool::new(cfg.ccm.num_pus),
-        host_pool: PuPool::new(cfg.host.num_pus),
-        io: Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps),
-        mem: Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps),
+        ctx,
         iter: 0,
         task_slots: Vec::with_capacity(max_ccm),
         delivered_slots: Vec::with_capacity(max_ccm),
@@ -233,23 +233,21 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, interrupt_mode: bool) -> RunMetric
         (n, (n * poll_cost).min(sim.total))
     };
 
-    RunMetrics {
-        workload: w.name.clone(),
-        annot: w.annot,
-        protocol: if interrupt_mode { "AXLE_Interrupt".into() } else { "AXLE".into() },
-        total: sim.total,
-        ccm_busy: sim.ccm_pool.busy().union(),
-        dm_busy: sim.io.busy().union(),
-        host_busy: sim.host_pool.busy().union(),
-        host_stall: sim.stall + poll_stall,
-        backpressure: sim.backpressure,
-        events: sim.q.popped(),
-        polls,
-        dma_batches: sim.dma_batches,
-        fc_messages: sim.fc_msgs,
-        result_bytes: sim.result_bytes,
-        deadlock: sim.deadlock,
-    }
+    let mut m =
+        RunMetrics::base(w, if interrupt_mode { "AXLE_Interrupt" } else { "AXLE" });
+    m.total = sim.total;
+    m.ccm_busy = sim.ctx.ccm.busy().union();
+    m.dm_busy = sim.ctx.io.busy().union();
+    m.host_busy = sim.ctx.host.busy().union();
+    m.host_stall = sim.stall + poll_stall;
+    m.backpressure = sim.backpressure;
+    m.events = sim.q.popped();
+    m.polls = polls;
+    m.dma_batches = sim.dma_batches;
+    m.fc_messages = sim.fc_msgs;
+    m.result_bytes = sim.result_bytes;
+    m.deadlock = sim.deadlock;
+    m
 }
 
 impl<'a> AxleSim<'a> {
@@ -258,7 +256,7 @@ impl<'a> AxleSim<'a> {
         // First launch: posted CXL.mem store, one-way latency.
         self.stall += POSTED_STORE_COST;
         self.launch_inflight += 1;
-        self.q.push_at(self.mem.one_way(), Ev::CcmLaunch(0));
+        self.q.push_at(self.ctx.mem.one_way(), Ev::CcmLaunch(0));
 
         while let Some((t, ev)) = self.q.pop() {
             if self.finished {
@@ -359,7 +357,7 @@ impl<'a> AxleSim<'a> {
         dispatch_order_into(&mut order, n, self.cfg.sched, self.cfg.seed, i as u64);
         for &task in &order {
             let dur = jittered_dur(self.cfg, iter.ccm_tasks[task as usize].dur, i, task);
-            let (_, end) = self.ccm_pool.dispatch(t, dur);
+            let (_, end) = self.ctx.ccm.dispatch(t, dur);
             self.ccm_inflight += 1;
             self.q.push_at(end, Ev::CcmTaskDone { iter: i as u32, task });
         }
@@ -483,7 +481,7 @@ impl<'a> AxleSim<'a> {
         let prep_done = t + self.cfg.axle.dma_prep;
         self.q.push_at(prep_done, Ev::DmaFree);
         let wire_bytes = claim * slot + claim * META_RECORD_BYTES + BATCH_TAIL_BYTES;
-        let arrive = self.io.send(prep_done, wire_bytes, true);
+        let arrive = self.ctx.io.send(prep_done, wire_bytes, true);
         self.inflight_batches.push_back(Batch { segs, n_slots: claim });
         self.q.push_at(arrive, Ev::DmaArrive);
     }
@@ -538,7 +536,7 @@ impl<'a> AxleSim<'a> {
                         // Ready pool → host scheduler: dispatch downstream task.
                         let ready = if iter.host_serial { self.chain_end.max(t) } else { t };
                         let dur = iter.host_tasks[h as usize].dur;
-                        let (_, end) = self.host_pool.dispatch(ready, dur);
+                        let (_, end) = self.ctx.host.dispatch(ready, dur);
                         self.chain_end = end;
                         self.host_inflight += 1;
                         self.q.push_at(end, Ev::HostTaskDone { iter: self.iter as u32, h });
@@ -558,7 +556,7 @@ impl<'a> AxleSim<'a> {
         self.stall += POSTED_STORE_COST;
         self.fc_inflight += 1;
         self.fc_queue.push_back((self.ring_payload.head(), self.ring_meta.head()));
-        self.q.push_at(t + self.mem.one_way(), Ev::FcArrive);
+        self.q.push_at(t + self.ctx.mem.one_way(), Ev::FcArrive);
     }
 
     fn on_fc_arrive(&mut self, t: Ps) {
@@ -593,7 +591,7 @@ impl<'a> AxleSim<'a> {
                 // Next offload iteration: posted CXL.mem launch store.
                 self.stall += POSTED_STORE_COST;
                 self.launch_inflight += 1;
-                self.q.push_at(t + self.mem.one_way(), Ev::CcmLaunch(iter as u32 + 1));
+                self.q.push_at(t + self.ctx.mem.one_way(), Ev::CcmLaunch(iter as u32 + 1));
             }
         }
     }
@@ -604,6 +602,10 @@ mod tests {
     use super::*;
     use crate::config::{poll_factors, Protocol, SimConfig};
     use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn solo(w: &WorkloadSpec, cfg: &SimConfig, interrupt: bool) -> RunMetrics {
+        run(w, cfg, interrupt, &mut DeviceCtx::new(cfg))
+    }
 
     fn tiny(ccm_dur: Ps, host_dur: Ps, result: u64, iters: usize, tasks: usize) -> WorkloadSpec {
         WorkloadSpec {
@@ -632,7 +634,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(100_000_000, 50_000_000, 65_536, 2, 128); // 100 μs CCM, 64 KB results
-        let m = run(&w, &cfg, false);
+        let m = solo(&w, &cfg, false);
         assert!(!m.deadlock);
         let bs = super::super::run(Protocol::Bs, &w, &cfg);
         // Clear pipelining win (BS serializes 8 CCM waves + full load + host).
@@ -649,8 +651,8 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(500_000, 200_000, 256, 8, 16);
-        let fast = run(&w, &cfg.clone().with_poll(poll_factors::P1), false);
-        let slow = run(&w, &cfg.clone().with_poll(poll_factors::P100), false);
+        let fast = solo(&w, &cfg.clone().with_poll(poll_factors::P1), false);
+        let slow = solo(&w, &cfg.clone().with_poll(poll_factors::P100), false);
         assert!(slow.total > fast.total, "p100 {} <= p1 {}", slow.total, fast.total);
     }
 
@@ -660,8 +662,8 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(500_000, 100_000, 256, 8, 16);
-        let polled = run(&w, &cfg, false);
-        let interrupted = run(&w, &cfg, true);
+        let polled = solo(&w, &cfg, false);
+        let interrupted = solo(&w, &cfg, true);
         assert!(
             interrupted.total > 2 * polled.total,
             "interrupt {} vs polled {}",
@@ -681,7 +683,7 @@ mod tests {
         // Slow consumers (5 μs host tasks) against fast producers: credit
         // runs dry while earlier payloads are still being processed.
         let w = tiny(100_000, 5_000_000, 64, 2, 8); // 2 slots per task
-        let m = run(&w, &cfg, false);
+        let m = solo(&w, &cfg, false);
         assert!(!m.deadlock, "1:1 deps must drain");
         assert!(m.backpressure > 0, "expected credit stalls");
     }
@@ -703,7 +705,7 @@ mod tests {
                 host_serial: false,
             }],
         };
-        let m = run(&w, &cfg, false);
+        let m = solo(&w, &cfg, false);
         assert!(m.deadlock);
     }
 
@@ -712,7 +714,7 @@ mod tests {
         let cfg = SimConfig::m2ndp().with_poll(poll_factors::P1);
         for a in crate::workload::ALL_ANNOTATIONS {
             let w = by_annotation(a, &cfg);
-            let axle = run(&w, &cfg, false);
+            let axle = solo(&w, &cfg, false);
             let bs = super::super::run(Protocol::Bs, &w, &cfg);
             assert!(!axle.deadlock, "workload {a} deadlocked");
             assert!(
@@ -728,8 +730,8 @@ mod tests {
     fn deterministic_across_runs() {
         let cfg = SimConfig::m2ndp();
         let w = by_annotation('e', &cfg);
-        let a = run(&w, &cfg, false);
-        let b = run(&w, &cfg, false);
+        let a = solo(&w, &cfg, false);
+        let b = solo(&w, &cfg, false);
         assert_eq!(a.total, b.total);
         assert_eq!(a.events, b.events);
         assert_eq!(a.dma_batches, b.dma_batches);

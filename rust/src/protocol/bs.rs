@@ -7,20 +7,19 @@
 //! response returns at kernel completion, then the synchronous result
 //! load brings the data over. Protocol overhead is minimal — but the host
 //! processing unit stalls for the entire T_C + T_D (§III-C, Fig. 6).
+//!
+//! The engine is a strategy over a borrowed [`DeviceCtx`] (BS only uses
+//! the CXL.mem channel; the ctx's CXL.io link stays idle).
 
 use crate::config::SimConfig;
-use crate::cxl::Link;
 use crate::metrics::RunMetrics;
-use crate::sim::{PuPool, Ps};
+use crate::sim::Ps;
+use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
 use super::{dispatch_order_into, jittered_dur};
 
-pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
-    let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
-    let mut host_pool = PuPool::new(cfg.host.num_pus);
-    let mut mem = Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps);
-
+pub fn run(w: &WorkloadSpec, cfg: &SimConfig, ctx: &mut DeviceCtx) -> RunMetrics {
     let mut t: Ps = 0;
     let mut stall: Ps = 0;
     let mut result_bytes: u64 = 0;
@@ -36,7 +35,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         let mut complete: Ps = launch_t;
         for &task in &order {
             let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);
-            let (_, end) = ccm_pool.dispatch(launch_t, dur);
+            let (_, end) = ctx.ccm.dispatch(launch_t, dur);
             complete = complete.max(end);
         }
 
@@ -46,7 +45,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         // Synchronous result load over CXL.mem.
         let bytes = iter.result_bytes();
         result_bytes += bytes;
-        let done = mem.round_trip(ack, bytes, true);
+        let done = ctx.mem.round_trip(ack, bytes, true);
 
         // The host core was stalled from issue to load completion.
         stall += done - t;
@@ -57,30 +56,21 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         let mut iter_end: Ps = t;
         for h in &iter.host_tasks {
             let ready = if iter.host_serial { chain_end } else { t };
-            let (_, end) = host_pool.dispatch(ready, h.dur);
+            let (_, end) = ctx.host.dispatch(ready, h.dur);
             chain_end = end;
             iter_end = iter_end.max(end);
         }
         t = iter_end;
     }
 
-    RunMetrics {
-        workload: w.name.clone(),
-        annot: w.annot,
-        protocol: "BS".into(),
-        total: t,
-        ccm_busy: ccm_pool.busy().union(),
-        dm_busy: mem.busy().union(),
-        host_busy: host_pool.busy().union(),
-        host_stall: stall,
-        backpressure: 0,
-        events: 0,
-        polls: 0,
-        dma_batches: 0,
-        fc_messages: 0,
-        result_bytes,
-        deadlock: false,
-    }
+    let mut m = RunMetrics::base(w, "BS");
+    m.total = t;
+    m.ccm_busy = ctx.ccm.busy().union();
+    m.dm_busy = ctx.mem.busy().union();
+    m.host_busy = ctx.host.busy().union();
+    m.host_stall = stall;
+    m.result_bytes = result_bytes;
+    m
 }
 
 #[cfg(test)]
@@ -88,6 +78,10 @@ mod tests {
     use super::*;
     use crate::config::{Protocol, SimConfig};
     use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn solo(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+        run(w, cfg, &mut DeviceCtx::new(cfg))
+    }
 
     fn tiny(ccm_dur: Ps, host_dur: Ps, result: u64, iters: usize) -> WorkloadSpec {
         WorkloadSpec {
@@ -111,7 +105,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(100_000, 10_000, 64, 4); // 100 ns kernels
-        let bs = run(&w, &cfg);
+        let bs = solo(&w, &cfg);
         let rp = super::super::run(Protocol::Rp, &w, &cfg);
         let ratio = bs.total as f64 / rp.total as f64;
         assert!(ratio < 0.4, "BS/RP = {ratio}");
@@ -123,7 +117,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(448_000_000, 10_000, 64, 1);
-        let bs = run(&w, &cfg);
+        let bs = solo(&w, &cfg);
         let rp = super::super::run(Protocol::Rp, &w, &cfg);
         let ratio = bs.total as f64 / rp.total as f64;
         assert!(ratio > 0.97 && ratio <= 1.0, "BS/RP = {ratio}");
@@ -135,7 +129,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny(1_000_000, 100_000, 1 << 20, 1);
-        let m = run(&w, &cfg);
+        let m = solo(&w, &cfg);
         assert!(m.host_stall >= m.ccm_busy + m.dm_busy);
         assert_eq!(m.host_idle(), m.total - 100_000);
     }
@@ -145,7 +139,7 @@ mod tests {
         let cfg = SimConfig::m2ndp();
         for a in crate::workload::ALL_ANNOTATIONS {
             let w = by_annotation(a, &cfg);
-            let bs = run(&w, &cfg);
+            let bs = solo(&w, &cfg);
             let rp = super::super::run(Protocol::Rp, &w, &cfg);
             assert!(bs.total <= rp.total, "workload {a}: BS {} > RP {}", bs.total, rp.total);
         }

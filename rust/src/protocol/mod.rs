@@ -1,4 +1,5 @@
-//! The four partial-offloading mechanisms (§III, §IV).
+//! The four partial-offloading mechanisms (§III, §IV), as **strategies
+//! over borrowed device resources**.
 //!
 //! | Module | Mechanism | CXL use | Fig. 1 |
 //! |---|---|---|---|
@@ -8,6 +9,18 @@
 //!
 //! `AXLE_Interrupt` is [`axle`] with interrupt-based notification
 //! (§V-B's additional baseline).
+//!
+//! **Resource-layer architecture.** An engine no longer constructs its
+//! own PU pools and links: every `run` borrows a
+//! [`DeviceCtx`](crate::topo::DeviceCtx) — one CCM device's PU pool and
+//! CXL.mem/CXL.io channels plus the host-side PU pool — owned by the
+//! topology layer ([`crate::topo`]). The engine encodes *when* resources
+//! are used; the ctx encodes *which physical resources* those are. A
+//! fresh ctx per run ([`run`]) reproduces the original single-device,
+//! single-tenant timing bit for bit; the multi-tenant driver
+//! ([`crate::topo::tenant`]) instead materializes per-tenant ctxs for
+//! the devices of a multi-device [`Topology`](crate::topo::Topology)
+//! and arbitrates the shared wires.
 //!
 //! RP and BS are *fully serialized* pipelines by construction (Fig. 6),
 //! so they compose directly over the resource models; AXLE runs on the
@@ -21,6 +34,7 @@ pub mod rp;
 use crate::config::{Protocol, SchedPolicy, SimConfig};
 use crate::metrics::RunMetrics;
 use crate::sim::Ps;
+use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
 /// Host-core cost of one posted-store issue (launch, flow control).
@@ -29,13 +43,25 @@ pub(crate) const POSTED_STORE_COST: Ps = 10_000; // 10 ns
 /// Firmware cycles to process a mailbox command (RP).
 pub(crate) const FIRMWARE_CYCLES: f64 = 200.0;
 
-/// Run `w` under `proto` with `cfg`; returns the full metric set.
+/// Run `w` under `proto` with `cfg` on fresh single-device resources —
+/// the paper's solo-workload setup, bit-identical to the pre-topology
+/// engines. Equivalent to [`run_on`] with `DeviceCtx::new(cfg)`.
 pub fn run(proto: Protocol, w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+    run_on(proto, w, cfg, &mut DeviceCtx::new(cfg))
+}
+
+/// Run `w` under `proto` with `cfg` against borrowed device resources.
+pub fn run_on(
+    proto: Protocol,
+    w: &WorkloadSpec,
+    cfg: &SimConfig,
+    ctx: &mut DeviceCtx,
+) -> RunMetrics {
     match proto {
-        Protocol::Rp => rp::run(w, cfg),
-        Protocol::Bs => bs::run(w, cfg),
-        Protocol::Axle => axle::run(w, cfg, false),
-        Protocol::AxleInterrupt => axle::run(w, cfg, true),
+        Protocol::Rp => rp::run(w, cfg, ctx),
+        Protocol::Bs => bs::run(w, cfg, ctx),
+        Protocol::Axle => axle::run(w, cfg, false, ctx),
+        Protocol::AxleInterrupt => axle::run(w, cfg, true, ctx),
     }
 }
 

@@ -7,20 +7,19 @@
 //! completion descriptor is observed, the host dequeues the command
 //! (CXL.io) and synchronously loads the results via CXL.mem before
 //! running its downstream tasks. Everything is serialized (Fig. 6).
+//!
+//! The engine is a strategy over a borrowed [`DeviceCtx`]: it owns the
+//! control flow, the ctx owns the PU pools and links.
 
 use crate::config::SimConfig;
-use crate::cxl::Link;
 use crate::metrics::RunMetrics;
-use crate::sim::{secs_to_ps, PuPool, Ps};
+use crate::sim::{secs_to_ps, Ps};
+use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
 use super::{dispatch_order_into, jittered_dur, FIRMWARE_CYCLES};
 
-pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
-    let mut ccm_pool = PuPool::new(cfg.ccm.num_pus);
-    let mut host_pool = PuPool::new(cfg.host.num_pus);
-    let mut mem = Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps);
-    let io = Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps);
+pub fn run(w: &WorkloadSpec, cfg: &SimConfig, ctx: &mut DeviceCtx) -> RunMetrics {
     let fw_delay: Ps = secs_to_ps(FIRMWARE_CYCLES / (cfg.firmware_freq_ghz * 1e9));
 
     let mut t: Ps = 0;
@@ -46,7 +45,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         let mut complete: Ps = launch_t;
         for &task in &order {
             let dur = jittered_dur(cfg, iter.ccm_tasks[task as usize].dur, ii, task);
-            let (_, end) = ccm_pool.dispatch(launch_t, dur);
+            let (_, end) = ctx.ccm.dispatch(launch_t, dur);
             complete = complete.max(end);
         }
         // Firmware writes the completion descriptor to the mailbox.
@@ -74,7 +73,7 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         // Result load over CXL.mem (synchronous, counted as data movement).
         let bytes = iter.result_bytes();
         result_bytes += bytes;
-        let done = mem.round_trip(t, bytes, true);
+        let done = ctx.mem.round_trip(t, bytes, true);
         stall += done - t;
         t = done;
 
@@ -83,30 +82,22 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
         let mut iter_end: Ps = t;
         for h in &iter.host_tasks {
             let ready = if iter.host_serial { chain_end } else { t };
-            let (_, end) = host_pool.dispatch(ready, h.dur);
+            let (_, end) = ctx.host.dispatch(ready, h.dur);
             chain_end = end;
             iter_end = iter_end.max(end);
         }
         t = iter_end;
     }
 
-    RunMetrics {
-        workload: w.name.clone(),
-        annot: w.annot,
-        protocol: "RP".into(),
-        total: t,
-        ccm_busy: ccm_pool.busy().union(),
-        dm_busy: mem.busy().union() + io.busy().union(),
-        host_busy: host_pool.busy().union(),
-        host_stall: stall,
-        backpressure: 0,
-        events: 0,
-        polls,
-        dma_batches: 0,
-        fc_messages: 0,
-        result_bytes,
-        deadlock: false,
-    }
+    let mut m = RunMetrics::base(w, "RP");
+    m.total = t;
+    m.ccm_busy = ctx.ccm.busy().union();
+    m.dm_busy = ctx.mem.busy().union() + ctx.io.busy().union();
+    m.host_busy = ctx.host.busy().union();
+    m.host_stall = stall;
+    m.polls = polls;
+    m.result_bytes = result_bytes;
+    m
 }
 
 #[cfg(test)]
@@ -114,6 +105,10 @@ mod tests {
     use super::*;
     use crate::config::SimConfig;
     use crate::workload::{by_annotation, CcmTask, HostTask, IterSpec};
+
+    fn solo(w: &WorkloadSpec, cfg: &SimConfig) -> RunMetrics {
+        run(w, cfg, &mut DeviceCtx::new(cfg))
+    }
 
     fn tiny_workload(cfg: &SimConfig, ccm_dur: Ps, host_dur: Ps, result: u64) -> WorkloadSpec {
         let _ = cfg;
@@ -135,7 +130,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny_workload(&cfg, 1_000_000, 500_000, 4096);
-        let m = run(&w, &cfg);
+        let m = solo(&w, &cfg);
         assert!(m.total >= m.ccm_busy + m.dm_busy + m.host_busy);
         // Host idle = everything except its own task.
         assert_eq!(m.host_idle(), m.total - 500_000);
@@ -145,8 +140,8 @@ mod tests {
     fn poll_count_scales_with_kernel_length() {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
-        let short = run(&tiny_workload(&cfg, 1_000_000, 0, 64), &cfg); // 1 μs kernel
-        let long = run(&tiny_workload(&cfg, 10_000_000, 0, 64), &cfg); // 10 μs kernel
+        let short = solo(&tiny_workload(&cfg, 1_000_000, 0, 64), &cfg); // 1 μs kernel
+        let long = solo(&tiny_workload(&cfg, 10_000_000, 0, 64), &cfg); // 10 μs kernel
         assert!(long.polls > short.polls);
         // ~1 poll per μs of kernel time.
         assert!((long.polls as i64 - 10).abs() <= 2, "polls={}", long.polls);
@@ -158,7 +153,7 @@ mod tests {
         let mut cfg = SimConfig::m2ndp();
         cfg.jitter = 0.0;
         let w = tiny_workload(&cfg, 100_000, 0, 64);
-        let m = run(&w, &cfg);
+        let m = solo(&w, &cfg);
         assert!(m.total > cfg.rp_poll_interval, "total={}", m.total);
         assert!(m.total > 10 * 100_000);
     }
@@ -168,7 +163,7 @@ mod tests {
         let cfg = SimConfig::m2ndp();
         for a in crate::workload::ALL_ANNOTATIONS {
             let w = by_annotation(a, &cfg);
-            let m = run(&w, &cfg);
+            let m = solo(&w, &cfg);
             assert!(m.total > 0, "workload {a}");
             assert!(!m.deadlock);
         }

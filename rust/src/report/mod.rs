@@ -483,6 +483,43 @@ pub fn fig16(cfg: &SimConfig) {
     }
 }
 
+/// Fig. 17 (extension): multi-tenant contention on a shared CXL fabric.
+///
+/// The paper runs every workload alone on one CCM; this figure walks the
+/// topology layer's (devices, streams) grid with a data-heavy tenant mix
+/// under AXLE and reports the p50/p99 slowdown vs. each stream's solo
+/// run plus the shared-fabric link's queueing and utilization — the
+/// contention behaviour a production multi-tenant deployment (UDON's
+/// shared memory-expander scenario) actually sees.
+pub fn fig17(cfg: &SimConfig) {
+    header("Fig. 17-ext: multi-tenant slowdown vs (devices, streams), shared fabric");
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "(D, K)", "tenants", "p50 slow", "p99 slow", "max slow", "fab wait us", "fab util"
+    );
+    let topo = crate::config::TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+    let tenants = crate::topo::TenantSpec::new(1).with_workloads(vec!['a', 'd', 'e', 'i']);
+    let grid = crate::topo::sweep_tenant_grid(
+        cfg,
+        &topo,
+        &tenants,
+        &[1, 2],
+        &[2, 4, 8],
+        sweep::available_jobs(),
+    );
+    for (d, k, r) in &grid {
+        println!(
+            "({d}, {k:>2})    {:>8} {:>10.3} {:>10.3} {:>10.3} {:>12.2} {:>9.1}%",
+            r.tenants.len(),
+            r.p50_slowdown,
+            r.p99_slowdown,
+            r.max_slowdown,
+            ps_to_us(r.fabric.wait),
+            100.0 * r.fabric.utilization
+        );
+    }
+}
+
 /// Table I echo: what each workload offloads.
 pub fn table1() {
     header("Table I: offloaded functions");
@@ -527,6 +564,11 @@ mod tests {
     }
 
     #[test]
+    fn tenant_report_runs() {
+        fig17(&SimConfig::m2ndp());
+    }
+
+    #[test]
     fn fig10_and_idle_reports_run() {
         let cfg = SimConfig::m2ndp();
         fig10(&cfg);
@@ -564,4 +606,5 @@ pub fn all() {
     fig14_ext(&cfg);
     fig15(&cfg);
     fig16(&cfg);
+    fig17(&cfg);
 }

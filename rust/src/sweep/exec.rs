@@ -13,8 +13,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
 use crate::config::{Protocol, SimConfig};
+use crate::cxl::WireMsg;
 use crate::metrics::RunMetrics;
 use crate::protocol;
+use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
 use super::{ConfigDelta, WorkloadCache};
@@ -118,29 +120,34 @@ pub fn run_points(base: &SimConfig, points: &[SweepPoint], jobs: usize) -> Vec<R
     run_jobs(&list, jobs)
 }
 
-/// Run prebuilt jobs on `jobs` workers; results are in `list` order and
-/// bit-identical to running the list serially.
-pub fn run_jobs(list: &[SpecJob], jobs: usize) -> Vec<RunMetrics> {
+/// The shared fan-out core: map `f` over `list` on `jobs` workers with
+/// work stealing over an atomic index; results return in `list` order
+/// (`jobs = 1` runs inline on the calling thread). Both public runners
+/// are thin wrappers so the pool/reorder machinery exists exactly once.
+fn run_mapped<R: Send>(
+    list: &[SpecJob],
+    jobs: usize,
+    f: impl Fn(&SpecJob) -> R + Sync,
+) -> Vec<R> {
     let workers = jobs.max(1).min(list.len().max(1));
     if workers <= 1 {
-        return list.iter().map(|j| protocol::run(j.proto, &j.w, &j.cfg)).collect();
+        return list.iter().map(&f).collect();
     }
 
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, RunMetrics)>();
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
             let tx = tx.clone();
             let next = &next;
+            let f = &f;
             s.spawn(move || loop {
                 // Work stealing: claim the next unclaimed job index.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= list.len() {
                     break;
                 }
-                let job = &list[i];
-                let m = protocol::run(job.proto, &job.w, &job.cfg);
-                if tx.send((i, m)).is_err() {
+                if tx.send((i, f(&list[i]))).is_err() {
                     break;
                 }
             });
@@ -148,11 +155,41 @@ pub fn run_jobs(list: &[SpecJob], jobs: usize) -> Vec<RunMetrics> {
     });
     drop(tx);
 
-    let mut out: Vec<Option<RunMetrics>> = vec![None; list.len()];
-    for (i, m) in rx {
-        out[i] = Some(m);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(list.len());
+    out.resize_with(list.len(), || None);
+    for (i, r) in rx {
+        out[i] = Some(r);
     }
-    out.into_iter().map(|m| m.expect("every sweep job reported a result")).collect()
+    out.into_iter().map(|r| r.expect("every sweep job reported a result")).collect()
+}
+
+/// Run prebuilt jobs on `jobs` workers; results are in `list` order and
+/// bit-identical to running the list serially.
+pub fn run_jobs(list: &[SpecJob], jobs: usize) -> Vec<RunMetrics> {
+    run_mapped(list, jobs, |j| protocol::run(j.proto, &j.w, &j.cfg))
+}
+
+/// One job's result plus the wire traces of the device links it ran on
+/// (the tenant driver's raw material for contention arbitration).
+#[derive(Debug, Clone)]
+pub struct TracedRun {
+    pub metrics: RunMetrics,
+    /// CXL.mem data-bearing wire occupancies (solo timeline).
+    pub mem_trace: Vec<WireMsg>,
+    /// CXL.io data-bearing wire occupancies (solo timeline).
+    pub io_trace: Vec<WireMsg>,
+}
+
+/// As [`run_jobs`], but each job runs on a fresh *traced* [`DeviceCtx`]
+/// and returns its wire traces alongside the metrics. Tracing never
+/// perturbs timing, so `metrics` is bit-identical to [`run_jobs`]'s.
+/// Results are in `list` order regardless of worker count.
+pub fn run_traced_jobs(list: &[SpecJob], jobs: usize) -> Vec<TracedRun> {
+    run_mapped(list, jobs, |job| {
+        let mut ctx = DeviceCtx::traced(&job.cfg);
+        let metrics = protocol::run_on(job.proto, &job.w, &job.cfg, &mut ctx);
+        TracedRun { metrics, mem_trace: ctx.mem.take_trace(), io_trace: ctx.io.take_trace() }
+    })
 }
 
 #[cfg(test)]
@@ -200,6 +237,32 @@ mod tests {
         assert_eq!(serial.len(), parallel.len());
         for (s, p) in serial.iter().zip(&parallel) {
             assert_eq!(s.to_json().to_string(), p.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn traced_jobs_match_untraced_metrics_and_capture_traces() {
+        let base = SimConfig::m2ndp();
+        let shared = std::sync::Arc::new(base.clone());
+        let jobs: Vec<SpecJob> = [('a', Protocol::Bs), ('e', Protocol::Axle)]
+            .iter()
+            .map(|&(a, p)| SpecJob {
+                w: std::sync::Arc::new(crate::workload::by_annotation(a, &base)),
+                proto: p,
+                cfg: std::sync::Arc::clone(&shared),
+            })
+            .collect();
+        let plain = run_jobs(&jobs, 2);
+        for workers in [1usize, 2] {
+            let traced = run_traced_jobs(&jobs, workers);
+            assert_eq!(traced.len(), plain.len());
+            for (t, p) in traced.iter().zip(&plain) {
+                assert_eq!(t.metrics.to_json().to_string(), p.to_json().to_string());
+            }
+            // BS moves data over CXL.mem; AXLE back-streams over CXL.io.
+            assert!(!traced[0].mem_trace.is_empty());
+            assert!(traced[0].io_trace.is_empty());
+            assert!(!traced[1].io_trace.is_empty());
         }
     }
 

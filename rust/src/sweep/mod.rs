@@ -33,4 +33,7 @@ pub mod exec;
 
 pub use cache::WorkloadCache;
 pub use delta::ConfigDelta;
-pub use exec::{available_jobs, run_jobs, run_points, SpecJob, SweepPoint, SweepSpec};
+pub use exec::{
+    available_jobs, run_jobs, run_points, run_traced_jobs, SpecJob, SweepPoint, SweepSpec,
+    TracedRun,
+};

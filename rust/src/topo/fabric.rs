@@ -1,0 +1,197 @@
+//! Shared-link serialization arbitration by deterministic replay.
+//!
+//! The tenant driver simulates each stream solo (exact per-tenant
+//! timelines from the unchanged protocol engines) while tracing every
+//! data-bearing wire occupancy ([`crate::cxl::WireMsg`]). This module
+//! then replays the union of those traces against one shared link
+//! frontier: messages are served in global issue order (time, then
+//! tenant id, then per-tenant FIFO), queueing behind the frontier and
+//! serializing at the shared link's bandwidth; each tenant is charged
+//! the **completion shift** of its traffic (max per-message lateness vs
+//! its solo schedule — see [`arbitrate`]).
+//!
+//! Because a solo trace records *wire starts* (already serialized
+//! against the tenant's own link), replaying a single tenant alone at
+//! the same bandwidth reproduces its solo schedule with **zero added
+//! wait** — the arbitration measures pure contention. Replaying at a
+//! narrower shared-fabric bandwidth additionally charges the upstream
+//! bottleneck, which is exactly the fabric model the topology layer
+//! wants.
+
+use crate::sim::{transfer_ps, BusyTracker, Ps};
+
+/// One data-bearing message offered to a shared link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricMsg {
+    /// Global issue time (tenant arrival + solo wire start).
+    pub at: Ps,
+    /// Payload bytes.
+    pub bytes: u64,
+    /// Issuing tenant id (index into the arbitration's wait vector).
+    pub tenant: u32,
+}
+
+/// Result of one replay arbitration pass.
+#[derive(Debug, Clone)]
+pub struct ArbitrationOutcome {
+    /// Added completion delay per tenant id (length = `n_tenants`): the
+    /// maximum *lateness* of that tenant's messages on this link —
+    /// `(contended finish) − (solo-trace finish)` — i.e. how far this
+    /// link shifts the tail of the tenant's traffic. A max, not a sum:
+    /// per-message queueing delays overlap in wall time (one head-of-line
+    /// push-back ripples into every later message), so summing them would
+    /// overstate the shift by up to the message count.
+    pub waits: Vec<Ps>,
+    /// Wire busy intervals (union = link busy time).
+    pub busy: BusyTracker,
+    /// Messages served.
+    pub messages: u64,
+    /// Bytes served.
+    pub bytes: u64,
+    /// Time the wire finally frees up.
+    pub wire_free: Ps,
+}
+
+impl ArbitrationOutcome {
+    /// Sum of per-tenant added completion delays (aggregate stat).
+    pub fn total_wait(&self) -> Ps {
+        self.waits.iter().sum()
+    }
+
+    /// Wire utilization over `[0, horizon)`.
+    pub fn utilization(&self, horizon: Ps) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy.union() as f64 / horizon as f64
+        }
+    }
+}
+
+/// Serialize `msgs` on one shared link of `bw_gbps`. The input order is
+/// irrelevant (a stable sort on `(at, tenant)` restores global issue
+/// order while preserving each tenant's FIFO trace order), so the result
+/// is deterministic for any deterministic input set.
+///
+/// Each message's **lateness** is `(start + ser(bw_gbps)) − (issue +
+/// ser(baseline_bw_gbps))`: its contended finish on this link versus the
+/// finish already embedded in the solo timeline (recorded on a
+/// `baseline_bw_gbps` link). That folds together queueing behind other
+/// traffic *and* the serialization excess of a narrower shared link. A
+/// tenant's reported delay is the **max** lateness across its messages —
+/// the completion shift of its traffic tail — because overlapping
+/// per-message queueing is one physical wait, not many. Same-bandwidth
+/// replay of a lone tenant yields exactly zero; a narrower fabric
+/// correctly charges even a lone tenant the upstream bottleneck.
+pub fn arbitrate(
+    mut msgs: Vec<FabricMsg>,
+    bw_gbps: f64,
+    baseline_bw_gbps: f64,
+    n_tenants: usize,
+) -> ArbitrationOutcome {
+    msgs.sort_by_key(|m| (m.at, m.tenant));
+    let mut out = ArbitrationOutcome {
+        waits: vec![0; n_tenants],
+        busy: BusyTracker::new(),
+        messages: 0,
+        bytes: 0,
+        wire_free: 0,
+    };
+    for m in &msgs {
+        let ser = transfer_ps(m.bytes, bw_gbps);
+        let solo_finish = m.at + transfer_ps(m.bytes, baseline_bw_gbps);
+        let start = m.at.max(out.wire_free);
+        let lateness = (start + ser).saturating_sub(solo_finish);
+        let w = &mut out.waits[m.tenant as usize];
+        *w = (*w).max(lateness);
+        out.busy.record(start, start + ser);
+        out.wire_free = start + ser;
+        out.messages += 1;
+        out.bytes += m.bytes;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+
+    fn msg(at: Ps, bytes: u64, tenant: u32) -> FabricMsg {
+        FabricMsg { at, bytes, tenant }
+    }
+
+    #[test]
+    fn solo_tenant_replay_adds_no_wait() {
+        // A solo trace is already serialized at this bandwidth: starts are
+        // spaced at least one serialization apart.
+        let bw = 16.0;
+        let mut msgs = Vec::new();
+        let mut t = 0;
+        for _ in 0..10 {
+            msgs.push(msg(t, 4096, 0));
+            t += transfer_ps(4096, bw) + 3 * NS;
+        }
+        let out = arbitrate(msgs, bw, bw, 1);
+        assert_eq!(out.waits[0], 0);
+        assert_eq!(out.messages, 10);
+        assert_eq!(out.bytes, 40_960);
+    }
+
+    #[test]
+    fn overlapping_tenants_pay_serialization_wait() {
+        let bw = 1.0; // 1 GB/s → 1 MB = 1 ms
+        let out = arbitrate(vec![msg(0, 1_000_000, 0), msg(0, 1_000_000, 1)], bw, bw, 2);
+        // Tenant 0 wins the (time, tenant) tie; tenant 1 queues a full
+        // serialization behind it.
+        assert_eq!(out.waits[0], 0);
+        assert_eq!(out.waits[1], transfer_ps(1_000_000, bw));
+        assert_eq!(out.busy.union(), 2 * transfer_ps(1_000_000, bw));
+        assert!(out.utilization(out.wire_free) > 0.99);
+    }
+
+    #[test]
+    fn order_of_input_does_not_matter() {
+        let a = vec![msg(500, 64, 1), msg(0, 4096, 0), msg(200, 128, 1)];
+        let mut b = a.clone();
+        b.reverse();
+        let oa = arbitrate(a, 16.0, 16.0, 2);
+        let ob = arbitrate(b, 16.0, 16.0, 2);
+        assert_eq!(oa.waits, ob.waits);
+        assert_eq!(oa.wire_free, ob.wire_free);
+    }
+
+    #[test]
+    fn head_of_line_pushback_counts_once_not_per_message() {
+        // Tenant 0's single 1 MB transfer delays the head of tenant 1's
+        // back-to-back train; the ripple through the train is ONE
+        // completion shift (≈ the push-back), not per-message sums.
+        let bw = 1.0;
+        let big = transfer_ps(1_000_000, bw);
+        let small = transfer_ps(10_000, bw);
+        let mut msgs = vec![msg(0, 1_000_000, 0)];
+        for k in 0..5u64 {
+            msgs.push(msg(k * small, 10_000, 1));
+        }
+        let out = arbitrate(msgs, bw, bw, 2);
+        assert_eq!(out.waits[0], 0);
+        // Tail shift: last small message finishes at big + 5·small wire
+        // time vs solo 5·small — exactly one `big` of lateness.
+        assert_eq!(out.waits[1], big);
+    }
+
+    #[test]
+    fn narrow_fabric_charges_even_a_single_tenant() {
+        // Solo trace serialized at 16 GB/s, fabric at 4 GB/s: messages
+        // issued back-to-back now queue.
+        let dev_bw = 16.0;
+        let mut msgs = Vec::new();
+        let mut t = 0;
+        for _ in 0..4 {
+            msgs.push(msg(t, 1 << 20, 0));
+            t += transfer_ps(1 << 20, dev_bw);
+        }
+        let out = arbitrate(msgs, 4.0, dev_bw, 1);
+        assert!(out.waits[0] > 0);
+    }
+}

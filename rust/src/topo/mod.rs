@@ -1,0 +1,219 @@
+//! Shared-fabric resource/topology layer: multi-device, multi-tenant
+//! simulation over contended CXL links.
+//!
+//! The paper evaluates each workload alone on one CCM; this layer scales
+//! the same protocol engines to the deployments UDON and CXLMemUring
+//! argue for — many concurrent streams sharing a pool of CCM devices
+//! behind one CXL fabric. Three pieces:
+//!
+//! - [`DeviceCtx`] — the borrowed resource bundle every protocol engine
+//!   runs against (host/CCM [`PuPool`]s, CXL.mem/CXL.io [`Link`]s). The
+//!   engines in [`crate::protocol`] are *strategies over these borrowed
+//!   resources*: `rp/bs/axle::run(w, cfg, &mut ctx)`. A fresh ctx per run
+//!   reproduces the pre-refactor single-device timing bit for bit.
+//! - [`Topology`] — N identical CCM devices described by a
+//!   [`TopologySpec`] (per-device pools and links, optional shared
+//!   upstream fabric link), plus tenant placement
+//!   ([`Placement::RoundRobin`] / [`Placement::LeastLoaded`]) and
+//!   per-device contention accounting.
+//! - [`tenant`] — the multi-tenant driver: K concurrent workload streams
+//!   with deterministic open-loop arrivals, placed across devices;
+//!   per-device link contention and shared-fabric serialization are
+//!   arbitrated by [`fabric`] over the solo runs' wire traces.
+//!
+//! **Sharing model.** Each tenant gets its own protocol-visible device
+//! resources — a fresh [`DeviceCtx`] per stream (command queue pair +
+//! rings, the per-requestor state CXLMemUring's asynchronous pool-access
+//! model assumes) — so a tenant's
+//! solo timeline is simulated exactly by the existing engines. What
+//! tenants *share* is wire bandwidth: the device's CXL.mem/CXL.io links
+//! and the optional upstream fabric link. Contention is computed by
+//! deterministic replay arbitration of the traced wire occupancies
+//! ([`fabric::arbitrate`]). CCM PU-pool sharing across co-located
+//! tenants is a ROADMAP follow-on (per-tenant QoS policies).
+
+pub mod fabric;
+pub mod tenant;
+
+pub use crate::config::{Placement, TopologySpec};
+pub use fabric::{arbitrate, ArbitrationOutcome, FabricMsg};
+pub use tenant::{run_tenants, sweep_tenant_grid, TenantReport, TenantRun, TenantSpec};
+
+use crate::config::SimConfig;
+use crate::cxl::Link;
+use crate::sim::{Ps, PuPool};
+
+/// The resource bundle one protocol run borrows: the host-side PU pool,
+/// one device's CCM PU pool, and that device's two CXL channels.
+///
+/// Construction order and parameters match what the protocol engines
+/// historically built internally, so `DeviceCtx::new(cfg)` + the
+/// refactored engines reproduce the old output exactly.
+#[derive(Debug)]
+pub struct DeviceCtx {
+    /// Host-side processing units (shared side of the interaction).
+    pub host: PuPool,
+    /// This device's CCM processing units.
+    pub ccm: PuPool,
+    /// This device's CXL.mem channel (launches, sync loads, flow control).
+    pub mem: Link,
+    /// This device's CXL.io channel (mailbox, DMA back-streaming).
+    pub io: Link,
+}
+
+impl DeviceCtx {
+    /// Fresh single-run resources for `cfg` (what each engine used to
+    /// construct internally).
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self {
+            host: PuPool::new(cfg.host.num_pus),
+            ccm: PuPool::new(cfg.ccm.num_pus),
+            mem: Link::new(cfg.cxl_mem_rtt, cfg.cxl_bw_gbps),
+            io: Link::new(cfg.cxl_io_rtt, cfg.cxl_bw_gbps),
+        }
+    }
+
+    /// As [`DeviceCtx::new`] with wire-occupancy tracing enabled on both
+    /// links (tracing never changes timing; see [`Link::enable_trace`]).
+    pub fn traced(cfg: &SimConfig) -> Self {
+        let mut ctx = Self::new(cfg);
+        ctx.mem.enable_trace();
+        ctx.io.enable_trace();
+        ctx
+    }
+}
+
+/// Per-device aggregate state: placement load plus the contention stats
+/// the arbitration passes fold back in.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    /// Tenants placed on this device.
+    pub tenants: u32,
+    /// Accumulated solo service demand (placement load metric).
+    pub load: Ps,
+    /// Added completion delay on this device's CXL.mem link (sum of the
+    /// per-tenant completion shifts; see `fabric::ArbitrationOutcome`).
+    pub mem_wait: Ps,
+    /// Added completion delay on this device's CXL.io link (same
+    /// accounting as `mem_wait`).
+    pub io_wait: Ps,
+    /// Data bytes carried by this device's links.
+    pub bytes: u64,
+    /// Wire busy-union of this device's links (mem + io).
+    pub link_busy: Ps,
+}
+
+/// N identical CCM devices built from one [`SimConfig`], with tenant
+/// placement and per-device contention accounting. Per-tenant device
+/// resources are materialized as fresh [`DeviceCtx`]s (devices are
+/// homogeneous, so a ctx is exactly `DeviceCtx::new(config)`); the
+/// per-device *shared* state lives here as [`DeviceStats`], folded in by
+/// the tenant driver's arbitration passes.
+#[derive(Debug)]
+pub struct Topology {
+    cfg: SimConfig,
+    spec: TopologySpec,
+    devices: Vec<DeviceStats>,
+    rr_next: usize,
+}
+
+impl Topology {
+    pub fn new(cfg: SimConfig, spec: TopologySpec) -> Self {
+        assert!(spec.devices > 0, "topology needs at least one device");
+        let devices = vec![DeviceStats::default(); spec.devices];
+        Self { cfg, spec, devices, rr_next: 0 }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn spec(&self) -> &TopologySpec {
+        &self.spec
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, d: u32) -> &DeviceStats {
+        &self.devices[d as usize]
+    }
+
+    pub fn device_mut(&mut self, d: u32) -> &mut DeviceStats {
+        &mut self.devices[d as usize]
+    }
+
+    pub fn devices(&self) -> &[DeviceStats] {
+        &self.devices
+    }
+
+    /// Place one tenant with solo service demand `solo` under the spec's
+    /// placement policy; returns the chosen device id and updates its
+    /// load accounting.
+    pub fn place(&mut self, solo: Ps) -> u32 {
+        let d = match self.spec.placement {
+            Placement::RoundRobin => {
+                let d = self.rr_next % self.devices.len();
+                self.rr_next += 1;
+                d
+            }
+            Placement::LeastLoaded => {
+                let mut best = 0usize;
+                for (i, dev) in self.devices.iter().enumerate() {
+                    if dev.load < self.devices[best].load {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.devices[d].tenants += 1;
+        self.devices[d].load += solo;
+        d as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn device_ctx_matches_engine_construction() {
+        let cfg = SimConfig::m2ndp();
+        let ctx = DeviceCtx::new(&cfg);
+        assert_eq!(ctx.host.len(), cfg.host.num_pus);
+        assert_eq!(ctx.ccm.len(), cfg.ccm.num_pus);
+        assert_eq!(ctx.mem.rtt(), cfg.cxl_mem_rtt);
+        assert_eq!(ctx.io.rtt(), cfg.cxl_io_rtt);
+        assert!(ctx.mem.trace().is_empty() && ctx.io.trace().is_empty());
+    }
+
+    #[test]
+    fn round_robin_placement_cycles() {
+        let mut t = Topology::new(SimConfig::m2ndp(), TopologySpec::shared_fabric(3, 16.0));
+        let got: Vec<u32> = (0..6).map(|_| t.place(100)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+        assert!(t.devices().iter().all(|d| d.tenants == 2));
+    }
+
+    #[test]
+    fn least_loaded_placement_fills_gaps() {
+        let spec = TopologySpec::shared_fabric(2, 16.0).with_placement(Placement::LeastLoaded);
+        let mut t = Topology::new(SimConfig::m2ndp(), spec);
+        assert_eq!(t.place(100), 0); // both empty → lowest id
+        assert_eq!(t.place(10), 1); // device 0 now loaded
+        assert_eq!(t.place(10), 1); // device 1 (load 10) < device 0 (100)
+        assert_eq!(t.place(10), 1); // still lighter (20 < 100)
+        assert_eq!(t.device(0).tenants, 1);
+        assert_eq!(t.device(1).tenants, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn zero_device_topology_rejected() {
+        let spec = TopologySpec { devices: 0, ..TopologySpec::default() };
+        let _ = Topology::new(SimConfig::m2ndp(), spec);
+    }
+}

@@ -1,0 +1,524 @@
+//! Multi-tenant driver: K concurrent workload streams over a shared
+//! [`Topology`].
+//!
+//! The production scenario the ROADMAP targets — many users' offload
+//! streams sharing a pool of CCM devices — is simulated in three
+//! deterministic passes:
+//!
+//! 1. **Solo pass.** Each distinct `(workload, protocol)` job runs once
+//!    through the unchanged protocol engines on a fresh traced
+//!    [`DeviceCtx`](super::DeviceCtx) (fanned out across cores via
+//!    [`crate::sweep::run_traced_jobs`]); streams sharing a job reuse its
+//!    metrics and wire trace — devices are homogeneous, so one solo run
+//!    stands for every tenant of that job. Per-tenant rings/queue pairs
+//!    are private, so the solo timeline is exact.
+//! 2. **Arrivals + placement.** Open-loop arrivals: stream `i` arrives at
+//!    a seeded, jittered multiple of the mean inter-arrival gap (derived
+//!    from mean solo runtime, device count and the load factor) —
+//!    arrivals never depend on completions. Placement is round-robin or
+//!    least-loaded ([`crate::config::Placement`]).
+//! 3. **Contention pass.** Each device's CXL.mem and CXL.io links
+//!    serialize the wire traffic of the tenants placed on it, and the
+//!    optional shared upstream fabric link serializes *all* devices'
+//!    traffic, via replay arbitration ([`super::fabric::arbitrate`]).
+//!    Device link and fabric form a pipelined two-stage path carrying
+//!    the same bytes, so a tenant's contended runtime = solo runtime +
+//!    `max(device wait, fabric wait)` — the bottleneck stage's delay
+//!    (RP/BS are fully serialized pipelines, so that wait lands on the
+//!    critical path; for AXLE it is a conservative upper bound on the
+//!    slowdown).
+//!
+//! Everything is a pure function of `(config, topology, tenant spec)`;
+//! two invocations produce byte-identical reports.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{Protocol, SimConfig, TopologySpec};
+use crate::metrics::{percentile, RunMetrics};
+use crate::sim::{ps_to_us, Ps};
+use crate::sweep::{self, SpecJob};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::workload::ALL_ANNOTATIONS;
+
+use super::fabric::{arbitrate, FabricMsg};
+use super::{DeviceStats, Topology};
+
+/// Declarative description of a tenant mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Number of concurrent streams (K).
+    pub streams: usize,
+    /// Workload annotations, cycled across streams.
+    pub workloads: Vec<char>,
+    /// Offload protocol every stream uses.
+    pub proto: Protocol,
+    /// Open-loop load factor: mean inter-arrival gap =
+    /// `mean solo runtime / (devices × load)`. 1.0 ≈ devices kept busy.
+    pub load: f64,
+    /// Arrival-jitter seed (independent of the simulation seed).
+    pub seed: u64,
+}
+
+impl TenantSpec {
+    /// `streams` tenants cycling through all Table IV workloads under
+    /// AXLE at unit load.
+    pub fn new(streams: usize) -> Self {
+        Self {
+            streams,
+            workloads: ALL_ANNOTATIONS.to_vec(),
+            proto: Protocol::Axle,
+            load: 1.0,
+            seed: 0x7E4A_17,
+        }
+    }
+
+    pub fn with_workloads(mut self, workloads: Vec<char>) -> Self {
+        assert!(!workloads.is_empty(), "tenant mix needs at least one workload");
+        self.workloads = workloads;
+        self
+    }
+
+    pub fn with_proto(mut self, proto: Protocol) -> Self {
+        self.proto = proto;
+        self
+    }
+
+    pub fn with_load(mut self, load: f64) -> Self {
+        assert!(load > 0.0, "load factor must be positive");
+        self.load = load;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// One tenant's outcome.
+#[derive(Debug, Clone)]
+pub struct TenantRun {
+    pub tenant: u32,
+    pub annot: char,
+    pub device: u32,
+    /// Open-loop arrival time.
+    pub arrival: Ps,
+    /// Solo (uncontended) metrics of this tenant's stream.
+    pub solo: RunMetrics,
+    /// Completion shift from sharing the device's CXL.mem/CXL.io links
+    /// (worst channel).
+    pub device_wait: Ps,
+    /// Completion shift from the shared upstream fabric link.
+    pub fabric_wait: Ps,
+}
+
+impl TenantRun {
+    /// Contended end-to-end runtime (arrival-relative): solo runtime plus
+    /// the **bottleneck** stage's added delay. Device link and fabric are
+    /// a pipelined (cut-through) two-stage path carrying the same bytes,
+    /// so a conflict that appears on both stages is one physical wait,
+    /// not two — charging `max` instead of the sum avoids double-counting
+    /// the common case where the fabric replay sees the identical
+    /// conflicts the device replay saw (it under-counts only when the
+    /// two stages conflict with *different* tenants at different times).
+    pub fn total(&self) -> Ps {
+        self.solo.total + self.device_wait.max(self.fabric_wait)
+    }
+
+    /// Contended completion time (absolute).
+    pub fn completion(&self) -> Ps {
+        self.arrival + self.total()
+    }
+
+    /// Contended / solo runtime ratio (≥ 1).
+    pub fn slowdown(&self) -> f64 {
+        if self.solo.total == 0 {
+            1.0
+        } else {
+            self.total() as f64 / self.solo.total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("tenant".into(), Json::Num(self.tenant as f64));
+        o.insert("annot".into(), Json::Str(self.annot.to_string()));
+        o.insert("device".into(), Json::Num(self.device as f64));
+        o.insert("arrival_ps".into(), Json::Num(self.arrival as f64));
+        o.insert("solo_total_ps".into(), Json::Num(self.solo.total as f64));
+        o.insert("device_wait_ps".into(), Json::Num(self.device_wait as f64));
+        o.insert("fabric_wait_ps".into(), Json::Num(self.fabric_wait as f64));
+        o.insert("total_ps".into(), Json::Num(self.total() as f64));
+        o.insert("slowdown".into(), Json::Num(self.slowdown()));
+        Json::Obj(o)
+    }
+}
+
+/// Aggregate fabric-contention statistics.
+#[derive(Debug, Clone, Default)]
+pub struct FabricReport {
+    /// Shared fabric bandwidth (GB/s); `None` if no fabric was modelled.
+    pub bw_gbps: Option<f64>,
+    pub messages: u64,
+    pub bytes: u64,
+    /// Wire busy-union of the fabric link.
+    pub busy: Ps,
+    /// Total added queueing delay across tenants.
+    pub wait: Ps,
+    /// busy / makespan.
+    pub utilization: f64,
+}
+
+/// The full multi-tenant simulation result.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenants: Vec<TenantRun>,
+    pub devices: Vec<DeviceStats>,
+    pub fabric: FabricReport,
+    /// Last contended completion across all tenants.
+    pub makespan: Ps,
+    pub p50_slowdown: f64,
+    pub p99_slowdown: f64,
+    pub max_slowdown: f64,
+}
+
+impl TenantReport {
+    pub fn to_json(&self) -> Json {
+        let mut fab = BTreeMap::new();
+        match self.fabric.bw_gbps {
+            Some(bw) => fab.insert("bw_gbps".into(), Json::Num(bw)),
+            None => fab.insert("bw_gbps".into(), Json::Null),
+        };
+        fab.insert("messages".into(), Json::Num(self.fabric.messages as f64));
+        fab.insert("bytes".into(), Json::Num(self.fabric.bytes as f64));
+        fab.insert("busy_ps".into(), Json::Num(self.fabric.busy as f64));
+        fab.insert("wait_ps".into(), Json::Num(self.fabric.wait as f64));
+        fab.insert("utilization".into(), Json::Num(self.fabric.utilization));
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                let mut o = BTreeMap::new();
+                o.insert("tenants".into(), Json::Num(d.tenants as f64));
+                o.insert("load_ps".into(), Json::Num(d.load as f64));
+                o.insert("mem_wait_ps".into(), Json::Num(d.mem_wait as f64));
+                o.insert("io_wait_ps".into(), Json::Num(d.io_wait as f64));
+                o.insert("bytes".into(), Json::Num(d.bytes as f64));
+                o.insert("link_busy_ps".into(), Json::Num(d.link_busy as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("tenants".into(), Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()));
+        o.insert("devices".into(), Json::Arr(devices));
+        o.insert("fabric".into(), Json::Obj(fab));
+        o.insert("makespan_ps".into(), Json::Num(self.makespan as f64));
+        o.insert("p50_slowdown".into(), Json::Num(self.p50_slowdown));
+        o.insert("p99_slowdown".into(), Json::Num(self.p99_slowdown));
+        o.insert("max_slowdown".into(), Json::Num(self.max_slowdown));
+        Json::Obj(o)
+    }
+}
+
+/// Run `spec.streams` concurrent streams over `topo_spec` devices with
+/// `cfg` hardware, fanning the solo simulations across `jobs` worker
+/// threads. Deterministic: the result is a pure function of the three
+/// spec arguments (the worker count never changes results).
+pub fn run_tenants(
+    cfg: &SimConfig,
+    topo_spec: &TopologySpec,
+    spec: &TenantSpec,
+    jobs: usize,
+) -> TenantReport {
+    assert!(spec.streams > 0, "need at least one stream");
+    assert!(!spec.workloads.is_empty(), "tenant mix needs at least one workload");
+    let mut topo = Topology::new(cfg.clone(), topo_spec.clone());
+
+    // ---- Pass 1: solo runs, one per distinct (annot, proto) job. ----
+    let annots: Vec<char> =
+        (0..spec.streams).map(|i| spec.workloads[i % spec.workloads.len()]).collect();
+    let mut job_of: HashMap<char, usize> = HashMap::new();
+    let mut distinct: Vec<char> = Vec::new();
+    for &a in &annots {
+        job_of.entry(a).or_insert_with(|| {
+            distinct.push(a);
+            distinct.len() - 1
+        });
+    }
+    let shared_cfg = Arc::new(cfg.clone());
+    let mut cache = sweep::WorkloadCache::new();
+    let job_list: Vec<SpecJob> = distinct
+        .iter()
+        .map(|&a| SpecJob {
+            w: cache.get(a, cfg),
+            proto: spec.proto,
+            cfg: Arc::clone(&shared_cfg),
+        })
+        .collect();
+    let solo_runs = sweep::run_traced_jobs(&job_list, jobs);
+
+    // ---- Pass 2: open-loop arrivals + placement. ----
+    let solo_total =
+        |i: usize| solo_runs[job_of[&annots[i]]].metrics.total;
+    let mean_solo: Ps = ((0..spec.streams).map(solo_total).sum::<Ps>()
+        / spec.streams as u64)
+        .max(1);
+    let mean_gap: Ps =
+        ((mean_solo as f64 / (topo.num_devices() as f64 * spec.load)).round() as Ps).max(1);
+    let mut rng = Pcg32::seed_from_u64(spec.seed ^ 0x7E4A_4E7A_5EED_0001);
+    let mut arrivals: Vec<Ps> = Vec::with_capacity(spec.streams);
+    let mut t: Ps = 0;
+    for i in 0..spec.streams {
+        if i > 0 {
+            // Jittered gap in [0.5, 1.5) × mean (open-loop: independent of
+            // completions).
+            let gap = (mean_gap as f64 * (0.5 + rng.next_f64())).round() as Ps;
+            t += gap.max(1);
+        }
+        arrivals.push(t);
+    }
+    let placements: Vec<u32> = (0..spec.streams).map(|i| topo.place(solo_total(i))).collect();
+
+    // ---- Pass 3: replay arbitration (device links, then fabric). ----
+    let n = spec.streams;
+    let mut device_wait: Vec<Ps> = vec![0; n];
+    let mut fabric_msgs: Vec<FabricMsg> = Vec::new();
+    for d in 0..topo.num_devices() as u32 {
+        let mut mem_msgs: Vec<FabricMsg> = Vec::new();
+        let mut io_msgs: Vec<FabricMsg> = Vec::new();
+        for i in 0..n {
+            if placements[i] != d {
+                continue;
+            }
+            let run = &solo_runs[job_of[&annots[i]]];
+            for m in &run.mem_trace {
+                mem_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant: i as u32 });
+            }
+            for m in &run.io_trace {
+                io_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant: i as u32 });
+            }
+        }
+        // All device traffic also crosses the upstream fabric (skip the
+        // copies entirely when no fabric link is modelled).
+        if topo_spec.fabric_bw_gbps.is_some() {
+            fabric_msgs.extend(mem_msgs.iter().copied());
+            fabric_msgs.extend(io_msgs.iter().copied());
+        }
+        let mem_out = arbitrate(mem_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n);
+        let io_out = arbitrate(io_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n);
+        let dev = topo.device_mut(d);
+        dev.mem_wait = mem_out.total_wait();
+        dev.io_wait = io_out.total_wait();
+        dev.bytes = mem_out.bytes + io_out.bytes;
+        dev.link_busy = mem_out.busy.union() + io_out.busy.union();
+        for i in 0..n {
+            // CXL.mem and CXL.io are independent wires; a tenant's device
+            // delay is its worst channel's completion shift (tenants on
+            // other devices have zero in both vectors).
+            device_wait[i] = device_wait[i].max(mem_out.waits[i].max(io_out.waits[i]));
+        }
+    }
+    let fabric_out =
+        topo_spec.fabric_bw_gbps.map(|bw| arbitrate(fabric_msgs, bw, cfg.cxl_bw_gbps, n));
+
+    // ---- Assemble. ----
+    let tenants: Vec<TenantRun> = (0..n)
+        .map(|i| TenantRun {
+            tenant: i as u32,
+            annot: annots[i],
+            device: placements[i],
+            arrival: arrivals[i],
+            solo: solo_runs[job_of[&annots[i]]].metrics.clone(),
+            device_wait: device_wait[i],
+            fabric_wait: fabric_out.as_ref().map_or(0, |f| f.waits[i]),
+        })
+        .collect();
+    let makespan = tenants.iter().map(|t| t.completion()).max().unwrap_or(0);
+    let fabric = match (&fabric_out, topo_spec.fabric_bw_gbps) {
+        (Some(f), Some(bw)) => FabricReport {
+            bw_gbps: Some(bw),
+            messages: f.messages,
+            bytes: f.bytes,
+            busy: f.busy.union(),
+            wait: f.total_wait(),
+            utilization: f.utilization(makespan),
+        },
+        _ => FabricReport::default(),
+    };
+    let slowdowns: Vec<f64> = tenants.iter().map(|t| t.slowdown()).collect();
+    TenantReport {
+        p50_slowdown: percentile(&slowdowns, 50.0),
+        p99_slowdown: percentile(&slowdowns, 99.0),
+        max_slowdown: slowdowns.iter().cloned().fold(f64::MIN, f64::max),
+        makespan,
+        devices: topo.devices().to_vec(),
+        fabric,
+        tenants,
+    }
+}
+
+/// Sweep the topology axes: one [`TenantReport`] per `(devices, streams)`
+/// grid point, with the base specs' other knobs held fixed. The devices/
+/// streams pair is the sweep axis the contention figure
+/// (`axle report fig17`) walks.
+pub fn sweep_tenant_grid(
+    cfg: &SimConfig,
+    topo_base: &TopologySpec,
+    tenant_base: &TenantSpec,
+    devices_axis: &[usize],
+    streams_axis: &[usize],
+    jobs: usize,
+) -> Vec<(usize, usize, TenantReport)> {
+    let mut out = Vec::with_capacity(devices_axis.len() * streams_axis.len());
+    for &d in devices_axis {
+        for &k in streams_axis {
+            let topo = TopologySpec { devices: d, ..topo_base.clone() };
+            let tenants = TenantSpec { streams: k, ..tenant_base.clone() };
+            out.push((d, k, run_tenants(cfg, &topo, &tenants, jobs)));
+        }
+    }
+    out
+}
+
+/// One printable line per tenant (the `axle tenants` table body).
+pub fn format_tenant_row(t: &TenantRun) -> String {
+    format!(
+        "#{:<3} ({})  dev {:<2} arr {:>10.2} us  solo {:>10.2} us  +dev {:>8.2} us  +fab {:>8.2} us  x{:<5.3}",
+        t.tenant,
+        t.annot,
+        t.device,
+        ps_to_us(t.arrival),
+        ps_to_us(t.solo.total),
+        ps_to_us(t.device_wait),
+        ps_to_us(t.fabric_wait),
+        t.slowdown()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Placement;
+
+    fn data_heavy_mix() -> Vec<char> {
+        // KNN (a), SSSP (d), PageRank (e), DLRM (i) — 'e' and 'i' move
+        // megabytes per iteration, the fabric-contention heavy hitters.
+        vec!['a', 'd', 'e', 'i']
+    }
+
+    fn spec_2x8() -> (SimConfig, TopologySpec, TenantSpec) {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+        let tenants = TenantSpec::new(8).with_workloads(data_heavy_mix());
+        (cfg, topo, tenants)
+    }
+
+    #[test]
+    fn two_devices_eight_streams_deterministic_with_fabric_contention() {
+        // The PR's acceptance scenario: `axle tenants --devices 2
+        // --streams 8` must be deterministic and show nonzero fabric
+        // contention on at least one data-heavy workload.
+        let (cfg, topo, tenants) = spec_2x8();
+        let a = run_tenants(&cfg, &topo, &tenants, 4);
+        let b = run_tenants(&cfg, &topo, &tenants, 1);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.tenants.len(), 8);
+        // Round-robin placement across both devices.
+        for (i, t) in a.tenants.iter().enumerate() {
+            assert_eq!(t.device, (i % 2) as u32);
+        }
+        assert!(a.fabric.wait > 0, "expected shared-fabric queueing");
+        assert!(
+            a.tenants.iter().any(|t| "dei".contains(t.annot) && t.fabric_wait > 0),
+            "expected a data-heavy tenant to pay fabric wait"
+        );
+        assert!(a.p99_slowdown >= a.p50_slowdown);
+        assert!(a.max_slowdown > 1.0);
+        assert!(a.makespan >= a.tenants.iter().map(|t| t.completion()).max().unwrap());
+        assert!(a.fabric.utilization > 0.0 && a.fabric.utilization <= 1.0);
+    }
+
+    #[test]
+    fn single_stream_has_no_contention() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let tenants = TenantSpec::new(1).with_workloads(vec!['e']);
+        let r = run_tenants(&cfg, &topo, &tenants, 2);
+        assert_eq!(r.tenants.len(), 1);
+        let t = &r.tenants[0];
+        // Alone at device bandwidth the replay reproduces the solo
+        // schedule: zero added wait, slowdown exactly 1.
+        assert_eq!(t.device_wait, 0);
+        assert_eq!(t.fabric_wait, 0);
+        assert!((t.slowdown() - 1.0).abs() < 1e-12);
+        assert_eq!(r.makespan, t.solo.total);
+    }
+
+    #[test]
+    fn solo_metrics_match_direct_protocol_runs() {
+        // The tenant driver's solo pass must be the exact single-device
+        // simulation, not an approximation of it.
+        let (cfg, topo, tenants) = spec_2x8();
+        let r = run_tenants(&cfg, &topo, &tenants, 4);
+        for t in &r.tenants {
+            let w = crate::workload::by_annotation(t.annot, &cfg);
+            let direct = crate::protocol::run(tenants.proto, &w, &cfg);
+            assert_eq!(t.solo.to_json().to_string(), direct.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn least_loaded_placement_spreads_heavy_mix() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_placement(Placement::LeastLoaded);
+        let tenants = TenantSpec::new(6).with_workloads(data_heavy_mix());
+        let r = run_tenants(&cfg, &topo, &tenants, 4);
+        assert!(r.devices.iter().all(|d| d.tenants > 0), "both devices used");
+        // Greedy least-loaded: device loads within one max-solo of each
+        // other.
+        let max_solo = r.tenants.iter().map(|t| t.solo.total).max().unwrap();
+        let loads: Vec<Ps> = r.devices.iter().map(|d| d.load).collect();
+        assert!(loads.iter().max().unwrap() - loads.iter().min().unwrap() <= max_solo);
+    }
+
+    #[test]
+    fn no_fabric_means_no_fabric_wait() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec { devices: 2, fabric_bw_gbps: None, ..TopologySpec::default() };
+        let tenants = TenantSpec::new(4).with_workloads(data_heavy_mix());
+        let r = run_tenants(&cfg, &topo, &tenants, 2);
+        assert!(r.tenants.iter().all(|t| t.fabric_wait == 0));
+        assert_eq!(r.fabric.bw_gbps, None);
+        assert_eq!(r.fabric.wait, 0);
+    }
+
+    #[test]
+    fn narrower_fabric_hurts_more() {
+        let (cfg, topo, tenants) = spec_2x8();
+        let wide = run_tenants(&cfg, &topo, &tenants, 4);
+        let narrow_topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps / 4.0);
+        let narrow = run_tenants(&cfg, &narrow_topo, &tenants, 4);
+        assert!(narrow.fabric.wait > wide.fabric.wait);
+        assert!(narrow.p99_slowdown >= wide.p99_slowdown);
+    }
+
+    #[test]
+    fn grid_sweep_covers_axes() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let tenants = TenantSpec::new(1).with_workloads(vec!['a', 'd']);
+        let grid = sweep_tenant_grid(&cfg, &topo, &tenants, &[1, 2], &[2, 4], 2);
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].0, 1);
+        assert_eq!(grid[0].1, 2);
+        assert_eq!(grid[3].0, 2);
+        assert_eq!(grid[3].1, 4);
+        for (_, k, r) in &grid {
+            assert_eq!(r.tenants.len(), *k);
+        }
+    }
+}

@@ -42,7 +42,7 @@ pub struct HostTask {
 }
 
 /// One offload iteration.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct IterSpec {
     pub ccm_tasks: Vec<CcmTask>,
     pub host_tasks: Vec<HostTask>,
@@ -58,7 +58,10 @@ impl IterSpec {
 }
 
 /// A full workload: Table IV row compiled against a [`SimConfig`].
-#[derive(Debug, Clone)]
+/// `PartialEq` compares the full timing skeleton (every task duration,
+/// result size and dependency) — what the fingerprint guard test uses to
+/// prove cache-key completeness.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WorkloadSpec {
     pub name: String,
     /// Table IV annotation, 'a'..='i'.

@@ -289,3 +289,63 @@ fn prop_jitter_bounded_effect_on_serial_protocols() {
         }
     });
 }
+
+// ------------------------------------------------------------------
+// Shared-link serialization (topology layer, §IV wire model).
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_shared_link_serializes_two_senders_without_overlap() {
+    // Two logical senders interleave send/round_trip calls on one Link
+    // (the multi-tenant sharing the topology layer arbitrates). Invariants:
+    // wire occupancies never overlap, wire starts are monotone, arrival
+    // times are monotone in (global) issue order and per sender.
+    use axle::cxl::Link;
+    use axle::sim::{transfer_ps, Ps, NS};
+    run_prop("shared_link_serialization", 200, |rng| {
+        let bw = [1.0, 4.0, 16.0, 32.0][rng.below(4) as usize];
+        let rtt = rng.below(500) * NS;
+        let mut link = Link::new(rtt, bw);
+        link.enable_trace();
+        let mut t: Ps = 0;
+        let mut arrivals: Vec<Ps> = Vec::new();
+        let mut per_sender_last: [Ps; 2] = [0, 0];
+        let mut issues: Vec<(Ps, u64)> = Vec::new();
+        for _ in 0..rng.range(5, 120) {
+            // Global issue clock is nondecreasing (event-time order).
+            t += rng.below(2000) * 100;
+            let sender = rng.below(2) as usize;
+            let bytes = rng.range(1, 1 << 16);
+            let arrive = if rng.next_f64() < 0.5 {
+                link.send(t, bytes, true)
+            } else {
+                link.round_trip(t, bytes, true)
+            };
+            // Arrival monotone in issue order, globally and per sender.
+            if let Some(&prev) = arrivals.last() {
+                assert!(arrive >= prev, "global arrival order violated");
+            }
+            assert!(arrive >= per_sender_last[sender], "per-sender arrival order violated");
+            per_sender_last[sender] = arrive;
+            arrivals.push(arrive);
+            issues.push((t, bytes));
+        }
+        // Wire occupancies: every message traced, no two overlap.
+        let trace = link.take_trace();
+        assert_eq!(trace.len(), issues.len());
+        for (w, &(issue, bytes)) in trace.iter().zip(&issues) {
+            assert_eq!(w.bytes, bytes);
+            assert!(w.start >= issue, "wire cannot start before issue");
+        }
+        for pair in trace.windows(2) {
+            let end = pair[0].start + transfer_ps(pair[0].bytes, bw);
+            assert!(
+                pair[1].start >= end,
+                "wire overlap: [{}, {}) then start {}",
+                pair[0].start,
+                end,
+                pair[1].start
+            );
+        }
+    });
+}

@@ -1,0 +1,90 @@
+//! Topology-layer regression: the resource refactor must not move a
+//! single bit of the single-device, single-tenant timing, and the
+//! multi-tenant driver must be deterministic with real fabric contention.
+
+use axle::config::{Protocol, SimConfig, TopologySpec};
+use axle::topo::{DeviceCtx, TenantSpec};
+use axle::workload::{by_annotation, ALL_ANNOTATIONS};
+use axle::{protocol, topo};
+
+/// All 9 workloads × all 4 protocols: the legacy entry point (fresh
+/// internal resources), an explicit fresh [`DeviceCtx`], and a traced
+/// ctx must produce byte-identical metrics. The legacy entry point
+/// itself constructs resources exactly as the pre-refactor engines did,
+/// so this pins the whole matrix to the pre-refactor output.
+#[test]
+fn single_device_runs_bit_identical_across_ctx_paths() {
+    let cfg = SimConfig::m2ndp();
+    for a in ALL_ANNOTATIONS {
+        let w = by_annotation(a, &cfg);
+        for p in Protocol::ALL {
+            let legacy = protocol::run(p, &w, &cfg).to_json().to_string();
+            let mut ctx = DeviceCtx::new(&cfg);
+            let explicit = protocol::run_on(p, &w, &cfg, &mut ctx).to_json().to_string();
+            let mut traced = DeviceCtx::traced(&cfg);
+            let with_trace = protocol::run_on(p, &w, &cfg, &mut traced).to_json().to_string();
+            assert_eq!(legacy, explicit, "workload {a}, {}", p.label());
+            assert_eq!(legacy, with_trace, "workload {a}, {} (traced)", p.label());
+        }
+    }
+}
+
+/// Re-running the same protocol on the SAME ctx would accumulate busy
+/// state; the topology layer's contract is a fresh ctx per run. Verify
+/// a fresh ctx really resets everything (two fresh-ctx runs agree).
+#[test]
+fn fresh_ctx_per_run_is_stateless() {
+    let cfg = SimConfig::m2ndp();
+    let w = by_annotation('e', &cfg);
+    let first = protocol::run_on(Protocol::Axle, &w, &cfg, &mut DeviceCtx::new(&cfg));
+    let second = protocol::run_on(Protocol::Axle, &w, &cfg, &mut DeviceCtx::new(&cfg));
+    assert_eq!(first.to_json().to_string(), second.to_json().to_string());
+}
+
+/// The PR acceptance scenario, end to end through the public driver:
+/// `axle tenants --devices 2 --streams 8` — deterministic per-tenant
+/// metrics and nonzero fabric contention on a data-heavy workload.
+#[test]
+fn tenants_2x8_deterministic_and_contended() {
+    let cfg = SimConfig::m2ndp();
+    let topo_spec = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+    // Data-heavy mix: graph + DLRM rows move megabytes per iteration.
+    let tenants = TenantSpec::new(8).with_workloads(vec!['a', 'd', 'e', 'i']);
+    let r1 = topo::run_tenants(&cfg, &topo_spec, &tenants, 8);
+    let r2 = topo::run_tenants(&cfg, &topo_spec, &tenants, 2);
+    assert_eq!(r1.to_json().to_string(), r2.to_json().to_string(), "worker-count invariance");
+    assert_eq!(r1.tenants.len(), 8);
+    assert_eq!(r1.devices.len(), 2);
+    assert!(r1.devices.iter().all(|d| d.tenants == 4));
+    assert!(r1.fabric.wait > 0, "shared fabric must see queueing at 8 streams");
+    let heavy_contended = r1
+        .tenants
+        .iter()
+        .any(|t| matches!(t.annot, 'd' | 'e' | 'i') && t.fabric_wait > 0);
+    assert!(heavy_contended, "a data-heavy tenant must pay fabric wait");
+    // Arrivals are open-loop and strictly ordered.
+    for pair in r1.tenants.windows(2) {
+        assert!(pair[1].arrival > pair[0].arrival);
+    }
+    // Every slowdown is ≥ 1 and finite.
+    for t in &r1.tenants {
+        assert!(t.slowdown() >= 1.0 && t.slowdown().is_finite());
+    }
+}
+
+/// Tenant solo metrics must equal the solo protocol run — the driver
+/// composes the engines, it does not re-model them.
+#[test]
+fn tenant_solo_pass_is_the_exact_engine() {
+    let cfg = SimConfig::m2ndp();
+    let topo_spec = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+    let tenants = TenantSpec::new(3)
+        .with_workloads(vec!['e'])
+        .with_proto(Protocol::Bs);
+    let r = topo::run_tenants(&cfg, &topo_spec, &tenants, 4);
+    let w = by_annotation('e', &cfg);
+    let direct = protocol::run(Protocol::Bs, &w, &cfg);
+    for t in &r.tenants {
+        assert_eq!(t.solo.to_json().to_string(), direct.to_json().to_string());
+    }
+}

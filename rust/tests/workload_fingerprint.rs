@@ -1,0 +1,149 @@
+//! Workload-fingerprint guard: closes the "sweep cache could serve stale
+//! specs" ROADMAP hazard.
+//!
+//! The sweep engine's spec cache keys on exactly the config fields
+//! workload generation reads (`host`, `ccm`, `cxl_bw_gbps` — mirrored by
+//! `SimConfig::workload_fingerprint`). Two invariants keep that safe:
+//!
+//! 1. **Completeness** — perturbing any field *outside* the fingerprint
+//!    must leave every generated `WorkloadSpec` bit-identical. If this
+//!    ever fails, a generator started reading a new config field and the
+//!    fingerprint (plus `sweep::cache::WorkloadKey`) must fold it in.
+//! 2. **Sensitivity** — perturbing a fingerprinted field must change the
+//!    fingerprint (the cache rebuilds; conservative over-rebuilding for
+//!    fields like `uthreads` that no generator reads today is fine), and
+//!    for the structure-determining knobs the specs themselves must
+//!    actually differ.
+
+use axle::config::{SchedPolicy, SfPolicy, SimConfig};
+use axle::workload::{by_annotation, WorkloadSpec};
+
+/// One workload per generator function: KNN, SSSP, PageRank, two SSB
+/// queries, LLM attention, DLRM. (b/c share 'a's generator.)
+const GUARD_ANNOTS: [char; 7] = ['a', 'd', 'e', 'f', 'g', 'h', 'i'];
+
+fn specs(cfg: &SimConfig) -> Vec<WorkloadSpec> {
+    GUARD_ANNOTS.iter().map(|&a| by_annotation(a, cfg)).collect()
+}
+
+/// Every non-fingerprinted (simulation-time) knob, perturbed one at a
+/// time.
+fn non_fingerprinted_perturbations() -> Vec<(&'static str, SimConfig)> {
+    let base = SimConfig::m2ndp();
+    let mut out: Vec<(&'static str, SimConfig)> = Vec::new();
+    let mut push = |name: &'static str, f: &dyn Fn(&mut SimConfig)| {
+        let mut c = base.clone();
+        f(&mut c);
+        out.push((name, c));
+    };
+    push("cxl_mem_rtt", &|c| c.cxl_mem_rtt *= 2);
+    push("cxl_io_rtt", &|c| c.cxl_io_rtt *= 2);
+    push("firmware_freq_ghz", &|c| c.firmware_freq_ghz *= 2.0);
+    push("rp_poll_interval", &|c| c.rp_poll_interval *= 2);
+    push("sched", &|c| c.sched = SchedPolicy::Fifo);
+    push("axle.poll_interval", &|c| c.axle.poll_interval *= 2);
+    push("axle.streaming_factor_bytes", &|c| c.axle.streaming_factor_bytes *= 2);
+    push("axle.sf_policy", &|c| c.axle.sf_policy = SfPolicy::Adaptive);
+    push("axle.dma_slot_bytes", &|c| c.axle.dma_slot_bytes *= 2);
+    push("axle.dma_slot_capacity", &|c| c.axle.dma_slot_capacity /= 2);
+    push("axle.dma_prep", &|c| c.axle.dma_prep *= 2);
+    push("axle.interrupt_latency", &|c| c.axle.interrupt_latency *= 2);
+    push("axle.ooo_streaming", &|c| c.axle.ooo_streaming = false);
+    push("seed", &|c| c.seed ^= 0xBEEF);
+    push("jitter", &|c| c.jitter += 0.05);
+    out
+}
+
+/// Every fingerprinted (generation-relevant) knob, perturbed one at a
+/// time, with whether the perturbation must visibly change the specs.
+fn fingerprinted_perturbations() -> Vec<(&'static str, SimConfig, bool)> {
+    let base = SimConfig::m2ndp();
+    let mut out: Vec<(&'static str, SimConfig, bool)> = Vec::new();
+    let mut push = |name: &'static str, must_change_specs: bool, f: &dyn Fn(&mut SimConfig)| {
+        let mut c = base.clone();
+        f(&mut c);
+        out.push((name, c, must_change_specs));
+    };
+    // Structure-determining: task partitioning / durations shift.
+    push("ccm.num_pus", true, &|c| c.ccm.num_pus /= 2);
+    push("host.freq_ghz", true, &|c| c.host.freq_ghz /= 2.0);
+    push("ccm.freq_ghz", false, &|c| c.ccm.freq_ghz /= 2.0);
+    push("ccm.flops_per_cycle", false, &|c| c.ccm.flops_per_cycle /= 2.0);
+    push("ccm.dram_channels", false, &|c| c.ccm.dram_channels /= 2);
+    push("host.num_pus", false, &|c| c.host.num_pus /= 2);
+    push("host.uthreads", false, &|c| c.host.uthreads += 1);
+    push("host.flops_per_cycle", false, &|c| c.host.flops_per_cycle *= 2.0);
+    push("host.dram_channels", false, &|c| c.host.dram_channels /= 2);
+    push("ccm.uthreads", false, &|c| c.ccm.uthreads += 1);
+    push("cxl_bw_gbps", false, &|c| c.cxl_bw_gbps /= 2.0);
+    out
+}
+
+#[test]
+fn non_fingerprinted_fields_never_change_generated_specs() {
+    let base = SimConfig::m2ndp();
+    let baseline = specs(&base);
+    for (name, cfg) in non_fingerprinted_perturbations() {
+        assert_eq!(
+            cfg.workload_fingerprint(),
+            base.workload_fingerprint(),
+            "perturbing {name} must not move the workload fingerprint"
+        );
+        let got = specs(&cfg);
+        for (w, b) in got.iter().zip(&baseline) {
+            assert_eq!(
+                w,
+                b,
+                "perturbing {name} changed generated spec ({}): a generator \
+                 reads this field — fold it into SimConfig::workload_fingerprint \
+                 and sweep::cache::WorkloadKey or the sweep cache serves stale specs",
+                b.annot
+            );
+        }
+    }
+}
+
+#[test]
+fn fingerprinted_fields_always_move_the_fingerprint() {
+    let base = SimConfig::m2ndp();
+    let baseline = specs(&base);
+    for (name, cfg, must_change_specs) in fingerprinted_perturbations() {
+        assert_ne!(
+            cfg.workload_fingerprint(),
+            base.workload_fingerprint(),
+            "perturbing {name} must move the workload fingerprint (cache key)"
+        );
+        assert_ne!(cfg.fingerprint(), base.fingerprint(), "full fingerprint for {name}");
+        if must_change_specs {
+            let got = specs(&cfg);
+            assert!(
+                got.iter().zip(&baseline).any(|(w, b)| w != b),
+                "perturbing {name} should visibly change at least one generated spec"
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_key_and_fingerprint_agree_on_every_perturbation() {
+    // The exact-tuple cache key (WorkloadCache) and the lossy fingerprint
+    // must partition configs the same way for every perturbation above:
+    // same fingerprint ⇒ cache reuses the spec ⇒ specs must be equal.
+    let base = SimConfig::m2ndp();
+    let mut cache = axle::sweep::WorkloadCache::new();
+    let a0 = cache.get('a', &base);
+    for (name, cfg) in non_fingerprinted_perturbations() {
+        let a1 = cache.get('a', &cfg);
+        assert!(
+            std::sync::Arc::ptr_eq(&a0, &a1),
+            "cache must share specs across the {name} perturbation"
+        );
+    }
+    for (name, cfg, _) in fingerprinted_perturbations() {
+        let a1 = cache.get('a', &cfg);
+        assert!(
+            !std::sync::Arc::ptr_eq(&a0, &a1),
+            "cache must rebuild specs across the {name} perturbation"
+        );
+    }
+}
