@@ -1,7 +1,8 @@
-# Convenience targets; the CI gate is `build` + `test` + `lint`.
+# Convenience targets; the CI gate is `build` + `test` + `lint` +
+# `doc` + `doc-drift`.
 CARGO ?= cargo
 
-.PHONY: build test lint bench artifacts
+.PHONY: build test lint doc doc-drift bench artifacts
 
 build:
 	$(CARGO) build --release
@@ -12,6 +13,20 @@ test:
 # Warnings are errors: keep the tree clippy-clean.
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings
+
+# Rustdoc with warnings as errors: a broken intra-doc link fails the
+# build (scoped to the axle package; the vendored stubs aren't gated).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps -p axle
+
+# Docs drift gate: every `axle` subcommand dispatched in main.rs must be
+# documented in docs/CLI.md.
+doc-drift:
+	@missing=0; \
+	for s in $$(grep -oE 'Some\("[a-z0-9-]+"\)' rust/src/main.rs | sed 's/Some("//; s/")//' | sort -u); do \
+		grep -q "axle $$s" docs/CLI.md || { echo "docs/CLI.md is missing subcommand: $$s"; missing=1; }; \
+	done; \
+	test $$missing -eq 0 && echo "docs/CLI.md covers every axle subcommand"
 
 # Runs both bench binaries; figures.rs writes rust/BENCH_sweep.json
 # (machine-readable wall-time per figure bench, incl. the serial vs

@@ -425,6 +425,124 @@ impl Placement {
     }
 }
 
+/// Link arbitration policy for the multi-tenant contention replay
+/// (consumed by [`crate::topo::fabric`]; ROADMAP QoS follow-on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosPolicy {
+    /// Global issue order `(time, tenant id)` — the PR-2 arbiter. No
+    /// isolation: one tenant's burst heads-of-line every later arrival.
+    Fcfs,
+    /// Weighted round-robin at message granularity: each tenant gets
+    /// `weight` services per round while backlogged. Zero-weight tenants
+    /// are best-effort (served only when nothing weighted is eligible).
+    Wrr,
+    /// Deficit round-robin at byte granularity: per-tenant quanta
+    /// proportional to the configured bandwidth floors, so a backlogged
+    /// tenant's long-run wire share never drops below its floor.
+    Drr,
+}
+
+impl QosPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QosPolicy::Fcfs => "fcfs",
+            QosPolicy::Wrr => "wrr",
+            QosPolicy::Drr => "drr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fcfs" => Some(QosPolicy::Fcfs),
+            "wrr" | "weighted" => Some(QosPolicy::Wrr),
+            "drr" | "deficit" => Some(QosPolicy::Drr),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [QosPolicy; 3] = [QosPolicy::Fcfs, QosPolicy::Wrr, QosPolicy::Drr];
+}
+
+/// Per-tenant QoS configuration: which arbitration policy governs shared
+/// links, plus the per-tenant parameters the weighted policies read.
+/// `weights`/`floors` are cycled over tenant ids (`tenant % len`), so a
+/// two-class spec like `weights: [4, 1]` alternates priority across any
+/// stream count; empty vectors mean "everyone equal".
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosSpec {
+    pub policy: QosPolicy,
+    /// WRR services per round, by tenant id (cycled; empty ⇒ all 1).
+    pub weights: Vec<u64>,
+    /// DRR relative bandwidth floors, by tenant id (cycled; empty ⇒ equal
+    /// shares). Only ratios matter: quanta are normalized over the sum.
+    pub floors: Vec<f64>,
+}
+
+impl Default for QosSpec {
+    fn default() -> Self {
+        Self { policy: QosPolicy::Fcfs, weights: Vec::new(), floors: Vec::new() }
+    }
+}
+
+impl QosSpec {
+    pub fn fcfs() -> Self {
+        Self::default()
+    }
+
+    pub fn wrr(weights: Vec<u64>) -> Self {
+        Self { policy: QosPolicy::Wrr, weights, floors: Vec::new() }
+    }
+
+    pub fn drr(floors: Vec<f64>) -> Self {
+        Self { policy: QosPolicy::Drr, weights: Vec::new(), floors }
+    }
+
+    /// WRR weight of tenant `tenant` (cycled; default 1).
+    pub fn weight(&self, tenant: usize) -> u64 {
+        if self.weights.is_empty() {
+            1
+        } else {
+            self.weights[tenant % self.weights.len()]
+        }
+    }
+
+    /// DRR relative floor of tenant `tenant` (cycled; default 1.0 ⇒ equal
+    /// shares). Negative configs are clamped to zero.
+    pub fn floor(&self, tenant: usize) -> f64 {
+        if self.floors.is_empty() {
+            1.0
+        } else {
+            self.floors[tenant % self.floors.len()].max(0.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("policy".into(), Json::Str(self.policy.label().into()));
+        o.insert(
+            "weights".into(),
+            Json::Arr(self.weights.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        o.insert("floors".into(), Json::Arr(self.floors.iter().map(|&f| Json::Num(f)).collect()));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the FCFS defaults (sparse files work).
+    pub fn from_json(j: &Json) -> Self {
+        let mut s = Self::default();
+        if let Some(p) = j.get("policy").as_str().and_then(QosPolicy::parse) {
+            s.policy = p;
+        }
+        if let Some(a) = j.get("weights").as_arr() {
+            s.weights = a.iter().filter_map(|v| v.as_u64()).collect();
+        }
+        if let Some(a) = j.get("floors").as_arr() {
+            s.floors = a.iter().filter_map(|v| v.as_f64()).collect();
+        }
+        s
+    }
+}
+
 /// Shared-fabric topology: how many CCM devices hang off the host, how
 /// they are shared, and whether an upstream fabric link serializes their
 /// aggregate traffic (the multi-tenant scenarios UDON/CXLMemUring argue
@@ -440,22 +558,35 @@ pub struct TopologySpec {
     pub fabric_bw_gbps: Option<f64>,
     /// Tenant→device placement policy.
     pub placement: Placement,
+    /// Arbitration policy + per-tenant parameters for every shared link
+    /// (device CXL.mem/CXL.io and the upstream fabric).
+    pub qos: QosSpec,
 }
 
 impl Default for TopologySpec {
     fn default() -> Self {
-        Self { devices: 1, fabric_bw_gbps: None, placement: Placement::RoundRobin }
+        Self {
+            devices: 1,
+            fabric_bw_gbps: None,
+            placement: Placement::RoundRobin,
+            qos: QosSpec::default(),
+        }
     }
 }
 
 impl TopologySpec {
     /// `devices` CCMs behind one shared fabric link of `bw_gbps`.
     pub fn shared_fabric(devices: usize, bw_gbps: f64) -> Self {
-        Self { devices, fabric_bw_gbps: Some(bw_gbps), placement: Placement::RoundRobin }
+        Self { devices, fabric_bw_gbps: Some(bw_gbps), ..Self::default() }
     }
 
     pub fn with_placement(mut self, placement: Placement) -> Self {
         self.placement = placement;
+        self
+    }
+
+    pub fn with_qos(mut self, qos: QosSpec) -> Self {
+        self.qos = qos;
         self
     }
 
@@ -467,6 +598,7 @@ impl TopologySpec {
             None => o.insert("fabric_bw_gbps".into(), Json::Null),
         };
         o.insert("placement".into(), Json::Str(self.placement.label().into()));
+        o.insert("qos".into(), self.qos.to_json());
         Json::Obj(o)
     }
 
@@ -481,6 +613,9 @@ impl TopologySpec {
         }
         if let Some(p) = j.get("placement").as_str().and_then(Placement::parse) {
             s.placement = p;
+        }
+        if j.get("qos").as_obj().is_some() {
+            s.qos = QosSpec::from_json(j.get("qos"));
         }
         s
     }
@@ -608,7 +743,9 @@ mod tests {
 
     #[test]
     fn topology_spec_json_roundtrip() {
-        let t = TopologySpec::shared_fabric(4, 16.0).with_placement(Placement::LeastLoaded);
+        let t = TopologySpec::shared_fabric(4, 16.0)
+            .with_placement(Placement::LeastLoaded)
+            .with_qos(QosSpec::wrr(vec![4, 1]));
         let s = t.to_json().to_string();
         let t2 = TopologySpec::from_json(&Json::parse(&s).unwrap());
         assert_eq!(t2, t);
@@ -616,11 +753,40 @@ mod tests {
         let solo = TopologySpec::default();
         let s2 = solo.to_json().to_string();
         assert_eq!(TopologySpec::from_json(&Json::parse(&s2).unwrap()), solo);
-        // Sparse override keeps defaults.
+        // Sparse override keeps defaults (including FCFS QoS).
         let sparse = TopologySpec::from_json(&Json::parse(r#"{"devices": 2}"#).unwrap());
         assert_eq!(sparse.devices, 2);
         assert_eq!(sparse.placement, Placement::RoundRobin);
         assert_eq!(sparse.fabric_bw_gbps, None);
+        assert_eq!(sparse.qos, QosSpec::fcfs());
+    }
+
+    #[test]
+    fn qos_spec_json_roundtrip_and_cycling() {
+        let q = QosSpec { policy: QosPolicy::Drr, weights: vec![3, 1], floors: vec![0.5, 0.25] };
+        let s = q.to_json().to_string();
+        assert_eq!(QosSpec::from_json(&Json::parse(&s).unwrap()), q);
+        // Sparse qos object keeps defaults.
+        let sparse = QosSpec::from_json(&Json::parse(r#"{"policy": "wrr"}"#).unwrap());
+        assert_eq!(sparse.policy, QosPolicy::Wrr);
+        assert!(sparse.weights.is_empty() && sparse.floors.is_empty());
+        // Parameter cycling over tenant ids, with empty-vec defaults.
+        assert_eq!(q.weight(0), 3);
+        assert_eq!(q.weight(3), 1);
+        assert_eq!(sparse.weight(7), 1);
+        assert!((q.floor(2) - 0.5).abs() < 1e-12);
+        assert!((sparse.floor(2) - 1.0).abs() < 1e-12);
+        // Negative floors clamp to zero.
+        let neg = QosSpec::drr(vec![-1.0]);
+        assert_eq!(neg.floor(0), 0.0);
+    }
+
+    #[test]
+    fn qos_policy_parse_labels() {
+        for p in QosPolicy::ALL {
+            assert_eq!(QosPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(QosPolicy::parse("nope"), None);
     }
 
     #[test]

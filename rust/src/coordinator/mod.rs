@@ -99,7 +99,9 @@ impl Coordinator {
 
     /// Run a multi-tenant mix over a shared-fabric topology: K concurrent
     /// streams with open-loop arrivals placed across `topo.devices`
-    /// devices, link/fabric contention arbitrated deterministically (see
+    /// devices, link/fabric contention arbitrated deterministically under
+    /// `topo.qos` (FCFS / WRR / DRR — see [`crate::config::QosSpec`]) and
+    /// CCM PU-pool contention charged by interval-merge replay (see
     /// [`crate::topo::tenant`]). Solo simulations fan out across all
     /// available cores.
     pub fn run_tenants(&self, topo: &TopologySpec, tenants: &TenantSpec) -> TenantReport {
@@ -162,12 +164,16 @@ mod tests {
     #[test]
     fn tenant_mix_through_coordinator_is_worker_count_invariant() {
         let c = Coordinator::new(SimConfig::m2ndp());
-        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps);
+        // Thread a non-default QoS policy end to end through the
+        // coordinator surface.
+        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps)
+            .with_qos(crate::config::QosSpec::wrr(vec![2, 1]));
         let tenants = crate::topo::TenantSpec::new(4).with_workloads(vec!['a', 'd']);
         let r1 = c.run_tenants_jobs(&topo, &tenants, 1);
         let r4 = c.run_tenants_jobs(&topo, &tenants, 4);
         assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
         assert_eq!(r1.tenants.len(), 4);
+        assert_eq!(r1.qos, crate::config::QosPolicy::Wrr);
     }
 
     #[test]

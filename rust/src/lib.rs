@@ -13,8 +13,12 @@
 //!   ([`topo::tenant`]) runs K concurrent workload streams with
 //!   deterministic open-loop arrivals, places them across devices
 //!   (round-robin / least-loaded) and arbitrates link contention by
-//!   deterministic wire-trace replay ([`topo::fabric`]) —
-//!   `axle tenants --devices D --streams K`;
+//!   deterministic wire-trace replay ([`topo::fabric`]) under a
+//!   pluggable QoS policy ([`QosSpec`]: FCFS, weighted round-robin, or
+//!   deficit round-robin with per-tenant bandwidth floors) plus CCM
+//!   PU-pool sharing across co-located tenants (interval-merge replay of
+//!   traced lease windows) — `axle tenants --devices D --streams K
+//!   --qos wrr`;
 //! - the four **partial-offloading mechanisms** ([`protocol`]) as
 //!   strategies over borrowed [`DeviceCtx`] resources: Remote Polling,
 //!   Bulk-Synchronous flow, AXLE's Asynchronous Back-Streaming and its
@@ -53,7 +57,9 @@ pub mod sweep;
 pub mod topo;
 pub mod workload;
 
-pub use config::{poll_factors, Placement, Protocol, SchedPolicy, SimConfig, TopologySpec};
+pub use config::{
+    poll_factors, Placement, Protocol, QosPolicy, QosSpec, SchedPolicy, SimConfig, TopologySpec,
+};
 pub use coordinator::Coordinator;
 pub use metrics::RunMetrics;
 pub use sweep::{ConfigDelta, SweepSpec, WorkloadCache};

@@ -4,7 +4,7 @@
 //! axle run --workload e --protocol axle --poll-ns 500
 //! axle matrix [--profile real-hw|reduced]
 //! axle sweep [--jobs N] [--workloads adei] [--protocol axle] [--json]
-//! axle tenants --devices 2 --streams 8 [--placement least-loaded] [--json]
+//! axle tenants --devices 2 --streams 8 [--qos wrr --weights 4,1] [--json]
 //! axle validate [--artifacts DIR] [--workload e]
 //! axle report fig10 | fig17 | all | ...
 //! axle list
@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use axle::config::{Placement, Protocol, SchedPolicy, SimConfig, TopologySpec};
+use axle::config::{Placement, Protocol, QosPolicy, SchedPolicy, SimConfig, TopologySpec};
 use axle::sim::{ps_to_us, NS};
 use axle::sweep::{self, ConfigDelta, SweepSpec};
 use axle::topo::{self, TenantSpec};
@@ -36,11 +36,15 @@ USAGE:
         # results are bit-identical to the serial path in spec order
   axle tenants [--devices D] [--streams K] [--placement rr|least-loaded]
                [--fabric-gbps X | --no-fabric] [--topo FILE.json]
+               [--qos fcfs|wrr|drr] [--weights W0,W1,...] [--floors F0,F1,...]
                [--workloads <mix, e.g. adei>] [--protocol ...] [--load F]
                [--tenant-seed N] [--jobs N] [--profile ...] [--json]
         # K concurrent streams over D CCM devices behind a shared CXL
         # fabric: deterministic open-loop arrivals, per-tenant slowdown
-        # vs solo, fabric/device contention stats
+        # decomposed into wire + CCM-PU contention shifts; --qos picks
+        # the link arbitration (fcfs | weighted rr | deficit rr with
+        # per-tenant bandwidth floors), --weights/--floors cycle over
+        # tenant ids
   axle validate [--artifacts DIR] [--workload <a..i>]
   axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17>
   axle config [--out FILE.json]     # dump the Table III defaults
@@ -254,6 +258,35 @@ fn main() -> Result<()> {
                 topo.placement =
                     Placement::parse(p).with_context(|| format!("unknown placement {p:?}"))?;
             }
+            if let Some(q) = a.get("qos") {
+                topo.qos.policy = QosPolicy::parse(q)
+                    .with_context(|| format!("unknown qos policy {q:?} (fcfs|wrr|drr)"))?;
+            }
+            if let Some(ws) = a.get("weights") {
+                topo.qos.weights = ws
+                    .split(',')
+                    .map(|s| s.trim().parse::<u64>())
+                    .collect::<Result<Vec<u64>, _>>()
+                    .with_context(|| format!("parsing --weights {ws:?} (comma-separated u64)"))?;
+            }
+            if let Some(fs) = a.get("floors") {
+                topo.qos.floors = fs
+                    .split(',')
+                    .map(|s| s.trim().parse::<f64>())
+                    .collect::<Result<Vec<f64>, _>>()
+                    .with_context(|| format!("parsing --floors {fs:?} (comma-separated f64)"))?;
+                if topo.qos.floors.iter().any(|f| !f.is_finite() || *f < 0.0) {
+                    bail!("--floors must be finite and non-negative");
+                }
+            }
+            // A parameter flag for the wrong policy would be silently
+            // ignored by the replay; refuse the misconfiguration instead.
+            if a.has("weights") && topo.qos.policy != QosPolicy::Wrr {
+                bail!("--weights only applies to weighted round-robin (add --qos wrr)");
+            }
+            if a.has("floors") && topo.qos.policy != QosPolicy::Drr {
+                bail!("--floors only applies to deficit round-robin (add --qos drr)");
+            }
             let mut tenants = TenantSpec::new(a.get_as::<usize>("streams").unwrap_or(8).max(1));
             if let Some(s) = a.get("workloads") {
                 let ws: Vec<char> = s.chars().collect();
@@ -283,10 +316,11 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             println!(
-                "{} stream(s) on {} device(s), {} placement, protocol {}:",
+                "{} stream(s) on {} device(s), {} placement, {} arbitration, protocol {}:",
                 r.tenants.len(),
                 topo.devices,
                 topo.placement.label(),
+                topo.qos.policy.label(),
                 tenants.proto.label()
             );
             for t in &r.tenants {
@@ -294,10 +328,12 @@ fn main() -> Result<()> {
             }
             for (d, dev) in r.devices.iter().enumerate() {
                 println!(
-                    "  device {d}: {} tenant(s), link busy {:.2} us, added wait {:.2} us, {} data bytes",
+                    "  device {d}: {} tenant(s), link busy {:.2} us, wire wait {:.2} us, pu busy {:.2} us, pu wait {:.2} us, {} data bytes",
                     dev.tenants,
                     ps_to_us(dev.link_busy),
                     ps_to_us(dev.mem_wait + dev.io_wait),
+                    ps_to_us(dev.pu_busy),
+                    ps_to_us(dev.pu_wait),
                     dev.bytes
                 );
             }

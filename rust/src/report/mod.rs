@@ -483,19 +483,27 @@ pub fn fig16(cfg: &SimConfig) {
     }
 }
 
-/// Fig. 17 (extension): multi-tenant contention on a shared CXL fabric.
+/// Fig. 17 (extension): multi-tenant contention on a shared CXL fabric,
+/// by QoS arbitration policy.
 ///
 /// The paper runs every workload alone on one CCM; this figure walks the
-/// topology layer's (devices, streams) grid with a data-heavy tenant mix
-/// under AXLE and reports the p50/p99 slowdown vs. each stream's solo
-/// run plus the shared-fabric link's queueing and utilization — the
-/// contention behaviour a production multi-tenant deployment (UDON's
-/// shared memory-expander scenario) actually sees.
+/// topology layer's (policy, devices, streams) grid with a data-heavy
+/// tenant mix under AXLE and reports the p50/p99 slowdown vs. each
+/// stream's solo run, decomposed into the wire shift (fabric + device
+/// links, policy-governed) and the CCM PU shift (compute contention,
+/// policy-independent) — the contention behaviour a production
+/// multi-tenant deployment (UDON's shared memory-expander scenario)
+/// actually sees, and how FCFS / WRR / DRR arbitration redistributes it.
+///
+/// Row schema (JSON mirror in `TenantReport::to_json`): per tenant,
+/// `total_ps = solo_total_ps + wire_wait_ps + pu_wait_ps` where
+/// `wire_wait_ps = max(device_wait_ps, fabric_wait_ps)`.
 pub fn fig17(cfg: &SimConfig) {
-    header("Fig. 17-ext: multi-tenant slowdown vs (devices, streams), shared fabric");
+    header("Fig. 17-ext: multi-tenant slowdown by QoS policy, shared fabric");
     println!(
-        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}",
-        "(D, K)", "tenants", "p50 slow", "p99 slow", "max slow", "fab wait us", "fab util"
+        "{:<6} {:<8} {:>8} {:>10} {:>10} {:>10} {:>12} {:>11} {:>10}",
+        "qos", "(D, K)", "tenants", "p50 slow", "p99 slow", "max slow", "wire wait us", "pu wait us",
+        "fab util"
     );
     let topo = crate::config::TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
     let tenants = crate::topo::TenantSpec::new(1).with_workloads(vec!['a', 'd', 'e', 'i']);
@@ -503,18 +511,23 @@ pub fn fig17(cfg: &SimConfig) {
         cfg,
         &topo,
         &tenants,
-        &[1, 2],
-        &[2, 4, 8],
+        &crate::config::QosPolicy::ALL,
+        &[2],
+        &[4, 8],
         sweep::available_jobs(),
     );
-    for (d, k, r) in &grid {
+    for (p, d, k, r) in &grid {
+        let wire: crate::sim::Ps = r.tenants.iter().map(|t| t.wire_wait()).sum();
+        let pu: crate::sim::Ps = r.tenants.iter().map(|t| t.pu_wait).sum();
         println!(
-            "({d}, {k:>2})    {:>8} {:>10.3} {:>10.3} {:>10.3} {:>12.2} {:>9.1}%",
+            "{:<6} ({d}, {k:>2})  {:>8} {:>10.3} {:>10.3} {:>10.3} {:>12.2} {:>11.2} {:>9.1}%",
+            p.label(),
             r.tenants.len(),
             r.p50_slowdown,
             r.p99_slowdown,
             r.max_slowdown,
-            ps_to_us(r.fabric.wait),
+            ps_to_us(wire),
+            ps_to_us(pu),
             100.0 * r.fabric.utilization
         );
     }

@@ -12,7 +12,7 @@ pub mod pool;
 pub mod busy;
 
 pub use busy::BusyTracker;
-pub use pool::PuPool;
+pub use pool::{PuPool, PuSpan};
 pub use queue::EventQueue;
 
 /// Simulation time in **picoseconds**.

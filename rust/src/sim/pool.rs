@@ -11,6 +11,30 @@ use std::collections::BinaryHeap;
 
 use super::{BusyTracker, Ps};
 
+/// One PU occupancy interval `[start, end)`, recorded when tracing is
+/// enabled — the compute-side analogue of [`crate::cxl::WireMsg`].
+///
+/// Traces feed the topology layer's CCM PU-pool sharing
+/// ([`crate::topo::fabric::arbitrate_pus`]): a tenant's solo-run lease
+/// busy windows are replayed against co-located tenants' windows on one
+/// shared pool to compute compute-contention delay, exactly the way wire
+/// traces are replayed against a shared link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PuSpan {
+    /// Time the PU started executing the task (post any queueing).
+    pub start: Ps,
+    /// Time the PU freed up.
+    pub end: Ps,
+}
+
+impl PuSpan {
+    /// Occupancy duration.
+    #[inline]
+    pub fn dur(&self) -> Ps {
+        self.end - self.start
+    }
+}
+
 /// A pool of identical processing units.
 #[derive(Debug)]
 pub struct PuPool {
@@ -18,6 +42,10 @@ pub struct PuPool {
     n: usize,
     busy: BusyTracker,
     last_dispatch_ready: Ps,
+    /// Optional occupancy trace (`None` ⇒ zero overhead). Only nonzero-
+    /// duration dispatches are recorded, mirroring `Link`'s data-bearing
+    /// filter.
+    trace: Option<Vec<PuSpan>>,
 }
 
 impl PuPool {
@@ -28,7 +56,27 @@ impl PuPool {
         for _ in 0..n {
             free_at.push(Reverse(0));
         }
-        Self { free_at, n, busy: BusyTracker::new(), last_dispatch_ready: 0 }
+        Self { free_at, n, busy: BusyTracker::new(), last_dispatch_ready: 0, trace: None }
+    }
+
+    /// Start recording occupancy spans. Tracing never changes timing — it
+    /// only observes the `(start, end)` pairs the pool already computes.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Vec::new());
+        }
+    }
+
+    /// Take the recorded trace (empty if tracing was never enabled).
+    /// Spans come out in dispatch order, which has monotone starts (both
+    /// the ready times and the earliest-free frontier are non-decreasing).
+    pub fn take_trace(&mut self) -> Vec<PuSpan> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    /// The recorded trace so far (empty slice if tracing is disabled).
+    pub fn trace(&self) -> &[PuSpan] {
+        self.trace.as_deref().unwrap_or(&[])
     }
 
     /// Number of processing units.
@@ -58,6 +106,11 @@ impl PuPool {
         let end = start + dur;
         self.free_at.push(Reverse(end));
         self.busy.record(start, end);
+        if end > start {
+            if let Some(tr) = self.trace.as_mut() {
+                tr.push(PuSpan { start, end });
+            }
+        }
         (start, end)
     }
 
@@ -110,6 +163,29 @@ mod tests {
         p.dispatch(0, 10);
         let (s, _) = p.dispatch(500, 10);
         assert_eq!(s, 500);
+    }
+
+    #[test]
+    fn trace_records_spans_without_changing_timing() {
+        let mut plain = PuPool::new(2);
+        let mut traced = PuPool::new(2);
+        traced.enable_trace();
+        for (ready, dur) in [(0, 10), (0, 20), (5, 7), (30, 0), (40, 3)] {
+            assert_eq!(plain.dispatch(ready, dur), traced.dispatch(ready, dur));
+        }
+        assert!(plain.trace().is_empty());
+        let tr = traced.take_trace();
+        // The zero-duration dispatch is not traced.
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr[0], PuSpan { start: 0, end: 10 });
+        assert_eq!(tr[2], PuSpan { start: 10, end: 17 }); // queued behind #0
+        assert_eq!(tr[3].dur(), 3);
+        // Starts are monotone in dispatch order.
+        for w in tr.windows(2) {
+            assert!(w[1].start >= w[0].start);
+        }
+        // Taking the trace disables it.
+        assert!(traced.trace().is_empty());
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::sync::{mpsc, Arc};
 use crate::config::{Protocol, SimConfig};
 use crate::cxl::WireMsg;
 use crate::metrics::RunMetrics;
+use crate::sim::PuSpan;
 use crate::protocol;
 use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
@@ -169,8 +170,8 @@ pub fn run_jobs(list: &[SpecJob], jobs: usize) -> Vec<RunMetrics> {
     run_mapped(list, jobs, |j| protocol::run(j.proto, &j.w, &j.cfg))
 }
 
-/// One job's result plus the wire traces of the device links it ran on
-/// (the tenant driver's raw material for contention arbitration).
+/// One job's result plus the occupancy traces of the device resources it
+/// ran on (the tenant driver's raw material for contention arbitration).
 #[derive(Debug, Clone)]
 pub struct TracedRun {
     pub metrics: RunMetrics,
@@ -178,17 +179,25 @@ pub struct TracedRun {
     pub mem_trace: Vec<WireMsg>,
     /// CXL.io data-bearing wire occupancies (solo timeline).
     pub io_trace: Vec<WireMsg>,
+    /// CCM PU lease windows (solo timeline) — the raw material for
+    /// PU-pool sharing across co-located tenants.
+    pub ccm_trace: Vec<PuSpan>,
 }
 
 /// As [`run_jobs`], but each job runs on a fresh *traced* [`DeviceCtx`]
-/// and returns its wire traces alongside the metrics. Tracing never
-/// perturbs timing, so `metrics` is bit-identical to [`run_jobs`]'s.
+/// and returns its wire and CCM PU traces alongside the metrics. Tracing
+/// never perturbs timing, so `metrics` is bit-identical to [`run_jobs`]'s.
 /// Results are in `list` order regardless of worker count.
 pub fn run_traced_jobs(list: &[SpecJob], jobs: usize) -> Vec<TracedRun> {
     run_mapped(list, jobs, |job| {
         let mut ctx = DeviceCtx::traced(&job.cfg);
         let metrics = protocol::run_on(job.proto, &job.w, &job.cfg, &mut ctx);
-        TracedRun { metrics, mem_trace: ctx.mem.take_trace(), io_trace: ctx.io.take_trace() }
+        TracedRun {
+            metrics,
+            mem_trace: ctx.mem.take_trace(),
+            io_trace: ctx.io.take_trace(),
+            ccm_trace: ctx.ccm.take_trace(),
+        }
     })
 }
 
@@ -263,6 +272,9 @@ mod tests {
             assert!(!traced[0].mem_trace.is_empty());
             assert!(traced[0].io_trace.is_empty());
             assert!(!traced[1].io_trace.is_empty());
+            // Every protocol executes CCM tasks: lease windows are traced.
+            assert!(!traced[0].ccm_trace.is_empty());
+            assert!(!traced[1].ccm_trace.is_empty());
         }
     }
 

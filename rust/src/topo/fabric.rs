@@ -1,24 +1,80 @@
-//! Shared-link serialization arbitration by deterministic replay.
+//! Shared-resource arbitration by deterministic replay: FCFS / WRR / DRR
+//! link scheduling plus CCM PU-pool sharing.
 //!
 //! The tenant driver simulates each stream solo (exact per-tenant
 //! timelines from the unchanged protocol engines) while tracing every
-//! data-bearing wire occupancy ([`crate::cxl::WireMsg`]). This module
-//! then replays the union of those traces against one shared link
-//! frontier: messages are served in global issue order (time, then
-//! tenant id, then per-tenant FIFO), queueing behind the frontier and
-//! serializing at the shared link's bandwidth; each tenant is charged
-//! the **completion shift** of its traffic (max per-message lateness vs
-//! its solo schedule — see [`arbitrate`]).
+//! data-bearing wire occupancy ([`crate::cxl::WireMsg`]) and every CCM PU
+//! lease window ([`crate::sim::PuSpan`]). This module then replays the
+//! union of those traces against the shared resources:
 //!
-//! Because a solo trace records *wire starts* (already serialized
-//! against the tenant's own link), replaying a single tenant alone at
-//! the same bandwidth reproduces its solo schedule with **zero added
-//! wait** — the arbitration measures pure contention. Replaying at a
-//! narrower shared-fabric bandwidth additionally charges the upstream
-//! bottleneck, which is exactly the fabric model the topology layer
-//! wants.
+//! - **Links** ([`arbitrate_qos`]): messages queue behind one wire
+//!   frontier and serialize at the shared link's bandwidth. *Which*
+//!   queued message the wire serves next is the pluggable part — the
+//!   [`QosPolicy`] selected in [`QosSpec`]:
+//!   [`Fcfs`](QosPolicy::Fcfs) (global issue order, the PR-2 arbiter,
+//!   kept bit-identical in [`arbitrate`]),
+//!   [`Wrr`](QosPolicy::Wrr) (weighted round-robin over per-tenant
+//!   queues, message granularity) and
+//!   [`Drr`](QosPolicy::Drr) (deficit round-robin, byte granularity,
+//!   quanta proportional to per-tenant bandwidth floors).
+//! - **CCM PUs** ([`arbitrate_pus`]): co-located tenants' traced lease
+//!   windows are re-dispatched onto one earliest-free pool of the
+//!   device's PU count; when aggregate demand exceeds capacity, the
+//!   excess windows slide right and the displaced tenants are charged
+//!   the completion shift.
+//!
+//! Every policy is **work-conserving**: the wire (or pool) never idles
+//! while an arrived message (or lease) waits. A classic single-server
+//! queueing fact follows: the busy periods — and therefore the wire's
+//! busy-time union and final free-up time — are identical across
+//! policies; QoS only redistributes *who* waits inside them (pinned by
+//! `prop_qos_policies_share_busy_periods`).
+//!
+//! Each tenant is charged the **completion shift** of its traffic: the
+//! maximum per-message (per-lease) lateness versus its solo schedule — a
+//! max, not a sum, because overlapping per-message queueing is one
+//! physical wait (see [`arbitrate`]).
+//!
+//! # Worked example: WRR
+//!
+//! Two tenants, weights `[2, 1]`, both with messages queued at `t = 0`.
+//! Credits initialize to the weights; the scan pointer stays on a tenant
+//! until its credits are spent, and refills one round of credits when
+//! every backlogged tenant is out:
+//!
+//! ```text
+//! service order:  T0 T0 T1 | T0 T0 T1 | ...    (2:1 message ratio)
+//!                 └ credits [2,1] spent ┘ refill
+//! ```
+//!
+//! FCFS on the same input would serve every T0 message before any T0/T1
+//! tie loser — a burst from one tenant head-of-line-blocks the other for
+//! its whole train. WRR bounds that: a backlogged tenant with weight
+//! `w ≥ 1` is served at least `w` times per round of
+//! `sum(weights of backlogged tenants)` services.
+//!
+//! # Worked example: DRR
+//!
+//! Two tenants with 1000-byte messages and bandwidth floors `[0.75,
+//! 0.25]`. Quanta are `floor/Σfloors × max message size` = `[750, 250]`
+//! bytes. Each round-robin visit banks one quantum; a queue sends while
+//! its deficit covers the head message:
+//!
+//! ```text
+//! visit T0: deficit  750 < 1000 — bank     visit T1: 250 < 1000 — bank
+//! visit T0: deficit 1500 → send, keep 500  visit T1: 500 — bank
+//! visit T0: deficit 1250 → send, keep 250  visit T1: 750 — bank
+//! visit T0: deficit 1000 → send, keep 0    visit T1: 1000 → send
+//! ```
+//!
+//! Steady state serves three T0 bytes for every T1 byte — exactly the
+//! 0.75 : 0.25 floors. Because a queue's deficit grows by a positive
+//! quantum every round (floors clamp to a 1-byte minimum quantum), no
+//! backlogged tenant starves; an idle queue's deficit resets to zero
+//! (no banking credit across idle gaps), per classic DRR.
 
-use crate::sim::{transfer_ps, BusyTracker, Ps};
+use crate::config::{QosPolicy, QosSpec};
+use crate::sim::{transfer_ps, BusyTracker, Ps, PuPool};
 
 /// One data-bearing message offered to a shared link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,9 +106,38 @@ pub struct ArbitrationOutcome {
     pub bytes: u64,
     /// Time the wire finally frees up.
     pub wire_free: Ps,
+    /// Tenant ids in wire-service order (the scheduling decision trace —
+    /// what the fairness/starvation tests inspect).
+    pub order: Vec<u32>,
 }
 
 impl ArbitrationOutcome {
+    fn empty(n_tenants: usize, capacity: usize) -> Self {
+        Self {
+            waits: vec![0; n_tenants],
+            busy: BusyTracker::new(),
+            messages: 0,
+            bytes: 0,
+            wire_free: 0,
+            order: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Charge one served message: lateness bookkeeping plus wire stats.
+    fn serve(&mut self, m: &FabricMsg, bw_gbps: f64, baseline_bw_gbps: f64) {
+        let ser = transfer_ps(m.bytes, bw_gbps);
+        let solo_finish = m.at + transfer_ps(m.bytes, baseline_bw_gbps);
+        let start = m.at.max(self.wire_free);
+        let lateness = (start + ser).saturating_sub(solo_finish);
+        let w = &mut self.waits[m.tenant as usize];
+        *w = (*w).max(lateness);
+        self.busy.record(start, start + ser);
+        self.wire_free = start + ser;
+        self.messages += 1;
+        self.bytes += m.bytes;
+        self.order.push(m.tenant);
+    }
+
     /// Sum of per-tenant added completion delays (aggregate stat).
     pub fn total_wait(&self) -> Ps {
         self.waits.iter().sum()
@@ -68,10 +153,13 @@ impl ArbitrationOutcome {
     }
 }
 
-/// Serialize `msgs` on one shared link of `bw_gbps`. The input order is
-/// irrelevant (a stable sort on `(at, tenant)` restores global issue
-/// order while preserving each tenant's FIFO trace order), so the result
-/// is deterministic for any deterministic input set.
+/// Serialize `msgs` on one shared link of `bw_gbps` in **FCFS** order —
+/// the PR-2 arbiter, kept verbatim as the reference implementation (the
+/// FCFS policy path of [`arbitrate_qos`] and the baseline the QoS
+/// regression tests pin against). The input order is irrelevant (a stable
+/// sort on `(at, tenant)` restores global issue order while preserving
+/// each tenant's FIFO trace order), so the result is deterministic for
+/// any deterministic input set.
 ///
 /// Each message's **lateness** is `(start + ser(bw_gbps)) − (issue +
 /// ser(baseline_bw_gbps))`: its contended finish on this link versus the
@@ -90,25 +178,291 @@ pub fn arbitrate(
     n_tenants: usize,
 ) -> ArbitrationOutcome {
     msgs.sort_by_key(|m| (m.at, m.tenant));
-    let mut out = ArbitrationOutcome {
-        waits: vec![0; n_tenants],
-        busy: BusyTracker::new(),
-        messages: 0,
-        bytes: 0,
-        wire_free: 0,
-    };
+    let mut out = ArbitrationOutcome::empty(n_tenants, msgs.len());
     for m in &msgs {
-        let ser = transfer_ps(m.bytes, bw_gbps);
-        let solo_finish = m.at + transfer_ps(m.bytes, baseline_bw_gbps);
-        let start = m.at.max(out.wire_free);
-        let lateness = (start + ser).saturating_sub(solo_finish);
-        let w = &mut out.waits[m.tenant as usize];
-        *w = (*w).max(lateness);
-        out.busy.record(start, start + ser);
-        out.wire_free = start + ser;
-        out.messages += 1;
-        out.bytes += m.bytes;
+        out.serve(m, bw_gbps, baseline_bw_gbps);
     }
+    out
+}
+
+/// Serialize `msgs` on one shared link under the arbitration policy in
+/// `qos`. [`QosPolicy::Fcfs`] delegates to [`arbitrate`] (bit-identical
+/// to the PR-2 arbiter by construction); WRR/DRR replay per-tenant FIFO
+/// queues under the scheduler (see the module docs for the algorithms and
+/// worked examples). All policies are work-conserving, so busy periods —
+/// wire utilization and final free-up time — match FCFS exactly; only the
+/// distribution of waits across tenants changes.
+pub fn arbitrate_qos(
+    msgs: Vec<FabricMsg>,
+    bw_gbps: f64,
+    baseline_bw_gbps: f64,
+    n_tenants: usize,
+    qos: &QosSpec,
+) -> ArbitrationOutcome {
+    match qos.policy {
+        QosPolicy::Fcfs => arbitrate(msgs, bw_gbps, baseline_bw_gbps, n_tenants),
+        QosPolicy::Wrr | QosPolicy::Drr => {
+            replay_scheduled(msgs, bw_gbps, baseline_bw_gbps, n_tenants, qos)
+        }
+    }
+}
+
+/// Packet-granularity weighted-round-robin scheduler state.
+struct WrrState {
+    weights: Vec<u64>,
+    credits: Vec<u64>,
+    ptr: usize,
+}
+
+impl WrrState {
+    fn new(qos: &QosSpec, n: usize) -> Self {
+        let weights: Vec<u64> = (0..n).map(|i| qos.weight(i)).collect();
+        let credits = weights.clone();
+        Self { weights, credits, ptr: 0 }
+    }
+
+    /// Pick the next tenant to serve among `eligible` (≥ 1 true entry).
+    /// `head_at` orders the FCFS fallback when every eligible tenant has
+    /// weight zero (best-effort class).
+    fn pick(&mut self, eligible: &[bool], head_at: &[Ps]) -> usize {
+        let n = self.weights.len();
+        // Refill one round of credits once every backlogged queue is out.
+        if (0..n).filter(|&i| eligible[i]).all(|i| self.credits[i] == 0) {
+            self.credits.copy_from_slice(&self.weights);
+        }
+        // Cyclic scan from the pointer; stay on a queue until its credits
+        // are spent (classic batched WRR).
+        for k in 0..n {
+            let i = (self.ptr + k) % n;
+            if eligible[i] && self.credits[i] > 0 {
+                self.credits[i] -= 1;
+                self.ptr = if self.credits[i] == 0 { (i + 1) % n } else { i };
+                return i;
+            }
+        }
+        // Only zero-weight (best-effort) queues are backlogged: FCFS.
+        (0..n)
+            .filter(|&i| eligible[i])
+            .min_by_key(|&i| (head_at[i], i))
+            .expect("eligible set is non-empty")
+    }
+}
+
+/// Byte-granularity deficit-round-robin scheduler state.
+struct DrrState {
+    quantum: Vec<u64>,
+    deficit: Vec<u64>,
+    ptr: usize,
+    /// Queue currently draining its banked deficit (stays selected until
+    /// the deficit no longer covers its head message).
+    cur: Option<usize>,
+}
+
+impl DrrState {
+    /// Quanta are `floor_i / Σfloors × max_bytes`, clamped to ≥ 1 byte:
+    /// the largest-floor tenant can send its largest message in about one
+    /// round, and every tenant's deficit strictly grows each round (no
+    /// starvation).
+    fn new(qos: &QosSpec, n: usize, max_bytes: u64) -> Self {
+        let floors: Vec<f64> = (0..n).map(|i| qos.floor(i)).collect();
+        let sum: f64 = floors.iter().sum();
+        let quantum = floors
+            .iter()
+            .map(|f| {
+                let share = if sum > 0.0 { f / sum } else { 1.0 / n.max(1) as f64 };
+                ((share * max_bytes as f64).round() as u64).max(1)
+            })
+            .collect();
+        Self { quantum, deficit: vec![0; n], ptr: 0, cur: None }
+    }
+
+    fn pick(&mut self, eligible: &[bool], head_bytes: &[u64]) -> usize {
+        let n = self.quantum.len();
+        // Keep draining the current queue while its deficit lasts.
+        if let Some(i) = self.cur {
+            if eligible[i] && self.deficit[i] >= head_bytes[i] {
+                self.deficit[i] -= head_bytes[i];
+                return i;
+            }
+            self.cur = None;
+        }
+        let mut visits = 0usize;
+        loop {
+            let i = self.ptr;
+            self.ptr = (self.ptr + 1) % n;
+            if eligible[i] {
+                self.deficit[i] = self.deficit[i].saturating_add(self.quantum[i]);
+                if self.deficit[i] >= head_bytes[i] {
+                    self.deficit[i] -= head_bytes[i];
+                    self.cur = Some(i);
+                    return i;
+                }
+            } else {
+                // Classic DRR: an idle queue banks no deficit.
+                self.deficit[i] = 0;
+            }
+            visits += 1;
+            if visits % n == 0 {
+                // One full cycle served nothing: every backlogged queue
+                // needs more top-ups. Bank the remaining rounds in bulk so
+                // a micro-quantum cannot make the scan quadratic in bytes;
+                // the next cycle serves the round-robin-first queue that
+                // needed the fewest rounds — exactly classic DRR's pick.
+                let k = (0..n)
+                    .filter(|&i| eligible[i])
+                    .map(|i| (head_bytes[i] - self.deficit[i]).div_ceil(self.quantum[i]))
+                    .min()
+                    .expect("eligible set is non-empty");
+                if k > 1 {
+                    for i in 0..n {
+                        if eligible[i] {
+                            self.deficit[i] =
+                                self.deficit[i].saturating_add((k - 1) * self.quantum[i]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+enum Scheduler {
+    Wrr(WrrState),
+    Drr(DrrState),
+}
+
+/// The WRR/DRR replay core: per-tenant FIFO queues drained against one
+/// wire frontier, the scheduler choosing among the queues whose head has
+/// arrived. Work-conserving by construction — the decision clock `t` is
+/// the wire frontier or, if the wire would idle, the next arrival, and
+/// the tenant owning that earliest arrival is always eligible.
+fn replay_scheduled(
+    mut msgs: Vec<FabricMsg>,
+    bw_gbps: f64,
+    baseline_bw_gbps: f64,
+    n_tenants: usize,
+    qos: &QosSpec,
+) -> ArbitrationOutcome {
+    msgs.sort_by_key(|m| (m.at, m.tenant));
+    let total = msgs.len();
+    let mut out = ArbitrationOutcome::empty(n_tenants, total);
+    if total == 0 {
+        return out;
+    }
+    let max_bytes = msgs.iter().map(|m| m.bytes).max().unwrap_or(1).max(1);
+    let mut sched = match qos.policy {
+        QosPolicy::Wrr => Scheduler::Wrr(WrrState::new(qos, n_tenants)),
+        QosPolicy::Drr => Scheduler::Drr(DrrState::new(qos, n_tenants, max_bytes)),
+        QosPolicy::Fcfs => unreachable!("FCFS is served by `arbitrate`"),
+    };
+    // Per-tenant FIFO queues (the stable sort keeps each tenant's trace
+    // order) walked by cursor.
+    let mut queues: Vec<Vec<FabricMsg>> = vec![Vec::new(); n_tenants];
+    for m in &msgs {
+        queues[m.tenant as usize].push(*m);
+    }
+    let mut cursor = vec![0usize; n_tenants];
+    let mut eligible = vec![false; n_tenants];
+    let mut head_at = vec![Ps::MAX; n_tenants];
+    let mut head_bytes = vec![0u64; n_tenants];
+    let mut served = 0usize;
+    while served < total {
+        // Decision clock: the wire frontier, or the next arrival if the
+        // wire would otherwise idle (work conservation).
+        let t_min = (0..n_tenants)
+            .filter(|&i| cursor[i] < queues[i].len())
+            .map(|i| queues[i][cursor[i]].at)
+            .min()
+            .expect("unserved messages remain");
+        let t = out.wire_free.max(t_min);
+        for i in 0..n_tenants {
+            if cursor[i] < queues[i].len() {
+                let h = &queues[i][cursor[i]];
+                head_at[i] = h.at;
+                head_bytes[i] = h.bytes;
+                eligible[i] = h.at <= t;
+            } else {
+                eligible[i] = false;
+                head_at[i] = Ps::MAX;
+                head_bytes[i] = 0;
+            }
+        }
+        let i = match &mut sched {
+            Scheduler::Wrr(s) => s.pick(&eligible, &head_at),
+            Scheduler::Drr(s) => s.pick(&eligible, &head_bytes),
+        };
+        let m = queues[i][cursor[i]];
+        cursor[i] += 1;
+        served += 1;
+        out.serve(&m, bw_gbps, baseline_bw_gbps);
+    }
+    out
+}
+
+/// One traced CCM PU lease window offered to a shared pool (a tenant's
+/// solo-run occupancy, shifted by its arrival).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PuDemand {
+    /// Global demand time (tenant arrival + solo span start).
+    pub at: Ps,
+    /// PU occupancy duration.
+    pub dur: Ps,
+    /// Demanding tenant id.
+    pub tenant: u32,
+}
+
+/// Result of one PU-pool sharing replay.
+#[derive(Debug, Clone)]
+pub struct PuOutcome {
+    /// Added completion delay per tenant id: the maximum lateness of that
+    /// tenant's lease windows versus its solo schedule (same max-not-sum
+    /// accounting as [`ArbitrationOutcome::waits`]).
+    pub waits: Vec<Ps>,
+    /// Pool busy-union across the replay.
+    pub busy_union: Ps,
+    /// Aggregate PU-time demand (Σ durations).
+    pub busy_total: Ps,
+    /// Lease windows replayed.
+    pub spans: u64,
+    /// Time the last PU frees up.
+    pub pool_free: Ps,
+}
+
+impl PuOutcome {
+    /// Sum of per-tenant added completion delays (aggregate stat).
+    pub fn total_wait(&self) -> Ps {
+        self.waits.iter().sum()
+    }
+}
+
+/// Replay co-located tenants' traced CCM lease windows onto one shared
+/// pool of `capacity` PUs (earliest-free dispatch in global `(at,
+/// tenant)` order — the interval-merge accounting for compute
+/// contention). A solo trace re-dispatched alone reproduces its own
+/// schedule exactly: at any instant it holds at most `capacity`
+/// concurrent leases (it was produced by a pool of the same size), so the
+/// greedy always finds a free PU at the demand time and the lateness is
+/// zero — the replay measures pure compute contention, precisely as the
+/// link replay measures pure wire contention.
+pub fn arbitrate_pus(mut demands: Vec<PuDemand>, capacity: usize, n_tenants: usize) -> PuOutcome {
+    demands.sort_by_key(|d| (d.at, d.tenant));
+    let mut pool = PuPool::new(capacity);
+    let mut out = PuOutcome {
+        waits: vec![0; n_tenants],
+        busy_union: 0,
+        busy_total: 0,
+        spans: demands.len() as u64,
+        pool_free: 0,
+    };
+    for d in &demands {
+        let (_, end) = pool.dispatch(d.at, d.dur);
+        let lateness = end.saturating_sub(d.at + d.dur);
+        let w = &mut out.waits[d.tenant as usize];
+        *w = (*w).max(lateness);
+    }
+    out.busy_union = pool.busy().union();
+    out.busy_total = pool.busy().total();
+    out.pool_free = pool.all_free();
     out
 }
 
@@ -148,6 +502,7 @@ mod tests {
         assert_eq!(out.waits[1], transfer_ps(1_000_000, bw));
         assert_eq!(out.busy.union(), 2 * transfer_ps(1_000_000, bw));
         assert!(out.utilization(out.wire_free) > 0.99);
+        assert_eq!(out.order, vec![0, 1]);
     }
 
     #[test]
@@ -159,6 +514,7 @@ mod tests {
         let ob = arbitrate(b, 16.0, 16.0, 2);
         assert_eq!(oa.waits, ob.waits);
         assert_eq!(oa.wire_free, ob.wire_free);
+        assert_eq!(oa.order, ob.order);
     }
 
     #[test]
@@ -193,5 +549,201 @@ mod tests {
         }
         let out = arbitrate(msgs, 4.0, dev_bw, 1);
         assert!(out.waits[0] > 0);
+    }
+
+    // ---- QoS policies ----
+
+    /// 2 × `count` equal messages all queued at t = 0; the workhorse for
+    /// order-sensitive assertions.
+    fn burst_two_tenants(count: u64, bytes: u64) -> Vec<FabricMsg> {
+        let mut msgs = Vec::new();
+        for t in 0..2u32 {
+            for _ in 0..count {
+                msgs.push(msg(0, bytes, t));
+            }
+        }
+        msgs
+    }
+
+    #[test]
+    fn wrr_equal_weights_interleave_where_fcfs_serves_the_tie_winner_first() {
+        let bw = 1.0;
+        let msgs = burst_two_tenants(4, 1_000_000);
+        let fcfs = arbitrate(msgs.clone(), bw, bw, 2);
+        let wrr = arbitrate_qos(msgs, bw, bw, 2, &QosSpec::wrr(vec![1, 1]));
+        // FCFS: tenant 0 wins every (t=0, tenant) tie → its whole train
+        // goes first. WRR alternates.
+        assert_eq!(fcfs.order, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(wrr.order, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        // Work conservation: identical busy periods either way.
+        assert_eq!(fcfs.busy.union(), wrr.busy.union());
+        assert_eq!(fcfs.wire_free, wrr.wire_free);
+        assert_eq!(fcfs.bytes, wrr.bytes);
+        // The interleave changes who waits: under WRR tenant 0's tail
+        // slips behind three of tenant 1's messages.
+        let big = transfer_ps(1_000_000, bw);
+        assert_eq!(fcfs.waits[0], 3 * big);
+        assert_eq!(wrr.waits[0], 6 * big);
+        assert_eq!(fcfs.waits[1], 7 * big);
+        assert_eq!(wrr.waits[1], 7 * big);
+    }
+
+    #[test]
+    fn wrr_weights_protect_a_mouse_from_a_hog() {
+        let bw = 1.0;
+        let mut msgs = Vec::new();
+        for _ in 0..16 {
+            msgs.push(msg(0, 1_000_000, 0)); // hog: 16 MB burst
+        }
+        msgs.push(msg(0, 64_000, 1)); // mouse: one small message
+        let fcfs = arbitrate(msgs.clone(), bw, bw, 2);
+        let wrr = arbitrate_qos(msgs, bw, bw, 2, &QosSpec::wrr(vec![1, 1]));
+        // FCFS: the mouse queues behind the whole hog burst. WRR: it is
+        // served second.
+        assert_eq!(fcfs.waits[1], 16 * transfer_ps(1_000_000, bw));
+        assert_eq!(wrr.waits[1], transfer_ps(1_000_000, bw));
+        assert_eq!(wrr.order[1], 1);
+    }
+
+    #[test]
+    fn wrr_ratio_matches_weights() {
+        let msgs = burst_two_tenants(9, 10_000);
+        let wrr = arbitrate_qos(msgs, 16.0, 16.0, 2, &QosSpec::wrr(vec![2, 1]));
+        // While both queues are backlogged the pattern is T0 T0 T1.
+        assert_eq!(&wrr.order[..6], &[0, 0, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn wrr_zero_weight_is_best_effort() {
+        let msgs = burst_two_tenants(3, 10_000);
+        let wrr = arbitrate_qos(msgs, 16.0, 16.0, 2, &QosSpec::wrr(vec![1, 0]));
+        // The weighted tenant's whole backlog drains before the
+        // best-effort tenant is served at all.
+        assert_eq!(wrr.order, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn drr_floors_shift_bandwidth_three_to_one() {
+        let msgs = burst_two_tenants(20, 1_000);
+        let drr = arbitrate_qos(msgs, 16.0, 16.0, 2, &QosSpec::drr(vec![0.75, 0.25]));
+        // Quanta [750, 250] over 1000-byte messages: steady-state pattern
+        // serves three T0 messages per T1 message (see module docs).
+        let t0_in_first_8 = drr.order[..8].iter().filter(|&&t| t == 0).count();
+        assert!(
+            (5..=7).contains(&t0_in_first_8),
+            "expected ≈3:1 service ratio, got order {:?}",
+            &drr.order[..8]
+        );
+        // All messages served, per-tenant counts preserved.
+        assert_eq!(drr.order.iter().filter(|&&t| t == 0).count(), 20);
+        assert_eq!(drr.order.iter().filter(|&&t| t == 1).count(), 20);
+    }
+
+    #[test]
+    fn drr_equal_floors_round_robin_equal_packets() {
+        let msgs = burst_two_tenants(4, 50_000);
+        let drr = arbitrate_qos(msgs, 16.0, 16.0, 2, &QosSpec::drr(Vec::new()));
+        // Equal floors over equal packets ⇒ quantum = packet size ⇒ pure
+        // round-robin.
+        assert_eq!(drr.order, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn qos_policies_agree_on_a_solo_tenant() {
+        // With one queue there is nothing to schedule: every policy must
+        // reproduce the FCFS outcome exactly.
+        let bw = 8.0;
+        let mut msgs = Vec::new();
+        let mut t = 0;
+        for k in 0..12u64 {
+            msgs.push(msg(t, 1_000 + 137 * k, 0));
+            t += transfer_ps(1_000, bw) / 2 + NS;
+        }
+        let fcfs = arbitrate(msgs.clone(), bw, bw, 1);
+        for qos in [QosSpec::wrr(vec![5]), QosSpec::drr(vec![0.3])] {
+            let out = arbitrate_qos(msgs.clone(), bw, bw, 1, &qos);
+            assert_eq!(out.waits, fcfs.waits);
+            assert_eq!(out.wire_free, fcfs.wire_free);
+            assert_eq!(out.order, fcfs.order);
+            assert_eq!(out.busy.union(), fcfs.busy.union());
+        }
+    }
+
+    #[test]
+    fn qos_replay_is_deterministic_and_input_order_free() {
+        let mut a = burst_two_tenants(6, 2_000);
+        a.push(msg(5 * NS, 9_000, 1));
+        a.push(msg(3 * NS, 700, 0));
+        let mut b = a.clone();
+        b.reverse();
+        for qos in [QosSpec::wrr(vec![3, 1]), QosSpec::drr(vec![0.6, 0.4])] {
+            let oa = arbitrate_qos(a.clone(), 16.0, 16.0, 2, &qos);
+            let ob = arbitrate_qos(b.clone(), 16.0, 16.0, 2, &qos);
+            assert_eq!(oa.waits, ob.waits);
+            assert_eq!(oa.order, ob.order);
+            assert_eq!(oa.wire_free, ob.wire_free);
+        }
+    }
+
+    #[test]
+    fn qos_empty_input_yields_empty_outcome() {
+        for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![2]), QosSpec::drr(vec![0.5])] {
+            let out = arbitrate_qos(Vec::new(), 16.0, 16.0, 3, &qos);
+            assert_eq!(out.waits, vec![0, 0, 0]);
+            assert_eq!(out.messages, 0);
+            assert_eq!(out.wire_free, 0);
+            assert!(out.order.is_empty());
+        }
+    }
+
+    // ---- PU-pool sharing ----
+
+    fn dem(at: Ps, dur: Ps, tenant: u32) -> PuDemand {
+        PuDemand { at, dur, tenant }
+    }
+
+    #[test]
+    fn pu_replay_of_a_within_capacity_trace_adds_no_wait() {
+        // ≤ capacity concurrent leases replay to their own schedule.
+        let demands = vec![dem(0, 100, 0), dem(0, 80, 0), dem(50, 60, 0), dem(100, 10, 0)];
+        let out = arbitrate_pus(demands, 3, 1);
+        assert_eq!(out.waits[0], 0);
+        assert_eq!(out.spans, 4);
+        assert_eq!(out.busy_total, 250);
+    }
+
+    #[test]
+    fn pu_overload_charges_the_displaced_tenant() {
+        // One PU, two tenants demanding the same window: the (at, tenant)
+        // tie goes to tenant 0, tenant 1 slides a full lease right.
+        let out = arbitrate_pus(vec![dem(0, 100, 0), dem(0, 100, 1)], 1, 2);
+        assert_eq!(out.waits[0], 0);
+        assert_eq!(out.waits[1], 100);
+        assert_eq!(out.busy_union, 200);
+        assert_eq!(out.pool_free, 200);
+    }
+
+    #[test]
+    fn pu_shift_is_a_max_not_a_sum() {
+        // Tenant 1's back-to-back lease train slides right once behind
+        // tenant 0's long lease — one completion shift, not per-span sums.
+        let mut demands = vec![dem(0, 1_000, 0)];
+        for k in 0..5u64 {
+            demands.push(dem(k * 100, 100, 1));
+        }
+        let out = arbitrate_pus(demands, 1, 2);
+        assert_eq!(out.waits[0], 0);
+        assert_eq!(out.waits[1], 1_000);
+    }
+
+    #[test]
+    fn pu_capacity_relieves_contention() {
+        let demands: Vec<PuDemand> =
+            (0..8).map(|k| dem(0, 100, (k % 4) as u32)).collect();
+        let narrow = arbitrate_pus(demands.clone(), 2, 4);
+        let wide = arbitrate_pus(demands, 8, 4);
+        assert!(narrow.total_wait() > 0);
+        assert_eq!(wide.total_wait(), 0);
+        assert_eq!(narrow.busy_total, wide.busy_total);
     }
 }

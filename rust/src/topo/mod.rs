@@ -26,17 +26,24 @@
 //! rings, the per-requestor state CXLMemUring's asynchronous pool-access
 //! model assumes) — so a tenant's
 //! solo timeline is simulated exactly by the existing engines. What
-//! tenants *share* is wire bandwidth: the device's CXL.mem/CXL.io links
-//! and the optional upstream fabric link. Contention is computed by
-//! deterministic replay arbitration of the traced wire occupancies
-//! ([`fabric::arbitrate`]). CCM PU-pool sharing across co-located
-//! tenants is a ROADMAP follow-on (per-tenant QoS policies).
+//! tenants *share* is the device's physical capacity: wire bandwidth
+//! (the device's CXL.mem/CXL.io links and the optional upstream fabric
+//! link) and **CCM PU time** (the device's processing-unit pool).
+//! Contention is computed by deterministic replay arbitration of the
+//! traced occupancies: wire traces through [`fabric::arbitrate_qos`]
+//! under the configured [`QosSpec`] policy (FCFS / weighted round-robin
+//! / deficit round-robin with bandwidth floors), and CCM lease windows
+//! through [`fabric::arbitrate_pus`] (interval-merge accounting onto one
+//! shared pool). Each tenant's slowdown decomposes into a wire shift and
+//! a PU shift (see [`tenant::TenantRun`]).
 
 pub mod fabric;
 pub mod tenant;
 
-pub use crate::config::{Placement, TopologySpec};
-pub use fabric::{arbitrate, ArbitrationOutcome, FabricMsg};
+pub use crate::config::{Placement, QosPolicy, QosSpec, TopologySpec};
+pub use fabric::{
+    arbitrate, arbitrate_pus, arbitrate_qos, ArbitrationOutcome, FabricMsg, PuDemand, PuOutcome,
+};
 pub use tenant::{run_tenants, sweep_tenant_grid, TenantReport, TenantRun, TenantSpec};
 
 use crate::config::SimConfig;
@@ -73,12 +80,16 @@ impl DeviceCtx {
         }
     }
 
-    /// As [`DeviceCtx::new`] with wire-occupancy tracing enabled on both
-    /// links (tracing never changes timing; see [`Link::enable_trace`]).
+    /// As [`DeviceCtx::new`] with occupancy tracing enabled on both links
+    /// *and* the CCM PU pool (tracing never changes timing; see
+    /// [`Link::enable_trace`] and [`PuPool::enable_trace`]). The host
+    /// pool is deliberately untraced: host PUs are not a per-device
+    /// shared resource in the topology model.
     pub fn traced(cfg: &SimConfig) -> Self {
         let mut ctx = Self::new(cfg);
         ctx.mem.enable_trace();
         ctx.io.enable_trace();
+        ctx.ccm.enable_trace();
         ctx
     }
 }
@@ -97,6 +108,11 @@ pub struct DeviceStats {
     /// Added completion delay on this device's CXL.io link (same
     /// accounting as `mem_wait`).
     pub io_wait: Ps,
+    /// Added completion delay on this device's shared CCM PU pool (sum of
+    /// the per-tenant completion shifts; see `fabric::PuOutcome`).
+    pub pu_wait: Ps,
+    /// Busy-union of this device's shared CCM PU pool over the replay.
+    pub pu_busy: Ps,
     /// Data bytes carried by this device's links.
     pub bytes: u64,
     /// Wire busy-union of this device's links (mem + io).
@@ -188,6 +204,7 @@ mod tests {
         assert_eq!(ctx.mem.rtt(), cfg.cxl_mem_rtt);
         assert_eq!(ctx.io.rtt(), cfg.cxl_io_rtt);
         assert!(ctx.mem.trace().is_empty() && ctx.io.trace().is_empty());
+        assert!(ctx.ccm.trace().is_empty());
     }
 
     #[test]

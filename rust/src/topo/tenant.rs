@@ -20,22 +20,52 @@
 //! 3. **Contention pass.** Each device's CXL.mem and CXL.io links
 //!    serialize the wire traffic of the tenants placed on it, and the
 //!    optional shared upstream fabric link serializes *all* devices'
-//!    traffic, via replay arbitration ([`super::fabric::arbitrate`]).
-//!    Device link and fabric form a pipelined two-stage path carrying
-//!    the same bytes, so a tenant's contended runtime = solo runtime +
-//!    `max(device wait, fabric wait)` — the bottleneck stage's delay
-//!    (RP/BS are fully serialized pipelines, so that wait lands on the
-//!    critical path; for AXLE it is a conservative upper bound on the
-//!    slowdown).
+//!    traffic, via replay arbitration under the topology's QoS policy
+//!    ([`super::fabric::arbitrate_qos`]: FCFS, weighted round-robin, or
+//!    deficit round-robin with per-tenant bandwidth floors — see
+//!    [`crate::config::QosSpec`]). Each device's CCM PU pool additionally
+//!    serializes the co-located tenants' traced lease windows
+//!    ([`super::fabric::arbitrate_pus`]), so compute contention inside
+//!    the expander is charged too, not just wire contention.
+//!
+//! **Slowdown decomposition.** A tenant's contended runtime is
+//! `solo + wire_shift + pu_shift`:
+//!
+//! - `wire_shift = max(device wait, fabric wait)` — device link and
+//!   fabric form a pipelined two-stage path carrying the same bytes, so a
+//!   conflict visible on both stages is one physical wait (RP/BS are
+//!   fully serialized pipelines, so the wait lands on the critical path;
+//!   for AXLE it is a conservative upper bound);
+//! - `pu_shift` — the completion shift of the tenant's CCM lease windows
+//!   on the shared pool. Compute occupancy and wire occupancy are
+//!   disjoint phases of the offload pipeline (a result is produced, then
+//!   moved), so the two shifts add rather than max.
+//!
+//! Both components are reported per tenant (`axle tenants`, `axle report
+//! fig17`, and the JSON schema: `wire_wait_ps` + `pu_wait_ps` with
+//! `total_ps = solo_total_ps + wire_wait_ps + pu_wait_ps`).
 //!
 //! Everything is a pure function of `(config, topology, tenant spec)`;
 //! two invocations produce byte-identical reports.
+//!
+//! # Worked example: why QoS changes the numbers
+//!
+//! Suppose streams A and B both burst 4 MB onto one device link at
+//! `t = 0`. FCFS serves A's whole train first (A wins the issue-order
+//! tie), so B's completion shifts by 4 MB of serialization while A's
+//! shifts by ~0. `--qos wrr` with equal weights alternates their
+//! messages: both tails now shift by about half the combined burst —
+//! the p99/max slowdown drops while the mean stays put. `--qos drr
+//! --floors 0.75,0.25` skews the wire 3:1 toward A: A's shift shrinks
+//! toward its solo schedule and B absorbs the rest, without ever
+//! starving (B still drains one quantum per round). The busy time of the
+//! link is identical in all three cases — QoS only chooses *who* waits.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::config::{Protocol, SimConfig, TopologySpec};
+use crate::config::{Protocol, QosPolicy, QosSpec, SimConfig, TopologySpec};
 use crate::metrics::{percentile, RunMetrics};
 use crate::sim::{ps_to_us, Ps};
 use crate::sweep::{self, SpecJob};
@@ -43,7 +73,7 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::workload::ALL_ANNOTATIONS;
 
-use super::fabric::{arbitrate, FabricMsg};
+use super::fabric::{arbitrate_pus, arbitrate_qos, FabricMsg, PuDemand};
 use super::{DeviceStats, Topology};
 
 /// Declarative description of a tenant mix.
@@ -113,19 +143,31 @@ pub struct TenantRun {
     pub device_wait: Ps,
     /// Completion shift from the shared upstream fabric link.
     pub fabric_wait: Ps,
+    /// Completion shift from sharing the device's CCM PU pool with
+    /// co-located tenants (compute contention).
+    pub pu_wait: Ps,
 }
 
 impl TenantRun {
-    /// Contended end-to-end runtime (arrival-relative): solo runtime plus
-    /// the **bottleneck** stage's added delay. Device link and fabric are
-    /// a pipelined (cut-through) two-stage path carrying the same bytes,
-    /// so a conflict that appears on both stages is one physical wait,
-    /// not two — charging `max` instead of the sum avoids double-counting
+    /// Wire-contention component of the slowdown: the **bottleneck**
+    /// stage's added delay. Device link and fabric are a pipelined
+    /// (cut-through) two-stage path carrying the same bytes, so a
+    /// conflict that appears on both stages is one physical wait, not
+    /// two — charging `max` instead of the sum avoids double-counting
     /// the common case where the fabric replay sees the identical
     /// conflicts the device replay saw (it under-counts only when the
     /// two stages conflict with *different* tenants at different times).
+    pub fn wire_wait(&self) -> Ps {
+        self.device_wait.max(self.fabric_wait)
+    }
+
+    /// Contended end-to-end runtime (arrival-relative): solo runtime plus
+    /// the wire shift plus the PU shift. Wire and compute occupancy are
+    /// disjoint phases of the offload pipeline (a result is produced on a
+    /// PU, then moved over the wire), so the two shifts add — see the
+    /// module docs' slowdown decomposition.
     pub fn total(&self) -> Ps {
-        self.solo.total + self.device_wait.max(self.fabric_wait)
+        self.solo.total + self.wire_wait() + self.pu_wait
     }
 
     /// Contended completion time (absolute).
@@ -151,6 +193,8 @@ impl TenantRun {
         o.insert("solo_total_ps".into(), Json::Num(self.solo.total as f64));
         o.insert("device_wait_ps".into(), Json::Num(self.device_wait as f64));
         o.insert("fabric_wait_ps".into(), Json::Num(self.fabric_wait as f64));
+        o.insert("wire_wait_ps".into(), Json::Num(self.wire_wait() as f64));
+        o.insert("pu_wait_ps".into(), Json::Num(self.pu_wait as f64));
         o.insert("total_ps".into(), Json::Num(self.total() as f64));
         o.insert("slowdown".into(), Json::Num(self.slowdown()));
         Json::Obj(o)
@@ -175,6 +219,8 @@ pub struct FabricReport {
 /// The full multi-tenant simulation result.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
+    /// Link-arbitration policy the contention pass ran under.
+    pub qos: QosPolicy,
     pub tenants: Vec<TenantRun>,
     pub devices: Vec<DeviceStats>,
     pub fabric: FabricReport,
@@ -206,12 +252,15 @@ impl TenantReport {
                 o.insert("load_ps".into(), Json::Num(d.load as f64));
                 o.insert("mem_wait_ps".into(), Json::Num(d.mem_wait as f64));
                 o.insert("io_wait_ps".into(), Json::Num(d.io_wait as f64));
+                o.insert("pu_wait_ps".into(), Json::Num(d.pu_wait as f64));
+                o.insert("pu_busy_ps".into(), Json::Num(d.pu_busy as f64));
                 o.insert("bytes".into(), Json::Num(d.bytes as f64));
                 o.insert("link_busy_ps".into(), Json::Num(d.link_busy as f64));
                 Json::Obj(o)
             })
             .collect();
         let mut o = BTreeMap::new();
+        o.insert("qos".into(), Json::Str(self.qos.label().into()));
         o.insert("tenants".into(), Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()));
         o.insert("devices".into(), Json::Arr(devices));
         o.insert("fabric".into(), Json::Obj(fab));
@@ -282,13 +331,16 @@ pub fn run_tenants(
     }
     let placements: Vec<u32> = (0..spec.streams).map(|i| topo.place(solo_total(i))).collect();
 
-    // ---- Pass 3: replay arbitration (device links, then fabric). ----
+    // ---- Pass 3: replay arbitration (device links + PU pool, fabric). ----
     let n = spec.streams;
+    let qos = &topo_spec.qos;
     let mut device_wait: Vec<Ps> = vec![0; n];
+    let mut pu_wait: Vec<Ps> = vec![0; n];
     let mut fabric_msgs: Vec<FabricMsg> = Vec::new();
     for d in 0..topo.num_devices() as u32 {
         let mut mem_msgs: Vec<FabricMsg> = Vec::new();
         let mut io_msgs: Vec<FabricMsg> = Vec::new();
+        let mut pu_demands: Vec<PuDemand> = Vec::new();
         for i in 0..n {
             if placements[i] != d {
                 continue;
@@ -300,6 +352,9 @@ pub fn run_tenants(
             for m in &run.io_trace {
                 io_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant: i as u32 });
             }
+            for s in &run.ccm_trace {
+                pu_demands.push(PuDemand { at: arrivals[i] + s.start, dur: s.dur(), tenant: i as u32 });
+            }
         }
         // All device traffic also crosses the upstream fabric (skip the
         // copies entirely when no fabric link is modelled).
@@ -307,11 +362,17 @@ pub fn run_tenants(
             fabric_msgs.extend(mem_msgs.iter().copied());
             fabric_msgs.extend(io_msgs.iter().copied());
         }
-        let mem_out = arbitrate(mem_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n);
-        let io_out = arbitrate(io_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n);
+        let mem_out = arbitrate_qos(mem_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n, qos);
+        let io_out = arbitrate_qos(io_msgs, cfg.cxl_bw_gbps, cfg.cxl_bw_gbps, n, qos);
+        // Compute contention: co-located lease windows re-dispatched onto
+        // this device's shared CCM pool (interval-merge accounting; FCFS —
+        // QoS governs the wires, the PUs stay earliest-free).
+        let pu_out = arbitrate_pus(pu_demands, cfg.ccm.num_pus, n);
         let dev = topo.device_mut(d);
         dev.mem_wait = mem_out.total_wait();
         dev.io_wait = io_out.total_wait();
+        dev.pu_wait = pu_out.total_wait();
+        dev.pu_busy = pu_out.busy_union;
         dev.bytes = mem_out.bytes + io_out.bytes;
         dev.link_busy = mem_out.busy.union() + io_out.busy.union();
         for i in 0..n {
@@ -319,10 +380,11 @@ pub fn run_tenants(
             // delay is its worst channel's completion shift (tenants on
             // other devices have zero in both vectors).
             device_wait[i] = device_wait[i].max(mem_out.waits[i].max(io_out.waits[i]));
+            pu_wait[i] = pu_wait[i].max(pu_out.waits[i]);
         }
     }
     let fabric_out =
-        topo_spec.fabric_bw_gbps.map(|bw| arbitrate(fabric_msgs, bw, cfg.cxl_bw_gbps, n));
+        topo_spec.fabric_bw_gbps.map(|bw| arbitrate_qos(fabric_msgs, bw, cfg.cxl_bw_gbps, n, qos));
 
     // ---- Assemble. ----
     let tenants: Vec<TenantRun> = (0..n)
@@ -334,6 +396,7 @@ pub fn run_tenants(
             solo: solo_runs[job_of[&annots[i]]].metrics.clone(),
             device_wait: device_wait[i],
             fabric_wait: fabric_out.as_ref().map_or(0, |f| f.waits[i]),
+            pu_wait: pu_wait[i],
         })
         .collect();
     let makespan = tenants.iter().map(|t| t.completion()).max().unwrap_or(0);
@@ -350,6 +413,7 @@ pub fn run_tenants(
     };
     let slowdowns: Vec<f64> = tenants.iter().map(|t| t.slowdown()).collect();
     TenantReport {
+        qos: topo_spec.qos.policy,
         p50_slowdown: percentile(&slowdowns, 50.0),
         p99_slowdown: percentile(&slowdowns, 99.0),
         max_slowdown: slowdowns.iter().cloned().fold(f64::MIN, f64::max),
@@ -360,33 +424,44 @@ pub fn run_tenants(
     }
 }
 
-/// Sweep the topology axes: one [`TenantReport`] per `(devices, streams)`
-/// grid point, with the base specs' other knobs held fixed. The devices/
-/// streams pair is the sweep axis the contention figure
-/// (`axle report fig17`) walks.
+/// Sweep the topology axes: one [`TenantReport`] per `(policy, devices,
+/// streams)` grid point, with the base specs' other knobs held fixed.
+/// The QoS policy is the outermost axis (each policy re-walks the same
+/// device/stream grid, reusing the base spec's weights/floors); the
+/// devices/streams pair is the axis the contention figure (`axle report
+/// fig17`) walks per policy.
 pub fn sweep_tenant_grid(
     cfg: &SimConfig,
     topo_base: &TopologySpec,
     tenant_base: &TenantSpec,
+    policy_axis: &[QosPolicy],
     devices_axis: &[usize],
     streams_axis: &[usize],
     jobs: usize,
-) -> Vec<(usize, usize, TenantReport)> {
-    let mut out = Vec::with_capacity(devices_axis.len() * streams_axis.len());
-    for &d in devices_axis {
-        for &k in streams_axis {
-            let topo = TopologySpec { devices: d, ..topo_base.clone() };
-            let tenants = TenantSpec { streams: k, ..tenant_base.clone() };
-            out.push((d, k, run_tenants(cfg, &topo, &tenants, jobs)));
+) -> Vec<(QosPolicy, usize, usize, TenantReport)> {
+    let mut out =
+        Vec::with_capacity(policy_axis.len() * devices_axis.len() * streams_axis.len());
+    for &policy in policy_axis {
+        for &d in devices_axis {
+            for &k in streams_axis {
+                let topo = TopologySpec {
+                    devices: d,
+                    qos: QosSpec { policy, ..topo_base.qos.clone() },
+                    ..topo_base.clone()
+                };
+                let tenants = TenantSpec { streams: k, ..tenant_base.clone() };
+                out.push((policy, d, k, run_tenants(cfg, &topo, &tenants, jobs)));
+            }
         }
     }
     out
 }
 
-/// One printable line per tenant (the `axle tenants` table body).
+/// One printable line per tenant (the `axle tenants` table body), with
+/// the wire/PU slowdown decomposition.
 pub fn format_tenant_row(t: &TenantRun) -> String {
     format!(
-        "#{:<3} ({})  dev {:<2} arr {:>10.2} us  solo {:>10.2} us  +dev {:>8.2} us  +fab {:>8.2} us  x{:<5.3}",
+        "#{:<3} ({})  dev {:<2} arr {:>10.2} us  solo {:>10.2} us  +dev {:>8.2} us  +fab {:>8.2} us  +pu {:>8.2} us  x{:<5.3}",
         t.tenant,
         t.annot,
         t.device,
@@ -394,6 +469,7 @@ pub fn format_tenant_row(t: &TenantRun) -> String {
         ps_to_us(t.solo.total),
         ps_to_us(t.device_wait),
         ps_to_us(t.fabric_wait),
+        ps_to_us(t.pu_wait),
         t.slowdown()
     )
 }
@@ -449,10 +525,12 @@ mod tests {
         let r = run_tenants(&cfg, &topo, &tenants, 2);
         assert_eq!(r.tenants.len(), 1);
         let t = &r.tenants[0];
-        // Alone at device bandwidth the replay reproduces the solo
-        // schedule: zero added wait, slowdown exactly 1.
+        // Alone at device bandwidth/capacity the replay reproduces the
+        // solo schedule: zero added wait on wires AND on the PU pool,
+        // slowdown exactly 1.
         assert_eq!(t.device_wait, 0);
         assert_eq!(t.fabric_wait, 0);
+        assert_eq!(t.pu_wait, 0);
         assert!((t.slowdown() - 1.0).abs() < 1e-12);
         assert_eq!(r.makespan, t.solo.total);
     }
@@ -511,14 +589,100 @@ mod tests {
         let cfg = SimConfig::m2ndp();
         let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
         let tenants = TenantSpec::new(1).with_workloads(vec!['a', 'd']);
-        let grid = sweep_tenant_grid(&cfg, &topo, &tenants, &[1, 2], &[2, 4], 2);
-        assert_eq!(grid.len(), 4);
-        assert_eq!(grid[0].0, 1);
-        assert_eq!(grid[0].1, 2);
-        assert_eq!(grid[3].0, 2);
-        assert_eq!(grid[3].1, 4);
-        for (_, k, r) in &grid {
+        let grid = sweep_tenant_grid(
+            &cfg,
+            &topo,
+            &tenants,
+            &[QosPolicy::Fcfs, QosPolicy::Wrr],
+            &[1, 2],
+            &[2, 4],
+            2,
+        );
+        assert_eq!(grid.len(), 8);
+        assert_eq!((grid[0].0, grid[0].1, grid[0].2), (QosPolicy::Fcfs, 1, 2));
+        assert_eq!((grid[3].0, grid[3].1, grid[3].2), (QosPolicy::Fcfs, 2, 4));
+        assert_eq!((grid[4].0, grid[4].1, grid[4].2), (QosPolicy::Wrr, 1, 2));
+        assert_eq!((grid[7].0, grid[7].1, grid[7].2), (QosPolicy::Wrr, 2, 4));
+        for (p, _, k, r) in &grid {
             assert_eq!(r.tenants.len(), *k);
+            assert_eq!(r.qos, *p);
         }
+    }
+
+    #[test]
+    fn colocated_tenants_pay_pu_contention_under_saturation() {
+        // Four copies of the same stream arriving nearly simultaneously
+        // on ONE device: their CCM lease windows coincide, so aggregate
+        // demand exceeds the 16-PU pool and the later arrivals' compute
+        // slides right.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let tenants = TenantSpec::new(4).with_workloads(vec!['e']).with_load(64.0);
+        let r = run_tenants(&cfg, &topo, &tenants, 2);
+        assert!(
+            r.tenants.iter().any(|t| t.pu_wait > 0),
+            "coinciding streams must contend for CCM PU time"
+        );
+        // The decomposition is exactly what total() reports.
+        for t in &r.tenants {
+            assert_eq!(t.total(), t.solo.total + t.wire_wait() + t.pu_wait);
+            assert!(t.slowdown() >= 1.0);
+        }
+        // Device aggregates mirror the per-tenant shifts.
+        let dev_pu: Ps = r.devices.iter().map(|d| d.pu_wait).sum();
+        assert!(dev_pu >= r.tenants.iter().map(|t| t.pu_wait).max().unwrap());
+        assert!(r.devices[0].pu_busy > 0);
+    }
+
+    #[test]
+    fn qos_policy_is_threaded_and_seed_stable() {
+        // WRR and DRR runs are deterministic (worker-count invariant,
+        // repeatable) and tagged with their policy.
+        let (cfg, topo, tenants) = spec_2x8();
+        for qos in [
+            crate::config::QosSpec::wrr(vec![4, 1]),
+            crate::config::QosSpec::drr(vec![0.7, 0.1]),
+        ] {
+            let policy = qos.policy;
+            let t = topo.clone().with_qos(qos);
+            let a = run_tenants(&cfg, &t, &tenants, 4);
+            let b = run_tenants(&cfg, &t, &tenants, 1);
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+            assert_eq!(a.qos, policy);
+        }
+    }
+
+    #[test]
+    fn wrr_differs_from_fcfs_under_heavy_contention() {
+        // Six data-heavy streams crammed onto one device (load 32 ⇒
+        // near-simultaneous arrivals): the link backlog is deep, so the
+        // service order — and with it some tenant's completion shift —
+        // must change between FCFS and a skewed WRR.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let tenants = TenantSpec::new(6).with_workloads(vec!['e', 'i']).with_load(32.0);
+        let fcfs = run_tenants(&cfg, &topo, &tenants, 2);
+        let wrr = run_tenants(
+            &cfg,
+            &topo.clone().with_qos(crate::config::QosSpec::wrr(vec![8, 1])),
+            &tenants,
+            2,
+        );
+        let drr = run_tenants(
+            &cfg,
+            &topo.clone().with_qos(crate::config::QosSpec::drr(vec![0.8, 0.1])),
+            &tenants,
+            2,
+        );
+        assert!(fcfs.fabric.wait > 0, "scenario must actually contend");
+        let wire = |r: &TenantReport| -> Vec<Ps> {
+            r.tenants.iter().map(|t| t.wire_wait()).collect()
+        };
+        assert_ne!(wire(&fcfs), wire(&wrr), "WRR must reorder waits vs FCFS");
+        assert_ne!(wire(&fcfs), wire(&drr), "DRR must reorder waits vs FCFS");
+        // PU contention is policy-independent (QoS governs wires).
+        let pu = |r: &TenantReport| -> Vec<Ps> { r.tenants.iter().map(|t| t.pu_wait).collect() };
+        assert_eq!(pu(&fcfs), pu(&wrr));
+        assert_eq!(pu(&fcfs), pu(&drr));
     }
 }

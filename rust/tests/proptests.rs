@@ -349,3 +349,186 @@ fn prop_shared_link_serializes_two_senders_without_overlap() {
         }
     });
 }
+
+// ------------------------------------------------------------------
+// QoS arbitration invariants (topo::fabric, PR-3 policies).
+// ------------------------------------------------------------------
+
+mod qos_props {
+    use axle::config::QosSpec;
+    use axle::sim::transfer_ps;
+    use axle::topo::fabric::{arbitrate, arbitrate_qos, FabricMsg};
+    use axle::util::prop::run_prop;
+    use axle::util::rng::Pcg32;
+
+    fn random_msgs(rng: &mut Pcg32, n_tenants: usize) -> Vec<FabricMsg> {
+        let count = rng.range(1, 80) as usize;
+        let mut t = 0u64;
+        (0..count)
+            .map(|_| {
+                t += rng.below(50_000);
+                FabricMsg {
+                    at: t,
+                    bytes: rng.range(1, 1 << 16),
+                    tenant: rng.below(n_tenants as u64) as u32,
+                }
+            })
+            .collect()
+    }
+
+    /// All policies are work-conserving on one wire, so busy periods —
+    /// and with them the busy union, aggregate service time, final
+    /// free-up and per-tenant message/byte counts — are identical; QoS
+    /// only redistributes waits. ("Conservation-consistency with the
+    /// FCFS totals.")
+    #[test]
+    fn prop_qos_policies_share_busy_periods() {
+        run_prop("qos_busy_period_invariance", 150, |rng| {
+            let n = rng.range(1, 6) as usize;
+            let msgs = random_msgs(rng, n);
+            let bw = [1.0, 4.0, 16.0][rng.below(3) as usize];
+            let weights: Vec<u64> = (0..n).map(|_| rng.range(0, 4)).collect();
+            let floors: Vec<f64> = (0..n).map(|_| rng.range(1, 8) as f64 / 4.0).collect();
+            let fcfs = arbitrate(msgs.clone(), bw, bw, n);
+            for qos in [QosSpec::wrr(weights.clone()), QosSpec::drr(floors.clone())] {
+                let out = arbitrate_qos(msgs.clone(), bw, bw, n, &qos);
+                let label = qos.policy.label();
+                assert_eq!(out.busy.union(), fcfs.busy.union(), "{label}: busy union");
+                assert_eq!(out.busy.total(), fcfs.busy.total(), "{label}: busy total");
+                assert_eq!(out.wire_free, fcfs.wire_free, "{label}: final free-up");
+                assert_eq!(out.messages, fcfs.messages, "{label}: messages");
+                assert_eq!(out.bytes, fcfs.bytes, "{label}: bytes");
+                // Per-tenant service counts are preserved (every message
+                // of every tenant is served exactly once).
+                for tenant in 0..n as u32 {
+                    let want = msgs.iter().filter(|m| m.tenant == tenant).count();
+                    let got = out.order.iter().filter(|&&t| t == tenant).count();
+                    assert_eq!(got, want, "{label}: tenant {tenant} service count");
+                }
+            }
+        });
+    }
+
+    /// WRR never starves a nonzero-weight tenant: a 1-message mouse
+    /// behind hog bursts is served strictly earlier than under FCFS
+    /// (which, with everything queued at t = 0, serves the mouse dead
+    /// last — it has the highest tenant id).
+    #[test]
+    fn prop_wrr_mouse_beats_fcfs_tail() {
+        run_prop("wrr_no_starvation", 120, |rng| {
+            let hogs = rng.range(1, 3) as usize;
+            let n = hogs + 1;
+            let mouse = hogs as u32;
+            let mut msgs = Vec::new();
+            for h in 0..hogs as u32 {
+                for _ in 0..rng.range(10, 30) {
+                    msgs.push(FabricMsg { at: 0, bytes: rng.range(10_000, 100_000), tenant: h });
+                }
+            }
+            msgs.push(FabricMsg { at: 0, bytes: rng.range(100, 1_000), tenant: mouse });
+            let mut weights: Vec<u64> = (0..hogs as u64).map(|_| rng.range(1, 3)).collect();
+            weights.push(1); // the mouse's nonzero weight
+            let fcfs = arbitrate(msgs.clone(), 16.0, 16.0, n);
+            let wrr = arbitrate_qos(msgs.clone(), 16.0, 16.0, n, &QosSpec::wrr(weights.clone()));
+            // Mouse served within the first Σweights services (one WRR
+            // round), far before the hog backlog drains.
+            let sum_w: u64 = weights.iter().sum();
+            let pos = wrr.order.iter().position(|&t| t == mouse).expect("mouse served");
+            assert!(
+                (pos as u64) < sum_w,
+                "mouse served at position {pos}, round is {sum_w}"
+            );
+            assert!(
+                wrr.waits[mouse as usize] < fcfs.waits[mouse as usize],
+                "WRR mouse wait {} must beat FCFS {}",
+                wrr.waits[mouse as usize],
+                fcfs.waits[mouse as usize]
+            );
+        });
+    }
+
+    /// DRR with equal floors over equal-size packets is exact round-robin
+    /// (quantum = packet size): a 1-packet mouse is served within the
+    /// first cycle and always beats the FCFS tail.
+    #[test]
+    fn prop_drr_equal_floors_never_starve() {
+        run_prop("drr_no_starvation", 120, |rng| {
+            let hogs = rng.range(1, 4) as usize;
+            let n = hogs + 1;
+            let mouse = hogs as u32;
+            let bytes = rng.range(1_000, 50_000);
+            let mut msgs = Vec::new();
+            for h in 0..hogs as u32 {
+                for _ in 0..rng.range(5, 20) {
+                    msgs.push(FabricMsg { at: 0, bytes, tenant: h });
+                }
+            }
+            msgs.push(FabricMsg { at: 0, bytes, tenant: mouse });
+            let fcfs = arbitrate(msgs.clone(), 16.0, 16.0, n);
+            let drr = arbitrate_qos(msgs.clone(), 16.0, 16.0, n, &QosSpec::drr(Vec::new()));
+            let pos = drr.order.iter().position(|&t| t == mouse).expect("mouse served");
+            assert!(pos < n, "round-robin serves the mouse in cycle one");
+            assert!(drr.waits[mouse as usize] < fcfs.waits[mouse as usize]);
+            // Sanity: the mouse's wait is at most (n-1) serializations.
+            let ser = transfer_ps(bytes, 16.0);
+            assert!(drr.waits[mouse as usize] <= (n as u64 - 1) * ser);
+        });
+    }
+
+    /// FCFS through the QoS entry point is the PR-2 arbiter, bit for bit,
+    /// on arbitrary inputs (the dispatcher must never drift).
+    #[test]
+    fn prop_fcfs_policy_matches_pr2_arbiter() {
+        run_prop("fcfs_is_pr2", 150, |rng| {
+            let n = rng.range(1, 5) as usize;
+            let msgs = random_msgs(rng, n);
+            let bw = [1.0, 8.0, 16.0][rng.below(3) as usize];
+            let base = [bw, 2.0 * bw][rng.below(2) as usize];
+            let a = arbitrate(msgs.clone(), bw, base, n);
+            let b = arbitrate_qos(msgs, bw, base, n, &QosSpec::fcfs());
+            assert_eq!(a.waits, b.waits);
+            assert_eq!(a.order, b.order);
+            assert_eq!(a.wire_free, b.wire_free);
+            assert_eq!(a.busy.union(), b.busy.union());
+            assert_eq!(a.busy.total(), b.busy.total());
+            assert_eq!((a.messages, a.bytes), (b.messages, b.bytes));
+        });
+    }
+
+    /// PU-pool replay: a within-capacity demand set replays with zero
+    /// shift; overloading the pool charges only the displaced tenants and
+    /// conserves aggregate PU time.
+    #[test]
+    fn prop_pu_replay_conserves_demand() {
+        use axle::topo::fabric::{arbitrate_pus, PuDemand};
+        run_prop("pu_replay_conservation", 150, |rng| {
+            let n = rng.range(1, 5) as usize;
+            let capacity = rng.range(1, 8) as usize;
+            let mut t = 0u64;
+            let demands: Vec<PuDemand> = (0..rng.range(1, 60))
+                .map(|_| {
+                    t += rng.below(5_000);
+                    PuDemand {
+                        at: t,
+                        dur: rng.range(1, 20_000),
+                        tenant: rng.below(n as u64) as u32,
+                    }
+                })
+                .collect();
+            let total: u64 = demands.iter().map(|d| d.dur).sum();
+            let out = arbitrate_pus(demands.clone(), capacity, n);
+            // Aggregate PU time is conserved; the union never exceeds it.
+            assert_eq!(out.busy_total, total);
+            assert!(out.busy_union <= total);
+            assert_eq!(out.spans, demands.len() as u64);
+            // A pool at least as wide as the demand count cannot contend.
+            let wide = arbitrate_pus(demands.clone(), demands.len(), n);
+            assert_eq!(wide.total_wait(), 0);
+            // More capacity never hurts any tenant.
+            let wider = arbitrate_pus(demands, capacity + 1, n);
+            for i in 0..n {
+                assert!(wider.waits[i] <= out.waits[i], "tenant {i} hurt by extra PU");
+            }
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! QoS regression gate (PR 3): the FCFS policy path must stay
+//! bit-identical to the PR-2 arbiter, and the new WRR/DRR policies must
+//! produce deterministic, seed-stable tenant reports that actually
+//! differ from FCFS under contention (the PR acceptance scenario for
+//! `axle tenants --qos wrr|drr`).
+
+use axle::config::{QosPolicy, QosSpec, SimConfig, TopologySpec};
+use axle::sim::{transfer_ps, BusyTracker, Ps};
+use axle::topo::fabric::{arbitrate, arbitrate_qos, FabricMsg};
+use axle::topo::{self, TenantSpec};
+use axle::util::rng::Pcg32;
+
+/// The PR-2 arbiter, re-implemented verbatim from its published
+/// semantics (global `(at, tenant)` order against one wire frontier,
+/// max-lateness per tenant). Kept independent of `topo::fabric` so a
+/// refactor there cannot silently move the baseline this test pins.
+fn pr2_reference(
+    mut msgs: Vec<FabricMsg>,
+    bw_gbps: f64,
+    baseline_bw_gbps: f64,
+    n_tenants: usize,
+) -> (Vec<Ps>, BusyTracker, u64, u64, Ps) {
+    msgs.sort_by_key(|m| (m.at, m.tenant));
+    let mut waits: Vec<Ps> = vec![0; n_tenants];
+    let mut busy = BusyTracker::new();
+    let (mut messages, mut bytes) = (0u64, 0u64);
+    let mut wire_free: Ps = 0;
+    for m in &msgs {
+        let ser = transfer_ps(m.bytes, bw_gbps);
+        let solo_finish = m.at + transfer_ps(m.bytes, baseline_bw_gbps);
+        let start = m.at.max(wire_free);
+        let lateness = (start + ser).saturating_sub(solo_finish);
+        let w = &mut waits[m.tenant as usize];
+        *w = (*w).max(lateness);
+        busy.record(start, start + ser);
+        wire_free = start + ser;
+        messages += 1;
+        bytes += m.bytes;
+    }
+    (waits, busy, messages, bytes, wire_free)
+}
+
+fn random_msgs(rng: &mut Pcg32, n_tenants: usize, count: usize) -> Vec<FabricMsg> {
+    let mut t = 0u64;
+    (0..count)
+        .map(|_| {
+            t += rng.below(100_000);
+            FabricMsg {
+                at: t,
+                bytes: rng.range(1, 1 << 18),
+                tenant: rng.below(n_tenants as u64) as u32,
+            }
+        })
+        .collect()
+}
+
+/// Both the legacy entry point AND the FCFS policy path must reproduce
+/// the PR-2 reference field for field on arbitrary inputs, including
+/// narrower-than-baseline shared links.
+#[test]
+fn fcfs_paths_are_bit_identical_to_pr2_reference() {
+    let mut rng = Pcg32::seed_from_u64(0x9055_0003);
+    for case in 0..40 {
+        let n = 1 + (case % 5) as usize;
+        let msgs = random_msgs(&mut rng, n, 1 + (case * 7) % 120);
+        for (bw, base) in [(16.0, 16.0), (4.0, 16.0), (1.0, 1.0)] {
+            let (waits, busy, messages, bytes, wire_free) =
+                pr2_reference(msgs.clone(), bw, base, n);
+            let legacy = arbitrate(msgs.clone(), bw, base, n);
+            let policy = arbitrate_qos(msgs.clone(), bw, base, n, &QosSpec::fcfs());
+            for out in [&legacy, &policy] {
+                assert_eq!(out.waits, waits, "case {case} bw {bw}");
+                assert_eq!(out.busy.union(), busy.union());
+                assert_eq!(out.busy.total(), busy.total());
+                assert_eq!(out.busy.intervals(), busy.intervals());
+                assert_eq!(out.busy.first_start(), busy.first_start());
+                assert_eq!(out.messages, messages);
+                assert_eq!(out.bytes, bytes);
+                assert_eq!(out.wire_free, wire_free);
+            }
+            assert_eq!(legacy.order, policy.order);
+        }
+    }
+}
+
+/// End to end through the tenant driver: FCFS is the default policy, and
+/// an explicitly-FCFS topology is byte-identical to the default across
+/// worker counts. (This pins the plumbing, not the arbiter itself — the
+/// FCFS-vs-PR-2 bit-identity is pinned at the arbiter level by
+/// `fcfs_paths_are_bit_identical_to_pr2_reference` above and by
+/// `prop_fcfs_policy_matches_pr2_arbiter` in `proptests.rs`; every
+/// tenant-driver wire wait flows through that same `arbitrate_qos`
+/// entry point.)
+#[test]
+fn tenant_driver_defaults_to_fcfs_and_is_invariant() {
+    let cfg = SimConfig::m2ndp();
+    let topo_spec = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+    assert_eq!(topo_spec.qos.policy, QosPolicy::Fcfs, "FCFS is the default");
+    let tenants = TenantSpec::new(8).with_workloads(vec!['a', 'd', 'e', 'i']);
+    let explicit_fcfs = topo_spec.clone().with_qos(QosSpec::fcfs());
+    let a = topo::run_tenants(&cfg, &topo_spec, &tenants, 4);
+    let b = topo::run_tenants(&cfg, &explicit_fcfs, &tenants, 2);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert!(a.fabric.wait > 0, "the pinned scenario must contend");
+}
+
+/// The acceptance scenario: `--qos wrr` / `--qos drr` are deterministic,
+/// seed-stable, and differ from FCFS under contention.
+#[test]
+fn wrr_and_drr_tenant_runs_are_seed_stable_and_differ_from_fcfs() {
+    let cfg = SimConfig::m2ndp();
+    // One device + heavy load ⇒ deep link backlog ⇒ service order matters.
+    let topo_spec = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+    let tenants = TenantSpec::new(6).with_workloads(vec!['e', 'i']).with_load(32.0);
+    let fcfs = topo::run_tenants(&cfg, &topo_spec, &tenants, 2);
+    assert!(fcfs.fabric.wait > 0);
+    for qos in [QosSpec::wrr(vec![8, 1]), QosSpec::drr(vec![0.8, 0.1])] {
+        let policy = qos.policy;
+        let spec = topo_spec.clone().with_qos(qos);
+        let r1 = topo::run_tenants(&cfg, &spec, &tenants, 4);
+        let r2 = topo::run_tenants(&cfg, &spec, &tenants, 1);
+        // Seed-stable: identical reports across repeat runs and worker
+        // counts.
+        assert_eq!(r1.to_json().to_string(), r2.to_json().to_string(), "{policy:?}");
+        assert_eq!(r1.qos, policy);
+        // Differs from FCFS under contention.
+        let wire = |r: &topo::TenantReport| -> Vec<Ps> {
+            r.tenants.iter().map(|t| t.wire_wait()).collect()
+        };
+        assert_ne!(wire(&fcfs), wire(&r1), "{policy:?} must redistribute waits");
+        // But the solo schedules and arrivals are untouched by QoS.
+        for (tf, tq) in fcfs.tenants.iter().zip(&r1.tenants) {
+            assert_eq!(tf.arrival, tq.arrival);
+            assert_eq!(tf.solo.total, tq.solo.total);
+            assert_eq!(tf.pu_wait, tq.pu_wait, "PU sharing is policy-independent");
+        }
+    }
+}
