@@ -2,13 +2,21 @@
 # `doc` + `doc-drift`.
 CARGO ?= cargo
 
-.PHONY: build test lint doc doc-drift bench artifacts
+.PHONY: build test check-fast lint doc doc-drift bench artifacts
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# Fast verification: build + unit tests only (lib and binaries), skipping
+# the integration/property suites under rust/tests/. The quick local
+# signal while iterating — a hang here (e.g. a closed-loop scheduler
+# deadlock) surfaces in minutes, not a full proptest run.
+check-fast:
+	$(CARGO) build --release
+	$(CARGO) test -q --lib --bins
 
 # Warnings are errors: keep the tree clippy-clean.
 lint:

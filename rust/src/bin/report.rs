@@ -25,6 +25,7 @@ fn main() {
         "fig15" => report::fig15(&cfg),
         "fig16" => report::fig16(&cfg),
         "fig17" | "tenants" => report::fig17(&cfg),
+        "fig19" | "sched" => report::fig19(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

@@ -40,6 +40,27 @@ impl Protocol {
         }
     }
 
+    /// Parse the CLI/JSON spelling (`rp | bs | axle | axle-interrupt`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rp" => Some(Protocol::Rp),
+            "bs" => Some(Protocol::Bs),
+            "axle" => Some(Protocol::Axle),
+            "axle-interrupt" | "axle_interrupt" => Some(Protocol::AxleInterrupt),
+            _ => None,
+        }
+    }
+
+    /// Lower-case CLI/JSON spelling (the `parse` inverse).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Protocol::Rp => "rp",
+            Protocol::Bs => "bs",
+            Protocol::Axle => "axle",
+            Protocol::AxleInterrupt => "axle-interrupt",
+        }
+    }
+
     pub const ALL: [Protocol; 4] =
         [Protocol::Rp, Protocol::Bs, Protocol::Axle, Protocol::AxleInterrupt];
 }
@@ -543,6 +564,78 @@ impl QosSpec {
     }
 }
 
+/// Sparse per-device hardware overrides: a heterogeneous topology mixes
+/// device classes by replacing individual fields of the base
+/// [`SimConfig`] on selected devices (a weak FPGA-class expander next to
+/// an ASIC-class one, a narrow-linked device behind a long cable, ...).
+/// Every field is optional; an all-`None` override is the identity.
+///
+/// Consumed by the closed-loop scheduler ([`crate::sched`]), whose solo
+/// pass simulates each request on its *device's* effective config —
+/// giving the protocol policy real placement trade-offs to exploit. The
+/// open-loop tenant path (`axle tenants`) models homogeneous devices
+/// only and rejects heterogeneous specs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceOverride {
+    /// Replace the device's CCM PU count.
+    pub ccm_pus: Option<usize>,
+    /// Replace the device's CCM PU frequency (GHz).
+    pub ccm_freq_ghz: Option<f64>,
+    /// Replace the device's CCM per-PU FLOPs/cycle.
+    pub ccm_flops_per_cycle: Option<f64>,
+    /// Replace the device's CXL link bandwidth (both channels), GB/s.
+    pub link_bw_gbps: Option<f64>,
+}
+
+impl DeviceOverride {
+    /// True iff applying this override changes nothing.
+    pub fn is_identity(&self) -> bool {
+        self.ccm_pus.is_none()
+            && self.ccm_freq_ghz.is_none()
+            && self.ccm_flops_per_cycle.is_none()
+            && self.link_bw_gbps.is_none()
+    }
+
+    /// Apply the override to a device's effective config.
+    pub fn apply(&self, cfg: &mut SimConfig) {
+        if let Some(v) = self.ccm_pus {
+            cfg.ccm.num_pus = v.max(1);
+        }
+        if let Some(v) = self.ccm_freq_ghz {
+            cfg.ccm.freq_ghz = v;
+        }
+        if let Some(v) = self.ccm_flops_per_cycle {
+            cfg.ccm.flops_per_cycle = v;
+        }
+        if let Some(v) = self.link_bw_gbps {
+            cfg.cxl_bw_gbps = v;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let num = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        o.insert("ccm_pus".into(), num(self.ccm_pus.map(|v| v as f64)));
+        o.insert("ccm_freq_ghz".into(), num(self.ccm_freq_ghz));
+        o.insert("ccm_flops_per_cycle".into(), num(self.ccm_flops_per_cycle));
+        o.insert("link_bw_gbps".into(), num(self.link_bw_gbps));
+        Json::Obj(o)
+    }
+
+    /// Deserialize; absent or `null` keys stay `None` (sparse files work).
+    pub fn from_json(j: &Json) -> Self {
+        Self {
+            ccm_pus: j.get("ccm_pus").as_usize(),
+            ccm_freq_ghz: j.get("ccm_freq_ghz").as_f64(),
+            ccm_flops_per_cycle: j.get("ccm_flops_per_cycle").as_f64(),
+            link_bw_gbps: j.get("link_bw_gbps").as_f64(),
+        }
+    }
+}
+
 /// Shared-fabric topology: how many CCM devices hang off the host, how
 /// they are shared, and whether an upstream fabric link serializes their
 /// aggregate traffic (the multi-tenant scenarios UDON/CXLMemUring argue
@@ -550,8 +643,9 @@ impl QosSpec {
 /// consumed by [`crate::topo::Topology`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct TopologySpec {
-    /// Number of identical CCM devices (each with its own PU pool and
-    /// CXL.mem/CXL.io links built from the base [`SimConfig`]).
+    /// Number of CCM devices (each with its own PU pool and CXL.mem/CXL.io
+    /// links built from the base [`SimConfig`], then any per-device
+    /// override in `overrides`).
     pub devices: usize,
     /// Effective bandwidth of the shared upstream fabric link, GB/s.
     /// `None` ⇒ dedicated per-device uplinks (no cross-device contention).
@@ -561,6 +655,10 @@ pub struct TopologySpec {
     /// Arbitration policy + per-tenant parameters for every shared link
     /// (device CXL.mem/CXL.io and the upstream fabric).
     pub qos: QosSpec,
+    /// Sparse per-device hardware overrides: entry `i` applies to device
+    /// `i`; missing entries (or an empty vector — the homogeneous
+    /// default) leave the device at the base config.
+    pub overrides: Vec<DeviceOverride>,
 }
 
 impl Default for TopologySpec {
@@ -570,6 +668,7 @@ impl Default for TopologySpec {
             fabric_bw_gbps: None,
             placement: Placement::RoundRobin,
             qos: QosSpec::default(),
+            overrides: Vec::new(),
         }
     }
 }
@@ -590,6 +689,31 @@ impl TopologySpec {
         self
     }
 
+    /// Install one device's sparse hardware override (the vector is
+    /// padded with identity overrides up to `device`).
+    pub fn with_override(mut self, device: usize, ov: DeviceOverride) -> Self {
+        if self.overrides.len() <= device {
+            self.overrides.resize(device + 1, DeviceOverride::default());
+        }
+        self.overrides[device] = ov;
+        self
+    }
+
+    /// True iff at least one device deviates from the base config.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.overrides.iter().any(|o| !o.is_identity())
+    }
+
+    /// Effective [`SimConfig`] of device `d`: the base config with this
+    /// device's sparse override applied (the base itself when absent).
+    pub fn device_config(&self, d: usize, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        if let Some(o) = self.overrides.get(d) {
+            o.apply(&mut cfg);
+        }
+        cfg
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("devices".into(), Json::Num(self.devices as f64));
@@ -599,6 +723,10 @@ impl TopologySpec {
         };
         o.insert("placement".into(), Json::Str(self.placement.label().into()));
         o.insert("qos".into(), self.qos.to_json());
+        o.insert(
+            "overrides".into(),
+            Json::Arr(self.overrides.iter().map(|ov| ov.to_json()).collect()),
+        );
         Json::Obj(o)
     }
 
@@ -616,6 +744,217 @@ impl TopologySpec {
         }
         if j.get("qos").as_obj().is_some() {
             s.qos = QosSpec::from_json(j.get("qos"));
+        }
+        if let Some(a) = j.get("overrides").as_arr() {
+            s.overrides = a.iter().map(DeviceOverride::from_json).collect();
+        }
+        s
+    }
+}
+
+/// Which per-request offload-protocol policy the closed-loop scheduler
+/// runs (see [`crate::sched::policy`] for the implementations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Every request uses one pinned protocol — today's (PR-3) behavior.
+    Static(Protocol),
+    /// Paper-style adaptive choice: pick RP/BS/AXLE per request from the
+    /// workload's compute-vs-transfer ratio and the observed link/PU
+    /// occupancy of the target device.
+    Heuristic,
+    /// Clairvoyant per-request choice: the protocol with the smallest
+    /// solo runtime on the target device class (solo sims deduped
+    /// through the sweep engine's workload cache) — the bound adaptive
+    /// policies are reported against.
+    Oracle,
+}
+
+impl PolicyKind {
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Static(p) => format!("static-{}", p.key()),
+            PolicyKind::Heuristic => "heuristic".into(),
+            PolicyKind::Oracle => "oracle".into(),
+        }
+    }
+
+    /// Parse `static` (pins AXLE), `static-<proto>`, `heuristic`, or
+    /// `oracle`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "static" => Some(PolicyKind::Static(Protocol::Axle)),
+            "heuristic" => Some(PolicyKind::Heuristic),
+            "oracle" => Some(PolicyKind::Oracle),
+            _ => s.strip_prefix("static-").and_then(Protocol::parse).map(PolicyKind::Static),
+        }
+    }
+
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Static(Protocol::Rp),
+        PolicyKind::Static(Protocol::Bs),
+        PolicyKind::Static(Protocol::Axle),
+        PolicyKind::Heuristic,
+        PolicyKind::Oracle,
+    ];
+}
+
+/// Declarative description of one closed-loop scheduling run (`axle
+/// sched`, [`crate::sched::run_sched`]): K tenants issuing requests
+/// against completion feedback, per-device admission queues, and a
+/// per-request protocol policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedSpec {
+    /// Number of concurrent tenants (K).
+    pub streams: usize,
+    /// Workload annotations, cycled across tenants (tenant `i` runs
+    /// `workloads[i % len]` for every one of its requests).
+    pub workloads: Vec<char>,
+    /// Per-request protocol policy.
+    pub policy: PolicyKind,
+    /// Closed-loop window: max outstanding (submitted-but-uncompleted)
+    /// requests per tenant. The next submission waits for a completion
+    /// to free the window (`--depth`).
+    pub depth: usize,
+    /// Per-device admission-queue service limit: how many admitted
+    /// requests one device serves concurrently; the rest wait FIFO in
+    /// the device's admission queue (`--admit`).
+    pub admit: usize,
+    /// Requests each tenant issues over the run.
+    pub requests: usize,
+    /// Think time inserted before each submission (after the window
+    /// opens), ps.
+    pub think: Ps,
+    /// `true` (default): closed-loop arrivals driven by completion
+    /// feedback. `false`: the PR-3 open-loop arrival process (one
+    /// request per tenant, seeded jittered gaps) — the regression pin
+    /// for `Static` policies, which requires a homogeneous topology.
+    pub closed: bool,
+    /// Open-loop load factor (forwarded to the tenant driver when
+    /// `closed == false`; unused otherwise).
+    pub load: f64,
+    /// Arrival-stagger / open-loop jitter seed.
+    pub seed: u64,
+}
+
+impl SchedSpec {
+    /// `streams` tenants cycling through all Table IV workloads under
+    /// the heuristic policy: window 1, two service slots per device,
+    /// four requests per tenant, zero think time.
+    pub fn new(streams: usize) -> Self {
+        Self {
+            streams,
+            workloads: crate::workload::ALL_ANNOTATIONS.to_vec(),
+            policy: PolicyKind::Heuristic,
+            depth: 1,
+            admit: 2,
+            requests: 4,
+            think: 0,
+            closed: true,
+            load: 1.0,
+            seed: 0x5C_4ED0,
+        }
+    }
+
+    pub fn with_workloads(mut self, workloads: Vec<char>) -> Self {
+        assert!(!workloads.is_empty(), "scheduler mix needs at least one workload");
+        self.workloads = workloads;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        assert!(depth > 0, "closed-loop window needs depth >= 1");
+        self.depth = depth;
+        self
+    }
+
+    pub fn with_admit(mut self, admit: usize) -> Self {
+        assert!(admit > 0, "device admission needs at least one service slot");
+        self.admit = admit;
+        self
+    }
+
+    pub fn with_requests(mut self, requests: usize) -> Self {
+        self.requests = requests;
+        self
+    }
+
+    pub fn with_think(mut self, think: Ps) -> Self {
+        self.think = think;
+        self
+    }
+
+    pub fn open_loop(mut self) -> Self {
+        self.closed = false;
+        self
+    }
+
+    pub fn with_load(mut self, load: f64) -> Self {
+        assert!(load > 0.0, "load factor must be positive");
+        self.load = load;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("streams".into(), Json::Num(self.streams as f64));
+        o.insert("workloads".into(), Json::Str(self.workloads.iter().collect()));
+        o.insert("policy".into(), Json::Str(self.policy.label()));
+        o.insert("depth".into(), Json::Num(self.depth as f64));
+        o.insert("admit".into(), Json::Num(self.admit as f64));
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("think_ps".into(), Json::Num(self.think as f64));
+        o.insert("closed".into(), Json::Bool(self.closed));
+        o.insert("load".into(), Json::Num(self.load));
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the `new(4)` defaults (sparse override
+    /// files work).
+    pub fn from_json(j: &Json) -> Self {
+        let mut s = Self::new(4);
+        if let Some(v) = j.get("streams").as_usize() {
+            s.streams = v;
+        }
+        if let Some(w) = j.get("workloads").as_str() {
+            let ws: Vec<char> = w.chars().collect();
+            if !ws.is_empty() {
+                s.workloads = ws;
+            }
+        }
+        if let Some(p) = j.get("policy").as_str().and_then(PolicyKind::parse) {
+            s.policy = p;
+        }
+        if let Some(v) = j.get("depth").as_usize() {
+            s.depth = v.max(1);
+        }
+        if let Some(v) = j.get("admit").as_usize() {
+            s.admit = v.max(1);
+        }
+        if let Some(v) = j.get("requests").as_usize() {
+            s.requests = v;
+        }
+        if let Some(v) = j.get("think_ps").as_u64() {
+            s.think = v;
+        }
+        if let Json::Bool(b) = j.get("closed") {
+            s.closed = *b;
+        }
+        if let Some(v) = j.get("load").as_f64() {
+            s.load = v;
+        }
+        if let Some(v) = j.get("seed").as_u64() {
+            s.seed = v;
         }
         s
     }
@@ -803,5 +1142,89 @@ mod tests {
         let c = SimConfig::from_json(&j);
         assert_eq!(c.ccm.num_pus, 4);
         assert_eq!(c.host.num_pus, 32); // default retained
+    }
+
+    #[test]
+    fn protocol_parse_round_trips_keys() {
+        for p in Protocol::ALL {
+            assert_eq!(Protocol::parse(p.key()), Some(p));
+        }
+        assert_eq!(Protocol::parse("axle_interrupt"), Some(Protocol::AxleInterrupt));
+        assert_eq!(Protocol::parse("nope"), None);
+    }
+
+    #[test]
+    fn device_override_applies_sparse_fields() {
+        let base = SimConfig::m2ndp();
+        let ov = DeviceOverride { ccm_pus: Some(4), link_bw_gbps: Some(8.0), ..Default::default() };
+        assert!(!ov.is_identity());
+        assert!(DeviceOverride::default().is_identity());
+        let mut cfg = base.clone();
+        ov.apply(&mut cfg);
+        assert_eq!(cfg.ccm.num_pus, 4);
+        assert_eq!(cfg.cxl_bw_gbps, 8.0);
+        // Untouched fields survive.
+        assert_eq!(cfg.ccm.freq_ghz, base.ccm.freq_ghz);
+        assert_eq!(cfg.host.num_pus, base.host.num_pus);
+        // JSON round-trip (None fields stay None through Null).
+        let j = ov.to_json().to_string();
+        assert_eq!(DeviceOverride::from_json(&Json::parse(&j).unwrap()), ov);
+    }
+
+    #[test]
+    fn heterogeneous_topology_per_device_configs() {
+        let base = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, base.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+        assert!(topo.is_heterogeneous());
+        assert!(!TopologySpec::default().is_heterogeneous());
+        // Device 0 keeps the base; device 1 is the weak class; a device
+        // beyond the override vector keeps the base too.
+        assert_eq!(topo.device_config(0, &base).ccm.num_pus, base.ccm.num_pus);
+        assert_eq!(topo.device_config(1, &base).ccm.num_pus, 4);
+        assert_eq!(topo.device_config(7, &base).ccm.num_pus, base.ccm.num_pus);
+        // Distinct classes fingerprint differently (the sched solo pass
+        // dedupes per class on this).
+        assert_ne!(
+            topo.device_config(0, &base).workload_fingerprint(),
+            topo.device_config(1, &base).workload_fingerprint()
+        );
+        // Round-trip with overrides attached.
+        let j = topo.to_json().to_string();
+        assert_eq!(TopologySpec::from_json(&Json::parse(&j).unwrap()), topo);
+    }
+
+    #[test]
+    fn policy_kind_parse_labels() {
+        for p in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(&p.label()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("static"), Some(PolicyKind::Static(Protocol::Axle)));
+        assert_eq!(PolicyKind::parse("static-rp"), Some(PolicyKind::Static(Protocol::Rp)));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sched_spec_json_roundtrip() {
+        let s = SchedSpec::new(6)
+            .with_workloads(vec!['a', 'd', 'e'])
+            .with_policy(PolicyKind::Static(Protocol::Bs))
+            .with_depth(2)
+            .with_admit(3)
+            .with_requests(5)
+            .with_think(2 * crate::sim::US)
+            .with_seed(99);
+        let j = s.to_json().to_string();
+        assert_eq!(SchedSpec::from_json(&Json::parse(&j).unwrap()), s);
+        // Open-loop flag survives too.
+        let o = SchedSpec::new(2).open_loop();
+        let j2 = o.to_json().to_string();
+        assert_eq!(SchedSpec::from_json(&Json::parse(&j2).unwrap()), o);
+        // Sparse override keeps the defaults.
+        let sparse = SchedSpec::from_json(&Json::parse(r#"{"streams": 3}"#).unwrap());
+        assert_eq!(sparse.streams, 3);
+        assert_eq!(sparse.policy, PolicyKind::Heuristic);
+        assert_eq!(sparse.depth, 1);
+        assert!(sparse.closed);
     }
 }

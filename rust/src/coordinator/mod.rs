@@ -12,10 +12,11 @@ pub mod numerics;
 
 use anyhow::Result;
 
-use crate::config::{Protocol, SimConfig, TopologySpec};
+use crate::config::{Protocol, SchedSpec, SimConfig, TopologySpec};
 use crate::metrics::RunMetrics;
 use crate::protocol;
 use crate::runtime::Runtime;
+use crate::sched::{self, SchedReport};
 use crate::sweep::{self, ConfigDelta, SweepSpec};
 use crate::topo::{self, TenantReport, TenantSpec};
 use crate::workload::{self, WorkloadSpec};
@@ -118,6 +119,26 @@ impl Coordinator {
         topo::run_tenants(&self.cfg, topo, tenants, jobs)
     }
 
+    /// Run a closed-loop scheduling scenario: K tenants submitting
+    /// requests against completion feedback over `topo.devices` devices
+    /// (possibly heterogeneous via per-device overrides), the offload
+    /// protocol chosen per request by `spec.policy` — see
+    /// [`crate::sched`]. Solo candidate simulations fan out across all
+    /// available cores.
+    pub fn run_sched(&self, topo: &TopologySpec, spec: &SchedSpec) -> SchedReport {
+        self.run_sched_jobs(topo, spec, sweep::available_jobs())
+    }
+
+    /// [`Coordinator::run_sched`] with an explicit worker count.
+    pub fn run_sched_jobs(
+        &self,
+        topo: &TopologySpec,
+        spec: &SchedSpec,
+        jobs: usize,
+    ) -> SchedReport {
+        sched::run_sched(&self.cfg, topo, spec, jobs)
+    }
+
     /// Validate the offloaded numerics for workload `annot` through the
     /// PJRT artifacts. Errors if artifacts are not attached/built.
     pub fn validate_numerics(&mut self, annot: char) -> Result<NumericsReport> {
@@ -174,6 +195,21 @@ mod tests {
         assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
         assert_eq!(r1.tenants.len(), 4);
         assert_eq!(r1.qos, crate::config::QosPolicy::Wrr);
+    }
+
+    #[test]
+    fn sched_through_coordinator_is_worker_count_invariant() {
+        let c = Coordinator::new(SimConfig::m2ndp());
+        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps);
+        let spec = crate::config::SchedSpec::new(3)
+            .with_workloads(vec!['a', 'f'])
+            .with_requests(2)
+            .with_policy(crate::config::PolicyKind::Oracle);
+        let r1 = c.run_sched_jobs(&topo, &spec, 1);
+        let r4 = c.run_sched_jobs(&topo, &spec, 4);
+        assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
+        assert_eq!(r1.requests.len(), 6);
+        assert!(r1.closed);
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //!   PU-pool sharing across co-located tenants (interval-merge replay of
 //!   traced lease windows) — `axle tenants --devices D --streams K
 //!   --qos wrr`;
+//! - a **closed-loop offload scheduler** ([`sched`]) layered on the
+//!   topology: K tenants submit requests against completion feedback
+//!   (`depth`-bounded outstanding windows, per-device admission queues),
+//!   an [`OffloadPolicy`] picks the protocol *per request* — `Static`
+//!   pins today's behavior, `Heuristic` adapts to the workload's
+//!   compute-vs-transfer ratio and observed link/PU occupancy, `Oracle`
+//!   bounds it — and [`TopologySpec`] can mix **heterogeneous device
+//!   classes** via per-device [`DeviceOverride`]s (`axle sched --streams
+//!   K --policy heuristic --depth N`, `axle report fig19`);
 //! - the four **partial-offloading mechanisms** ([`protocol`]) as
 //!   strategies over borrowed [`DeviceCtx`] resources: Remote Polling,
 //!   Bulk-Synchronous flow, AXLE's Asynchronous Back-Streaming and its
@@ -52,16 +61,19 @@ pub mod protocol;
 pub mod report;
 pub mod ring;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod sweep;
 pub mod topo;
 pub mod workload;
 
 pub use config::{
-    poll_factors, Placement, Protocol, QosPolicy, QosSpec, SchedPolicy, SimConfig, TopologySpec,
+    poll_factors, DeviceOverride, Placement, PolicyKind, Protocol, QosPolicy, QosSpec, SchedPolicy,
+    SchedSpec, SimConfig, TopologySpec,
 };
 pub use coordinator::Coordinator;
 pub use metrics::RunMetrics;
+pub use sched::{run_sched, sweep_sched_grid, OffloadPolicy, RequestRun, SchedReport};
 pub use sweep::{ConfigDelta, SweepSpec, WorkloadCache};
 pub use topo::{DeviceCtx, TenantReport, TenantSpec, Topology};
 pub use workload::{by_annotation, WorkloadSpec, ALL_ANNOTATIONS};

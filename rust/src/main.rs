@@ -5,15 +5,19 @@
 //! axle matrix [--profile real-hw|reduced]
 //! axle sweep [--jobs N] [--workloads adei] [--protocol axle] [--json]
 //! axle tenants --devices 2 --streams 8 [--qos wrr --weights 4,1] [--json]
+//! axle sched --streams 8 --policy heuristic --depth 2 [--dev-ccm-pus 16,4] [--json]
 //! axle validate [--artifacts DIR] [--workload e]
-//! axle report fig10 | fig17 | all | ...
+//! axle report fig10 | fig17 | fig19 | all | ...
 //! axle list
 //! axle config [--out cfg.json] / axle run --config cfg.json ...
 //! ```
 
 use anyhow::{bail, Context, Result};
 
-use axle::config::{Placement, Protocol, QosPolicy, SchedPolicy, SimConfig, TopologySpec};
+use axle::config::{
+    Placement, PolicyKind, Protocol, QosPolicy, SchedPolicy, SchedSpec, SimConfig, TopologySpec,
+};
+use axle::sched;
 use axle::sim::{ps_to_us, NS};
 use axle::sweep::{self, ConfigDelta, SweepSpec};
 use axle::topo::{self, TenantSpec};
@@ -45,20 +49,32 @@ USAGE:
         # the link arbitration (fcfs | weighted rr | deficit rr with
         # per-tenant bandwidth floors), --weights/--floors cycle over
         # tenant ids
+  axle sched [--streams K] [--requests R] [--policy static|heuristic|oracle]
+             [--protocol rp|bs|axle|axle-interrupt]  # static policy's pin
+             [--depth N] [--admit M] [--think-ns T] [--open [--load F]]
+             [--devices D] [--placement rr|least-loaded]
+             [--fabric-gbps X | --no-fabric] [--topo FILE.json]
+             [--dev-ccm-pus P0,P1,...] [--dev-gbps B0,B1,...]
+             [--workloads <mix>] [--sched-seed N] [--jobs N]
+             [--profile ...] [--json]
+        # closed-loop scheduling: K tenants submit requests against
+        # completion feedback (at most --depth outstanding each), each
+        # device admits --admit requests at a time from its FIFO
+        # admission queue, and --policy picks the offload protocol per
+        # request (static pins one; heuristic adapts to compute/transfer
+        # ratio + observed occupancy; oracle is the clairvoyant bound);
+        # --dev-ccm-pus/--dev-gbps cycle per-device hardware overrides
+        # over the devices (heterogeneous classes); --open reproduces
+        # the PR-3 open-loop `axle tenants` arrivals bit-identically
+        # (static policies only)
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
 
 fn parse_protocol(s: &str) -> Result<Protocol> {
-    Ok(match s {
-        "rp" => Protocol::Rp,
-        "bs" => Protocol::Bs,
-        "axle" => Protocol::Axle,
-        "axle-interrupt" | "axle_interrupt" => Protocol::AxleInterrupt,
-        _ => bail!("unknown protocol {s:?} (rp|bs|axle|axle-interrupt)"),
-    })
+    Protocol::parse(s).ok_or_else(|| anyhow::anyhow!("unknown protocol {s:?} (rp|bs|axle|axle-interrupt)"))
 }
 
 fn parse_profile(s: &str) -> Result<SimConfig> {
@@ -100,6 +116,98 @@ fn build_config(a: &Args) -> Result<SimConfig> {
         cfg.sched = SchedPolicy::Fifo;
     }
     Ok(cfg)
+}
+
+/// Topology from a `--topo` file base (if given) plus flag overrides —
+/// shared by the `tenants` and `sched` subcommands. The default is a
+/// shared upstream fabric of one device-link width: the single x8 port a
+/// multi-headed expander shares upstream.
+fn build_topology(a: &Args, cfg: &SimConfig) -> Result<TopologySpec> {
+    let mut topo = match a.get("topo") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            TopologySpec::from_json(&Json::parse(&text).context("parsing topology JSON")?)
+        }
+        None => TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps),
+    };
+    if let Some(d) = a.get_as::<usize>("devices") {
+        topo.devices = d.max(1);
+    }
+    if let Some(bw) = a.get_as::<f64>("fabric-gbps") {
+        if bw <= 0.0 || bw.is_nan() {
+            bail!("--fabric-gbps must be positive (got {bw}); use --no-fabric to disable");
+        }
+        topo.fabric_bw_gbps = Some(bw);
+    }
+    if a.has("no-fabric") {
+        topo.fabric_bw_gbps = None;
+    }
+    if let Some(p) = a.get("placement") {
+        topo.placement = Placement::parse(p).with_context(|| format!("unknown placement {p:?}"))?;
+    }
+    if let Some(q) = a.get("qos") {
+        topo.qos.policy = QosPolicy::parse(q)
+            .with_context(|| format!("unknown qos policy {q:?} (fcfs|wrr|drr)"))?;
+    }
+    if let Some(ws) = a.get("weights") {
+        topo.qos.weights = ws
+            .split(',')
+            .map(|s| s.trim().parse::<u64>())
+            .collect::<Result<Vec<u64>, _>>()
+            .with_context(|| format!("parsing --weights {ws:?} (comma-separated u64)"))?;
+    }
+    if let Some(fs) = a.get("floors") {
+        topo.qos.floors = fs
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<Vec<f64>, _>>()
+            .with_context(|| format!("parsing --floors {fs:?} (comma-separated f64)"))?;
+        if topo.qos.floors.iter().any(|f| !f.is_finite() || *f < 0.0) {
+            bail!("--floors must be finite and non-negative");
+        }
+    }
+    // A parameter flag for the wrong policy would be silently ignored by
+    // the replay; refuse the misconfiguration instead.
+    if a.has("weights") && topo.qos.policy != QosPolicy::Wrr {
+        bail!("--weights only applies to weighted round-robin (add --qos wrr)");
+    }
+    if a.has("floors") && topo.qos.policy != QosPolicy::Drr {
+        bail!("--floors only applies to deficit round-robin (add --qos drr)");
+    }
+    // Heterogeneous device classes: cycle the override lists over the
+    // devices (entry i % len applies to device i), like --weights.
+    if let Some(ps) = a.get("dev-ccm-pus") {
+        let pus = ps
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<Vec<usize>, _>>()
+            .with_context(|| format!("parsing --dev-ccm-pus {ps:?} (comma-separated usize)"))?;
+        if pus.is_empty() || pus.contains(&0) {
+            bail!("--dev-ccm-pus entries must be positive");
+        }
+        for d in 0..topo.devices {
+            let mut ov = topo.overrides.get(d).copied().unwrap_or_default();
+            ov.ccm_pus = Some(pus[d % pus.len()]);
+            topo = topo.with_override(d, ov);
+        }
+    }
+    if let Some(bs) = a.get("dev-gbps") {
+        let bws = bs
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<Vec<f64>, _>>()
+            .with_context(|| format!("parsing --dev-gbps {bs:?} (comma-separated f64)"))?;
+        if bws.is_empty() || bws.iter().any(|b| !b.is_finite() || *b <= 0.0) {
+            bail!("--dev-gbps entries must be positive");
+        }
+        for d in 0..topo.devices {
+            let mut ov = topo.overrides.get(d).copied().unwrap_or_default();
+            ov.link_bw_gbps = Some(bws[d % bws.len()]);
+            topo = topo.with_override(d, ov);
+        }
+    }
+    Ok(topo)
 }
 
 /// The matrix/sweep results table (shared by both subcommands).
@@ -231,63 +339,14 @@ fn main() -> Result<()> {
         }
         Some("tenants") => {
             let cfg = build_config(&a)?;
-            // Topology: file base (if given), then flag overrides. Default
-            // is a shared upstream fabric of one device-link width — the
-            // single x8 port a multi-headed expander shares upstream.
-            let mut topo = match a.get("topo") {
-                Some(path) => {
-                    let text =
-                        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-                    TopologySpec::from_json(&Json::parse(&text).context("parsing topology JSON")?)
-                }
-                None => TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps),
-            };
-            if let Some(d) = a.get_as::<usize>("devices") {
-                topo.devices = d.max(1);
+            let topo = build_topology(&a, &cfg)?;
+            if topo.is_heterogeneous() {
+                bail!(
+                    "axle tenants models homogeneous devices; heterogeneous topologies \
+                     (per-device overrides) run through `axle sched`"
+                );
             }
-            if let Some(bw) = a.get_as::<f64>("fabric-gbps") {
-                if bw <= 0.0 || bw.is_nan() {
-                    bail!("--fabric-gbps must be positive (got {bw}); use --no-fabric to disable");
-                }
-                topo.fabric_bw_gbps = Some(bw);
-            }
-            if a.has("no-fabric") {
-                topo.fabric_bw_gbps = None;
-            }
-            if let Some(p) = a.get("placement") {
-                topo.placement =
-                    Placement::parse(p).with_context(|| format!("unknown placement {p:?}"))?;
-            }
-            if let Some(q) = a.get("qos") {
-                topo.qos.policy = QosPolicy::parse(q)
-                    .with_context(|| format!("unknown qos policy {q:?} (fcfs|wrr|drr)"))?;
-            }
-            if let Some(ws) = a.get("weights") {
-                topo.qos.weights = ws
-                    .split(',')
-                    .map(|s| s.trim().parse::<u64>())
-                    .collect::<Result<Vec<u64>, _>>()
-                    .with_context(|| format!("parsing --weights {ws:?} (comma-separated u64)"))?;
-            }
-            if let Some(fs) = a.get("floors") {
-                topo.qos.floors = fs
-                    .split(',')
-                    .map(|s| s.trim().parse::<f64>())
-                    .collect::<Result<Vec<f64>, _>>()
-                    .with_context(|| format!("parsing --floors {fs:?} (comma-separated f64)"))?;
-                if topo.qos.floors.iter().any(|f| !f.is_finite() || *f < 0.0) {
-                    bail!("--floors must be finite and non-negative");
-                }
-            }
-            // A parameter flag for the wrong policy would be silently
-            // ignored by the replay; refuse the misconfiguration instead.
-            if a.has("weights") && topo.qos.policy != QosPolicy::Wrr {
-                bail!("--weights only applies to weighted round-robin (add --qos wrr)");
-            }
-            if a.has("floors") && topo.qos.policy != QosPolicy::Drr {
-                bail!("--floors only applies to deficit round-robin (add --qos drr)");
-            }
-            let mut tenants = TenantSpec::new(a.get_as::<usize>("streams").unwrap_or(8).max(1));
+            let mut tenants = TenantSpec::new(a.get_as::<usize>("streams").unwrap_or(8));
             if let Some(s) = a.get("workloads") {
                 let ws: Vec<char> = s.chars().collect();
                 for &c in &ws {
@@ -356,6 +415,148 @@ fn main() -> Result<()> {
                 r.max_slowdown
             );
         }
+        Some("sched") => {
+            let cfg = build_config(&a)?;
+            let topo = build_topology(&a, &cfg)?;
+            let open = a.has("open");
+            if !open && (a.has("qos") || a.has("weights") || a.has("floors")) {
+                bail!(
+                    "QoS arbitration applies to the open-loop replay (--open) or `axle \
+                     tenants`; the closed-loop link model serves in admission order"
+                );
+            }
+            let mut spec = SchedSpec::new(a.get_as::<usize>("streams").unwrap_or(4));
+            if let Some(s) = a.get("workloads") {
+                let ws: Vec<char> = s.chars().collect();
+                for &c in &ws {
+                    if !('a'..='i').contains(&c) {
+                        bail!("workload mix must use letters a..i, got {c:?}");
+                    }
+                }
+                spec = spec.with_workloads(ws);
+            }
+            let mut policy = match a.get("policy") {
+                Some(p) => PolicyKind::parse(p)
+                    .with_context(|| format!("unknown policy {p:?} (static|heuristic|oracle)"))?,
+                None => PolicyKind::Heuristic,
+            };
+            if let Some(p) = a.get("protocol").or_else(|| a.get("p")) {
+                match policy {
+                    PolicyKind::Static(_) => policy = PolicyKind::Static(parse_protocol(p)?),
+                    _ => bail!("--protocol pins the static policy (add --policy static)"),
+                }
+            }
+            spec = spec.with_policy(policy);
+            if let Some(d) = a.get_as::<usize>("depth") {
+                if d == 0 {
+                    bail!("--depth must be at least 1 (outstanding-request window)");
+                }
+                spec = spec.with_depth(d);
+            }
+            if let Some(m) = a.get_as::<usize>("admit") {
+                if m == 0 {
+                    bail!("--admit must be at least 1 (device service slots)");
+                }
+                spec = spec.with_admit(m);
+            }
+            if let Some(r) = a.get_as::<usize>("requests") {
+                spec = spec.with_requests(r);
+            }
+            if let Some(t) = a.get_as::<u64>("think-ns") {
+                spec = spec.with_think(t * NS);
+            }
+            if let Some(l) = a.get_as::<f64>("load") {
+                if !open {
+                    bail!("--load shapes the open-loop arrival process (add --open); the closed loop paces itself by completion feedback");
+                }
+                if l <= 0.0 || l.is_nan() {
+                    bail!("--load must be positive (got {l})");
+                }
+                spec = spec.with_load(l);
+            }
+            if let Some(s) = a.get_as::<u64>("sched-seed") {
+                spec = spec.with_seed(s);
+            }
+            if open {
+                // Closed-loop knobs would be silently meaningless under
+                // the PR-3 open-loop replay; refuse them instead.
+                for flag in ["depth", "admit", "requests", "think-ns"] {
+                    if a.has(flag) {
+                        bail!("--{flag} is a closed-loop knob; the --open replay runs one open-loop request per tenant");
+                    }
+                }
+                if !matches!(spec.policy, PolicyKind::Static(_)) {
+                    bail!("--open (PR-3 arrival pin) supports only --policy static");
+                }
+                if topo.is_heterogeneous() {
+                    bail!("--open replays the homogeneous tenant path; drop the device overrides");
+                }
+                spec = spec.open_loop();
+            }
+            let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
+            let r = sched::run_sched(&cfg, &topo, &spec, jobs);
+            if a.has("json") {
+                println!("{}", r.to_json());
+                return Ok(());
+            }
+            if r.closed {
+                println!(
+                    "{} tenant(s) x {} request(s), {} policy, closed-loop arrivals, depth {} admit {}, {} device(s), {} placement:",
+                    spec.streams,
+                    spec.requests,
+                    r.policy.label(),
+                    r.depth,
+                    r.admit,
+                    topo.devices,
+                    topo.placement.label()
+                );
+            } else {
+                println!(
+                    "{} tenant(s) x 1 request, {} policy, open-loop arrivals (PR-3 pin), {} device(s), {} placement:",
+                    spec.streams,
+                    r.policy.label(),
+                    topo.devices,
+                    topo.placement.label()
+                );
+            }
+            for q in &r.requests {
+                println!("  {}", sched::format_request_row(q));
+            }
+            for (d, dev) in r.devices.iter().enumerate() {
+                println!(
+                    "  device {d}: {} request(s), link busy {:.2} us, wire wait {:.2} us, pu busy {:.2} us, pu wait {:.2} us, {} data bytes",
+                    dev.tenants,
+                    ps_to_us(dev.link_busy),
+                    ps_to_us(dev.mem_wait + dev.io_wait),
+                    ps_to_us(dev.pu_busy),
+                    ps_to_us(dev.pu_wait),
+                    dev.bytes
+                );
+            }
+            match topo.fabric_bw_gbps {
+                Some(bw) => println!(
+                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {:.2} us, wait {:.2} us, util {:.1}%",
+                    r.fabric.messages,
+                    r.fabric.bytes,
+                    ps_to_us(r.fabric.busy),
+                    ps_to_us(r.fabric.wait),
+                    100.0 * r.fabric.utilization
+                ),
+                None => println!("  fabric: none (dedicated per-device uplinks)"),
+            }
+            let mix: Vec<String> =
+                r.proto_mix.iter().map(|(proto, n)| format!("{proto}:{n}")).collect();
+            println!(
+                "  makespan {:.2} us | slowdown p50 {:.3} p99 {:.3} max {:.3} | host idle {:.1}% ccm idle {:.1}% | mix {}",
+                ps_to_us(r.makespan),
+                r.p50_slowdown,
+                r.p99_slowdown,
+                r.max_slowdown,
+                100.0 * r.host_idle_frac(),
+                100.0 * r.ccm_idle_frac(),
+                mix.join(" ")
+            );
+        }
         Some("validate") => {
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let mut coord = Coordinator::new(SimConfig::m2ndp()).with_artifacts(dir)?;
@@ -391,6 +592,7 @@ fn main() -> Result<()> {
                 "fig15" => report::fig15(&cfg),
                 "fig16" => report::fig16(&cfg),
                 "fig17" | "tenants" => report::fig17(&cfg),
+                "fig19" | "sched" => report::fig19(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

@@ -533,6 +533,63 @@ pub fn fig17(cfg: &SimConfig) {
     }
 }
 
+/// Fig. 19 (extension): closed-loop offload scheduling — end-to-end
+/// runtime and host/CCM idle time per protocol policy, on a
+/// heterogeneous two-device topology.
+///
+/// The paper's evaluation fixes the offload mechanism per run; KAI
+/// exists because the right protocol depends on data and processing
+/// intensity, and UDON argues the decision belongs online. This figure
+/// closes the loop: tenants submit requests against completion feedback
+/// (window `--depth`, per-device admission queues) over one strong and
+/// one weak-CCM device, and the scheduler picks RP/BS/AXLE per request.
+/// `static-*` rows pin one protocol (PR-3 behavior), `heuristic` adapts
+/// per request (compute-vs-transfer ratio + observed occupancy), and
+/// `oracle` is the clairvoyant per-request bound.
+///
+/// Row schema (JSON mirror in `SchedReport::to_json`, `axle sched
+/// --json`): per policy × depth — `makespan_ps`, `p50_slowdown` /
+/// `p99_slowdown` (per-request `total/solo`, queueing included),
+/// `host_idle_frac` / `ccm_idle_frac` (the paper's headline idle
+/// metrics) and `proto_mix` (requests per chosen protocol).
+pub fn fig19(cfg: &SimConfig) {
+    header("Fig. 19-ext: closed-loop scheduling, policy x depth, heterogeneous devices");
+    println!(
+        "{:<14} {:>5} {:>5} {:>12} {:>9} {:>9} {:>10} {:>10}  {}",
+        "policy", "depth", "reqs", "makespan us", "p50 slow", "p99 slow", "host idle", "ccm idle",
+        "proto mix"
+    );
+    let topo = crate::config::TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_override(
+        1,
+        crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
+    );
+    let base = crate::config::SchedSpec::new(4).with_workloads(vec!['a', 'e', 'i']).with_requests(2);
+    let grid = crate::sched::sweep_sched_grid(
+        cfg,
+        &topo,
+        &base,
+        &crate::config::PolicyKind::ALL,
+        &[1, 2],
+        sweep::available_jobs(),
+    );
+    for (p, depth, r) in &grid {
+        let mix: Vec<String> =
+            r.proto_mix.iter().map(|(proto, n)| format!("{proto}:{n}")).collect();
+        println!(
+            "{:<14} {:>5} {:>5} {:>12.2} {:>9.3} {:>9.3} {:>9.1}% {:>9.1}%  {}",
+            p.label(),
+            depth,
+            r.requests.len(),
+            ps_to_us(r.makespan),
+            r.p50_slowdown,
+            r.p99_slowdown,
+            100.0 * r.host_idle_frac(),
+            100.0 * r.ccm_idle_frac(),
+            mix.join(" ")
+        );
+    }
+}
+
 /// Table I echo: what each workload offloads.
 pub fn table1() {
     header("Table I: offloaded functions");
@@ -582,6 +639,11 @@ mod tests {
     }
 
     #[test]
+    fn sched_report_runs() {
+        fig19(&SimConfig::m2ndp());
+    }
+
+    #[test]
     fn fig10_and_idle_reports_run() {
         let cfg = SimConfig::m2ndp();
         fig10(&cfg);
@@ -620,4 +682,5 @@ pub fn all() {
     fig15(&cfg);
     fig16(&cfg);
     fig17(&cfg);
+    fig19(&cfg);
 }

@@ -1,0 +1,1078 @@
+//! The closed-loop scheduling driver: completion-fed request submission,
+//! per-device admission queues, and online contention accounting.
+//!
+//! # Model
+//!
+//! K tenants each issue a sequence of requests (one request = one full
+//! workload execution under one protocol). Unlike the open-loop tenant
+//! driver ([`crate::topo::tenant`]), submission is driven by **completion
+//! feedback**: a tenant holds at most `depth` outstanding requests and
+//! schedules its next submission `think` after the window opens. Each
+//! submitted request is placed on a device ([`crate::config::Placement`]),
+//! its protocol chosen per request by the configured
+//! [`OffloadPolicy`](super::policy::OffloadPolicy), and queued in that
+//! device's **admission queue**; the device serves at most `admit`
+//! requests concurrently, FIFO.
+//!
+//! # Online contention accounting
+//!
+//! The open-loop driver can batch-sort all wire traffic up front because
+//! arrivals never depend on completions. A closed loop cannot — so the
+//! shared resources are modelled *online*, in admission order:
+//!
+//! - **Links** (`LinkCalendar`): each device channel (and the optional
+//!   shared fabric) keeps a calendar of immutable busy intervals. An
+//!   admitted request's solo wire trace is placed message by message into
+//!   the **earliest idle gap at or after each message's issue time** (no
+//!   preemption, no splitting) — a lone stream replays its solo schedule
+//!   exactly (zero shift), and concurrent streams backfill each other's
+//!   idle gaps, so the wire stays work-conserving under admission-order
+//!   service.
+//! - **CCM PUs** (`OnlinePool`): lease windows dispatch earliest-free
+//!   onto the device's pool in admission order, the online analogue of
+//!   [`crate::topo::fabric::arbitrate_pus`].
+//!
+//! A request is charged the same **completion shift** decomposition as
+//! the tenant driver: `completion = admit + solo + max(device_wait,
+//! fabric_wait) + pu_wait`, with per-message lateness folded by max, not
+//! sum. Queueing in the admission path appears separately as
+//! `admit − submit`.
+//!
+//! Everything is a pure function of `(config, topology, sched spec)`;
+//! the solo pass fans out across workers without affecting results.
+//!
+//! # Heterogeneous devices
+//!
+//! Each device's effective config is
+//! [`TopologySpec::device_config`](crate::config::TopologySpec::device_config);
+//! devices sharing a config share one *device class*. The solo pass
+//! simulates every `(workload, protocol)` candidate **per class** (specs
+//! deduped through the sweep engine's
+//! [`WorkloadCache`](crate::sweep::WorkloadCache)), so policies see real
+//! per-device trade-offs: a weak-CCM class inflates compute-bound
+//! candidates, a narrow-linked class inflates transfer-bound ones.
+//!
+//! # Open-loop pin
+//!
+//! With `closed == false` (CLI `--open`) and a `Static` policy on a
+//! homogeneous topology, the run delegates verbatim to
+//! [`crate::topo::tenant::run_tenants`] — the PR-3 arrival process and
+//! arbitration — and repackages its report. `rust/tests/sched_regression.rs`
+//! pins that path bit-identical to `axle tenants`.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::config::{PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec};
+use crate::metrics::percentile;
+use crate::sim::{ps_to_us, transfer_ps, Ps, US};
+use crate::sweep::{self, SpecJob, TracedRun};
+use crate::topo::tenant::{self, FabricReport, TenantSpec};
+use crate::topo::DeviceStats;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::policy::{policy_for, required_candidates, Candidate, Observed};
+
+/// One scheduled request's outcome.
+#[derive(Debug, Clone)]
+pub struct RequestRun {
+    pub tenant: u32,
+    /// Request index within the tenant's closed-loop sequence.
+    pub index: u32,
+    pub annot: char,
+    pub device: u32,
+    /// Protocol the policy chose for this request.
+    pub proto: Protocol,
+    /// Tenant submitted (entered the device's admission queue).
+    pub submit: Ps,
+    /// Device admitted into service.
+    pub admit: Ps,
+    /// Solo end-to-end runtime on this device's config.
+    pub solo: Ps,
+    /// Completion shift from the device's CXL.mem/CXL.io links (worst
+    /// channel).
+    pub device_wait: Ps,
+    /// Completion shift from the shared upstream fabric link.
+    pub fabric_wait: Ps,
+    /// Completion shift from the device's shared CCM PU pool.
+    pub pu_wait: Ps,
+    /// Absolute completion time.
+    pub completion: Ps,
+}
+
+impl RequestRun {
+    /// Time spent waiting in the device's admission queue.
+    pub fn queue_wait(&self) -> Ps {
+        self.admit - self.submit
+    }
+
+    /// Wire-contention component (same max accounting as
+    /// [`crate::topo::tenant::TenantRun::wire_wait`]).
+    pub fn wire_wait(&self) -> Ps {
+        self.device_wait.max(self.fabric_wait)
+    }
+
+    /// End-to-end request latency as the tenant sees it:
+    /// `queue_wait + solo + wire_wait + pu_wait`.
+    pub fn total(&self) -> Ps {
+        self.completion - self.submit
+    }
+
+    /// Latency / solo ratio (>= 1).
+    pub fn slowdown(&self) -> f64 {
+        if self.solo == 0 {
+            1.0
+        } else {
+            self.total() as f64 / self.solo as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("tenant".into(), Json::Num(self.tenant as f64));
+        o.insert("index".into(), Json::Num(self.index as f64));
+        o.insert("annot".into(), Json::Str(self.annot.to_string()));
+        o.insert("device".into(), Json::Num(self.device as f64));
+        o.insert("proto".into(), Json::Str(self.proto.label().into()));
+        o.insert("submit_ps".into(), Json::Num(self.submit as f64));
+        o.insert("admit_ps".into(), Json::Num(self.admit as f64));
+        o.insert("queue_wait_ps".into(), Json::Num(self.queue_wait() as f64));
+        o.insert("solo_total_ps".into(), Json::Num(self.solo as f64));
+        o.insert("device_wait_ps".into(), Json::Num(self.device_wait as f64));
+        o.insert("fabric_wait_ps".into(), Json::Num(self.fabric_wait as f64));
+        o.insert("wire_wait_ps".into(), Json::Num(self.wire_wait() as f64));
+        o.insert("pu_wait_ps".into(), Json::Num(self.pu_wait as f64));
+        o.insert("total_ps".into(), Json::Num(self.total() as f64));
+        o.insert("completion_ps".into(), Json::Num(self.completion as f64));
+        o.insert("slowdown".into(), Json::Num(self.slowdown()));
+        Json::Obj(o)
+    }
+}
+
+/// The full closed-loop (or open-loop-pinned) scheduling result.
+#[derive(Debug, Clone)]
+pub struct SchedReport {
+    /// Policy the run was scheduled under.
+    pub policy: PolicyKind,
+    /// `true` for closed-loop arrivals, `false` for the open-loop pin.
+    pub closed: bool,
+    /// Per-tenant outstanding window the run enforced.
+    pub depth: usize,
+    /// Per-device concurrent-service limit the run enforced.
+    pub admit: usize,
+    /// All requests, sorted by `(tenant, index)`.
+    pub requests: Vec<RequestRun>,
+    /// Per-device aggregates (`tenants` counts *requests served*).
+    pub devices: Vec<DeviceStats>,
+    pub fabric: FabricReport,
+    /// Last completion across all requests.
+    pub makespan: Ps,
+    pub p50_slowdown: f64,
+    pub p99_slowdown: f64,
+    pub max_slowdown: f64,
+    /// Aggregate host busy time across requests' solo runs (sum, not
+    /// union — the host pool is not contended by this layer).
+    pub host_busy: Ps,
+    /// Sum over devices of the CCM pool busy-union.
+    pub ccm_busy: Ps,
+    /// Requests per chosen protocol (the policy's decision mix).
+    pub proto_mix: BTreeMap<&'static str, u64>,
+}
+
+impl SchedReport {
+    /// Fraction of `devices × makespan` the CCM pools sat idle — the
+    /// paper's headline utilization metric, per Fig. 7/12 accounting.
+    pub fn ccm_idle_frac(&self) -> f64 {
+        let horizon = self.makespan as f64 * self.devices.len() as f64;
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.ccm_busy as f64 / horizon).max(0.0)
+        }
+    }
+
+    /// Fraction of the makespan the host spent outside request work
+    /// (aggregate-sum accounting, clamped; see `host_busy`).
+    pub fn host_idle_frac(&self) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            (1.0 - self.host_busy as f64 / self.makespan as f64).max(0.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fab = BTreeMap::new();
+        match self.fabric.bw_gbps {
+            Some(bw) => fab.insert("bw_gbps".into(), Json::Num(bw)),
+            None => fab.insert("bw_gbps".into(), Json::Null),
+        };
+        fab.insert("messages".into(), Json::Num(self.fabric.messages as f64));
+        fab.insert("bytes".into(), Json::Num(self.fabric.bytes as f64));
+        fab.insert("busy_ps".into(), Json::Num(self.fabric.busy as f64));
+        fab.insert("wait_ps".into(), Json::Num(self.fabric.wait as f64));
+        fab.insert("utilization".into(), Json::Num(self.fabric.utilization));
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                let mut o = BTreeMap::new();
+                o.insert("requests".into(), Json::Num(d.tenants as f64));
+                o.insert("load_ps".into(), Json::Num(d.load as f64));
+                o.insert("mem_wait_ps".into(), Json::Num(d.mem_wait as f64));
+                o.insert("io_wait_ps".into(), Json::Num(d.io_wait as f64));
+                o.insert("pu_wait_ps".into(), Json::Num(d.pu_wait as f64));
+                o.insert("pu_busy_ps".into(), Json::Num(d.pu_busy as f64));
+                o.insert("bytes".into(), Json::Num(d.bytes as f64));
+                o.insert("link_busy_ps".into(), Json::Num(d.link_busy as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut mix = BTreeMap::new();
+        for (proto, n) in &self.proto_mix {
+            mix.insert((*proto).into(), Json::Num(*n as f64));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("policy".into(), Json::Str(self.policy.label()));
+        o.insert("mode".into(), Json::Str(if self.closed { "closed" } else { "open" }.into()));
+        o.insert("depth".into(), Json::Num(self.depth as f64));
+        o.insert("admit".into(), Json::Num(self.admit as f64));
+        o.insert("requests".into(), Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()));
+        o.insert("devices".into(), Json::Arr(devices));
+        o.insert("fabric".into(), Json::Obj(fab));
+        o.insert("makespan_ps".into(), Json::Num(self.makespan as f64));
+        o.insert("p50_slowdown".into(), Json::Num(self.p50_slowdown));
+        o.insert("p99_slowdown".into(), Json::Num(self.p99_slowdown));
+        o.insert("max_slowdown".into(), Json::Num(self.max_slowdown));
+        o.insert("host_busy_ps".into(), Json::Num(self.host_busy as f64));
+        o.insert("ccm_busy_ps".into(), Json::Num(self.ccm_busy as f64));
+        o.insert("host_idle_frac".into(), Json::Num(self.host_idle_frac()));
+        o.insert("ccm_idle_frac".into(), Json::Num(self.ccm_idle_frac()));
+        o.insert("proto_mix".into(), Json::Obj(mix));
+        Json::Obj(o)
+    }
+}
+
+/// One printable line per request (the `axle sched` table body).
+pub fn format_request_row(r: &RequestRun) -> String {
+    format!(
+        "#{:<3}.{:<2} ({})  dev {:<2} {:<6} sub {:>10.2} us  q {:>8.2} us  solo {:>10.2} us  +wire {:>8.2} us  +pu {:>8.2} us  x{:<5.3}",
+        r.tenant,
+        r.index,
+        r.annot,
+        r.device,
+        r.proto.label(),
+        ps_to_us(r.submit),
+        ps_to_us(r.queue_wait()),
+        ps_to_us(r.solo),
+        ps_to_us(r.wire_wait()),
+        ps_to_us(r.pu_wait),
+        r.slowdown()
+    )
+}
+
+// ------------------------------------------------------------------
+// Online resource models.
+// ------------------------------------------------------------------
+
+/// Busy calendar for one shared wire. Placed transfers are immutable,
+/// non-overlapping intervals; a new transfer goes into the earliest idle
+/// gap at or after its issue time that fits its serialization (no
+/// preemption, no splitting).
+#[derive(Debug, Default)]
+struct LinkCalendar {
+    /// start → end of each placed interval.
+    busy: BTreeMap<Ps, Ps>,
+    busy_total: Ps,
+    msgs: u64,
+}
+
+impl LinkCalendar {
+    /// Place a `dur`-long transfer issued at `issue`; returns its start
+    /// (>= `issue`). Zero-length transfers occupy no wire time.
+    fn place(&mut self, issue: Ps, dur: Ps) -> Ps {
+        if dur == 0 {
+            return issue;
+        }
+        let mut t = issue;
+        // Clamp past an interval already covering the issue instant
+        // (non-overlap means only the latest-starting one can).
+        if let Some((_, &e)) = self.busy.range(..=t).next_back() {
+            if e > t {
+                t = e;
+            }
+        }
+        // Walk forward until a gap fits. Intervals are sorted and
+        // non-overlapping, so each visited start is >= the running
+        // frontier `t` and the subtraction cannot underflow.
+        for (&s, &e) in self.busy.range(t..) {
+            if s - t >= dur {
+                break;
+            }
+            t = e;
+        }
+        self.busy.insert(t, t + dur);
+        self.busy_total += dur;
+        self.msgs += 1;
+        t
+    }
+
+    /// End of the last placed interval (0 when never busy) — the
+    /// occupancy-tail signal policies observe.
+    fn tail(&self) -> Ps {
+        self.busy.iter().next_back().map(|(_, &e)| e).unwrap_or(0)
+    }
+
+    /// Wire busy time (placed intervals never overlap, so the union is
+    /// the sum of durations).
+    fn busy_union(&self) -> Ps {
+        self.busy_total
+    }
+}
+
+/// Earliest-free PU pool for online (admission-order) dispatch. Unlike
+/// [`crate::sim::PuPool`], ready times may regress across requests
+/// admitted at different instants, so the busy union is computed from
+/// the collected spans at report time.
+#[derive(Debug)]
+struct OnlinePool {
+    free_at: BinaryHeap<Reverse<Ps>>,
+    spans: Vec<(Ps, Ps)>,
+    busy_total: Ps,
+}
+
+impl OnlinePool {
+    fn new(n: usize) -> Self {
+        assert!(n > 0, "pool needs at least one PU");
+        let mut free_at = BinaryHeap::with_capacity(n);
+        for _ in 0..n {
+            free_at.push(Reverse(0));
+        }
+        Self { free_at, spans: Vec::new(), busy_total: 0 }
+    }
+
+    fn dispatch(&mut self, ready: Ps, dur: Ps) -> (Ps, Ps) {
+        let Reverse(free) = self.free_at.pop().expect("pool never empty");
+        let start = free.max(ready);
+        let end = start + dur;
+        self.free_at.push(Reverse(end));
+        if dur > 0 {
+            self.spans.push((start, end));
+            self.busy_total += dur;
+        }
+        (start, end)
+    }
+
+    fn earliest_free(&self) -> Ps {
+        self.free_at.peek().map(|Reverse(t)| *t).unwrap_or(0)
+    }
+
+    /// Wall-clock time during which at least one PU was busy.
+    fn busy_union(&self) -> Ps {
+        let mut spans = self.spans.clone();
+        spans.sort_unstable();
+        let mut union = 0;
+        let mut covered = 0;
+        for (s, e) in spans {
+            if s >= covered {
+                union += e - s;
+                covered = e;
+            } else if e > covered {
+                union += e - covered;
+                covered = e;
+            }
+        }
+        union
+    }
+}
+
+// ------------------------------------------------------------------
+// The driver.
+// ------------------------------------------------------------------
+
+/// One solo candidate run plus derived per-channel byte totals.
+struct SoloRun {
+    run: TracedRun,
+    mem_bytes: u64,
+    io_bytes: u64,
+}
+
+/// The solo pass's results, keyed on `(device class, annot, protocol)`.
+struct SoloTable {
+    idx: HashMap<(usize, char, Protocol), usize>,
+    runs: Vec<SoloRun>,
+}
+
+impl SoloTable {
+    fn get(&self, class: usize, annot: char, proto: Protocol) -> &SoloRun {
+        &self.runs[self.idx[&(class, annot, proto)]]
+    }
+}
+
+struct DevState {
+    class: usize,
+    /// This device class's CXL link bandwidth (what its solo traces were
+    /// recorded at).
+    link_bw: f64,
+    mem: LinkCalendar,
+    io: LinkCalendar,
+    pool: OnlinePool,
+    queue: VecDeque<u32>,
+    in_service: usize,
+    stats: DeviceStats,
+}
+
+struct TenantState {
+    next_index: usize,
+    outstanding: usize,
+    submit_scheduled: bool,
+}
+
+/// Event ordering: `(time, kind, id, seq)` with completions (kind 0)
+/// before submissions (kind 1) at equal times, so freed windows and
+/// service slots are visible to same-instant submissions.
+type Ev = (Ps, u8, u64, u64);
+
+/// The solo pass's full output: device classes plus per-class candidate
+/// profiles and traces. A pure function of `(base config, topology,
+/// workload mix, candidate protocol set)` — reusable across closed-loop
+/// runs that share those (e.g. the `fig19` depth axis, which cannot
+/// change solo results).
+pub(super) struct SoloPass {
+    class_cfgs: Vec<Arc<SimConfig>>,
+    class_of: Vec<usize>,
+    /// Workload annotation of each tenant (tenant `i` runs `annots[i]`).
+    annots: Vec<char>,
+    table: SoloTable,
+    cand_table: HashMap<(usize, char), Vec<Candidate>>,
+}
+
+/// Resolve device classes and run every `(class, annot, candidate
+/// protocol)` solo simulation once, fanned across `jobs` workers.
+pub(super) fn prepare_solo_pass(
+    cfg: &SimConfig,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    jobs: usize,
+) -> SoloPass {
+    // ---- Device classes (heterogeneous topologies dedupe per class). ----
+    let mut class_cfgs: Vec<Arc<SimConfig>> = Vec::new();
+    let mut class_of: Vec<usize> = Vec::with_capacity(topo_spec.devices);
+    let mut class_by_fp: HashMap<u64, usize> = HashMap::new();
+    for d in 0..topo_spec.devices {
+        let dev_cfg = topo_spec.device_config(d, cfg);
+        let fp = dev_cfg.fingerprint();
+        let class = *class_by_fp.entry(fp).or_insert_with(|| {
+            class_cfgs.push(Arc::new(dev_cfg));
+            class_cfgs.len() - 1
+        });
+        class_of.push(class);
+    }
+
+    // ---- Solo pass: every (class, annot, candidate proto) once. ----
+    let annots: Vec<char> =
+        (0..spec.streams).map(|i| spec.workloads[i % spec.workloads.len()]).collect();
+    let mut distinct: Vec<char> = Vec::new();
+    for &a in &annots {
+        if !distinct.contains(&a) {
+            distinct.push(a);
+        }
+    }
+    let protos = required_candidates(spec.policy);
+    let mut cache = sweep::WorkloadCache::new();
+    let mut solo_idx: HashMap<(usize, char, Protocol), usize> = HashMap::new();
+    let mut job_list: Vec<SpecJob> = Vec::new();
+    for (class, class_cfg) in class_cfgs.iter().enumerate() {
+        for &a in &distinct {
+            for &p in &protos {
+                solo_idx.insert((class, a, p), job_list.len());
+                job_list.push(SpecJob {
+                    w: cache.get(a, class_cfg),
+                    proto: p,
+                    cfg: Arc::clone(class_cfg),
+                });
+            }
+        }
+    }
+    let runs: Vec<SoloRun> = sweep::run_traced_jobs(&job_list, jobs)
+        .into_iter()
+        .map(|run| {
+            let mem_bytes = run.mem_trace.iter().map(|m| m.bytes).sum();
+            let io_bytes = run.io_trace.iter().map(|m| m.bytes).sum();
+            SoloRun { run, mem_bytes, io_bytes }
+        })
+        .collect();
+    let table = SoloTable { idx: solo_idx, runs };
+
+    // Candidate tables per (class, annot), in `protos` order.
+    let mut cand_table: HashMap<(usize, char), Vec<Candidate>> = HashMap::new();
+    for class in 0..class_cfgs.len() {
+        for &a in &distinct {
+            let cands = protos
+                .iter()
+                .map(|&p| {
+                    let s = table.get(class, a, p);
+                    Candidate {
+                        proto: p,
+                        solo: s.run.metrics.total,
+                        ccm_busy: s.run.metrics.ccm_busy,
+                        dm_busy: s.run.metrics.dm_busy,
+                        mem_bytes: s.mem_bytes,
+                        io_bytes: s.io_bytes,
+                    }
+                })
+                .collect();
+            cand_table.insert((class, a), cands);
+        }
+    }
+    SoloPass { class_cfgs, class_of, annots, table, cand_table }
+}
+
+/// Run `spec` over `topo_spec` devices with `cfg` base hardware, fanning
+/// the solo candidate simulations across `jobs` worker threads.
+/// Deterministic: a pure function of the three spec arguments (the
+/// worker count never changes results).
+pub fn run_sched(
+    cfg: &SimConfig,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    jobs: usize,
+) -> SchedReport {
+    assert!(topo_spec.devices > 0, "topology needs at least one device");
+    assert!(!spec.workloads.is_empty(), "scheduler mix needs at least one workload");
+    if !spec.closed {
+        return run_sched_open(cfg, topo_spec, spec, jobs);
+    }
+    if spec.streams == 0 || spec.requests == 0 {
+        return empty_report(topo_spec, spec);
+    }
+    let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
+    run_closed(topo_spec, spec, &pass)
+}
+
+/// The closed-loop event engine over an already-prepared solo pass.
+/// `pass` must have been prepared with the same topology, workload mix
+/// and policy (only `depth`/`admit`/`requests`/`think`/`seed` may vary —
+/// none of them affect solo results).
+pub(super) fn run_closed(
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    pass: &SoloPass,
+) -> SchedReport {
+    assert!(spec.depth > 0, "closed-loop window needs depth >= 1");
+    assert!(spec.admit > 0, "device admission needs at least one service slot");
+    let SoloPass { class_cfgs, class_of, annots, table, cand_table } = pass;
+    let policy = policy_for(spec.policy);
+    let mut devs: Vec<DevState> = (0..topo_spec.devices)
+        .map(|d| DevState {
+            class: class_of[d],
+            link_bw: class_cfgs[class_of[d]].cxl_bw_gbps,
+            mem: LinkCalendar::default(),
+            io: LinkCalendar::default(),
+            pool: OnlinePool::new(class_cfgs[class_of[d]].ccm.num_pus),
+            queue: VecDeque::new(),
+            in_service: 0,
+            stats: DeviceStats::default(),
+        })
+        .collect();
+    let mut fabric = Fabric {
+        link: topo_spec.fabric_bw_gbps.map(|bw| (bw, LinkCalendar::default())),
+        wait: 0,
+        bytes: 0,
+    };
+    let mut tenants: Vec<TenantState> = (0..spec.streams)
+        .map(|_| TenantState { next_index: 0, outstanding: 0, submit_scheduled: false })
+        .collect();
+    let mut requests: Vec<RequestRun> = Vec::with_capacity(spec.streams * spec.requests);
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut rr_next = 0usize;
+
+    // Seeded per-tenant start stagger (same role as the open-loop
+    // arrival jitter: break exact ties without coupling tenants).
+    let mut rng = Pcg32::seed_from_u64(spec.seed ^ 0x5C4E_D0C1_05ED_0001);
+    for (t, ten) in tenants.iter_mut().enumerate() {
+        let start = rng.below(US);
+        ten.submit_scheduled = true;
+        heap.push(Reverse((start, 1, t as u64, 0)));
+    }
+
+    while let Some(Reverse((now, kind, id, seq))) = heap.pop() {
+        if kind == 0 {
+            // ---- Completion on device `id` of request `seq`. ----
+            let d = id as usize;
+            let t = requests[seq as usize].tenant as usize;
+            devs[d].in_service -= 1;
+            tenants[t].outstanding -= 1;
+            schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
+            try_admit(now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap);
+        } else {
+            // ---- Submission by tenant `id`. ----
+            let t = id as usize;
+            tenants[t].submit_scheduled = false;
+            let annot = annots[t];
+            let index = tenants[t].next_index as u32;
+            tenants[t].next_index += 1;
+            tenants[t].outstanding += 1;
+            // Place (shared helper with the open-loop Topology::place),
+            // then let the policy pick the protocol for the chosen
+            // device's class.
+            let d = crate::topo::place_device(
+                topo_spec.placement,
+                devs.len(),
+                |i| devs[i].stats.load,
+                &mut rr_next,
+            );
+            let obs = Observed {
+                mem_backlog: devs[d].mem.tail().saturating_sub(now),
+                io_backlog: devs[d].io.tail().saturating_sub(now),
+                pu_backlog: devs[d].pool.earliest_free().saturating_sub(now),
+                queued: devs[d].queue.len(),
+            };
+            let proto = policy.choose(&cand_table[&(devs[d].class, annot)], &obs);
+            let solo_total = table.get(devs[d].class, annot, proto).run.metrics.total;
+            let rid = requests.len() as u32;
+            requests.push(RequestRun {
+                tenant: t as u32,
+                index,
+                annot,
+                device: d as u32,
+                proto,
+                submit: now,
+                admit: now,
+                solo: solo_total,
+                device_wait: 0,
+                fabric_wait: 0,
+                pu_wait: 0,
+                completion: now,
+            });
+            devs[d].stats.tenants += 1;
+            devs[d].stats.load += solo_total;
+            devs[d].queue.push_back(rid);
+            try_admit(now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap);
+            // Window depth > 1: the tenant may pipeline its next request.
+            schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
+        }
+    }
+
+    // ---- Assemble. ----
+    requests.sort_by_key(|r| (r.tenant, r.index));
+    let makespan = requests.iter().map(|r| r.completion).max().unwrap_or(0);
+    let host_busy = requests
+        .iter()
+        .map(|r| table.get(devs[r.device as usize].class, r.annot, r.proto).run.metrics.host_busy)
+        .sum();
+    let mut proto_mix: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for r in &requests {
+        *proto_mix.entry(r.proto.label()).or_insert(0) += 1;
+    }
+    let mut ccm_busy: Ps = 0;
+    let devices: Vec<DeviceStats> = devs
+        .iter_mut()
+        .map(|dev| {
+            dev.stats.pu_busy = dev.pool.busy_union();
+            dev.stats.link_busy = dev.mem.busy_union() + dev.io.busy_union();
+            ccm_busy += dev.stats.pu_busy;
+            dev.stats.clone()
+        })
+        .collect();
+    let fabric_report = match &fabric.link {
+        Some((bw, cal)) => FabricReport {
+            bw_gbps: Some(*bw),
+            messages: cal.msgs,
+            bytes: fabric.bytes,
+            busy: cal.busy_union(),
+            wait: fabric.wait,
+            utilization: if makespan == 0 {
+                0.0
+            } else {
+                cal.busy_union() as f64 / makespan as f64
+            },
+        },
+        None => FabricReport::default(),
+    };
+    let slowdowns: Vec<f64> = requests.iter().map(|r| r.slowdown()).collect();
+    SchedReport {
+        policy: spec.policy,
+        closed: true,
+        depth: spec.depth,
+        admit: spec.admit,
+        p50_slowdown: if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 50.0) },
+        p99_slowdown: if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 99.0) },
+        max_slowdown: slowdowns.iter().cloned().fold(1.0, f64::max),
+        requests,
+        devices,
+        fabric: fabric_report,
+        makespan,
+        host_busy,
+        ccm_busy,
+        proto_mix,
+    }
+}
+
+/// The shared upstream fabric's online state.
+struct Fabric {
+    link: Option<(f64, LinkCalendar)>,
+    wait: Ps,
+    bytes: u64,
+}
+
+/// Schedule the tenant's next submission if its window has room and it
+/// has requests left (at most one pending submission event per tenant).
+fn schedule_submit(
+    ten: &mut TenantState,
+    t: usize,
+    spec: &SchedSpec,
+    now: Ps,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+) {
+    if !ten.submit_scheduled && ten.next_index < spec.requests && ten.outstanding < spec.depth {
+        ten.submit_scheduled = true;
+        heap.push(Reverse((now + spec.think, 1, t as u64, ten.next_index as u64)));
+    }
+}
+
+/// Admit queued requests into service while the device has free slots,
+/// charging each one's contention against the online resource models.
+#[allow(clippy::too_many_arguments)]
+fn try_admit(
+    now: Ps,
+    d: usize,
+    spec: &SchedSpec,
+    dev: &mut DevState,
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut [RequestRun],
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+) {
+    while dev.in_service < spec.admit {
+        let Some(rid) = dev.queue.pop_front() else { break };
+        let (annot, proto) = {
+            let r = &requests[rid as usize];
+            (r.annot, r.proto)
+        };
+        let s = table.get(dev.class, annot, proto);
+        let a = now;
+        // Device-link replay: lateness is the start shift (the device's
+        // own link serializes at the same bandwidth the trace was
+        // recorded at).
+        let mut mem_late: Ps = 0;
+        for m in &s.run.mem_trace {
+            let issue = a + m.start;
+            let start = dev.mem.place(issue, transfer_ps(m.bytes, dev.link_bw));
+            mem_late = mem_late.max(start - issue);
+        }
+        let mut io_late: Ps = 0;
+        for m in &s.run.io_trace {
+            let issue = a + m.start;
+            let start = dev.io.place(issue, transfer_ps(m.bytes, dev.link_bw));
+            io_late = io_late.max(start - issue);
+        }
+        // Shared-fabric replay: the same bytes cross the upstream link;
+        // lateness compares against the solo finish at device bandwidth.
+        let mut fab_late: Ps = 0;
+        if let Some((fbw, cal)) = fabric.link.as_mut() {
+            for m in s.run.mem_trace.iter().chain(s.run.io_trace.iter()) {
+                let issue = a + m.start;
+                let ser_f = transfer_ps(m.bytes, *fbw);
+                let start = cal.place(issue, ser_f);
+                let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
+                fab_late = fab_late.max((start + ser_f).saturating_sub(solo_finish));
+                fabric.bytes += m.bytes;
+            }
+        }
+        // CCM PU-pool replay (earliest-free, admission order).
+        let mut pu_late: Ps = 0;
+        for sp in &s.run.ccm_trace {
+            let ready = a + sp.start;
+            let (_, end) = dev.pool.dispatch(ready, sp.dur());
+            pu_late = pu_late.max(end - (ready + sp.dur()));
+        }
+        let r = &mut requests[rid as usize];
+        r.admit = a;
+        r.device_wait = mem_late.max(io_late);
+        r.fabric_wait = fab_late;
+        r.pu_wait = pu_late;
+        r.completion = a + r.solo + r.device_wait.max(fab_late) + pu_late;
+        dev.in_service += 1;
+        dev.stats.mem_wait += mem_late;
+        dev.stats.io_wait += io_late;
+        dev.stats.pu_wait += pu_late;
+        dev.stats.bytes += s.mem_bytes + s.io_bytes;
+        fabric.wait += fab_late;
+        heap.push(Reverse((r.completion, 0, d as u64, rid as u64)));
+    }
+}
+
+/// The open-loop pin: delegate to the PR-3 tenant driver verbatim and
+/// repackage its report (one request per tenant). Requires a `Static`
+/// policy and a homogeneous topology — exactly the configuration the
+/// regression suite compares against `axle tenants`.
+fn run_sched_open(
+    cfg: &SimConfig,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    jobs: usize,
+) -> SchedReport {
+    let proto = match spec.policy {
+        PolicyKind::Static(p) => p,
+        _ => panic!(
+            "open-loop arrivals support only static policies; adaptive policies need \
+             closed-loop completion feedback (drop --open)"
+        ),
+    };
+    if spec.streams == 0 {
+        return empty_report(topo_spec, spec);
+    }
+    let tenant_spec = TenantSpec::new(spec.streams)
+        .with_workloads(spec.workloads.clone())
+        .with_proto(proto)
+        .with_load(spec.load)
+        .with_seed(spec.seed);
+    let r = tenant::run_tenants(cfg, topo_spec, &tenant_spec, jobs);
+    let requests: Vec<RequestRun> = r
+        .tenants
+        .iter()
+        .map(|t| RequestRun {
+            tenant: t.tenant,
+            index: 0,
+            annot: t.annot,
+            device: t.device,
+            proto,
+            submit: t.arrival,
+            admit: t.arrival,
+            solo: t.solo.total,
+            device_wait: t.device_wait,
+            fabric_wait: t.fabric_wait,
+            pu_wait: t.pu_wait,
+            completion: t.arrival + t.total(),
+        })
+        .collect();
+    let host_busy = r.tenants.iter().map(|t| t.solo.host_busy).sum();
+    let ccm_busy = r.devices.iter().map(|d| d.pu_busy).sum();
+    let mut proto_mix: BTreeMap<&'static str, u64> = BTreeMap::new();
+    if !requests.is_empty() {
+        proto_mix.insert(proto.label(), requests.len() as u64);
+    }
+    SchedReport {
+        policy: spec.policy,
+        closed: false,
+        depth: spec.depth,
+        admit: spec.admit,
+        requests,
+        devices: r.devices,
+        fabric: r.fabric,
+        makespan: r.makespan,
+        p50_slowdown: r.p50_slowdown,
+        p99_slowdown: r.p99_slowdown,
+        max_slowdown: r.max_slowdown,
+        host_busy,
+        ccm_busy,
+        proto_mix,
+    }
+}
+
+/// Report for a run with nothing to schedule (`streams == 0` or
+/// `requests == 0`): unit slowdowns, zeroed devices, zero makespan.
+fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
+    SchedReport {
+        policy: spec.policy,
+        closed: spec.closed,
+        depth: spec.depth,
+        admit: spec.admit,
+        requests: Vec::new(),
+        devices: vec![DeviceStats::default(); topo_spec.devices],
+        fabric: FabricReport { bw_gbps: topo_spec.fabric_bw_gbps, ..FabricReport::default() },
+        makespan: 0,
+        p50_slowdown: 1.0,
+        p99_slowdown: 1.0,
+        max_slowdown: 1.0,
+        host_busy: 0,
+        ccm_busy: 0,
+        proto_mix: BTreeMap::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceOverride;
+
+    // ---- Online resource models. ----
+
+    #[test]
+    fn calendar_lone_trace_replays_exactly() {
+        let mut cal = LinkCalendar::default();
+        let mut t = 0;
+        for _ in 0..5 {
+            assert_eq!(cal.place(t, 100), t);
+            t += 120; // solo-spaced: gaps of 20
+        }
+        assert_eq!(cal.busy_union(), 500);
+        assert_eq!(cal.msgs, 5);
+    }
+
+    #[test]
+    fn calendar_backfills_idle_gaps() {
+        let mut cal = LinkCalendar::default();
+        assert_eq!(cal.place(0, 100), 0);
+        assert_eq!(cal.place(300, 100), 300);
+        // A later placement with an early issue lands in the [100, 300)
+        // gap instead of queueing behind the tail.
+        assert_eq!(cal.place(50, 150), 100);
+        // The gap is now too small for another 150: next fit is the tail.
+        assert_eq!(cal.place(50, 150), 400);
+        assert_eq!(cal.tail(), 550);
+    }
+
+    #[test]
+    fn calendar_clamps_past_covering_interval() {
+        let mut cal = LinkCalendar::default();
+        assert_eq!(cal.place(100, 200), 100);
+        // Issue inside the busy interval: starts when it ends.
+        assert_eq!(cal.place(150, 50), 300);
+        // Zero-duration transfers occupy nothing.
+        assert_eq!(cal.place(40, 0), 40);
+        assert_eq!(cal.msgs, 2);
+    }
+
+    #[test]
+    fn online_pool_union_merges_out_of_order_spans() {
+        let mut p = OnlinePool::new(2);
+        assert_eq!(p.dispatch(100, 50), (100, 150));
+        assert_eq!(p.dispatch(100, 80), (100, 180));
+        // Third span queues earliest-free; a later regressed ready time
+        // is legal for the online pool.
+        assert_eq!(p.dispatch(90, 10), (150, 160));
+        assert_eq!(p.busy_total, 140);
+        assert_eq!(p.busy_union(), 80); // [100, 180)
+        assert_eq!(p.earliest_free(), 160);
+    }
+
+    // ---- Closed-loop driver. ----
+
+    fn light_spec(streams: usize) -> SchedSpec {
+        SchedSpec::new(streams).with_workloads(vec!['a', 'f']).with_requests(2)
+    }
+
+    #[test]
+    fn lone_tenant_closed_loop_has_zero_contention() {
+        // One tenant, one device, window 1: each request replays its solo
+        // schedule against empty-or-drained calendars — zero shifts, and
+        // successive requests are spaced by solo + think.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let spec = SchedSpec::new(1)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Bs))
+            .with_requests(3)
+            .with_think(2 * US);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        assert_eq!(r.requests.len(), 3);
+        for w in r.requests.windows(2) {
+            assert!(w[1].submit >= w[0].completion + 2 * US);
+        }
+        for req in &r.requests {
+            assert_eq!(req.device_wait, 0);
+            assert_eq!(req.fabric_wait, 0);
+            assert_eq!(req.pu_wait, 0);
+            assert_eq!(req.queue_wait(), 0);
+            assert!((req.slowdown() - 1.0).abs() < 1e-12);
+            assert_eq!(req.proto, Protocol::Bs);
+        }
+        assert_eq!(r.proto_mix.get("BS"), Some(&3));
+    }
+
+    #[test]
+    fn admission_depth_one_serializes_a_device() {
+        // Two tenants on one device with a single service slot: the
+        // second request cannot start before the first completes, so the
+        // makespan covers both solos back to back.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let spec = SchedSpec::new(2)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(1)
+            .with_admit(1);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        assert_eq!(r.requests.len(), 2);
+        let solo_sum: Ps = r.requests.iter().map(|q| q.solo).sum();
+        assert!(r.makespan >= solo_sum);
+        // Somebody actually queued (start stagger < solo runtime).
+        assert!(r.requests.iter().any(|q| q.queue_wait() > 0));
+    }
+
+    #[test]
+    fn run_is_worker_count_invariant_and_deterministic() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+        for policy in [PolicyKind::Static(Protocol::Axle), PolicyKind::Heuristic] {
+            let spec = light_spec(4).with_policy(policy);
+            let a = run_sched(&cfg, &topo, &spec, 1);
+            let b = run_sched(&cfg, &topo, &spec, 4);
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+            assert_eq!(a.requests.len(), 8);
+        }
+    }
+
+    #[test]
+    fn empty_runs_return_empty_reports() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+        for spec in [light_spec(0), light_spec(3).with_requests(0)] {
+            let r = run_sched(&cfg, &topo, &spec, 2);
+            assert!(r.requests.is_empty());
+            assert_eq!(r.makespan, 0);
+            assert_eq!(r.devices.len(), 2);
+            assert_eq!(r.p50_slowdown, 1.0);
+            assert_eq!(r.max_slowdown, 1.0);
+            assert_eq!(r.ccm_idle_frac(), 0.0);
+        }
+    }
+
+    #[test]
+    fn decomposition_identity_holds_per_request() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let spec = light_spec(4).with_policy(PolicyKind::Oracle).with_admit(4);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        for q in &r.requests {
+            assert_eq!(q.total(), q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait);
+            assert!(q.completion >= q.admit);
+            assert!(q.admit >= q.submit);
+            assert!(q.slowdown() >= 1.0);
+        }
+        let served: u32 = r.devices.iter().map(|d| d.tenants).sum();
+        assert_eq!(served as usize, r.requests.len());
+    }
+
+    #[test]
+    fn heterogeneous_weak_device_inflates_solo() {
+        // Device 1 has a quarter of the CCM PUs: the same workload's solo
+        // runtime there must exceed device 0's.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec { devices: 2, ..TopologySpec::default() }
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+        let spec = SchedSpec::new(2)
+            .with_workloads(vec!['a'])
+            .with_policy(PolicyKind::Static(Protocol::Bs))
+            .with_requests(1);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        // Round-robin spreads the two requests over both devices (which
+        // tenant lands where depends on the seeded stagger order).
+        let on_base = r.requests.iter().find(|q| q.device == 0).expect("device 0 used");
+        let on_weak = r.requests.iter().find(|q| q.device == 1).expect("device 1 used");
+        assert!(on_weak.solo > on_base.solo);
+    }
+
+    #[test]
+    #[should_panic(expected = "open-loop arrivals support only static")]
+    fn open_mode_requires_static_policy() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let spec = light_spec(2).with_policy(PolicyKind::Heuristic).open_loop();
+        let _ = run_sched(&cfg, &topo, &spec, 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Closed-loop offload scheduler: admission queues, adaptive per-request
+//! protocol selection, and heterogeneous devices.
+//!
+//! This subsystem sits between the multi-tenant topology layer
+//! ([`crate::topo`]) and the protocol engines ([`crate::protocol`]). The
+//! open-loop tenant driver answers "what does contention do to a fixed
+//! arrival process?"; this layer closes the loop and asks the production
+//! question: **with tenants reacting to completions, which offload
+//! protocol should each request use, and how deep should devices queue?**
+//!
+//! Three pieces:
+//!
+//! - [`driver`] — the closed-loop engine ([`run_sched`]): K tenants with
+//!   `depth`-bounded outstanding windows submitting against completion
+//!   feedback, per-device FIFO admission queues with an `admit` service
+//!   limit, and online (admission-order) contention accounting over link
+//!   calendars and earliest-free PU pools. With `--open` it degenerates
+//!   to the PR-3 open-loop tenant path verbatim (the regression pin).
+//! - [`policy`] — the per-request [`OffloadPolicy`](policy::OffloadPolicy)
+//!   plug point: `Static` (pins one protocol — today's behavior),
+//!   `Heuristic` (compute-vs-transfer ratio + observed link/PU
+//!   occupancy, the paper-style online rule) and `Oracle` (clairvoyant
+//!   per-request best-solo choice, the bound `axle report fig19` reports
+//!   against).
+//! - **Heterogeneous devices** — [`TopologySpec`](crate::config::TopologySpec)
+//!   carries optional per-device
+//!   [`DeviceOverride`](crate::config::DeviceOverride)s; the driver's
+//!   solo pass simulates every candidate per *device class*, so policies
+//!   see real placement trade-offs.
+//!
+//! Surfaces: `axle sched --streams K --policy static|heuristic|oracle
+//! --depth N`, [`crate::coordinator::Coordinator::run_sched`],
+//! [`sweep_sched_grid`] (policy × depth axes; also re-exported as
+//! `topo::sweep_sched_grid`) and `axle report fig19`.
+
+pub mod driver;
+pub mod policy;
+
+pub use driver::{format_request_row, run_sched, RequestRun, SchedReport};
+pub use policy::{Candidate, Observed, OffloadPolicy};
+
+use crate::config::{PolicyKind, SchedSpec, SimConfig, TopologySpec};
+
+/// Sweep the scheduler axes: one [`SchedReport`] per `(policy, depth)`
+/// grid point, with the base specs' other knobs held fixed. The policy
+/// is the outermost axis — exactly the table `axle report fig19` walks.
+///
+/// The depth axis cannot change solo simulations, so the solo candidate
+/// pass is prepared **once per policy** and shared across its depth
+/// points (results are identical to calling [`run_sched`] per point).
+pub fn sweep_sched_grid(
+    cfg: &SimConfig,
+    topo_base: &TopologySpec,
+    sched_base: &SchedSpec,
+    policy_axis: &[PolicyKind],
+    depth_axis: &[usize],
+    jobs: usize,
+) -> Vec<(PolicyKind, usize, SchedReport)> {
+    let mut out = Vec::with_capacity(policy_axis.len() * depth_axis.len());
+    for &policy in policy_axis {
+        let base = SchedSpec { policy, ..sched_base.clone() };
+        // Only closed, non-empty runs reach the engine (and can share a
+        // prepared pass); anything else goes through run_sched's own
+        // dispatch (open-loop pin, empty report).
+        let pass = (base.closed && base.streams > 0 && base.requests > 0)
+            .then(|| driver::prepare_solo_pass(cfg, topo_base, &base, jobs));
+        for &depth in depth_axis {
+            let spec = SchedSpec { depth, ..base.clone() };
+            let report = match &pass {
+                Some(p) => driver::run_closed(topo_base, &spec, p),
+                None => run_sched(cfg, topo_base, &spec, jobs),
+            };
+            out.push((policy, depth, report));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Protocol;
+
+    #[test]
+    fn grid_sweep_covers_axes_in_order() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let base = SchedSpec::new(2).with_workloads(vec!['f']).with_requests(1);
+        let grid = sweep_sched_grid(
+            &cfg,
+            &topo,
+            &base,
+            &[PolicyKind::Static(Protocol::Axle), PolicyKind::Oracle],
+            &[1, 2],
+            2,
+        );
+        assert_eq!(grid.len(), 4);
+        assert_eq!((grid[0].0, grid[0].1), (PolicyKind::Static(Protocol::Axle), 1));
+        assert_eq!((grid[1].0, grid[1].1), (PolicyKind::Static(Protocol::Axle), 2));
+        assert_eq!((grid[2].0, grid[2].1), (PolicyKind::Oracle, 1));
+        assert_eq!((grid[3].0, grid[3].1), (PolicyKind::Oracle, 2));
+        for (p, depth, r) in &grid {
+            assert_eq!(r.policy, *p);
+            assert_eq!(r.depth, *depth);
+            assert_eq!(r.requests.len(), 2);
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Per-request offload-protocol policies.
+//!
+//! The paper's core observation is that no single offloading mechanism
+//! wins everywhere: RP's coarse batching amortizes well on heavy kernels
+//! with tiny results (Fig. 3), BS's synchronous CXL.mem flow is clean
+//! when data dominates and nothing else contends the channel, and AXLE's
+//! asynchronous back-streaming wins when compute and transfer can
+//! overlap. UDON makes the same case for deciding *what* runs near
+//! memory online. The closed-loop scheduler therefore consults an
+//! [`OffloadPolicy`] once per request, with two kinds of information:
+//!
+//! - [`Candidate`] summaries — the request's solo profile under each
+//!   candidate protocol **on the target device's config** (heterogeneous
+//!   devices give different summaries per device class), precomputed by
+//!   the driver's solo pass and deduped through the sweep engine's
+//!   workload cache;
+//! - an [`Observed`] snapshot — the target device's link/PU occupancy
+//!   and admission backlog at submission time, the closed loop's live
+//!   feedback signal.
+//!
+//! Three implementations ship ([`policy_for`]):
+//!
+//! | policy | choice | role |
+//! |---|---|---|
+//! | [`StaticPolicy`] | one pinned protocol | PR-3 behavior; regression baseline |
+//! | [`HeuristicPolicy`] | compute-vs-transfer ratio + occupancy rule | the paper-style online scheduler |
+//! | [`OraclePolicy`] | smallest solo runtime on the device class | clairvoyant per-request bound |
+
+use crate::config::{PolicyKind, Protocol};
+use crate::sim::Ps;
+
+/// One candidate protocol's solo profile for a request on its target
+/// device class (see the driver's solo pass).
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub proto: Protocol,
+    /// Solo end-to-end runtime on the target device's config.
+    pub solo: Ps,
+    /// Solo CCM busy-union (T_C) — the compute side of the ratio.
+    pub ccm_busy: Ps,
+    /// Solo data-movement busy-union (T_D) — the transfer side.
+    pub dm_busy: Ps,
+    /// Data bytes the candidate moves over the device's CXL.mem channel.
+    pub mem_bytes: u64,
+    /// Data bytes the candidate moves over the device's CXL.io channel.
+    pub io_bytes: u64,
+}
+
+/// What the scheduler can observe about the target device at submission
+/// time — the closed loop's feedback signal.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Observed {
+    /// How far the device's CXL.mem busy calendar extends beyond now.
+    pub mem_backlog: Ps,
+    /// How far the device's CXL.io busy calendar extends beyond now.
+    pub io_backlog: Ps,
+    /// How far ahead the device's earliest-free CCM PU is booked.
+    pub pu_backlog: Ps,
+    /// Requests waiting in the device's admission queue.
+    pub queued: usize,
+}
+
+/// A per-request protocol selector. Implementations must be pure
+/// functions of their inputs — the driver's determinism contract (same
+/// spec, same report) rests on it.
+pub trait OffloadPolicy {
+    fn label(&self) -> String;
+    /// Pick the protocol for one request. `cands` holds the candidate
+    /// set in [`CANDIDATES`] order (plus the pinned protocol for static
+    /// policies); it is never empty.
+    fn choose(&self, cands: &[Candidate], obs: &Observed) -> Protocol;
+}
+
+/// The candidate set adaptive policies choose from, in preference-stable
+/// order. `AxleInterrupt` is reachable only by pinning it statically.
+pub const CANDIDATES: [Protocol; 3] = [Protocol::Rp, Protocol::Bs, Protocol::Axle];
+
+/// Every request uses one pinned protocol — the PR-3 tenant path's
+/// behavior, kept as the regression baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticPolicy(pub Protocol);
+
+impl OffloadPolicy for StaticPolicy {
+    fn label(&self) -> String {
+        PolicyKind::Static(self.0).label()
+    }
+
+    fn choose(&self, _cands: &[Candidate], _obs: &Observed) -> Protocol {
+        self.0
+    }
+}
+
+/// Paper-style adaptive rule. Intensity comes from the bulk-synchronous
+/// candidate: BS is a fully serialized pipeline (Fig. 6), so its T_C and
+/// T_D are the workload's intrinsic compute and transfer demands on this
+/// device class.
+///
+/// - **Transfer-bound** (`T_D >= T_C`): route the data onto the emptier
+///   channel — AXLE back-streams results over CXL.io, BS moves them over
+///   CXL.mem — so one backlogged wire steers the request to the other.
+/// - **Compute-bound** (`T_C > T_D`): results trickle, so AXLE's
+///   fine-grained overlap is the default; remote polling is chosen only
+///   when it is genuinely competitive on this device class (heavy
+///   kernels with tiny results, Fig. 3) *and* the PU pool is booked more
+///   than one AXLE solo ahead, where coarse batching costs nothing.
+///   A backlogged CXL.io channel still steers to BS.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HeuristicPolicy;
+
+impl HeuristicPolicy {
+    fn find(cands: &[Candidate], proto: Protocol) -> &Candidate {
+        cands
+            .iter()
+            .find(|c| c.proto == proto)
+            .expect("adaptive policies run with the full candidate set")
+    }
+}
+
+impl OffloadPolicy for HeuristicPolicy {
+    fn label(&self) -> String {
+        PolicyKind::Heuristic.label()
+    }
+
+    fn choose(&self, cands: &[Candidate], obs: &Observed) -> Protocol {
+        let rp = Self::find(cands, Protocol::Rp);
+        let bs = Self::find(cands, Protocol::Bs);
+        let axle = Self::find(cands, Protocol::Axle);
+        let transfer_bound = bs.dm_busy >= bs.ccm_busy;
+        if !transfer_bound
+            && rp.solo <= bs.solo.min(axle.solo)
+            && obs.pu_backlog > axle.solo
+        {
+            return Protocol::Rp;
+        }
+        if obs.io_backlog > obs.mem_backlog {
+            Protocol::Bs
+        } else {
+            Protocol::Axle
+        }
+    }
+}
+
+/// Clairvoyant per-request choice: the candidate with the smallest solo
+/// runtime on the target device class (ties break in [`CANDIDATES`]
+/// order). Ignores occupancy by design — it bounds what per-request
+/// protocol selection alone can buy, reported against in `axle report
+/// fig19`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OraclePolicy;
+
+impl OffloadPolicy for OraclePolicy {
+    fn label(&self) -> String {
+        PolicyKind::Oracle.label()
+    }
+
+    fn choose(&self, cands: &[Candidate], _obs: &Observed) -> Protocol {
+        cands
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.solo, *i))
+            .map(|(_, c)| c.proto)
+            .expect("candidate set is never empty")
+    }
+}
+
+/// Materialize the policy a [`PolicyKind`] names.
+pub fn policy_for(kind: PolicyKind) -> Box<dyn OffloadPolicy> {
+    match kind {
+        PolicyKind::Static(p) => Box::new(StaticPolicy(p)),
+        PolicyKind::Heuristic => Box::new(HeuristicPolicy),
+        PolicyKind::Oracle => Box::new(OraclePolicy),
+    }
+}
+
+/// The protocols whose solo profiles a policy needs precomputed.
+pub fn required_candidates(kind: PolicyKind) -> Vec<Protocol> {
+    match kind {
+        PolicyKind::Static(p) => vec![p],
+        PolicyKind::Heuristic | PolicyKind::Oracle => CANDIDATES.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    fn cand(proto: Protocol, solo: Ps, ccm: Ps, dm: Ps) -> Candidate {
+        Candidate { proto, solo, ccm_busy: ccm, dm_busy: dm, mem_bytes: 0, io_bytes: 0 }
+    }
+
+    /// rp slow, bs middling, axle fastest — the Fig. 10 common case.
+    fn common_cands(transfer_bound: bool) -> Vec<Candidate> {
+        let (ccm, dm) = if transfer_bound { (10 * US, 40 * US) } else { (40 * US, 10 * US) };
+        vec![
+            cand(Protocol::Rp, 100 * US, ccm, dm),
+            cand(Protocol::Bs, 60 * US, ccm, dm),
+            cand(Protocol::Axle, 50 * US, ccm, dm),
+        ]
+    }
+
+    #[test]
+    fn static_policy_pins_protocol() {
+        let p = StaticPolicy(Protocol::Bs);
+        assert_eq!(p.choose(&common_cands(true), &Observed::default()), Protocol::Bs);
+        assert_eq!(p.label(), "static-bs");
+    }
+
+    #[test]
+    fn heuristic_idle_device_picks_axle() {
+        let p = HeuristicPolicy;
+        for tb in [true, false] {
+            assert_eq!(p.choose(&common_cands(tb), &Observed::default()), Protocol::Axle);
+        }
+    }
+
+    #[test]
+    fn heuristic_backlogged_io_steers_to_bs() {
+        let p = HeuristicPolicy;
+        let obs = Observed { io_backlog: 5 * US, mem_backlog: US, ..Default::default() };
+        assert_eq!(p.choose(&common_cands(true), &obs), Protocol::Bs);
+        // Mem more backlogged than io: stay on the io channel (AXLE).
+        let obs2 = Observed { io_backlog: US, mem_backlog: 5 * US, ..Default::default() };
+        assert_eq!(p.choose(&common_cands(true), &obs2), Protocol::Axle);
+    }
+
+    #[test]
+    fn heuristic_rp_needs_competitive_solo_and_deep_pu_backlog() {
+        let p = HeuristicPolicy;
+        // Compute-bound, RP genuinely fastest on this class.
+        let cands = vec![
+            cand(Protocol::Rp, 40 * US, 40 * US, 5 * US),
+            cand(Protocol::Bs, 60 * US, 40 * US, 5 * US),
+            cand(Protocol::Axle, 50 * US, 40 * US, 5 * US),
+        ];
+        let deep = Observed { pu_backlog: 200 * US, ..Default::default() };
+        assert_eq!(p.choose(&cands, &deep), Protocol::Rp);
+        // Shallow backlog: fine-grained overlap still wins.
+        assert_eq!(p.choose(&cands, &Observed::default()), Protocol::Axle);
+        // RP not competitive: never chosen, however deep the backlog.
+        assert_eq!(p.choose(&common_cands(false), &deep), Protocol::Axle);
+    }
+
+    #[test]
+    fn oracle_picks_min_solo_with_stable_ties() {
+        let p = OraclePolicy;
+        assert_eq!(p.choose(&common_cands(true), &Observed::default()), Protocol::Axle);
+        let tied = vec![
+            cand(Protocol::Rp, 50 * US, 0, 0),
+            cand(Protocol::Bs, 50 * US, 0, 0),
+            cand(Protocol::Axle, 60 * US, 0, 0),
+        ];
+        assert_eq!(p.choose(&tied, &Observed::default()), Protocol::Rp);
+    }
+
+    #[test]
+    fn required_candidates_match_policy() {
+        assert_eq!(
+            required_candidates(PolicyKind::Static(Protocol::AxleInterrupt)),
+            vec![Protocol::AxleInterrupt]
+        );
+        assert_eq!(required_candidates(PolicyKind::Heuristic), CANDIDATES.to_vec());
+        assert_eq!(required_candidates(PolicyKind::Oracle), CANDIDATES.to_vec());
+    }
+
+    #[test]
+    fn policy_for_labels_round_trip() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(policy_for(kind).label(), kind.label());
+        }
+    }
+}

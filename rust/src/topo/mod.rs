@@ -41,6 +41,10 @@ pub mod fabric;
 pub mod tenant;
 
 pub use crate::config::{Placement, QosPolicy, QosSpec, TopologySpec};
+// The closed-loop scheduler layers on top of this module; its grid sweep
+// is re-exported here so the topology sweeps live side by side
+// (`topo::sweep_tenant_grid` / `topo::sweep_sched_grid`).
+pub use crate::sched::sweep_sched_grid;
 pub use fabric::{
     arbitrate, arbitrate_pus, arbitrate_qos, ArbitrationOutcome, FabricMsg, PuDemand, PuOutcome,
 };
@@ -168,25 +172,44 @@ impl Topology {
     /// placement policy; returns the chosen device id and updates its
     /// load accounting.
     pub fn place(&mut self, solo: Ps) -> u32 {
-        let d = match self.spec.placement {
-            Placement::RoundRobin => {
-                let d = self.rr_next % self.devices.len();
-                self.rr_next += 1;
-                d
-            }
-            Placement::LeastLoaded => {
-                let mut best = 0usize;
-                for (i, dev) in self.devices.iter().enumerate() {
-                    if dev.load < self.devices[best].load {
-                        best = i;
-                    }
-                }
-                best
-            }
-        };
+        let d = place_device(
+            self.spec.placement,
+            self.devices.len(),
+            |i| self.devices[i].load,
+            &mut self.rr_next,
+        );
         self.devices[d].tenants += 1;
         self.devices[d].load += solo;
         d as u32
+    }
+}
+
+/// Pick the next placement target among `devices` devices: round-robin
+/// advances `rr_next`; least-loaded greedily takes the device with the
+/// smallest accumulated `load` (ties broken by lowest id). One shared
+/// implementation for [`Topology::place`] and the closed-loop
+/// scheduler's per-request placement, so the two paths cannot drift.
+pub fn place_device(
+    placement: Placement,
+    devices: usize,
+    load: impl Fn(usize) -> Ps,
+    rr_next: &mut usize,
+) -> usize {
+    match placement {
+        Placement::RoundRobin => {
+            let d = *rr_next % devices;
+            *rr_next += 1;
+            d
+        }
+        Placement::LeastLoaded => {
+            let mut best = 0usize;
+            for i in 1..devices {
+                if load(i) < load(best) {
+                    best = i;
+                }
+            }
+            best
+        }
     }
 }
 

@@ -282,9 +282,28 @@ pub fn run_tenants(
     spec: &TenantSpec,
     jobs: usize,
 ) -> TenantReport {
-    assert!(spec.streams > 0, "need at least one stream");
     assert!(!spec.workloads.is_empty(), "tenant mix needs at least one workload");
+    assert!(
+        !topo_spec.is_heterogeneous(),
+        "the open-loop tenant driver models homogeneous devices; heterogeneous \
+         topologies (per-device overrides) run through the closed-loop scheduler \
+         (`axle sched`, crate::sched::run_sched)"
+    );
     let mut topo = Topology::new(cfg.clone(), topo_spec.clone());
+    if spec.streams == 0 {
+        // Nothing to simulate: an empty report (unit slowdowns, zeroed
+        // devices) rather than a panic — `axle tenants --streams 0`.
+        return TenantReport {
+            qos: topo_spec.qos.policy,
+            tenants: Vec::new(),
+            devices: topo.devices().to_vec(),
+            fabric: FabricReport { bw_gbps: topo_spec.fabric_bw_gbps, ..FabricReport::default() },
+            makespan: 0,
+            p50_slowdown: 1.0,
+            p99_slowdown: 1.0,
+            max_slowdown: 1.0,
+        };
+    }
 
     // ---- Pass 1: solo runs, one per distinct (annot, proto) job. ----
     let annots: Vec<char> =
@@ -632,6 +651,38 @@ mod tests {
         let dev_pu: Ps = r.devices.iter().map(|d| d.pu_wait).sum();
         assert!(dev_pu >= r.tenants.iter().map(|t| t.pu_wait).max().unwrap());
         assert!(r.devices[0].pu_busy > 0);
+    }
+
+    #[test]
+    fn zero_streams_returns_empty_report() {
+        // `axle tenants --streams 0` must not panic: an empty report with
+        // unit slowdowns and zeroed device stats.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+        let r = run_tenants(&cfg, &topo, &TenantSpec::new(0), 2);
+        assert!(r.tenants.is_empty());
+        assert_eq!(r.devices.len(), 2);
+        assert!(r.devices.iter().all(|d| d.tenants == 0 && d.load == 0));
+        assert_eq!(r.makespan, 0);
+        assert_eq!(r.p50_slowdown, 1.0);
+        assert_eq!(r.p99_slowdown, 1.0);
+        assert_eq!(r.max_slowdown, 1.0);
+        assert_eq!(r.fabric.bw_gbps, Some(cfg.cxl_bw_gbps));
+        assert_eq!(r.fabric.wait, 0);
+        // JSON serialization of the empty report stays well-formed.
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"tenants\": []") || s.contains("\"tenants\":[]"));
+    }
+
+    #[test]
+    #[should_panic(expected = "homogeneous devices")]
+    fn heterogeneous_topology_rejected_by_open_loop_driver() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec { devices: 2, ..TopologySpec::default() }.with_override(
+            1,
+            crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
+        );
+        let _ = run_tenants(&cfg, &topo, &TenantSpec::new(2), 1);
     }
 
     #[test]

@@ -532,3 +532,122 @@ mod qos_props {
         });
     }
 }
+
+// ------------------------------------------------------------------
+// Closed-loop scheduler invariants (sched::driver, PR-4 subsystem).
+// ------------------------------------------------------------------
+
+mod sched_props {
+    use axle::config::{DeviceOverride, PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec};
+    use axle::sched::run_sched;
+    use axle::sim::{Ps, US};
+    use axle::util::prop::run_prop;
+
+    /// Sweep-line maximum of concurrently open `[open, close)` intervals.
+    /// At equal timestamps, closes are applied before opens — exactly the
+    /// driver's event order (completions before submissions/admissions).
+    fn max_overlap(intervals: &[(Ps, Ps)]) -> usize {
+        let mut events: Vec<(Ps, i32)> = Vec::with_capacity(intervals.len() * 2);
+        for &(open, close) in intervals {
+            events.push((open, 1));
+            events.push((close, -1));
+        }
+        events.sort_by_key(|&(t, delta)| (t, delta));
+        let mut cur: i32 = 0;
+        let mut max: i32 = 0;
+        for (_, delta) in events {
+            cur += delta;
+            max = max.max(cur);
+        }
+        max as usize
+    }
+
+    /// The closed-loop invariants the subsystem promises:
+    /// - a tenant never has more than `depth` outstanding requests;
+    /// - a device never serves more than `admit` requests at once;
+    /// - per-tenant submissions are non-decreasing (strictly increasing
+    ///   with nonzero think time) and completions are monotone under
+    ///   window 1;
+    /// - every request obeys the slowdown decomposition identity;
+    /// - exactly `streams x requests` requests run, each exactly once.
+    #[test]
+    fn prop_closed_loop_window_admission_and_monotonicity() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("closed_loop_invariants", 10, |rng| {
+            let streams = rng.range(1, 4) as usize;
+            let devices = rng.range(1, 3) as usize;
+            let depth = rng.range(1, 3) as usize;
+            let admit = rng.range(1, 2) as usize;
+            let requests = rng.range(1, 3) as usize;
+            let think = rng.below(2) * US;
+            let policy = [
+                PolicyKind::Static(Protocol::Axle),
+                PolicyKind::Heuristic,
+                PolicyKind::Oracle,
+            ][rng.below(3) as usize];
+            let mut topo = TopologySpec { devices, ..TopologySpec::default() };
+            if rng.below(2) == 1 {
+                topo.fabric_bw_gbps = Some(cfg.cxl_bw_gbps);
+            }
+            if devices > 1 && rng.below(2) == 1 {
+                topo = topo
+                    .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+            }
+            let spec = SchedSpec::new(streams)
+                .with_workloads(vec!['a', 'f'])
+                .with_policy(policy)
+                .with_depth(depth)
+                .with_admit(admit)
+                .with_requests(requests)
+                .with_think(think)
+                .with_seed(rng.next_u64());
+            let r = run_sched(&cfg, &topo, &spec, 2);
+
+            assert_eq!(r.requests.len(), streams * requests);
+            for t in 0..streams as u32 {
+                let of_t: Vec<_> = r.requests.iter().filter(|q| q.tenant == t).collect();
+                assert_eq!(of_t.len(), requests);
+                // Indices 0..requests, in order (report sorts by index).
+                for (j, q) in of_t.iter().enumerate() {
+                    assert_eq!(q.index as usize, j);
+                }
+                // Submissions never go back in time; think spaces them.
+                for w in of_t.windows(2) {
+                    assert!(w[1].submit >= w[0].submit);
+                    if think > 0 {
+                        assert!(w[1].submit > w[0].submit);
+                    }
+                }
+                // Window: never more than `depth` outstanding.
+                let windows: Vec<(Ps, Ps)> =
+                    of_t.iter().map(|q| (q.submit, q.completion)).collect();
+                assert!(max_overlap(&windows) <= depth, "tenant {t} window exceeded");
+                // Window 1 serializes the tenant: completions monotone.
+                if depth == 1 {
+                    for w in of_t.windows(2) {
+                        assert!(w[1].completion >= w[0].completion);
+                        assert!(w[1].submit >= w[0].completion);
+                    }
+                }
+            }
+            // Per-device admission: never more than `admit` in service.
+            for d in 0..devices as u32 {
+                let service: Vec<(Ps, Ps)> = r
+                    .requests
+                    .iter()
+                    .filter(|q| q.device == d)
+                    .map(|q| (q.admit, q.completion))
+                    .collect();
+                assert!(max_overlap(&service) <= admit, "device {d} admission exceeded");
+            }
+            // Decomposition identity and sane ordering per request.
+            for q in &r.requests {
+                assert!(q.admit >= q.submit);
+                assert!(q.completion >= q.admit + q.solo);
+                assert_eq!(q.total(), q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait);
+                assert!(q.slowdown() >= 1.0);
+            }
+            assert_eq!(r.makespan, r.requests.iter().map(|q| q.completion).max().unwrap());
+        });
+    }
+}

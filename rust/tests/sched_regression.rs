@@ -1,0 +1,195 @@
+//! Scheduler regression gate (PR 4).
+//!
+//! 1. The open-loop `Static` path of `axle sched` must reproduce the
+//!    PR-3 `axle tenants` numbers **bit-identically** (same arrivals,
+//!    placement, arbitration and percentiles) — the pin that lets the
+//!    closed-loop subsystem ride on top of the tenant driver without
+//!    moving any published number.
+//! 2. The closed-loop engine must be deterministic and worker-count
+//!    invariant on a heterogeneous, fabric-contended scenario.
+//! 3. On the acceptance scenario (two tenants alone on two
+//!    heterogeneous devices, no shared fabric, zero contention by
+//!    construction), `oracle` must lower-bound every policy and
+//!    `heuristic` must beat the worst static protocol.
+
+use axle::config::{DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec};
+use axle::sched::run_sched;
+use axle::topo::{run_tenants, TenantSpec};
+
+fn data_heavy_mix() -> Vec<char> {
+    vec!['a', 'd', 'e', 'i']
+}
+
+#[test]
+fn open_loop_static_is_bit_identical_to_tenant_path() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![4, 1])] {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_qos(qos);
+        let tenant_spec = TenantSpec::new(8)
+            .with_workloads(data_heavy_mix())
+            .with_proto(Protocol::Axle)
+            .with_load(1.0)
+            .with_seed(0x7E4A_17);
+        let sched_spec = SchedSpec::new(8)
+            .with_workloads(data_heavy_mix())
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_load(1.0)
+            .with_seed(0x7E4A_17)
+            .open_loop();
+        let ten = run_tenants(&cfg, &topo, &tenant_spec, 4);
+        let sch = run_sched(&cfg, &topo, &sched_spec, 4);
+
+        assert!(!sch.closed);
+        assert_eq!(sch.requests.len(), ten.tenants.len());
+        for (q, t) in sch.requests.iter().zip(&ten.tenants) {
+            assert_eq!(q.tenant, t.tenant);
+            assert_eq!(q.annot, t.annot);
+            assert_eq!(q.device, t.device);
+            assert_eq!(q.submit, t.arrival);
+            assert_eq!(q.admit, t.arrival);
+            assert_eq!(q.solo, t.solo.total);
+            assert_eq!(q.device_wait, t.device_wait);
+            assert_eq!(q.fabric_wait, t.fabric_wait);
+            assert_eq!(q.pu_wait, t.pu_wait);
+            assert_eq!(q.wire_wait(), t.wire_wait());
+            assert_eq!(q.total(), t.total());
+            assert_eq!(q.completion, t.arrival + t.total());
+            assert_eq!(q.slowdown().to_bits(), t.slowdown().to_bits());
+        }
+        assert_eq!(sch.makespan, ten.makespan);
+        assert_eq!(sch.p50_slowdown.to_bits(), ten.p50_slowdown.to_bits());
+        assert_eq!(sch.p99_slowdown.to_bits(), ten.p99_slowdown.to_bits());
+        assert_eq!(sch.max_slowdown.to_bits(), ten.max_slowdown.to_bits());
+        assert_eq!(sch.devices.len(), ten.devices.len());
+        for (a, b) in sch.devices.iter().zip(&ten.devices) {
+            assert_eq!(a.tenants, b.tenants);
+            assert_eq!(a.load, b.load);
+            assert_eq!(a.mem_wait, b.mem_wait);
+            assert_eq!(a.io_wait, b.io_wait);
+            assert_eq!(a.pu_wait, b.pu_wait);
+            assert_eq!(a.pu_busy, b.pu_busy);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.link_busy, b.link_busy);
+        }
+        assert_eq!(sch.fabric.bw_gbps, ten.fabric.bw_gbps);
+        assert_eq!(sch.fabric.messages, ten.fabric.messages);
+        assert_eq!(sch.fabric.bytes, ten.fabric.bytes);
+        assert_eq!(sch.fabric.busy, ten.fabric.busy);
+        assert_eq!(sch.fabric.wait, ten.fabric.wait);
+        assert_eq!(sch.fabric.utilization.to_bits(), ten.fabric.utilization.to_bits());
+    }
+}
+
+#[test]
+fn open_loop_zero_streams_matches_tenant_empty_report() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+    let sch = run_sched(
+        &cfg,
+        &topo,
+        &SchedSpec::new(0).with_policy(PolicyKind::Static(Protocol::Bs)).open_loop(),
+        2,
+    );
+    assert!(sch.requests.is_empty());
+    assert_eq!(sch.makespan, 0);
+    assert_eq!(sch.p50_slowdown, 1.0);
+    assert_eq!(sch.devices.len(), 2);
+}
+
+/// Heterogeneous, fabric-contended closed loop: deterministic and
+/// worker-count invariant for every shipped policy.
+#[test]
+fn closed_loop_deterministic_on_heterogeneous_contended_topology() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    for policy in PolicyKind::ALL {
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'e'])
+            .with_policy(policy)
+            .with_requests(2)
+            .with_admit(2);
+        let a = run_sched(&cfg, &topo, &spec, 1);
+        let b = run_sched(&cfg, &topo, &spec, 4);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{}", policy.label());
+        assert_eq!(a.requests.len(), 8);
+        // Both device classes saw work (round-robin placement).
+        assert!(a.devices.iter().all(|d| d.tenants > 0));
+    }
+}
+
+/// The PR acceptance scenario: one closed-loop tenant (window 1)
+/// alternating its requests round-robin across two heterogeneous devices
+/// with dedicated uplinks. Window 1 means a request is only submitted
+/// after the previous one fully completed, so no two requests ever
+/// overlap on any resource — zero contention by construction, and each
+/// run is exactly a chain of chosen-protocol solo runtimes. Hence
+/// `oracle` (per-request argmin over candidate solos on the target
+/// device class) lower-bounds every policy, and the adaptive `heuristic`
+/// beats the worst static protocol.
+#[test]
+fn oracle_bounds_and_heuristic_beats_worst_static_on_hetero_devices() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec { devices: 2, ..TopologySpec::default() }
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let base = SchedSpec::new(1).with_workloads(vec!['e']).with_requests(4).with_depth(1);
+    let run = |policy: PolicyKind| run_sched(&cfg, &topo, &base.clone().with_policy(policy), 2);
+
+    let statics: Vec<_> = [Protocol::Rp, Protocol::Bs, Protocol::Axle]
+        .iter()
+        .map(|&p| run(PolicyKind::Static(p)))
+        .collect();
+    let heuristic = run(PolicyKind::Heuristic);
+    let oracle = run(PolicyKind::Oracle);
+
+    for r in statics.iter().chain([&heuristic, &oracle]) {
+        // Zero contention: every wait component is zero in every run,
+        // and both device classes served requests (round-robin).
+        for q in &r.requests {
+            assert_eq!(q.queue_wait(), 0, "{}", r.policy.label());
+            assert_eq!(q.wire_wait(), 0, "{}", r.policy.label());
+            assert_eq!(q.pu_wait, 0, "{}", r.policy.label());
+        }
+        assert!(r.devices.iter().all(|d| d.tenants == 2));
+    }
+    // The weak class (a quarter of the CCM PUs) really is a distinct
+    // placement trade-off: under one pinned protocol the same workload's
+    // solo runtime is larger there.
+    for r in &statics {
+        let on_base = r.requests.iter().find(|q| q.device == 0).unwrap();
+        let on_weak = r.requests.iter().find(|q| q.device == 1).unwrap();
+        assert!(on_weak.solo > on_base.solo, "{}", r.policy.label());
+    }
+
+    // Oracle lower-bounds every policy's end-to-end runtime.
+    for r in statics.iter().chain(std::iter::once(&heuristic)) {
+        assert!(
+            oracle.makespan <= r.makespan,
+            "oracle {} vs {} {}",
+            oracle.makespan,
+            r.policy.label(),
+            r.makespan
+        );
+    }
+    // Oracle's per-request choice is the argmin over candidate solos on
+    // the request's device class.
+    for q in &oracle.requests {
+        let dev_cfg = topo.device_config(q.device as usize, &cfg);
+        let w = axle::workload::by_annotation(q.annot, &dev_cfg);
+        let best = [Protocol::Rp, Protocol::Bs, Protocol::Axle]
+            .iter()
+            .map(|&p| axle::protocol::run(p, &w, &dev_cfg).total)
+            .min()
+            .unwrap();
+        assert_eq!(q.solo, best);
+    }
+
+    // The heuristic beats the worst static protocol outright.
+    let worst_static = statics.iter().map(|r| r.makespan).max().unwrap();
+    assert!(
+        heuristic.makespan < worst_static,
+        "heuristic {} vs worst static {}",
+        heuristic.makespan,
+        worst_static
+    );
+}
