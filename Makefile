@@ -1,8 +1,8 @@
-# Convenience targets; the CI gate is `build` + `test` + `lint` +
-# `doc` + `doc-drift`.
+# Convenience targets; the CI gate is `fmt-check` + `build` + `test` +
+# `lint` + `doc` + `doc-drift`, plus the `bench-smoke` measurement job.
 CARGO ?= cargo
 
-.PHONY: build test check-fast lint doc doc-drift bench artifacts
+.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -22,25 +22,43 @@ check-fast:
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings
 
+# Formatting check (advisory in CI until the first `cargo fmt` pass
+# lands and the workflow drops `continue-on-error`): run `cargo fmt` on
+# a toolchain host to fix.
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
 # Rustdoc with warnings as errors: a broken intra-doc link fails the
 # build (scoped to the axle package; the vendored stubs aren't gated).
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps -p axle
 
 # Docs drift gate: every `axle` subcommand dispatched in main.rs must be
-# documented in docs/CLI.md.
+# documented in docs/CLI.md, and every `axle report fig*` figure name
+# dispatched in the report binaries must appear there too.
 doc-drift:
 	@missing=0; \
 	for s in $$(grep -oE 'Some\("[a-z0-9-]+"\)' rust/src/main.rs | sed 's/Some("//; s/")//' | sort -u); do \
 		grep -q "axle $$s" docs/CLI.md || { echo "docs/CLI.md is missing subcommand: $$s"; missing=1; }; \
 	done; \
 	test $$missing -eq 0 && echo "docs/CLI.md covers every axle subcommand"
+	@missing=0; \
+	for f in $$(grep -ohE '"fig[0-9]+(-ext)?"' rust/src/bin/report.rs rust/src/main.rs rust/src/report/mod.rs | tr -d '"' | sort -u); do \
+		grep -q "$$f" docs/CLI.md || { echo "docs/CLI.md is missing report figure: $$f"; missing=1; }; \
+	done; \
+	test $$missing -eq 0 && echo "docs/CLI.md covers every axle report figure"
 
 # Runs both bench binaries; figures.rs writes rust/BENCH_sweep.json
 # (machine-readable wall-time per figure bench, incl. the serial vs
 # parallel fig10 matrix pair).
 bench:
 	$(CARGO) bench
+
+# Downsized CI bench: only the fig10 serial-vs-parallel matrix pair at
+# reduced reps. Writes rust/BENCH_sweep.json and prints the
+# "fig10 matrix serial/parallel ratio" line CI lifts into its summary.
+bench-smoke:
+	$(CARGO) bench --bench figures -- --smoke
 
 # AOT-compile the workload kernels to HLO text (needs the Python/JAX
 # toolchain; the simulator itself never requires this).

@@ -18,12 +18,54 @@ use axle::config::{poll_factors, Protocol, SchedPolicy, SimConfig};
 use axle::report;
 use axle::sweep::{self, ConfigDelta, SpecJob, SweepPoint, WorkloadCache};
 use axle::workload::{by_annotation, knn, llm, ALL_ANNOTATIONS};
-use harness::{bench, write_json, BenchStat};
+use harness::{bench, bench_target, write_json, BenchStat};
+
+/// Print the fig10 serial/parallel wall-time ratio (the speedup record
+/// ROADMAP's bench item tracks; CI greps this line into its summary).
+fn print_fig10_ratio(stats: &[BenchStat]) {
+    let mean = |name: &str| stats.iter().find(|s| s.name == name).map(|s| s.mean_s);
+    if let (Some(par), Some(ser)) =
+        (mean("fig10_end_to_end_matrix"), mean("fig10_end_to_end_matrix_serial"))
+    {
+        println!(
+            "fig10 matrix serial/parallel ratio: {:.2}x (parallel {:.1} ms, serial {:.1} ms)",
+            ser / par,
+            par * 1e3,
+            ser * 1e3
+        );
+    }
+}
 
 fn main() {
     let cfg = SimConfig::m2ndp();
     let jobs = sweep::available_jobs();
     let mut stats: Vec<BenchStat> = Vec::new();
+
+    // `--smoke` (CI's `make bench-smoke`): only the fig10 serial-vs-
+    // parallel matrix pair, with a reduced per-entry time budget — the
+    // smallest run that still measures the sweep engine's speedup.
+    if std::env::args().any(|a| a == "--smoke") {
+        let fig10_points = report::fig10_points();
+        stats.push(bench_target("fig10_end_to_end_matrix", 0.15, || {
+            std::hint::black_box(sweep::run_points(&cfg, &fig10_points, jobs));
+        }));
+        stats.push(bench_target("fig10_end_to_end_matrix_serial", 0.15, || {
+            std::hint::black_box(sweep::run_points(&cfg, &fig10_points, 1));
+        }));
+        match write_json("BENCH_sweep.json", jobs, &stats) {
+            Ok(()) => println!(
+                "wrote BENCH_sweep.json ({} entries, {jobs} worker threads, smoke)",
+                stats.len()
+            ),
+            Err(e) => {
+                // CI depends on the artifact: fail the step, don't just warn.
+                eprintln!("could not write BENCH_sweep.json: {e}");
+                std::process::exit(1);
+            }
+        }
+        print_fig10_ratio(&stats);
+        return;
+    }
 
     // Fig. 3: six attention kernels under RP and BS (custom specs).
     stats.push(bench("fig03_attention_kernel_duality", || {
@@ -96,8 +138,9 @@ fn main() {
     stats.push(bench("fig13_host_stall_p10_p100", || {
         let mut points = Vec::new();
         for p in [poll_factors::P10, poll_factors::P100] {
+            let delta = ConfigDelta::identity().with_poll(p);
             for a in ALL_ANNOTATIONS {
-                points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(p)));
+                points.push(SweepPoint::new(a, Protocol::Axle, delta));
             }
         }
         std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
@@ -108,7 +151,8 @@ fn main() {
         let mut points = Vec::new();
         for a in ['a', 'd', 'i'] {
             for sf in [32u64, 64, 256, 1024, 2048] {
-                points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_sf(sf)));
+                let delta = ConfigDelta::identity().with_sf(sf);
+                points.push(SweepPoint::new(a, Protocol::Axle, delta));
             }
         }
         std::hint::black_box(sweep::run_points(&cfg, &points, jobs));
@@ -162,7 +206,10 @@ fn main() {
     }));
 
     match write_json("BENCH_sweep.json", jobs, &stats) {
-        Ok(()) => println!("wrote BENCH_sweep.json ({} entries, {jobs} worker threads)", stats.len()),
+        Ok(()) => {
+            println!("wrote BENCH_sweep.json ({} entries, {jobs} worker threads)", stats.len())
+        }
         Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
     }
+    print_fig10_ratio(&stats);
 }

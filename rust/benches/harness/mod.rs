@@ -27,13 +27,20 @@ pub struct BenchStat {
 }
 
 /// Benchmark `f`, printing a stats line tagged `name` and returning the
-/// measured statistics.
-pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStat {
-    // Warmup + pick an iteration count targeting ~0.5 s total.
+/// measured statistics (targets ~0.5 s of timed runs).
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchStat {
+    bench_target(name, 0.5, f)
+}
+
+/// [`bench`] with an explicit total-time target in seconds — the
+/// downsized CI smoke run (`--smoke`) uses a smaller budget so the
+/// serial/parallel pair fits a quick job.
+pub fn bench_target<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchStat {
+    // Warmup + pick an iteration count targeting ~`target_s` total.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((0.5 / once) as usize).clamp(1, 1000);
+    let iters = ((target_s / once) as usize).clamp(1, 1000);
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();

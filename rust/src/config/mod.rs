@@ -319,7 +319,8 @@ impl SimConfig {
         }
         let mut ax = BTreeMap::new();
         ax.insert("poll_interval_ps".into(), Json::Num(self.axle.poll_interval as f64));
-        ax.insert("streaming_factor_bytes".into(), Json::Num(self.axle.streaming_factor_bytes as f64));
+        let sf_bytes = self.axle.streaming_factor_bytes as f64;
+        ax.insert("streaming_factor_bytes".into(), Json::Num(sf_bytes));
         ax.insert("dma_slot_bytes".into(), Json::Num(self.axle.dma_slot_bytes as f64));
         ax.insert("dma_slot_capacity".into(), Json::Num(self.axle.dma_slot_capacity as f64));
         ax.insert("dma_prep_ps".into(), Json::Num(self.axle.dma_prep as f64));
@@ -819,6 +820,12 @@ pub struct SchedSpec {
     /// requests one device serves concurrently; the rest wait FIFO in
     /// the device's admission queue (`--admit`).
     pub admit: usize,
+    /// Per-tenant priority classes, cycled over tenant ids (`tenant %
+    /// len`); higher class = more urgent. A higher class jumps the FIFO
+    /// at admission time (preemption-at-admission) but never revokes
+    /// in-service work. Empty ⇒ everyone class 0, which degenerates to
+    /// the pure FIFO admission order (`--prio`).
+    pub priorities: Vec<u32>,
     /// Requests each tenant issues over the run.
     pub requests: usize,
     /// Think time inserted before each submission (after the window
@@ -847,6 +854,7 @@ impl SchedSpec {
             policy: PolicyKind::Heuristic,
             depth: 1,
             admit: 2,
+            priorities: Vec::new(),
             requests: 4,
             think: 0,
             closed: true,
@@ -876,6 +884,20 @@ impl SchedSpec {
         assert!(admit > 0, "device admission needs at least one service slot");
         self.admit = admit;
         self
+    }
+
+    pub fn with_priorities(mut self, priorities: Vec<u32>) -> Self {
+        self.priorities = priorities;
+        self
+    }
+
+    /// Priority class of tenant `tenant` (cycled; default class 0).
+    pub fn priority(&self, tenant: usize) -> u32 {
+        if self.priorities.is_empty() {
+            0
+        } else {
+            self.priorities[tenant % self.priorities.len()]
+        }
     }
 
     pub fn with_requests(mut self, requests: usize) -> Self {
@@ -911,6 +933,10 @@ impl SchedSpec {
         o.insert("policy".into(), Json::Str(self.policy.label()));
         o.insert("depth".into(), Json::Num(self.depth as f64));
         o.insert("admit".into(), Json::Num(self.admit as f64));
+        o.insert(
+            "priorities".into(),
+            Json::Arr(self.priorities.iter().map(|&p| Json::Num(p as f64)).collect()),
+        );
         o.insert("requests".into(), Json::Num(self.requests as f64));
         o.insert("think_ps".into(), Json::Num(self.think as f64));
         o.insert("closed".into(), Json::Bool(self.closed));
@@ -940,6 +966,9 @@ impl SchedSpec {
         }
         if let Some(v) = j.get("admit").as_usize() {
             s.admit = v.max(1);
+        }
+        if let Some(a) = j.get("priorities").as_arr() {
+            s.priorities = a.iter().filter_map(|v| v.as_u64()).map(|v| v as u32).collect();
         }
         if let Some(v) = j.get("requests").as_usize() {
             s.requests = v;
@@ -1211,11 +1240,16 @@ mod tests {
             .with_policy(PolicyKind::Static(Protocol::Bs))
             .with_depth(2)
             .with_admit(3)
+            .with_priorities(vec![2, 0, 1])
             .with_requests(5)
             .with_think(2 * crate::sim::US)
             .with_seed(99);
         let j = s.to_json().to_string();
         assert_eq!(SchedSpec::from_json(&Json::parse(&j).unwrap()), s);
+        // Priority classes cycle over tenant ids; empty means class 0.
+        assert_eq!(s.priority(0), 2);
+        assert_eq!(s.priority(4), 0);
+        assert_eq!(SchedSpec::new(2).priority(7), 0);
         // Open-loop flag survives too.
         let o = SchedSpec::new(2).open_loop();
         let j2 = o.to_json().to_string();

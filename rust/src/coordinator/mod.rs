@@ -199,17 +199,23 @@ mod tests {
 
     #[test]
     fn sched_through_coordinator_is_worker_count_invariant() {
+        // Thread a non-default QoS policy and priority classes end to
+        // end through the coordinator surface.
         let c = Coordinator::new(SimConfig::m2ndp());
-        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps);
+        let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps)
+            .with_qos(crate::config::QosSpec::wrr(vec![2, 1]));
         let spec = crate::config::SchedSpec::new(3)
             .with_workloads(vec!['a', 'f'])
             .with_requests(2)
+            .with_priorities(vec![1, 0])
             .with_policy(crate::config::PolicyKind::Oracle);
         let r1 = c.run_sched_jobs(&topo, &spec, 1);
         let r4 = c.run_sched_jobs(&topo, &spec, 4);
         assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
         assert_eq!(r1.requests.len(), 6);
         assert!(r1.closed);
+        assert_eq!(r1.qos, crate::config::QosPolicy::Wrr);
+        assert_eq!(r1.class_slowdowns().len(), 2);
     }
 
     #[test]

@@ -51,7 +51,9 @@ USAGE:
         # tenant ids
   axle sched [--streams K] [--requests R] [--policy static|heuristic|oracle]
              [--protocol rp|bs|axle|axle-interrupt]  # static policy's pin
-             [--depth N] [--admit M] [--think-ns T] [--open [--load F]]
+             [--depth N] [--admit M] [--prio C0,C1,...] [--think-ns T]
+             [--qos fcfs|wrr|drr] [--weights W0,W1,...] [--floors F0,F1,...]
+             [--open [--load F]]
              [--devices D] [--placement rr|least-loaded]
              [--fabric-gbps X | --no-fabric] [--topo FILE.json]
              [--dev-ccm-pus P0,P1,...] [--dev-gbps B0,B1,...]
@@ -59,14 +61,18 @@ USAGE:
              [--profile ...] [--json]
         # closed-loop scheduling: K tenants submit requests against
         # completion feedback (at most --depth outstanding each), each
-        # device admits --admit requests at a time from its FIFO
-        # admission queue, and --policy picks the offload protocol per
-        # request (static pins one; heuristic adapts to compute/transfer
-        # ratio + observed occupancy; oracle is the clairvoyant bound);
-        # --dev-ccm-pus/--dev-gbps cycle per-device hardware overrides
-        # over the devices (heterogeneous classes); --open reproduces
-        # the PR-3 open-loop `axle tenants` arrivals bit-identically
-        # (static policies only)
+        # device admits --admit requests at a time from its admission
+        # queue (--prio cycles priority classes over tenants: a higher
+        # class jumps the FIFO at admission, never revoking in-service
+        # work), and --policy picks the offload protocol per request
+        # (static pins one; heuristic adapts to compute/transfer ratio
+        # + observed occupancy; oracle is the clairvoyant bound); --qos
+        # picks how the live link calendars charge wire time (fcfs |
+        # weighted rr | deficit rr, --weights/--floors cycle over
+        # tenant ids); --dev-ccm-pus/--dev-gbps cycle per-device
+        # hardware overrides over the devices (heterogeneous classes);
+        # --open reproduces the PR-3 open-loop `axle tenants` arrivals
+        # bit-identically (static policies only)
   axle validate [--artifacts DIR] [--workload <a..i>]
   axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19>
   axle config [--out FILE.json]     # dump the Table III defaults
@@ -74,7 +80,8 @@ USAGE:
 ";
 
 fn parse_protocol(s: &str) -> Result<Protocol> {
-    Protocol::parse(s).ok_or_else(|| anyhow::anyhow!("unknown protocol {s:?} (rp|bs|axle|axle-interrupt)"))
+    Protocol::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown protocol {s:?} (rp|bs|axle|axle-interrupt)"))
 }
 
 fn parse_profile(s: &str) -> Result<SimConfig> {
@@ -419,13 +426,15 @@ fn main() -> Result<()> {
             let cfg = build_config(&a)?;
             let topo = build_topology(&a, &cfg)?;
             let open = a.has("open");
-            if !open && (a.has("qos") || a.has("weights") || a.has("floors")) {
-                bail!(
-                    "QoS arbitration applies to the open-loop replay (--open) or `axle \
-                     tenants`; the closed-loop link model serves in admission order"
-                );
-            }
             let mut spec = SchedSpec::new(a.get_as::<usize>("streams").unwrap_or(4));
+            if let Some(ps) = a.get("prio") {
+                let prio = ps
+                    .split(',')
+                    .map(|s| s.trim().parse::<u32>())
+                    .collect::<Result<Vec<u32>, _>>()
+                    .with_context(|| format!("parsing --prio {ps:?} (comma-separated u32)"))?;
+                spec = spec.with_priorities(prio);
+            }
             if let Some(s) = a.get("workloads") {
                 let ws: Vec<char> = s.chars().collect();
                 for &c in &ws {
@@ -480,7 +489,7 @@ fn main() -> Result<()> {
             if open {
                 // Closed-loop knobs would be silently meaningless under
                 // the PR-3 open-loop replay; refuse them instead.
-                for flag in ["depth", "admit", "requests", "think-ns"] {
+                for flag in ["depth", "admit", "requests", "think-ns", "prio"] {
                     if a.has(flag) {
                         bail!("--{flag} is a closed-loop knob; the --open replay runs one open-loop request per tenant");
                     }
@@ -501,14 +510,15 @@ fn main() -> Result<()> {
             }
             if r.closed {
                 println!(
-                    "{} tenant(s) x {} request(s), {} policy, closed-loop arrivals, depth {} admit {}, {} device(s), {} placement:",
+                    "{} tenant(s) x {} request(s), {} policy, closed-loop arrivals, depth {} admit {}, {} device(s), {} placement, {} arbitration:",
                     spec.streams,
                     spec.requests,
                     r.policy.label(),
                     r.depth,
                     r.admit,
                     topo.devices,
-                    topo.placement.label()
+                    topo.placement.label(),
+                    r.qos.label()
                 );
             } else {
                 println!(
@@ -556,6 +566,14 @@ fn main() -> Result<()> {
                 100.0 * r.ccm_idle_frac(),
                 mix.join(" ")
             );
+            let classes = r.class_slowdowns();
+            if classes.len() > 1 {
+                for (class, n, p50, p99) in classes {
+                    println!(
+                        "  class {class}: {n} request(s), slowdown p50 {p50:.3} p99 {p99:.3}"
+                    );
+                }
+            }
         }
         Some("validate") => {
             let dir = a.get("artifacts").unwrap_or("artifacts");

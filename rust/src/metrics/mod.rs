@@ -248,7 +248,10 @@ mod tests {
             (b.total, b.ccm_busy, b.dm_busy, b.host_busy, b.host_stall, b.backpressure),
             (0, 0, 0, 0, 0, 0)
         );
-        assert_eq!((b.events, b.polls, b.dma_batches, b.fc_messages, b.result_bytes), (0, 0, 0, 0, 0));
+        assert_eq!(
+            (b.events, b.polls, b.dma_batches, b.fc_messages, b.result_bytes),
+            (0, 0, 0, 0, 0)
+        );
         assert!(!b.deadlock);
     }
 

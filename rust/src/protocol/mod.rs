@@ -88,7 +88,8 @@ pub(crate) fn dispatch_order_into(
     if policy == SchedPolicy::RoundRobin {
         // Deterministic shuffle: sort by splitmix64 hash of (seed, salt, i).
         out.sort_by_key(|&i| {
-            let mut z = seed ^ salt.rotate_left(17) ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let salted = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut z = seed ^ salt.rotate_left(17) ^ salted;
             z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
             z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
             z ^ (z >> 31)

@@ -250,12 +250,16 @@ pub fn fig10_points() -> Vec<SweepPoint> {
 /// Fig. 11: the LLM case under the reduced-PU hardware profile.
 pub fn fig11() {
     header("Fig. 11: LLM with reduced processing units (CCM/4, host/4)");
-    for (label, cfg) in [("Table III baseline", SimConfig::m2ndp()), ("reduced", SimConfig::reduced())]
-    {
+    let setups = [("Table III baseline", SimConfig::m2ndp()), ("reduced", SimConfig::reduced())];
+    for (label, cfg) in setups {
         let points = [
             SweepPoint::new('h', Protocol::Rp, ConfigDelta::identity()),
             SweepPoint::new('h', Protocol::Bs, ConfigDelta::identity()),
-            SweepPoint::new('h', Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P10)),
+            SweepPoint::new(
+                'h',
+                Protocol::Axle,
+                ConfigDelta::identity().with_poll(poll_factors::P10),
+            ),
         ];
         let ms = par(&cfg, &points);
         let (rp, bs, axle) = (&ms[0], &ms[1], &ms[2]);
@@ -298,10 +302,11 @@ pub fn fig12(cfg: &SimConfig) {
             pct(ax.frac(ax.host_idle())),
         );
         let safe = |x: u64| (x.max(1)) as f64;
-        ccm_red_rp.push(safe(rp.ccm_idle()) * ax.total as f64 / (safe(ax.ccm_idle()) * rp.total as f64));
-        ccm_red_bs.push(safe(bs.ccm_idle()) * ax.total as f64 / (safe(ax.ccm_idle()) * bs.total as f64));
-        host_red_rp.push(safe(rp.host_idle()) * ax.total as f64 / (safe(ax.host_idle()) * rp.total as f64));
-        host_red_bs.push(safe(bs.host_idle()) * ax.total as f64 / (safe(ax.host_idle()) * bs.total as f64));
+        let axt = ax.total as f64;
+        ccm_red_rp.push(safe(rp.ccm_idle()) * axt / (safe(ax.ccm_idle()) * rp.total as f64));
+        ccm_red_bs.push(safe(bs.ccm_idle()) * axt / (safe(ax.ccm_idle()) * bs.total as f64));
+        host_red_rp.push(safe(rp.host_idle()) * axt / (safe(ax.host_idle()) * rp.total as f64));
+        host_red_bs.push(safe(bs.host_idle()) * axt / (safe(ax.host_idle()) * bs.total as f64));
     }
     println!(
         "avg idle-ratio reduction: CCM {:.2}x (vs RP) {:.2}x (vs BS) | host {:.2}x (vs RP) {:.2}x (vs BS)",
@@ -323,8 +328,10 @@ pub fn fig13(cfg: &SimConfig) {
     for a in workload::ALL_ANNOTATIONS {
         points.push(SweepPoint::new(a, Protocol::Rp, ConfigDelta::identity()));
         points.push(SweepPoint::new(a, Protocol::Bs, ConfigDelta::identity()));
-        points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P10)));
-        points.push(SweepPoint::new(a, Protocol::Axle, ConfigDelta::identity().with_poll(poll_factors::P100)));
+        let p10 = ConfigDelta::identity().with_poll(poll_factors::P10);
+        let p100 = ConfigDelta::identity().with_poll(poll_factors::P100);
+        points.push(SweepPoint::new(a, Protocol::Axle, p10));
+        points.push(SweepPoint::new(a, Protocol::Axle, p100));
     }
     let ms = par(cfg, &points);
     for (a, row) in workload::ALL_ANNOTATIONS.into_iter().zip(ms.chunks(4)) {
@@ -397,8 +404,11 @@ pub fn fig14_ext(cfg: &SimConfig) {
     for a in ['a', 'b', 'd', 'e', 'i'] {
         // One spec build per workload, shared by the four jobs.
         let w = Arc::new(workload::by_annotation(a, cfg));
-        let axle_job =
-            |d: ConfigDelta| SpecJob { w: Arc::clone(&w), proto: Protocol::Axle, cfg: Arc::new(d.apply(cfg)) };
+        let axle_job = |d: ConfigDelta| SpecJob {
+            w: Arc::clone(&w),
+            proto: Protocol::Axle,
+            cfg: Arc::new(d.apply(cfg)),
+        };
         let jobs = [
             axle_job(ConfigDelta::identity()),
             axle_job(ConfigDelta::identity().with_sf(2048)),
@@ -502,7 +512,14 @@ pub fn fig17(cfg: &SimConfig) {
     header("Fig. 17-ext: multi-tenant slowdown by QoS policy, shared fabric");
     println!(
         "{:<6} {:<8} {:>8} {:>10} {:>10} {:>10} {:>12} {:>11} {:>10}",
-        "qos", "(D, K)", "tenants", "p50 slow", "p99 slow", "max slow", "wire wait us", "pu wait us",
+        "qos",
+        "(D, K)",
+        "tenants",
+        "p50 slow",
+        "p99 slow",
+        "max slow",
+        "wire wait us",
+        "pu wait us",
         "fab util"
     );
     let topo = crate::config::TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
@@ -534,8 +551,9 @@ pub fn fig17(cfg: &SimConfig) {
 }
 
 /// Fig. 19 (extension): closed-loop offload scheduling — end-to-end
-/// runtime and host/CCM idle time per protocol policy, on a
-/// heterogeneous two-device topology.
+/// runtime, host/CCM idle time and per-priority-class slowdown per
+/// (protocol policy × QoS policy × depth), on a heterogeneous
+/// two-device topology.
 ///
 /// The paper's evaluation fixes the offload mechanism per run; KAI
 /// exists because the right protocol depends on data and processing
@@ -545,44 +563,73 @@ pub fn fig17(cfg: &SimConfig) {
 /// one weak-CCM device, and the scheduler picks RP/BS/AXLE per request.
 /// `static-*` rows pin one protocol (PR-3 behavior), `heuristic` adapts
 /// per request (compute-vs-transfer ratio + observed occupancy), and
-/// `oracle` is the clairvoyant per-request bound.
+/// `oracle` is the clairvoyant per-request bound. The tenant mix runs
+/// two priority classes (alternating 1/0): admission queues pop the
+/// high class first, and the live link calendars charge wire time under
+/// each of FCFS / WRR / DRR in turn.
 ///
 /// Row schema (JSON mirror in `SchedReport::to_json`, `axle sched
-/// --json`): per policy × depth — `makespan_ps`, `p50_slowdown` /
+/// --json`): per policy × qos × depth — `makespan_ps`, `p50_slowdown` /
 /// `p99_slowdown` (per-request `total/solo`, queueing included),
-/// `host_idle_frac` / `ccm_idle_frac` (the paper's headline idle
-/// metrics) and `proto_mix` (requests per chosen protocol).
+/// per-class `classes` rows (`{class, requests, p50_slowdown,
+/// p99_slowdown}`), `host_idle_frac` / `ccm_idle_frac` (the paper's
+/// headline idle metrics) and `proto_mix` (requests per chosen
+/// protocol).
 pub fn fig19(cfg: &SimConfig) {
-    header("Fig. 19-ext: closed-loop scheduling, policy x depth, heterogeneous devices");
+    header("Fig. 19-ext: closed-loop scheduling, policy x qos x depth, heterogeneous devices");
     println!(
-        "{:<14} {:>5} {:>5} {:>12} {:>9} {:>9} {:>10} {:>10}  {}",
-        "policy", "depth", "reqs", "makespan us", "p50 slow", "p99 slow", "host idle", "ccm idle",
+        "{:<14} {:<5} {:>5} {:>12} {:>9} {:>9} {:>11} {:>11} {:>10} {:>10}  {}",
+        "policy",
+        "qos",
+        "depth",
+        "makespan us",
+        "p50 slow",
+        "p99 slow",
+        "c0 p50/p99",
+        "c1 p50/p99",
+        "host idle",
+        "ccm idle",
         "proto mix"
     );
     let topo = crate::config::TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_override(
         1,
         crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
     );
-    let base = crate::config::SchedSpec::new(4).with_workloads(vec!['a', 'e', 'i']).with_requests(2);
+    // Two priority classes, cycled: even tenants class 1, odd class 0.
+    let base = crate::config::SchedSpec::new(4)
+        .with_workloads(vec!['a', 'e', 'i'])
+        .with_requests(2)
+        .with_priorities(vec![1, 0]);
     let grid = crate::sched::sweep_sched_grid(
         cfg,
         &topo,
         &base,
         &crate::config::PolicyKind::ALL,
+        &crate::config::QosPolicy::ALL,
         &[1, 2],
         sweep::available_jobs(),
     );
-    for (p, depth, r) in &grid {
+    for (p, qos, depth, r) in &grid {
         let mix: Vec<String> =
             r.proto_mix.iter().map(|(proto, n)| format!("{proto}:{n}")).collect();
+        let classes = r.class_slowdowns();
+        let per_class = |want: u32| {
+            classes
+                .iter()
+                .find(|(class, ..)| *class == want)
+                .map(|(_, _, p50, p99)| format!("{p50:.2}/{p99:.2}"))
+                .unwrap_or_else(|| "-".into())
+        };
         println!(
-            "{:<14} {:>5} {:>5} {:>12.2} {:>9.3} {:>9.3} {:>9.1}% {:>9.1}%  {}",
+            "{:<14} {:<5} {:>5} {:>12.2} {:>9.3} {:>9.3} {:>11} {:>11} {:>9.1}% {:>9.1}%  {}",
             p.label(),
+            qos.label(),
             depth,
-            r.requests.len(),
             ps_to_us(r.makespan),
             r.p50_slowdown,
             r.p99_slowdown,
+            per_class(0),
+            per_class(1),
             100.0 * r.host_idle_frac(),
             100.0 * r.ccm_idle_frac(),
             mix.join(" ")

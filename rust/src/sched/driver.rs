@@ -12,13 +12,17 @@
 //! its protocol chosen per request by the configured
 //! [`OffloadPolicy`](super::policy::OffloadPolicy), and queued in that
 //! device's **admission queue**; the device serves at most `admit`
-//! requests concurrently, FIFO.
+//! requests concurrently. The queue pops the earliest request of the
+//! highest **priority class** ([`SchedSpec::priority`], cycled over
+//! tenants): a higher class jumps the FIFO at admission but never
+//! revokes in-service work, and with all classes equal the order is the
+//! plain PR-4 FIFO, bit for bit.
 //!
 //! # Online contention accounting
 //!
 //! The open-loop driver can batch-sort all wire traffic up front because
 //! arrivals never depend on completions. A closed loop cannot — so the
-//! shared resources are modelled *online*, in admission order:
+//! shared resources are modelled *online*:
 //!
 //! - **Links** (`LinkCalendar`): each device channel (and the optional
 //!   shared fabric) keeps a calendar of immutable busy intervals. An
@@ -26,11 +30,17 @@
 //!   the **earliest idle gap at or after each message's issue time** (no
 //!   preemption, no splitting) — a lone stream replays its solo schedule
 //!   exactly (zero shift), and concurrent streams backfill each other's
-//!   idle gaps, so the wire stays work-conserving under admission-order
-//!   service.
+//!   idle gaps, so the wire stays work-conserving. *Which* message of an
+//!   admission batch is placed next is governed by
+//!   [`TopologySpec::qos`](crate::config::TopologySpec): FCFS charges in
+//!   pure admission order (the PR-4 path, kept verbatim), WRR/DRR drain
+//!   per-tenant FIFO queues through a persistent per-wire
+//!   [`QosState`] — the online counterpart of the PR-3 replay
+//!   arbitration ([`crate::topo::fabric::arbitrate_qos`]).
 //! - **CCM PUs** (`OnlinePool`): lease windows dispatch earliest-free
 //!   onto the device's pool in admission order, the online analogue of
-//!   [`crate::topo::fabric::arbitrate_pus`].
+//!   [`crate::topo::fabric::arbitrate_pus`]. QoS governs the wires only,
+//!   exactly as in the open-loop model.
 //!
 //! A request is charged the same **completion shift** decomposition as
 //! the tenant driver: `completion = admit + solo + max(device_wait,
@@ -64,10 +74,11 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::config::{PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec};
+use crate::config::{PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec};
 use crate::metrics::percentile;
 use crate::sim::{ps_to_us, transfer_ps, Ps, US};
 use crate::sweep::{self, SpecJob, TracedRun};
+use crate::topo::fabric::QosState;
 use crate::topo::tenant::{self, FabricReport, TenantSpec};
 use crate::topo::DeviceStats;
 use crate::util::json::Json;
@@ -82,6 +93,9 @@ pub struct RequestRun {
     /// Request index within the tenant's closed-loop sequence.
     pub index: u32,
     pub annot: char,
+    /// The tenant's priority class ([`SchedSpec::priority`]; higher =
+    /// more urgent at admission).
+    pub class: u32,
     pub device: u32,
     /// Protocol the policy chose for this request.
     pub proto: Protocol,
@@ -134,6 +148,7 @@ impl RequestRun {
         o.insert("tenant".into(), Json::Num(self.tenant as f64));
         o.insert("index".into(), Json::Num(self.index as f64));
         o.insert("annot".into(), Json::Str(self.annot.to_string()));
+        o.insert("prio".into(), Json::Num(self.class as f64));
         o.insert("device".into(), Json::Num(self.device as f64));
         o.insert("proto".into(), Json::Str(self.proto.label().into()));
         o.insert("submit_ps".into(), Json::Num(self.submit as f64));
@@ -156,6 +171,10 @@ impl RequestRun {
 pub struct SchedReport {
     /// Policy the run was scheduled under.
     pub policy: PolicyKind,
+    /// Link-arbitration policy the shared wires were charged under
+    /// (`TopologySpec::qos`): online FCFS/WRR/DRR calendars for closed
+    /// loops, the PR-3 replay arbitration for the open-loop pin.
+    pub qos: QosPolicy,
     /// `true` for closed-loop arrivals, `false` for the open-loop pin.
     pub closed: bool,
     /// Per-tenant outstanding window the run enforced.
@@ -203,6 +222,20 @@ impl SchedReport {
         }
     }
 
+    /// Per-priority-class slowdown aggregates, ascending by class:
+    /// `(class, requests, p50 slowdown, p99 slowdown)` — the fig19
+    /// per-class columns. Empty when the run scheduled nothing.
+    pub fn class_slowdowns(&self) -> Vec<(u32, usize, f64, f64)> {
+        let mut by_class: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+        for r in &self.requests {
+            by_class.entry(r.class).or_default().push(r.slowdown());
+        }
+        by_class
+            .into_iter()
+            .map(|(class, s)| (class, s.len(), percentile(&s, 50.0), percentile(&s, 99.0)))
+            .collect()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fab = BTreeMap::new();
         match self.fabric.bw_gbps {
@@ -234,9 +267,23 @@ impl SchedReport {
         for (proto, n) in &self.proto_mix {
             mix.insert((*proto).into(), Json::Num(*n as f64));
         }
+        let classes: Vec<Json> = self
+            .class_slowdowns()
+            .into_iter()
+            .map(|(class, n, p50, p99)| {
+                let mut o = BTreeMap::new();
+                o.insert("class".into(), Json::Num(class as f64));
+                o.insert("requests".into(), Json::Num(n as f64));
+                o.insert("p50_slowdown".into(), Json::Num(p50));
+                o.insert("p99_slowdown".into(), Json::Num(p99));
+                Json::Obj(o)
+            })
+            .collect();
         let mut o = BTreeMap::new();
         o.insert("policy".into(), Json::Str(self.policy.label()));
+        o.insert("qos".into(), Json::Str(self.qos.label().into()));
         o.insert("mode".into(), Json::Str(if self.closed { "closed" } else { "open" }.into()));
+        o.insert("classes".into(), Json::Arr(classes));
         o.insert("depth".into(), Json::Num(self.depth as f64));
         o.insert("admit".into(), Json::Num(self.admit as f64));
         o.insert("requests".into(), Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()));
@@ -258,10 +305,11 @@ impl SchedReport {
 /// One printable line per request (the `axle sched` table body).
 pub fn format_request_row(r: &RequestRun) -> String {
     format!(
-        "#{:<3}.{:<2} ({})  dev {:<2} {:<6} sub {:>10.2} us  q {:>8.2} us  solo {:>10.2} us  +wire {:>8.2} us  +pu {:>8.2} us  x{:<5.3}",
+        "#{:<3}.{:<2} ({}) c{:<2} dev {:<2} {:<6} sub {:>10.2} us  q {:>8.2} us  solo {:>10.2} us  +wire {:>8.2} us  +pu {:>8.2} us  x{:<5.3}",
         r.tenant,
         r.index,
         r.annot,
+        r.class,
         r.device,
         r.proto.label(),
         ps_to_us(r.submit),
@@ -418,6 +466,10 @@ struct DevState {
     link_bw: f64,
     mem: LinkCalendar,
     io: LinkCalendar,
+    /// Online WRR/DRR scheduler state per device channel. `None` under
+    /// FCFS, which keeps the PR-4 admission-order charging verbatim.
+    qos_mem: Option<QosState>,
+    qos_io: Option<QosState>,
     pool: OnlinePool,
     queue: VecDeque<u32>,
     in_service: usize,
@@ -554,8 +606,9 @@ pub fn run_sched(
 
 /// The closed-loop event engine over an already-prepared solo pass.
 /// `pass` must have been prepared with the same topology, workload mix
-/// and policy (only `depth`/`admit`/`requests`/`think`/`seed` may vary —
-/// none of them affect solo results).
+/// and policy (only `depth`/`admit`/`requests`/`think`/`seed`/
+/// `priorities` and the topology's `qos` may vary — none of them affect
+/// solo results).
 pub(super) fn run_closed(
     topo_spec: &TopologySpec,
     spec: &SchedSpec,
@@ -565,12 +618,30 @@ pub(super) fn run_closed(
     assert!(spec.admit > 0, "device admission needs at least one service slot");
     let SoloPass { class_cfgs, class_of, annots, table, cand_table } = pass;
     let policy = policy_for(spec.policy);
+    // Online QoS link scheduling: under FCFS the qos states stay `None`
+    // and every calendar keeps the PR-4 admission-order charging
+    // verbatim; under WRR/DRR each shared wire carries a persistent
+    // [`QosState`] consulted at every admission batch. DRR quanta are
+    // sized by the largest message any candidate solo trace can offer —
+    // the online analogue of the replay's per-input maximum.
+    let qos = &topo_spec.qos;
+    let max_bytes = table
+        .runs
+        .iter()
+        .flat_map(|s| s.run.mem_trace.iter().chain(s.run.io_trace.iter()))
+        .map(|m| m.bytes)
+        .max()
+        .unwrap_or(1);
+    let online_qos =
+        || (qos.policy != QosPolicy::Fcfs).then(|| QosState::new(qos, spec.streams, max_bytes));
     let mut devs: Vec<DevState> = (0..topo_spec.devices)
         .map(|d| DevState {
             class: class_of[d],
             link_bw: class_cfgs[class_of[d]].cxl_bw_gbps,
             mem: LinkCalendar::default(),
             io: LinkCalendar::default(),
+            qos_mem: online_qos(),
+            qos_io: online_qos(),
             pool: OnlinePool::new(class_cfgs[class_of[d]].ccm.num_pus),
             queue: VecDeque::new(),
             in_service: 0,
@@ -579,6 +650,7 @@ pub(super) fn run_closed(
         .collect();
     let mut fabric = Fabric {
         link: topo_spec.fabric_bw_gbps.map(|bw| (bw, LinkCalendar::default())),
+        qos: if topo_spec.fabric_bw_gbps.is_some() { online_qos() } else { None },
         wait: 0,
         bytes: 0,
     };
@@ -637,6 +709,7 @@ pub(super) fn run_closed(
                 tenant: t as u32,
                 index,
                 annot,
+                class: spec.priority(t),
                 device: d as u32,
                 proto,
                 submit: now,
@@ -695,6 +768,7 @@ pub(super) fn run_closed(
     let slowdowns: Vec<f64> = requests.iter().map(|r| r.slowdown()).collect();
     SchedReport {
         policy: spec.policy,
+        qos: qos.policy,
         closed: true,
         depth: spec.depth,
         admit: spec.admit,
@@ -714,6 +788,9 @@ pub(super) fn run_closed(
 /// The shared upstream fabric's online state.
 struct Fabric {
     link: Option<(f64, LinkCalendar)>,
+    /// Online WRR/DRR scheduler state for the fabric wire (`None` under
+    /// FCFS or when no fabric is modelled).
+    qos: Option<QosState>,
     wait: Ps,
     bytes: u64,
 }
@@ -733,8 +810,22 @@ fn schedule_submit(
     }
 }
 
+/// Pop the next request to admit: the earliest-queued request of the
+/// highest priority class. With all classes equal the winner is index
+/// 0 — exactly the PR-4 FIFO `pop_front`, which keeps default-priority
+/// calendars bit-identical. A higher class jumps the queue at admission
+/// time but never revokes in-service work (no preemption of service).
+fn pop_admit(queue: &mut VecDeque<u32>, requests: &[RequestRun]) -> Option<u32> {
+    let idx = (0..queue.len()).min_by_key(|&i| (Reverse(requests[queue[i] as usize].class), i))?;
+    queue.remove(idx)
+}
+
 /// Admit queued requests into service while the device has free slots,
 /// charging each one's contention against the online resource models.
+/// The admission *batch* (everything entering service at this instant)
+/// is popped highest-class-first, then its wire traffic is charged
+/// either in pure admission order (FCFS — the PR-4 path, verbatim) or
+/// through the per-wire [`QosState`] schedulers (WRR/DRR).
 #[allow(clippy::too_many_arguments)]
 fn try_admit(
     now: Ps,
@@ -746,8 +837,35 @@ fn try_admit(
     requests: &mut [RequestRun],
     heap: &mut BinaryHeap<Reverse<Ev>>,
 ) {
-    while dev.in_service < spec.admit {
-        let Some(rid) = dev.queue.pop_front() else { break };
+    let mut batch: Vec<u32> = Vec::new();
+    while dev.in_service + batch.len() < spec.admit {
+        let Some(rid) = pop_admit(&mut dev.queue, requests) else { break };
+        batch.push(rid);
+    }
+    if batch.is_empty() {
+        return;
+    }
+    if dev.qos_mem.is_none() {
+        admit_fcfs(now, d, dev, table, fabric, requests, heap, &batch);
+    } else {
+        admit_qos(now, d, spec.streams, dev, table, fabric, requests, heap, &batch);
+    }
+}
+
+/// Charge one admission batch in pure admission order — the PR-4 online
+/// contention accounting, kept verbatim (the FCFS bit-identity pin).
+#[allow(clippy::too_many_arguments)]
+fn admit_fcfs(
+    now: Ps,
+    d: usize,
+    dev: &mut DevState,
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut [RequestRun],
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    batch: &[u32],
+) {
+    for &rid in batch {
         let (annot, proto) = {
             let r = &requests[rid as usize];
             (r.annot, r.proto)
@@ -782,27 +900,210 @@ fn try_admit(
                 fabric.bytes += m.bytes;
             }
         }
-        // CCM PU-pool replay (earliest-free, admission order).
-        let mut pu_late: Ps = 0;
-        for sp in &s.run.ccm_trace {
-            let ready = a + sp.start;
-            let (_, end) = dev.pool.dispatch(ready, sp.dur());
-            pu_late = pu_late.max(end - (ready + sp.dur()));
-        }
-        let r = &mut requests[rid as usize];
-        r.admit = a;
-        r.device_wait = mem_late.max(io_late);
-        r.fabric_wait = fab_late;
-        r.pu_wait = pu_late;
-        r.completion = a + r.solo + r.device_wait.max(fab_late) + pu_late;
-        dev.in_service += 1;
-        dev.stats.mem_wait += mem_late;
-        dev.stats.io_wait += io_late;
-        dev.stats.pu_wait += pu_late;
-        dev.stats.bytes += s.mem_bytes + s.io_bytes;
-        fabric.wait += fab_late;
-        heap.push(Reverse((r.completion, 0, d as u64, rid as u64)));
+        finish_admission(
+            now, d, dev, table, fabric, requests, heap, rid, mem_late, io_late, fab_late,
+        );
     }
+}
+
+/// One solo-trace message queued for QoS-ordered online placement.
+#[derive(Debug, Clone, Copy)]
+struct QMsg {
+    /// Issue time (admission instant + solo wire offset).
+    at: Ps,
+    /// Payload bytes (the DRR deficit currency).
+    bytes: u64,
+    /// Serialization on the wire being charged.
+    dur: Ps,
+    /// Solo finish time the lateness is measured against.
+    solo_finish: Ps,
+    /// Index into the admission batch (which request to charge).
+    slot: usize,
+}
+
+/// Charge one admission batch with its wire traffic ordered by the
+/// per-wire QoS schedulers: per-tenant FIFO queues drained in
+/// [`QosState::pick`] order against the live calendars. Placements from
+/// earlier admissions are never revoked — QoS redistributes service
+/// *within* work entering the wires together, the online counterpart of
+/// the PR-3 replay arbitration. The CCM PU pool deliberately stays
+/// earliest-free in batch order: QoS governs the wires only, exactly as
+/// in the open-loop model.
+#[allow(clippy::too_many_arguments)]
+fn admit_qos(
+    now: Ps,
+    d: usize,
+    streams: usize,
+    dev: &mut DevState,
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut [RequestRun],
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    batch: &[u32],
+) {
+    let a = now;
+    let n = batch.len();
+    let mut mem_late: Vec<Ps> = vec![0; n];
+    let mut io_late: Vec<Ps> = vec![0; n];
+    let mut fab_late: Vec<Ps> = vec![0; n];
+    // Per-tenant FIFO queues per wire (tenant ids index the QosState,
+    // so the vectors span all streams even when few are in the batch).
+    let mut mem_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
+    let mut io_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
+    let mut fab_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
+    for (slot, &rid) in batch.iter().enumerate() {
+        let (tenant, annot, proto) = {
+            let r = &requests[rid as usize];
+            (r.tenant as usize, r.annot, r.proto)
+        };
+        let s = table.get(dev.class, annot, proto);
+        for m in &s.run.mem_trace {
+            let issue = a + m.start;
+            let dur = transfer_ps(m.bytes, dev.link_bw);
+            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish: issue + dur, slot };
+            mem_q[tenant].push(q);
+        }
+        for m in &s.run.io_trace {
+            let issue = a + m.start;
+            let dur = transfer_ps(m.bytes, dev.link_bw);
+            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish: issue + dur, slot };
+            io_q[tenant].push(q);
+        }
+        if let Some((fbw, _)) = fabric.link.as_ref() {
+            for m in s.run.mem_trace.iter().chain(s.run.io_trace.iter()) {
+                let issue = a + m.start;
+                fab_q[tenant].push(QMsg {
+                    at: issue,
+                    bytes: m.bytes,
+                    dur: transfer_ps(m.bytes, *fbw),
+                    solo_finish: issue + transfer_ps(m.bytes, dev.link_bw),
+                    slot,
+                });
+                fabric.bytes += m.bytes;
+            }
+        }
+    }
+    // Per-tenant FIFO discipline: order each queue by issue time (the
+    // sort is stable, so a tenant's same-instant messages keep their
+    // trace/batch order).
+    for q in mem_q.iter_mut().chain(io_q.iter_mut()).chain(fab_q.iter_mut()) {
+        q.sort_by_key(|m| m.at);
+    }
+    let qos_mem = dev.qos_mem.as_mut().expect("admit_qos runs only with QoS state");
+    drain_qos(&mut dev.mem, qos_mem, &mem_q, &mut mem_late);
+    let qos_io = dev.qos_io.as_mut().expect("admit_qos runs only with QoS state");
+    drain_qos(&mut dev.io, qos_io, &io_q, &mut io_late);
+    if let Some((_, cal)) = fabric.link.as_mut() {
+        let qos_fab = fabric.qos.as_mut().expect("fabric QoS state exists with a fabric link");
+        drain_qos(cal, qos_fab, &fab_q, &mut fab_late);
+    }
+    for (slot, &rid) in batch.iter().enumerate() {
+        finish_admission(
+            now,
+            d,
+            dev,
+            table,
+            fabric,
+            requests,
+            heap,
+            rid,
+            mem_late[slot],
+            io_late[slot],
+            fab_late[slot],
+        );
+    }
+}
+
+/// Drain one admission batch's queued messages onto a link calendar in
+/// QoS pick order. The decision clock is the batch's own placement
+/// frontier (or the next arrival when the batch's work would idle the
+/// wire), and each served message goes into the earliest calendar gap
+/// at or after `max(clock, issue)` — so a lone stream still replays its
+/// solo schedule with zero shift, and earlier admissions' placements
+/// are never revoked. Folds each message's lateness versus its solo
+/// finish into `late[slot]` (max accounting, as everywhere).
+fn drain_qos(cal: &mut LinkCalendar, qos: &mut QosState, queues: &[Vec<QMsg>], late: &mut [Ps]) {
+    let n = queues.len();
+    let total: usize = queues.iter().map(|q| q.len()).sum();
+    if total == 0 {
+        return;
+    }
+    let mut cursor = vec![0usize; n];
+    let mut eligible = vec![false; n];
+    let mut head_at = vec![Ps::MAX; n];
+    let mut head_bytes = vec![0u64; n];
+    let mut clock: Ps = 0;
+    let mut served = 0usize;
+    while served < total {
+        let t_min = (0..n)
+            .filter(|&i| cursor[i] < queues[i].len())
+            .map(|i| queues[i][cursor[i]].at)
+            .min()
+            .expect("unserved messages remain");
+        let t = clock.max(t_min);
+        for i in 0..n {
+            if cursor[i] < queues[i].len() {
+                let h = &queues[i][cursor[i]];
+                head_at[i] = h.at;
+                head_bytes[i] = h.bytes;
+                eligible[i] = h.at <= t;
+            } else {
+                eligible[i] = false;
+                head_at[i] = Ps::MAX;
+                head_bytes[i] = 0;
+            }
+        }
+        let i = qos.pick(&eligible, &head_at, &head_bytes);
+        let m = &queues[i][cursor[i]];
+        cursor[i] += 1;
+        served += 1;
+        let start = cal.place(t.max(m.at), m.dur);
+        clock = clock.max(start + m.dur);
+        late[m.slot] = late[m.slot].max((start + m.dur).saturating_sub(m.solo_finish));
+    }
+}
+
+/// Fold one admitted request's charges into its record, the device
+/// stats and the event heap — shared tail of both admission paths.
+#[allow(clippy::too_many_arguments)]
+fn finish_admission(
+    now: Ps,
+    d: usize,
+    dev: &mut DevState,
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut [RequestRun],
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    rid: u32,
+    mem_late: Ps,
+    io_late: Ps,
+    fab_late: Ps,
+) {
+    let (annot, proto) = {
+        let r = &requests[rid as usize];
+        (r.annot, r.proto)
+    };
+    let s = table.get(dev.class, annot, proto);
+    // CCM PU-pool replay (earliest-free, admission order).
+    let mut pu_late: Ps = 0;
+    for sp in &s.run.ccm_trace {
+        let ready = now + sp.start;
+        let (_, end) = dev.pool.dispatch(ready, sp.dur());
+        pu_late = pu_late.max(end - (ready + sp.dur()));
+    }
+    let r = &mut requests[rid as usize];
+    r.admit = now;
+    r.device_wait = mem_late.max(io_late);
+    r.fabric_wait = fab_late;
+    r.pu_wait = pu_late;
+    r.completion = now + r.solo + r.device_wait.max(fab_late) + pu_late;
+    dev.in_service += 1;
+    dev.stats.mem_wait += mem_late;
+    dev.stats.io_wait += io_late;
+    dev.stats.pu_wait += pu_late;
+    dev.stats.bytes += s.mem_bytes + s.io_bytes;
+    fabric.wait += fab_late;
+    heap.push(Reverse((r.completion, 0, d as u64, rid as u64)));
 }
 
 /// The open-loop pin: delegate to the PR-3 tenant driver verbatim and
@@ -838,6 +1139,7 @@ fn run_sched_open(
             tenant: t.tenant,
             index: 0,
             annot: t.annot,
+            class: spec.priority(t.tenant as usize),
             device: t.device,
             proto,
             submit: t.arrival,
@@ -857,6 +1159,7 @@ fn run_sched_open(
     }
     SchedReport {
         policy: spec.policy,
+        qos: r.qos,
         closed: false,
         depth: spec.depth,
         admit: spec.admit,
@@ -878,6 +1181,7 @@ fn run_sched_open(
 fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
     SchedReport {
         policy: spec.policy,
+        qos: topo_spec.qos.policy,
         closed: spec.closed,
         depth: spec.depth,
         admit: spec.admit,
@@ -897,7 +1201,7 @@ fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DeviceOverride;
+    use crate::config::{DeviceOverride, QosSpec};
 
     // ---- Online resource models. ----
 
@@ -1074,5 +1378,178 @@ mod tests {
         let topo = TopologySpec::default();
         let spec = light_spec(2).with_policy(PolicyKind::Heuristic).open_loop();
         let _ = run_sched(&cfg, &topo, &spec, 1);
+    }
+
+    // ---- Priority admission + online QoS. ----
+
+    /// Minimal request record for queue-order tests (only `class` is
+    /// read by the admission pop).
+    fn req_with_class(tenant: u32, class: u32) -> RequestRun {
+        RequestRun {
+            tenant,
+            index: 0,
+            annot: 'f',
+            class,
+            device: 0,
+            proto: Protocol::Axle,
+            submit: 0,
+            admit: 0,
+            solo: 0,
+            device_wait: 0,
+            fabric_wait: 0,
+            pu_wait: 0,
+            completion: 0,
+        }
+    }
+
+    #[test]
+    fn pop_admit_is_fifo_for_equal_classes_and_jumps_for_higher() {
+        // All class 0: exact FIFO (the PR-4 pop_front pin).
+        let requests: Vec<RequestRun> = (0..4).map(|t| req_with_class(t, 0)).collect();
+        let mut q: VecDeque<u32> = (0..4).collect();
+        let order: Vec<u32> =
+            std::iter::from_fn(|| pop_admit(&mut q, &requests)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // Mixed classes: highest class first, FIFO within a class.
+        let requests = vec![
+            req_with_class(0, 0),
+            req_with_class(1, 2),
+            req_with_class(2, 0),
+            req_with_class(3, 2),
+        ];
+        let mut q: VecDeque<u32> = (0..4).collect();
+        let order: Vec<u32> =
+            std::iter::from_fn(|| pop_admit(&mut q, &requests)).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+        assert_eq!(pop_admit(&mut q, &requests), None);
+    }
+
+    #[test]
+    fn high_class_jumps_the_admission_queue() {
+        // Four tenants, one device, one service slot: whoever submits
+        // first is served; of the three that queue behind it, the
+        // high-class tenant must be admitted first.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(1)
+            .with_admit(1)
+            .with_priorities(vec![0, 0, 0, 7]);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        assert_eq!(r.requests.len(), 4);
+        let high = r.requests.iter().find(|q| q.tenant == 3).unwrap();
+        assert_eq!(high.class, 7);
+        // At most one request (the initially-served one) was admitted
+        // before the high-class tenant.
+        let earlier = r.requests.iter().filter(|q| q.admit < high.admit).count();
+        assert!(earlier <= 1, "{earlier} requests admitted before the high class");
+        // The decomposition identity survives priority admission.
+        for q in &r.requests {
+            assert_eq!(q.total(), q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait);
+        }
+    }
+
+    #[test]
+    fn lone_tenant_wrr_and_drr_have_zero_contention() {
+        // A lone closed-loop stream must replay its solo schedule with
+        // zero shift under every online QoS policy, exactly as under
+        // the FCFS calendars.
+        let cfg = SimConfig::m2ndp();
+        let spec = SchedSpec::new(1)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(3)
+            .with_think(US);
+        for qos in [QosSpec::wrr(vec![2]), QosSpec::drr(vec![0.5])] {
+            let topo = TopologySpec::default().with_qos(qos);
+            let r = run_sched(&cfg, &topo, &spec, 2);
+            assert_eq!(r.requests.len(), 3);
+            for q in &r.requests {
+                assert_eq!(q.queue_wait(), 0, "{:?}", r.qos);
+                assert_eq!(q.wire_wait(), 0, "{:?}", r.qos);
+                assert_eq!(q.pu_wait, 0, "{:?}", r.qos);
+            }
+        }
+    }
+
+    #[test]
+    fn online_qos_policies_conserve_wire_work() {
+        // Static policy on one fabric-backed device: the message multiset
+        // is identical across QoS policies, so per-device bytes, link
+        // busy time and fabric busy/bytes must all agree — QoS only
+        // redistributes who waits.
+        let cfg = SimConfig::m2ndp();
+        let spec = SchedSpec::new(3)
+            .with_workloads(vec!['a', 'f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(2)
+            .with_admit(3);
+        let run = |qos: QosSpec| {
+            let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps).with_qos(qos);
+            run_sched(&cfg, &topo, &spec, 2)
+        };
+        let fcfs = run(QosSpec::fcfs());
+        for other in [run(QosSpec::wrr(vec![3, 1])), run(QosSpec::drr(vec![0.7, 0.3]))] {
+            assert_eq!(other.requests.len(), fcfs.requests.len());
+            assert_eq!(other.devices[0].bytes, fcfs.devices[0].bytes, "{:?}", other.qos);
+            assert_eq!(other.devices[0].link_busy, fcfs.devices[0].link_busy, "{:?}", other.qos);
+            assert_eq!(other.fabric.bytes, fcfs.fabric.bytes, "{:?}", other.qos);
+            assert_eq!(other.fabric.busy, fcfs.fabric.busy, "{:?}", other.qos);
+            for q in &other.requests {
+                assert_eq!(q.total(), q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait);
+            }
+        }
+    }
+
+    #[test]
+    fn default_qos_is_bit_identical_to_explicit_fcfs() {
+        // The FCFS dispatch must route through the unchanged PR-4 path:
+        // a default-qos topology and an explicit-FCFS topology produce
+        // byte-identical reports.
+        let cfg = SimConfig::m2ndp();
+        let spec = light_spec(4).with_policy(PolicyKind::Heuristic);
+        let plain = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+        let explicit = plain.clone().with_qos(QosSpec::fcfs());
+        let a = run_sched(&cfg, &plain, &spec, 2);
+        let b = run_sched(&cfg, &explicit, &spec, 2);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.qos, crate::config::QosPolicy::Fcfs);
+    }
+
+    #[test]
+    fn class_slowdowns_aggregate_per_priority_class() {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::default();
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Bs))
+            .with_requests(2)
+            .with_priorities(vec![1, 0]);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        let classes = r.class_slowdowns();
+        assert_eq!(classes.len(), 2);
+        // Ascending by class, four requests each (two tenants × two).
+        assert_eq!((classes[0].0, classes[0].1), (0, 4));
+        assert_eq!((classes[1].0, classes[1].1), (1, 4));
+        for (_, _, p50, p99) in &classes {
+            assert!(*p50 >= 1.0 && *p99 >= *p50);
+        }
+        // The JSON mirror carries the same rows.
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"classes\""));
+        assert!(json.contains("\"prio\""));
+    }
+
+    #[test]
+    fn empty_report_carries_qos_and_empty_classes() {
+        let cfg = SimConfig::m2ndp();
+        let topo =
+            TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_qos(QosSpec::wrr(vec![2, 1]));
+        let r = run_sched(&cfg, &topo, &light_spec(0), 2);
+        assert_eq!(r.qos, crate::config::QosPolicy::Wrr);
+        assert!(r.class_slowdowns().is_empty());
+        assert!(r.to_json().to_string().contains("\"qos\""));
     }
 }

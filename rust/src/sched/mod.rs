@@ -12,10 +12,15 @@
 //!
 //! - [`driver`] — the closed-loop engine ([`run_sched`]): K tenants with
 //!   `depth`-bounded outstanding windows submitting against completion
-//!   feedback, per-device FIFO admission queues with an `admit` service
-//!   limit, and online (admission-order) contention accounting over link
-//!   calendars and earliest-free PU pools. With `--open` it degenerates
-//!   to the PR-3 open-loop tenant path verbatim (the regression pin).
+//!   feedback, per-device admission queues with an `admit` service limit
+//!   and per-tenant **priority classes** (higher class jumps the FIFO at
+//!   admission, never revoking in-service work), and online contention
+//!   accounting over link calendars and earliest-free PU pools. The
+//!   calendars charge wire time under the topology's QoS policy —
+//!   FCFS (admission order, the PR-4 path verbatim) or online WRR/DRR
+//!   through [`crate::topo::fabric::QosState`]. With `--open` it
+//!   degenerates to the PR-3 open-loop tenant path verbatim (the
+//!   regression pin).
 //! - [`policy`] — the per-request [`OffloadPolicy`](policy::OffloadPolicy)
 //!   plug point: `Static` (pins one protocol — today's behavior),
 //!   `Heuristic` (compute-vs-transfer ratio + observed link/PU
@@ -29,9 +34,11 @@
 //!   see real placement trade-offs.
 //!
 //! Surfaces: `axle sched --streams K --policy static|heuristic|oracle
-//! --depth N`, [`crate::coordinator::Coordinator::run_sched`],
-//! [`sweep_sched_grid`] (policy × depth axes; also re-exported as
-//! `topo::sweep_sched_grid`) and `axle report fig19`.
+//! --depth N --qos fcfs|wrr|drr --prio C0,C1,...`,
+//! [`crate::coordinator::Coordinator::run_sched`], [`sweep_sched_grid`]
+//! (policy × qos × depth axes; also re-exported as
+//! `topo::sweep_sched_grid`) and `axle report fig19` (per-priority-class
+//! p50/p99 slowdown columns under all three QoS policies).
 
 pub mod driver;
 pub mod policy;
@@ -39,24 +46,28 @@ pub mod policy;
 pub use driver::{format_request_row, run_sched, RequestRun, SchedReport};
 pub use policy::{Candidate, Observed, OffloadPolicy};
 
-use crate::config::{PolicyKind, SchedSpec, SimConfig, TopologySpec};
+use crate::config::{PolicyKind, QosPolicy, QosSpec, SchedSpec, SimConfig, TopologySpec};
 
-/// Sweep the scheduler axes: one [`SchedReport`] per `(policy, depth)`
-/// grid point, with the base specs' other knobs held fixed. The policy
-/// is the outermost axis — exactly the table `axle report fig19` walks.
+/// Sweep the scheduler axes: one [`SchedReport`] per `(policy, qos,
+/// depth)` grid point, with the base specs' other knobs held fixed. The
+/// protocol policy is the outermost axis, the link-arbitration policy
+/// (installed into `topo_base.qos`, keeping its weights/floors) comes
+/// next — exactly the table `axle report fig19` walks.
 ///
-/// The depth axis cannot change solo simulations, so the solo candidate
-/// pass is prepared **once per policy** and shared across its depth
-/// points (results are identical to calling [`run_sched`] per point).
+/// Neither the qos nor the depth axis can change solo simulations, so
+/// the solo candidate pass is prepared **once per policy** and shared
+/// across its qos × depth points (results are identical to calling
+/// [`run_sched`] per point).
 pub fn sweep_sched_grid(
     cfg: &SimConfig,
     topo_base: &TopologySpec,
     sched_base: &SchedSpec,
     policy_axis: &[PolicyKind],
+    qos_axis: &[QosPolicy],
     depth_axis: &[usize],
     jobs: usize,
-) -> Vec<(PolicyKind, usize, SchedReport)> {
-    let mut out = Vec::with_capacity(policy_axis.len() * depth_axis.len());
+) -> Vec<(PolicyKind, QosPolicy, usize, SchedReport)> {
+    let mut out = Vec::with_capacity(policy_axis.len() * qos_axis.len() * depth_axis.len());
     for &policy in policy_axis {
         let base = SchedSpec { policy, ..sched_base.clone() };
         // Only closed, non-empty runs reach the engine (and can share a
@@ -64,13 +75,19 @@ pub fn sweep_sched_grid(
         // dispatch (open-loop pin, empty report).
         let pass = (base.closed && base.streams > 0 && base.requests > 0)
             .then(|| driver::prepare_solo_pass(cfg, topo_base, &base, jobs));
-        for &depth in depth_axis {
-            let spec = SchedSpec { depth, ..base.clone() };
-            let report = match &pass {
-                Some(p) => driver::run_closed(topo_base, &spec, p),
-                None => run_sched(cfg, topo_base, &spec, jobs),
+        for &qos in qos_axis {
+            let topo = TopologySpec {
+                qos: QosSpec { policy: qos, ..topo_base.qos.clone() },
+                ..topo_base.clone()
             };
-            out.push((policy, depth, report));
+            for &depth in depth_axis {
+                let spec = SchedSpec { depth, ..base.clone() };
+                let report = match &pass {
+                    Some(p) => driver::run_closed(&topo, &spec, p),
+                    None => run_sched(cfg, &topo, &spec, jobs),
+                };
+                out.push((policy, qos, depth, report));
+            }
         }
     }
     out
@@ -91,18 +108,47 @@ mod tests {
             &topo,
             &base,
             &[PolicyKind::Static(Protocol::Axle), PolicyKind::Oracle],
+            &[QosPolicy::Fcfs, QosPolicy::Wrr],
             &[1, 2],
             2,
         );
-        assert_eq!(grid.len(), 4);
-        assert_eq!((grid[0].0, grid[0].1), (PolicyKind::Static(Protocol::Axle), 1));
-        assert_eq!((grid[1].0, grid[1].1), (PolicyKind::Static(Protocol::Axle), 2));
-        assert_eq!((grid[2].0, grid[2].1), (PolicyKind::Oracle, 1));
-        assert_eq!((grid[3].0, grid[3].1), (PolicyKind::Oracle, 2));
-        for (p, depth, r) in &grid {
+        assert_eq!(grid.len(), 8);
+        let s = PolicyKind::Static(Protocol::Axle);
+        assert_eq!((grid[0].0, grid[0].1, grid[0].2), (s, QosPolicy::Fcfs, 1));
+        assert_eq!((grid[1].0, grid[1].1, grid[1].2), (s, QosPolicy::Fcfs, 2));
+        assert_eq!((grid[2].0, grid[2].1, grid[2].2), (s, QosPolicy::Wrr, 1));
+        assert_eq!((grid[3].0, grid[3].1, grid[3].2), (s, QosPolicy::Wrr, 2));
+        assert_eq!((grid[4].0, grid[4].1, grid[4].2), (PolicyKind::Oracle, QosPolicy::Fcfs, 1));
+        assert_eq!((grid[7].0, grid[7].1, grid[7].2), (PolicyKind::Oracle, QosPolicy::Wrr, 2));
+        for (p, qos, depth, r) in &grid {
             assert_eq!(r.policy, *p);
+            assert_eq!(r.qos, *qos);
             assert_eq!(r.depth, *depth);
             assert_eq!(r.requests.len(), 2);
         }
+    }
+
+    #[test]
+    fn grid_sweep_qos_points_match_direct_runs() {
+        // The shared solo pass must not drift the qos-overridden points
+        // from a fresh `run_sched` with the same effective topology.
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
+        let base = SchedSpec::new(3).with_workloads(vec!['a', 'f']).with_requests(2);
+        let grid = sweep_sched_grid(
+            &cfg,
+            &topo,
+            &base,
+            &[PolicyKind::Heuristic],
+            &[QosPolicy::Drr],
+            &[2],
+            2,
+        );
+        let direct_topo = TopologySpec {
+            qos: crate::config::QosSpec { policy: QosPolicy::Drr, ..topo.qos.clone() },
+            ..topo.clone()
+        };
+        let direct = run_sched(&cfg, &direct_topo, &base.clone().with_depth(2), 2);
+        assert_eq!(grid[0].3.to_json().to_string(), direct.to_json().to_string());
     }
 }

@@ -208,6 +208,7 @@ pub fn arbitrate_qos(
 }
 
 /// Packet-granularity weighted-round-robin scheduler state.
+#[derive(Debug)]
 struct WrrState {
     weights: Vec<u64>,
     credits: Vec<u64>,
@@ -249,6 +250,7 @@ impl WrrState {
 }
 
 /// Byte-granularity deficit-round-robin scheduler state.
+#[derive(Debug)]
 struct DrrState {
     quantum: Vec<u64>,
     deficit: Vec<u64>,
@@ -326,9 +328,59 @@ impl DrrState {
     }
 }
 
-enum Scheduler {
+/// Policy-agnostic, incremental QoS scheduler state: the pick logic of
+/// every [`QosPolicy`] behind one interface, usable both by the batch
+/// replay ([`arbitrate_qos`]) and **online** by the closed-loop
+/// scheduler's live link calendars ([`crate::sched::driver`]), which
+/// consult it each time a wire must choose among queued tenants.
+///
+/// State (WRR credits and scan pointer, DRR deficits) persists across
+/// `pick` calls, so an online caller gets the same round structure the
+/// replay produces: feed it the per-tenant head-of-queue view
+/// (`eligible` / `head_at` / `head_bytes`) whenever the wire frees up
+/// and serve the returned tenant's head message.
+#[derive(Debug)]
+pub struct QosState {
+    inner: QosInner,
+}
+
+#[derive(Debug)]
+enum QosInner {
+    /// Global issue order `(head arrival, tenant id)` — the stateless
+    /// PR-2 discipline expressed as a pick rule.
+    Fcfs,
     Wrr(WrrState),
     Drr(DrrState),
+}
+
+impl QosState {
+    /// Scheduler state for `n_tenants` queues under `qos`. `max_bytes`
+    /// sizes the DRR quanta (the largest message the link will carry;
+    /// FCFS/WRR ignore it) — the replay derives it from the offered
+    /// message set, an online caller from the solo traces it replays.
+    pub fn new(qos: &QosSpec, n_tenants: usize, max_bytes: u64) -> Self {
+        let inner = match qos.policy {
+            QosPolicy::Fcfs => QosInner::Fcfs,
+            QosPolicy::Wrr => QosInner::Wrr(WrrState::new(qos, n_tenants)),
+            QosPolicy::Drr => QosInner::Drr(DrrState::new(qos, n_tenants, max_bytes.max(1))),
+        };
+        Self { inner }
+    }
+
+    /// Pick the tenant the wire serves next. `eligible[i]` marks queues
+    /// whose head message has arrived (at least one must be set);
+    /// `head_at[i]` is the head's arrival time (`Ps::MAX` for empty
+    /// queues), `head_bytes[i]` its payload size (DRR deficit currency).
+    pub fn pick(&mut self, eligible: &[bool], head_at: &[Ps], head_bytes: &[u64]) -> usize {
+        match &mut self.inner {
+            QosInner::Fcfs => (0..eligible.len())
+                .filter(|&i| eligible[i])
+                .min_by_key(|&i| (head_at[i], i))
+                .expect("eligible set is non-empty"),
+            QosInner::Wrr(s) => s.pick(eligible, head_at),
+            QosInner::Drr(s) => s.pick(eligible, head_bytes),
+        }
+    }
 }
 
 /// The WRR/DRR replay core: per-tenant FIFO queues drained against one
@@ -350,11 +402,7 @@ fn replay_scheduled(
         return out;
     }
     let max_bytes = msgs.iter().map(|m| m.bytes).max().unwrap_or(1).max(1);
-    let mut sched = match qos.policy {
-        QosPolicy::Wrr => Scheduler::Wrr(WrrState::new(qos, n_tenants)),
-        QosPolicy::Drr => Scheduler::Drr(DrrState::new(qos, n_tenants, max_bytes)),
-        QosPolicy::Fcfs => unreachable!("FCFS is served by `arbitrate`"),
-    };
+    let mut sched = QosState::new(qos, n_tenants, max_bytes);
     // Per-tenant FIFO queues (the stable sort keeps each tenant's trace
     // order) walked by cursor.
     let mut queues: Vec<Vec<FabricMsg>> = vec![Vec::new(); n_tenants];
@@ -387,10 +435,7 @@ fn replay_scheduled(
                 head_bytes[i] = 0;
             }
         }
-        let i = match &mut sched {
-            Scheduler::Wrr(s) => s.pick(&eligible, &head_at),
-            Scheduler::Drr(s) => s.pick(&eligible, &head_bytes),
-        };
+        let i = sched.pick(&eligible, &head_at, &head_bytes);
         let m = queues[i][cursor[i]];
         cursor[i] += 1;
         served += 1;
@@ -694,6 +739,43 @@ mod tests {
             assert_eq!(out.wire_free, 0);
             assert!(out.order.is_empty());
         }
+    }
+
+    // ---- QosState (the online pick interface) ----
+
+    #[test]
+    fn qos_state_fcfs_picks_global_issue_order() {
+        let mut s = QosState::new(&QosSpec::fcfs(), 3, 1);
+        // Tenant 1's head arrived first; ties break on tenant id.
+        let eligible = [true, true, true];
+        assert_eq!(s.pick(&eligible, &[50, 10, 50], &[1, 1, 1]), 1);
+        assert_eq!(s.pick(&eligible, &[50, 99, 50], &[1, 1, 1]), 0);
+        // Ineligible queues are skipped even with the earliest head.
+        assert_eq!(s.pick(&[false, true, true], &[0, 70, 60], &[1, 1, 1]), 2);
+    }
+
+    #[test]
+    fn qos_state_wrr_round_structure_persists_across_picks() {
+        let mut s = QosState::new(&QosSpec::wrr(vec![2, 1]), 2, 1);
+        let eligible = [true, true];
+        let at = [0, 0];
+        let bytes = [1_000, 1_000];
+        // Credits persist call to call: the classic 2:1 batched pattern.
+        let order: Vec<usize> = (0..6).map(|_| s.pick(&eligible, &at, &bytes)).collect();
+        assert_eq!(order, vec![0, 0, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn qos_state_drr_deficits_persist_across_picks() {
+        // Quanta [750, 250] over 1000-byte heads: ≈3:1 service ratio,
+        // exactly the replay's steady state (see module docs).
+        let mut s = QosState::new(&QosSpec::drr(vec![0.75, 0.25]), 2, 1_000);
+        let eligible = [true, true];
+        let at = [0, 0];
+        let bytes = [1_000, 1_000];
+        let order: Vec<usize> = (0..8).map(|_| s.pick(&eligible, &at, &bytes)).collect();
+        let t0 = order.iter().filter(|&&i| i == 0).count();
+        assert!((5..=7).contains(&t0), "expected ≈3:1 ratio, got {order:?}");
     }
 
     // ---- PU-pool sharing ----

@@ -47,6 +47,7 @@ pub use crate::config::{Placement, QosPolicy, QosSpec, TopologySpec};
 pub use crate::sched::sweep_sched_grid;
 pub use fabric::{
     arbitrate, arbitrate_pus, arbitrate_qos, ArbitrationOutcome, FabricMsg, PuDemand, PuOutcome,
+    QosState,
 };
 pub use tenant::{run_tenants, sweep_tenant_grid, TenantReport, TenantRun, TenantSpec};
 

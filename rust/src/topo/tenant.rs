@@ -365,14 +365,15 @@ pub fn run_tenants(
                 continue;
             }
             let run = &solo_runs[job_of[&annots[i]]];
+            let tenant = i as u32;
             for m in &run.mem_trace {
-                mem_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant: i as u32 });
+                mem_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant });
             }
             for m in &run.io_trace {
-                io_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant: i as u32 });
+                io_msgs.push(FabricMsg { at: arrivals[i] + m.start, bytes: m.bytes, tenant });
             }
             for s in &run.ccm_trace {
-                pu_demands.push(PuDemand { at: arrivals[i] + s.start, dur: s.dur(), tenant: i as u32 });
+                pu_demands.push(PuDemand { at: arrivals[i] + s.start, dur: s.dur(), tenant });
             }
         }
         // All device traffic also crosses the upstream fabric (skip the

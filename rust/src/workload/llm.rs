@@ -182,8 +182,12 @@ impl AttnKernel {
         let hb = (opt.hidden * 4) as u64;
         match self {
             AttnKernel::LayerNormQ => (8.0 * h, 2 * hb, hb),
-            AttnKernel::QkvProj => (2.0 * h * 3.0 * h, (opt.hidden * 3 * opt.hidden * 4) as u64, 3 * hb),
-            AttnKernel::Attention1 => (2.0 * t * h, opt.kv_bytes() / 2, (opt.heads * opt.tokens * 4) as u64),
+            AttnKernel::QkvProj => {
+                (2.0 * h * 3.0 * h, (opt.hidden * 3 * opt.hidden * 4) as u64, 3 * hb)
+            }
+            AttnKernel::Attention1 => {
+                (2.0 * t * h, opt.kv_bytes() / 2, (opt.heads * opt.tokens * 4) as u64)
+            }
             AttnKernel::Attention2 => (2.0 * t * h, opt.kv_bytes() / 2, hb),
             AttnKernel::OutProj => (2.0 * h * h, (opt.hidden * opt.hidden * 4) as u64, hb),
             AttnKernel::Residual => (h, 2 * hb, hb),

@@ -538,7 +538,9 @@ mod qos_props {
 // ------------------------------------------------------------------
 
 mod sched_props {
-    use axle::config::{DeviceOverride, PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec};
+    use axle::config::{
+        DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
+    };
     use axle::sched::run_sched;
     use axle::sim::{Ps, US};
     use axle::util::prop::run_prop;
@@ -648,6 +650,71 @@ mod sched_props {
                 assert!(q.slowdown() >= 1.0);
             }
             assert_eq!(r.makespan, r.requests.iter().map(|q| q.completion).max().unwrap());
+        });
+    }
+
+    /// Online QoS + priority admission preserve the closed-loop
+    /// contract. On random small scenarios (random priorities, a WRR
+    /// weight vector that includes a zero-weight best-effort tenant, a
+    /// DRR floor vector that includes a zero floor):
+    /// - **no starvation** — every request completes exactly once under
+    ///   WRR and DRR, zero-weight/zero-floor tenants included, and the
+    ///   decomposition identity holds per request;
+    /// - **busy-time invariance (work conservation)** — with a static
+    ///   policy the same message multiset crosses the same wires, so
+    ///   total bytes and link busy time match the FCFS calendars
+    ///   exactly; QoS only redistributes who waits.
+    #[test]
+    fn prop_online_qos_no_starvation_and_busy_invariance() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("online_qos_invariants", 6, |rng| {
+            let streams = rng.range(2, 4) as usize;
+            let requests = rng.range(1, 3) as usize;
+            let depth = rng.range(1, 3) as usize;
+            let admit = rng.range(1, 3) as usize;
+            let fabric = rng.below(2) == 1;
+            let mut priorities = Vec::with_capacity(streams);
+            for _ in 0..streams {
+                priorities.push(rng.below(3) as u32);
+            }
+            let spec = SchedSpec::new(streams)
+                .with_workloads(vec!['a', 'f'])
+                .with_policy(PolicyKind::Static(Protocol::Axle))
+                .with_depth(depth)
+                .with_admit(admit)
+                .with_requests(requests)
+                .with_priorities(priorities)
+                .with_seed(rng.next_u64());
+            let mk = |qos: QosSpec| {
+                let mut topo = TopologySpec { devices: 1, ..TopologySpec::default() };
+                if fabric {
+                    topo.fabric_bw_gbps = Some(cfg.cxl_bw_gbps);
+                }
+                topo.with_qos(qos)
+            };
+            let fcfs = run_sched(&cfg, &mk(QosSpec::fcfs()), &spec, 2);
+            let mut weights = vec![0u64];
+            let mut floors = vec![0.0f64];
+            for _ in 1..streams {
+                weights.push(rng.range(1, 5));
+                floors.push(rng.range(1, 5) as f64 / 4.0);
+            }
+            for qos in [QosSpec::wrr(weights.clone()), QosSpec::drr(floors.clone())] {
+                let label = qos.policy.label();
+                let r = run_sched(&cfg, &mk(qos), &spec, 2);
+                assert_eq!(r.requests.len(), streams * requests, "{label}: starvation");
+                for q in &r.requests {
+                    assert_eq!(
+                        q.total(),
+                        q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait,
+                        "{label}: decomposition"
+                    );
+                }
+                assert_eq!(r.devices[0].bytes, fcfs.devices[0].bytes, "{label}: bytes");
+                assert_eq!(r.devices[0].link_busy, fcfs.devices[0].link_busy, "{label}: busy");
+                assert_eq!(r.fabric.bytes, fcfs.fabric.bytes, "{label}: fabric bytes");
+                assert_eq!(r.fabric.busy, fcfs.fabric.busy, "{label}: fabric busy");
+            }
         });
     }
 }

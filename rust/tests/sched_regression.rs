@@ -12,8 +12,10 @@
 //!    construction), `oracle` must lower-bound every policy and
 //!    `heuristic` must beat the worst static protocol.
 
-use axle::config::{DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec};
-use axle::sched::run_sched;
+use axle::config::{
+    DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
+};
+use axle::sched::{run_sched, SchedReport};
 use axle::topo::{run_tenants, TenantSpec};
 
 fn data_heavy_mix() -> Vec<char> {
@@ -115,6 +117,66 @@ fn closed_loop_deterministic_on_heterogeneous_contended_topology() {
         assert_eq!(a.requests.len(), 8);
         // Both device classes saw work (round-robin placement).
         assert!(a.devices.iter().all(|d| d.tenants > 0));
+    }
+}
+
+/// Equal priority classes — whatever their value — must route through
+/// the admission queue exactly like the PR-4 FIFO: identical calendars
+/// and timings, only the class label moves. This is the bit-identity
+/// pin for the priority-admission refactor.
+#[test]
+fn equal_priority_classes_are_bit_identical_to_fifo() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps);
+    let base = SchedSpec::new(4).with_workloads(vec!['a', 'e']).with_requests(2);
+    let plain = run_sched(&cfg, &topo, &base, 2);
+    let classed = run_sched(&cfg, &topo, &base.clone().with_priorities(vec![3, 3]), 2);
+    assert_eq!(plain.requests.len(), classed.requests.len());
+    for (p, c) in plain.requests.iter().zip(&classed.requests) {
+        assert_eq!(p.tenant, c.tenant);
+        assert_eq!(p.submit, c.submit);
+        assert_eq!(p.admit, c.admit);
+        assert_eq!(p.completion, c.completion);
+        assert_eq!(p.device, c.device);
+        assert_eq!(p.proto, c.proto);
+        assert_eq!(p.class, 0);
+        assert_eq!(c.class, 3);
+    }
+    assert_eq!(plain.makespan, classed.makespan);
+    assert_eq!(plain.p50_slowdown.to_bits(), classed.p50_slowdown.to_bits());
+    assert_eq!(plain.p99_slowdown.to_bits(), classed.p99_slowdown.to_bits());
+}
+
+/// Online WRR/DRR closed loops are deterministic, worker-count
+/// invariant, and conserve wire work versus the FCFS calendars: the
+/// same message multiset crosses the same wires (static policy, so the
+/// protocol choice cannot drift), so total bytes and busy time match —
+/// QoS only redistributes who waits inside them.
+#[test]
+fn closed_loop_online_qos_deterministic_and_work_conserving() {
+    let cfg = SimConfig::m2ndp();
+    let mk = |qos: QosSpec| TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_qos(qos);
+    let spec = SchedSpec::new(4)
+        .with_workloads(data_heavy_mix())
+        .with_policy(PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_admit(2)
+        .with_priorities(vec![1, 0]);
+    let fcfs = run_sched(&cfg, &mk(QosSpec::fcfs()), &spec, 2);
+    let bytes = |r: &SchedReport| r.devices.iter().map(|d| d.bytes).sum::<u64>();
+    let busy = |r: &SchedReport| r.devices.iter().map(|d| d.link_busy).sum::<u64>();
+    for qos in [QosSpec::wrr(vec![4, 1]), QosSpec::drr(vec![0.75, 0.25])] {
+        let a = run_sched(&cfg, &mk(qos.clone()), &spec, 1);
+        let b = run_sched(&cfg, &mk(qos.clone()), &spec, 4);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{:?}", qos.policy);
+        assert_eq!(a.requests.len(), fcfs.requests.len());
+        assert_eq!(bytes(&a), bytes(&fcfs), "{:?}", qos.policy);
+        assert_eq!(busy(&a), busy(&fcfs), "{:?}", qos.policy);
+        assert_eq!(a.fabric.bytes, fcfs.fabric.bytes, "{:?}", qos.policy);
+        assert_eq!(a.fabric.busy, fcfs.fabric.busy, "{:?}", qos.policy);
+        for q in &a.requests {
+            assert_eq!(q.total(), q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait);
+        }
     }
 }
 
