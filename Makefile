@@ -2,7 +2,7 @@
 # `lint` + `doc` + `doc-drift`, plus the `bench-smoke` measurement job.
 CARGO ?= cargo
 
-.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke artifacts
+.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -59,6 +59,13 @@ bench:
 # "fig10 matrix serial/parallel ratio" line CI lifts into its summary.
 bench-smoke:
 	$(CARGO) bench --bench figures -- --smoke
+
+# Downsized fault-injection smoke (CI): the canned `axle scenario`
+# failover — device 0 of a strong+weak pair fails permanently
+# mid-service and the run completes on the survivor. Prints the
+# "time-to-recover" line CI lifts into its job summary.
+scenario-smoke:
+	@$(CARGO) run --release --bin axle -- scenario --streams 3 --requests 2
 
 # AOT-compile the workload kernels to HLO text (needs the Python/JAX
 # toolchain; the simulator itself never requires this).

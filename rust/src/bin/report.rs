@@ -26,6 +26,7 @@ fn main() {
         "fig16" => report::fig16(&cfg),
         "fig17" | "tenants" => report::fig17(&cfg),
         "fig19" | "sched" => report::fig19(&cfg),
+        "fig20" | "faults" => report::fig20(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

@@ -799,6 +799,224 @@ impl PolicyKind {
     ];
 }
 
+/// What kind of fault one [`FaultEvent`] injects into a device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// The device's effective CCM PU throughput drops by `factor` for
+    /// the window (PU service times inflate by `factor`).
+    DegradePus,
+    /// The device's CXL link bandwidth (both channels) drops by `factor`
+    /// for the window (wire service times inflate by `factor`).
+    DegradeLink,
+    /// The device is unresponsive for the window: admission closes and
+    /// in-service work is suspended until the window ends.
+    Stall,
+    /// The device is removed permanently at `at`: in-service work is
+    /// killed and re-placed, its admission queue drained onto survivors.
+    Fail,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::DegradePus => "degrade-pus",
+            FaultKind::DegradeLink => "degrade-link",
+            FaultKind::Stall => "stall",
+            FaultKind::Fail => "fail",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "degrade-pus" | "degrade_pus" => Some(FaultKind::DegradePus),
+            "degrade-link" | "degrade_link" => Some(FaultKind::DegradeLink),
+            "stall" => Some(FaultKind::Stall),
+            "fail" => Some(FaultKind::Fail),
+            _ => None,
+        }
+    }
+}
+
+/// One deterministic fault scheduled against one device: `kind` strikes
+/// device `device` at simulation time `at` and (except for the
+/// permanent [`FaultKind::Fail`]) heals at `until`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Target device id.
+    pub device: u32,
+    pub kind: FaultKind,
+    /// Window start (simulation time, ps).
+    pub at: Ps,
+    /// Window end, ps (ignored for `Fail`, which is permanent; kept
+    /// equal to `at` by the constructors).
+    pub until: Ps,
+    /// Degradation factor (>= 1) for the degrade kinds: PU or wire
+    /// service times inflate by this factor inside the window. Ignored
+    /// (kept at 1.0) for `Stall`/`Fail`.
+    pub factor: f64,
+}
+
+impl FaultEvent {
+    pub fn fail(device: u32, at: Ps) -> Self {
+        Self { device, kind: FaultKind::Fail, at, until: at, factor: 1.0 }
+    }
+
+    pub fn stall(device: u32, at: Ps, until: Ps) -> Self {
+        Self { device, kind: FaultKind::Stall, at, until, factor: 1.0 }
+    }
+
+    pub fn degrade_pus(device: u32, at: Ps, until: Ps, factor: f64) -> Self {
+        Self { device, kind: FaultKind::DegradePus, at, until, factor }
+    }
+
+    pub fn degrade_link(device: u32, at: Ps, until: Ps, factor: f64) -> Self {
+        Self { device, kind: FaultKind::DegradeLink, at, until, factor }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("device".into(), Json::Num(self.device as f64));
+        o.insert("kind".into(), Json::Str(self.kind.label().into()));
+        o.insert("at_ps".into(), Json::Num(self.at as f64));
+        o.insert("until_ps".into(), Json::Num(self.until as f64));
+        o.insert("factor".into(), Json::Num(self.factor));
+        Json::Obj(o)
+    }
+
+    /// Deserialize one event; `i` is its index in the spec (for error
+    /// messages). Windows that precede t=0 are rejected here — the
+    /// config-parse-time guard against mid-run underflow.
+    pub fn from_json(i: usize, j: &Json) -> Result<Self, String> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .and_then(FaultKind::parse)
+            .ok_or_else(|| format!("fault event {i}: unknown kind (want degrade-pus | degrade-link | stall | fail)"))?;
+        for key in ["at_ps", "until_ps"] {
+            if let Some(v) = j.get(key).as_f64() {
+                if v < 0.0 {
+                    return Err(format!("fault event {i}: window starts before t=0 ({key} = {v})"));
+                }
+            }
+        }
+        let device = j
+            .get("device")
+            .as_u64()
+            .ok_or_else(|| format!("fault event {i}: missing device id"))? as u32;
+        let at = j.get("at_ps").as_u64().ok_or_else(|| format!("fault event {i}: missing at_ps"))?;
+        let until = j.get("until_ps").as_u64().unwrap_or(at);
+        let factor = j.get("factor").as_f64().unwrap_or(1.0);
+        Ok(Self { device, kind, at, until, factor })
+    }
+}
+
+/// Deterministic fault-injection schedule plus the recovery-policy knobs
+/// of the closed-loop scheduler (`axle sched --faults`, `axle scenario`).
+/// An empty schedule is the identity: the driver's fault-free path is
+/// pinned bit-identical to the pre-fault engine in `sched_regression.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Scheduled fault events (any order; the driver sorts by time).
+    pub events: Vec<FaultEvent>,
+    /// Bounded retry: a request is re-placed at most this many times
+    /// before it is marked failed and dropped from the run.
+    pub max_retries: u32,
+    /// Base retry backoff, ps; doubles with each retry of a request
+    /// (exponential backoff).
+    pub backoff: Ps,
+    /// Per-request timeout multiplier: a queued request whose wait on a
+    /// stalled device exceeds `timeout_factor × solo` is requeued.
+    pub timeout_factor: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self { events: Vec::new(), max_retries: 3, backoff: 50 * US, timeout_factor: 8.0 }
+    }
+}
+
+impl FaultSpec {
+    /// A schedule with the default recovery knobs.
+    pub fn with(events: Vec<FaultEvent>) -> Self {
+        Self { events, ..Self::default() }
+    }
+
+    /// True iff the spec injects nothing (the bit-identical identity).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate the schedule against a `devices`-device topology. Called
+    /// at config-parse time (CLI and JSON surfaces) so a doomed run —
+    /// every device killed, malformed windows, senseless factors — fails
+    /// with a clear error instead of a mid-run panic.
+    pub fn validate(&self, devices: usize) -> Result<(), String> {
+        let mut failed = vec![false; devices];
+        for (i, e) in self.events.iter().enumerate() {
+            if e.device as usize >= devices {
+                return Err(format!(
+                    "fault event {i}: device {} out of range (topology has {devices} devices)",
+                    e.device
+                ));
+            }
+            if e.kind != FaultKind::Fail && e.until < e.at {
+                return Err(format!(
+                    "fault event {i}: window ends at {} before it starts at {}",
+                    e.until, e.at
+                ));
+            }
+            if matches!(e.kind, FaultKind::DegradePus | FaultKind::DegradeLink) && e.factor < 1.0 {
+                return Err(format!(
+                    "fault event {i}: degradation factor {} must be >= 1",
+                    e.factor
+                ));
+            }
+            if e.kind == FaultKind::Fail {
+                failed[e.device as usize] = true;
+            }
+        }
+        if devices > 0 && failed.iter().all(|&f| f) && !self.events.is_empty() {
+            return Err(format!(
+                "fault spec kills all {devices} devices; at least one must survive"
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("events".into(), Json::Arr(self.events.iter().map(|e| e.to_json()).collect()));
+        o.insert("max_retries".into(), Json::Num(self.max_retries as f64));
+        o.insert("backoff_ps".into(), Json::Num(self.backoff as f64));
+        o.insert("timeout_factor".into(), Json::Num(self.timeout_factor));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the defaults (sparse files work).
+    /// Malformed events — unknown kinds, windows before t=0 — are
+    /// config-parse-time errors.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut s = Self::default();
+        if let Some(a) = j.get("events").as_arr() {
+            s.events =
+                a.iter().enumerate().map(|(i, e)| FaultEvent::from_json(i, e)).collect::<Result<
+                    Vec<_>,
+                    _,
+                >>()?;
+        }
+        if let Some(v) = j.get("max_retries").as_u64() {
+            s.max_retries = v as u32;
+        }
+        if let Some(v) = j.get("backoff_ps").as_u64() {
+            s.backoff = v;
+        }
+        if let Some(v) = j.get("timeout_factor").as_f64() {
+            s.timeout_factor = v;
+        }
+        Ok(s)
+    }
+}
+
 /// Declarative description of one closed-loop scheduling run (`axle
 /// sched`, [`crate::sched::run_sched`]): K tenants issuing requests
 /// against completion feedback, per-device admission queues, and a
@@ -841,6 +1059,9 @@ pub struct SchedSpec {
     pub load: f64,
     /// Arrival-stagger / open-loop jitter seed.
     pub seed: u64,
+    /// Deterministic fault-injection schedule + recovery knobs. Empty
+    /// (the default) means the fault-free engine, bit-identically.
+    pub faults: FaultSpec,
 }
 
 impl SchedSpec {
@@ -860,6 +1081,7 @@ impl SchedSpec {
             closed: true,
             load: 1.0,
             seed: 0x5C_4ED0,
+            faults: FaultSpec::default(),
         }
     }
 
@@ -926,6 +1148,11 @@ impl SchedSpec {
         self
     }
 
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("streams".into(), Json::Num(self.streams as f64));
@@ -942,6 +1169,7 @@ impl SchedSpec {
         o.insert("closed".into(), Json::Bool(self.closed));
         o.insert("load".into(), Json::Num(self.load));
         o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("faults".into(), self.faults.to_json());
         Json::Obj(o)
     }
 
@@ -984,6 +1212,11 @@ impl SchedSpec {
         }
         if let Some(v) = j.get("seed").as_u64() {
             s.seed = v;
+        }
+        if j.get("faults").as_obj().is_some() {
+            // Malformed fault schedules are config-parse-time errors with
+            // the validation message attached (never a mid-run panic).
+            s.faults = FaultSpec::from_json(j.get("faults")).expect("invalid fault spec");
         }
         s
     }
@@ -1260,5 +1493,80 @@ mod tests {
         assert_eq!(sparse.policy, PolicyKind::Heuristic);
         assert_eq!(sparse.depth, 1);
         assert!(sparse.closed);
+        assert!(sparse.faults.is_empty());
+    }
+
+    #[test]
+    fn fault_spec_json_roundtrip() {
+        let f = FaultSpec {
+            events: vec![
+                FaultEvent::degrade_pus(1, 50 * US, 150 * US, 4.0),
+                FaultEvent::degrade_link(0, 10 * US, 20 * US, 2.0),
+                FaultEvent::stall(0, 100 * US, 300 * US),
+                FaultEvent::fail(1, 800 * US),
+            ],
+            max_retries: 5,
+            backoff: 25 * US,
+            timeout_factor: 4.0,
+        };
+        let j = f.to_json().to_string();
+        assert_eq!(FaultSpec::from_json(&Json::parse(&j).unwrap()).unwrap(), f);
+        // Through a SchedSpec round-trip too.
+        let s = SchedSpec::new(2).with_faults(f.clone());
+        let sj = s.to_json().to_string();
+        assert_eq!(SchedSpec::from_json(&Json::parse(&sj).unwrap()), s);
+        // Sparse fault object keeps the recovery defaults.
+        let sparse = FaultSpec::from_json(
+            &Json::parse(r#"{"events": [{"device": 0, "kind": "fail", "at_ps": 7}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sparse.events, vec![FaultEvent::fail(0, 7)]);
+        assert_eq!(sparse.max_retries, 3);
+        assert_eq!(sparse.backoff, 50 * US);
+        assert_eq!(sparse.timeout_factor, 8.0);
+        assert!(FaultSpec::default().is_empty() && !sparse.is_empty());
+    }
+
+    #[test]
+    fn fault_spec_parse_rejects_malformed_events() {
+        // Unknown kind.
+        let j = Json::parse(r#"{"events": [{"device": 0, "kind": "melt", "at_ps": 0}]}"#).unwrap();
+        let e = FaultSpec::from_json(&j).unwrap_err();
+        assert!(e.contains("fault event 0: unknown kind"), "{e}");
+        // Window before t=0 is caught at parse time, not by u64 wrap.
+        let j = Json::parse(r#"{"events": [{"device": 0, "kind": "stall", "at_ps": -5}]}"#).unwrap();
+        let e = FaultSpec::from_json(&j).unwrap_err();
+        assert!(e.contains("window starts before t=0"), "{e}");
+        // Missing device id.
+        let j = Json::parse(r#"{"events": [{"kind": "fail", "at_ps": 0}]}"#).unwrap();
+        let e = FaultSpec::from_json(&j).unwrap_err();
+        assert!(e.contains("fault event 0: missing device id"), "{e}");
+    }
+
+    #[test]
+    fn fault_spec_validate_rejects_doomed_schedules() {
+        // Killing every device can never complete the run.
+        let kill_all = FaultSpec::with(vec![FaultEvent::fail(0, US), FaultEvent::fail(1, 2 * US)]);
+        let e = kill_all.validate(2).unwrap_err();
+        assert_eq!(e, "fault spec kills all 2 devices; at least one must survive");
+        // One survivor is fine.
+        assert!(kill_all.validate(3).is_ok());
+        // Device out of range.
+        let oob = FaultSpec::with(vec![FaultEvent::stall(5, 0, US)]);
+        let e = oob.validate(2).unwrap_err();
+        assert_eq!(e, "fault event 0: device 5 out of range (topology has 2 devices)");
+        // Window ends before it starts.
+        let inverted = FaultSpec::with(vec![FaultEvent::stall(0, 10 * US, US)]);
+        let e = inverted.validate(1).unwrap_err();
+        assert!(e.contains("window ends at"), "{e}");
+        // Degradation factor below 1 would *speed the device up*.
+        let speedup = FaultSpec::with(vec![FaultEvent::degrade_pus(0, 0, US, 0.5)]);
+        let e = speedup.validate(1).unwrap_err();
+        assert!(e.contains("degradation factor 0.5 must be >= 1"), "{e}");
+        // Zero-duration windows and empty specs validate.
+        assert!(FaultSpec::with(vec![FaultEvent::stall(0, US, US)]).validate(1).is_ok());
+        assert!(FaultSpec::default().validate(1).is_ok());
+        // A Fail event's `until` is ignored (constructors pin it to `at`).
+        assert!(FaultSpec::with(vec![FaultEvent::fail(0, US)]).validate(2).is_ok());
     }
 }

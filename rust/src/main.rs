@@ -15,7 +15,8 @@
 use anyhow::{bail, Context, Result};
 
 use axle::config::{
-    Placement, PolicyKind, Protocol, QosPolicy, SchedPolicy, SchedSpec, SimConfig, TopologySpec,
+    FaultEvent, FaultKind, FaultSpec, Placement, PolicyKind, Protocol, QosPolicy, SchedPolicy,
+    SchedSpec, SimConfig, TopologySpec,
 };
 use axle::sched;
 use axle::sim::{ps_to_us, NS};
@@ -58,6 +59,8 @@ USAGE:
              [--fabric-gbps X | --no-fabric] [--topo FILE.json]
              [--dev-ccm-pus P0,P1,...] [--dev-gbps B0,B1,...]
              [--workloads <mix>] [--sched-seed N] [--jobs N]
+             [--faults SPEC] [--max-retries N] [--backoff-us T]
+             [--timeout-factor F]
              [--profile ...] [--json]
         # closed-loop scheduling: K tenants submit requests against
         # completion feedback (at most --depth outstanding each), each
@@ -72,9 +75,23 @@ USAGE:
         # tenant ids); --dev-ccm-pus/--dev-gbps cycle per-device
         # hardware overrides over the devices (heterogeneous classes);
         # --open reproduces the PR-3 open-loop `axle tenants` arrivals
-        # bit-identically (static policies only)
+        # bit-identically (static policies only); --faults injects
+        # deterministic device faults: comma-separated events
+        # kind@device:start_us[..end_us][xFACTOR] with kind one of
+        # fail | stall | degrade-pus | degrade-link, e.g.
+        # 'fail@0:800' 'stall@0:100..300' 'degrade-pus@1:50..150x4';
+        # recovery is tuned by --max-retries (default 3), --backoff-us
+        # (base exponential backoff, default 50) and --timeout-factor
+        # (requeue timeout as a multiple of the solo estimate, default 8)
+  axle scenario [--streams K] [--requests R] [--jobs N] [--profile ...]
+                [--json]
+        # canned failover demo (the CI smoke): closed-loop tenants over
+        # one strong + one weak CCM device, the strong device failing
+        # permanently mid-service; prints the time-to-recover, lost
+        # work, and makespan/slowdown deltas against the fault-free
+        # baseline
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
@@ -215,6 +232,82 @@ fn build_topology(a: &Args, cfg: &SimConfig) -> Result<TopologySpec> {
         }
     }
     Ok(topo)
+}
+
+/// Parse a `--faults` schedule: comma-separated events of the form
+/// `kind@device:start_us[..end_us][xFACTOR]` —
+/// `fail@0:800`, `stall@0:100..300`, `degrade-pus@1:50..150x4`.
+/// Times are microseconds (fractions allowed); `fail` takes no window
+/// end, degradations require an `xFACTOR >= 1`.
+fn parse_fault_events(s: &str) -> Result<Vec<FaultEvent>> {
+    let us = |v: f64| (v * axle::sim::US as f64) as u64;
+    let mut events = Vec::new();
+    for (i, part) in s.split(',').enumerate() {
+        let part = part.trim();
+        let bad = |why: &str| {
+            anyhow::anyhow!(
+                "fault event {i} {part:?}: {why} (expected kind@device:start_us[..end_us][xFACTOR])"
+            )
+        };
+        let (kind_s, rest) = part.split_once('@').ok_or_else(|| bad("missing '@'"))?;
+        let kind = FaultKind::parse(kind_s.trim())
+            .ok_or_else(|| bad("unknown kind (fail|stall|degrade-pus|degrade-link)"))?;
+        let (dev_s, window) = rest.split_once(':').ok_or_else(|| bad("missing ':'"))?;
+        let device: u32 =
+            dev_s.trim().parse().map_err(|_| bad("device must be a non-negative integer"))?;
+        let (window, factor) = match window.split_once('x') {
+            Some((w, f)) => {
+                let factor: f64 =
+                    f.trim().parse().map_err(|_| bad("factor must be a number"))?;
+                (w, Some(factor))
+            }
+            None => (window, None),
+        };
+        let (start_s, end_s) = match window.split_once("..") {
+            Some((a, b)) => (a, Some(b)),
+            None => (window, None),
+        };
+        let parse_us = |t: &str, what: &str| -> Result<u64> {
+            let v: f64 = t
+                .trim()
+                .parse()
+                .map_err(|_| bad(&format!("{what} must be a time in microseconds")))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(bad(&format!("{what} must be finite and non-negative")));
+            }
+            Ok(us(v))
+        };
+        let at = parse_us(start_s, "window start")?;
+        let event = match kind {
+            FaultKind::Fail => {
+                if end_s.is_some() || factor.is_some() {
+                    return Err(bad("fail is permanent: no window end or factor"));
+                }
+                FaultEvent::fail(device, at)
+            }
+            FaultKind::Stall => {
+                if factor.is_some() {
+                    return Err(bad("stall takes no factor"));
+                }
+                let until = parse_us(end_s.ok_or_else(|| bad("stall needs start..end"))?, "window end")?;
+                FaultEvent::stall(device, at, until)
+            }
+            FaultKind::DegradePus | FaultKind::DegradeLink => {
+                let until = parse_us(
+                    end_s.ok_or_else(|| bad("degradation needs start..end"))?,
+                    "window end",
+                )?;
+                let factor = factor.ok_or_else(|| bad("degradation needs an xFACTOR"))?;
+                if kind == FaultKind::DegradePus {
+                    FaultEvent::degrade_pus(device, at, until, factor)
+                } else {
+                    FaultEvent::degrade_link(device, at, until, factor)
+                }
+            }
+        };
+        events.push(event);
+    }
+    Ok(events)
 }
 
 /// The matrix/sweep results table (shared by both subcommands).
@@ -486,10 +579,40 @@ fn main() -> Result<()> {
             if let Some(s) = a.get_as::<u64>("sched-seed") {
                 spec = spec.with_seed(s);
             }
+            let mut faults = FaultSpec::default();
+            if let Some(s) = a.get("faults") {
+                faults.events = parse_fault_events(s)?;
+            }
+            if let Some(n) = a.get_as::<u32>("max-retries") {
+                faults.max_retries = n;
+            }
+            if let Some(t) = a.get_as::<u64>("backoff-us") {
+                faults.backoff = t * axle::sim::US;
+            }
+            if let Some(f) = a.get_as::<f64>("timeout-factor") {
+                if !f.is_finite() || f <= 0.0 {
+                    bail!("--timeout-factor must be a positive finite number (got {f})");
+                }
+                faults.timeout_factor = f;
+            }
+            if !faults.events.is_empty() {
+                faults.validate(topo.devices).map_err(|e| anyhow::anyhow!(e))?;
+            }
+            spec = spec.with_faults(faults);
             if open {
                 // Closed-loop knobs would be silently meaningless under
                 // the PR-3 open-loop replay; refuse them instead.
-                for flag in ["depth", "admit", "requests", "think-ns", "prio"] {
+                for flag in [
+                    "depth",
+                    "admit",
+                    "requests",
+                    "think-ns",
+                    "prio",
+                    "faults",
+                    "max-retries",
+                    "backoff-us",
+                    "timeout-factor",
+                ] {
                     if a.has(flag) {
                         bail!("--{flag} is a closed-loop knob; the --open replay runs one open-loop request per tenant");
                     }
@@ -574,6 +697,74 @@ fn main() -> Result<()> {
                     );
                 }
             }
+            if !r.faults.is_empty() {
+                for f in &r.faults {
+                    println!(
+                        "  fault {} device {} at {:.2} us (until {:.2} us): {} displaced, recover {:.2} us, lost wire {:.2} us pu {:.2} us",
+                        f.kind.label(),
+                        f.device,
+                        ps_to_us(f.at),
+                        ps_to_us(f.until),
+                        f.displaced,
+                        ps_to_us(f.recover),
+                        ps_to_us(f.lost_wire),
+                        ps_to_us(f.lost_pu)
+                    );
+                }
+                println!(
+                    "  lost work: wire {:.2} us, pu {:.2} us | failed requests {}",
+                    ps_to_us(r.lost_wire),
+                    ps_to_us(r.lost_pu),
+                    r.failed_requests
+                );
+            }
+        }
+        Some("scenario") => {
+            let cfg = build_config(&a)?;
+            let streams = a.get_as::<usize>("streams").unwrap_or(4);
+            let requests = a.get_as::<usize>("requests").unwrap_or(2);
+            let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
+            let coord = Coordinator::new(cfg);
+            let (base, faulted, at) = coord.run_failover_scenario(streams, requests, jobs);
+            let row = &faulted.faults[0];
+            if a.has("json") {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("fail_at_ps".into(), Json::Num(at as f64));
+                o.insert("recover_ps".into(), Json::Num(row.recover as f64));
+                o.insert("lost_wire_ps".into(), Json::Num(faulted.lost_wire as f64));
+                o.insert("lost_pu_ps".into(), Json::Num(faulted.lost_pu as f64));
+                o.insert("displaced".into(), Json::Num(row.displaced as f64));
+                o.insert("failed_requests".into(), Json::Num(faulted.failed_requests as f64));
+                o.insert("baseline_makespan_ps".into(), Json::Num(base.makespan as f64));
+                o.insert("faulted_makespan_ps".into(), Json::Num(faulted.makespan as f64));
+                o.insert("baseline_p50_slowdown".into(), Json::Num(base.p50_slowdown));
+                o.insert("faulted_p50_slowdown".into(), Json::Num(faulted.p50_slowdown));
+                o.insert("baseline_p99_slowdown".into(), Json::Num(base.p99_slowdown));
+                o.insert("faulted_p99_slowdown".into(), Json::Num(faulted.p99_slowdown));
+                println!("{}", Json::Obj(o));
+                return Ok(());
+            }
+            println!(
+                "failover scenario: {streams} tenant(s) x {requests} request(s) over 2 devices (strong+weak), device 0 fails at {:.2} us",
+                ps_to_us(at)
+            );
+            println!(
+                "  time-to-recover {:.2} us | {} displaced, {} failed | lost work wire {:.2} us pu {:.2} us",
+                ps_to_us(row.recover),
+                row.displaced,
+                faulted.failed_requests,
+                ps_to_us(faulted.lost_wire),
+                ps_to_us(faulted.lost_pu)
+            );
+            println!(
+                "  makespan {:.2} -> {:.2} us | slowdown p50 {:.3} -> {:.3}, p99 {:.3} -> {:.3}",
+                ps_to_us(base.makespan),
+                ps_to_us(faulted.makespan),
+                base.p50_slowdown,
+                faulted.p50_slowdown,
+                base.p99_slowdown,
+                faulted.p99_slowdown
+            );
         }
         Some("validate") => {
             let dir = a.get("artifacts").unwrap_or("artifacts");
@@ -611,6 +802,7 @@ fn main() -> Result<()> {
                 "fig16" => report::fig16(&cfg),
                 "fig17" | "tenants" => report::fig17(&cfg),
                 "fig19" | "sched" => report::fig19(&cfg),
+                "fig20" | "faults" => report::fig20(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

@@ -637,6 +637,122 @@ pub fn fig19(cfg: &SimConfig) {
     }
 }
 
+/// Fig. 20-ext (beyond the paper): fault injection and recovery. A
+/// mid-run **permanent failure** of the strong CCM device under the
+/// Fig. 19 strong+weak two-device closed loop, repeated under each of
+/// FCFS / WRR / DRR link arbitration. The kill instant is derived from
+/// each arbitration's fault-free baseline (the midpoint of the longest
+/// device-0 service window), so the failure always catches an in-flight
+/// offload; the scheduler kills the attempt, drains device 0's
+/// admission queue, and re-places everything onto the surviving weak
+/// device.
+///
+/// Row schema: per qos — the kill instant (`fail us`), time-to-recover
+/// (`recover us`: latest displaced request back in service, from the
+/// kill), displaced count, lost work (wire/PU picoseconds wasted on the
+/// killed attempts, printed in us), and p50/p99 request slowdown split
+/// by submission phase — `before` (submitted before the kill), `during`
+/// (within the recovery window), `after` (once recovered) — plus whole
+/// run host/CCM idle faulted vs. baseline. `failed` stays 0: every
+/// displaced request completes on the survivor.
+pub fn fig20(cfg: &SimConfig) {
+    header("Fig. 20-ext: mid-run device failure, recovery across qos arbitration");
+    println!(
+        "{:<5} {:>9} {:>11} {:>9} {:>7} {:>13} {:>13} {:>13} {:>13} {:>6} {:>17} {:>17}",
+        "qos",
+        "fail us",
+        "recover us",
+        "displaced",
+        "failed",
+        "lost w/p us",
+        "before 50/99",
+        "during 50/99",
+        "after 50/99",
+        "",
+        "host idle b/f",
+        "ccm idle b/f"
+    );
+    let pctile = |xs: &[f64], p: f64| -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[(((v.len() - 1) as f64) * p).round() as usize]
+    };
+    let phase_cell = |xs: &[f64]| -> String {
+        if xs.is_empty() {
+            "-".into()
+        } else {
+            format!("{:.2}/{:.2}", pctile(xs, 0.50), pctile(xs, 0.99))
+        }
+    };
+    let topo_base = crate::config::TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_override(
+        1,
+        crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
+    );
+    let spec = crate::config::SchedSpec::new(4)
+        .with_workloads(vec!['a', 'e'])
+        .with_policy(crate::config::PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_admit(2);
+    for qos in [
+        crate::config::QosSpec::fcfs(),
+        crate::config::QosSpec::wrr(vec![4, 1]),
+        crate::config::QosSpec::drr(vec![0.75, 0.25]),
+    ] {
+        let topo = topo_base.clone().with_qos(qos);
+        let base = crate::sched::run_sched(cfg, &topo, &spec, sweep::available_jobs());
+        // Kill device 0 mid-service: the engine is deterministic and
+        // bit-identical to the baseline up to the first fault event, so
+        // the midpoint of the baseline's longest device-0 service
+        // window is guaranteed to catch that request in flight.
+        let at = base
+            .requests
+            .iter()
+            .filter(|q| q.device == 0 && q.completion > q.admit + 1)
+            .max_by_key(|q| q.completion - q.admit)
+            .map(|q| q.admit + (q.completion - q.admit) / 2)
+            .unwrap_or(base.makespan / 2);
+        let faults =
+            crate::config::FaultSpec::with(vec![crate::config::FaultEvent::fail(0, at)]);
+        let r = crate::sched::run_sched(
+            cfg,
+            &topo,
+            &spec.clone().with_faults(faults),
+            sweep::available_jobs(),
+        );
+        let row = &r.faults[0];
+        let recovered = at + row.recover;
+        let (mut before, mut during, mut after) = (Vec::new(), Vec::new(), Vec::new());
+        for q in &r.requests {
+            let bucket = if q.submit < at {
+                &mut before
+            } else if q.submit < recovered {
+                &mut during
+            } else {
+                &mut after
+            };
+            bucket.push(q.slowdown());
+        }
+        println!(
+            "{:<5} {:>9.2} {:>11.2} {:>9} {:>7} {:>13} {:>13} {:>13} {:>13} {:>6} {:>17} {:>17}",
+            r.qos.label(),
+            ps_to_us(at),
+            ps_to_us(row.recover),
+            row.displaced,
+            r.failed_requests,
+            format!("{:.1}/{:.1}", ps_to_us(r.lost_wire), ps_to_us(r.lost_pu)),
+            phase_cell(&before),
+            phase_cell(&during),
+            phase_cell(&after),
+            "",
+            format!("{:.1}%/{:.1}%", 100.0 * base.host_idle_frac(), 100.0 * r.host_idle_frac()),
+            format!("{:.1}%/{:.1}%", 100.0 * base.ccm_idle_frac(), 100.0 * r.ccm_idle_frac())
+        );
+    }
+}
+
 /// Table I echo: what each workload offloads.
 pub fn table1() {
     header("Table I: offloaded functions");
@@ -691,6 +807,11 @@ mod tests {
     }
 
     #[test]
+    fn fault_report_runs() {
+        fig20(&SimConfig::m2ndp());
+    }
+
+    #[test]
     fn fig10_and_idle_reports_run() {
         let cfg = SimConfig::m2ndp();
         fig10(&cfg);
@@ -730,4 +851,5 @@ pub fn all() {
     fig16(&cfg);
     fig17(&cfg);
     fig19(&cfg);
+    fig20(&cfg);
 }

@@ -74,7 +74,7 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::config::{PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec};
+use crate::config::{FaultKind, PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec};
 use crate::metrics::percentile;
 use crate::sim::{ps_to_us, transfer_ps, Ps, US};
 use crate::sweep::{self, SpecJob, TracedRun};
@@ -84,6 +84,7 @@ use crate::topo::DeviceStats;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
+use super::fault::{FaultOutcome, FaultRuntime, Loc, ReqState};
 use super::policy::{policy_for, required_candidates, Candidate, Observed};
 
 /// One scheduled request's outcome.
@@ -114,12 +115,25 @@ pub struct RequestRun {
     pub pu_wait: Ps,
     /// Absolute completion time.
     pub completion: Ps,
+    /// Time lost to fault recovery: killed attempts' forfeited service
+    /// plus retry backoff delays. Zero on every fault-free run.
+    pub retry_wait: Ps,
+    /// Retry attempts this request consumed (kills + timeouts; free
+    /// re-placements after a device failure are not retries).
+    pub retries: u32,
+    /// Placement provenance: every device this request was queued on,
+    /// in order. A single entry on fault-free runs.
+    pub placed_on: Vec<u32>,
+    /// The request was dropped after exhausting `max_retries` (only
+    /// possible under an injected fault schedule).
+    pub failed: bool,
 }
 
 impl RequestRun {
-    /// Time spent waiting in the device's admission queue.
+    /// Time spent waiting in the device's admission queue (across all
+    /// placements; the fault-recovery share is carried by `retry_wait`).
     pub fn queue_wait(&self) -> Ps {
-        self.admit - self.submit
+        (self.admit - self.submit).saturating_sub(self.retry_wait)
     }
 
     /// Wire-contention component (same max accounting as
@@ -129,7 +143,9 @@ impl RequestRun {
     }
 
     /// End-to-end request latency as the tenant sees it:
-    /// `queue_wait + solo + wire_wait + pu_wait`.
+    /// `queue_wait + solo + wire_wait + pu_wait + retry_wait` (the last
+    /// term is zero without injected faults). Failed requests close at
+    /// their drop instant with zeroed service charges.
     pub fn total(&self) -> Ps {
         self.completion - self.submit
     }
@@ -162,6 +178,17 @@ impl RequestRun {
         o.insert("total_ps".into(), Json::Num(self.total() as f64));
         o.insert("completion_ps".into(), Json::Num(self.completion as f64));
         o.insert("slowdown".into(), Json::Num(self.slowdown()));
+        // Fault-recovery keys are sparse: fault-free request records stay
+        // byte-identical to their pre-fault-layer JSON.
+        if self.retries > 0 || self.failed {
+            o.insert("retries".into(), Json::Num(self.retries as f64));
+            o.insert("retry_wait_ps".into(), Json::Num(self.retry_wait as f64));
+            o.insert("failed".into(), Json::Bool(self.failed));
+        }
+        if self.placed_on.len() > 1 {
+            let devs = self.placed_on.iter().map(|&d| Json::Num(d as f64)).collect();
+            o.insert("placed_on".into(), Json::Arr(devs));
+        }
         Json::Obj(o)
     }
 }
@@ -183,7 +210,9 @@ pub struct SchedReport {
     pub admit: usize,
     /// All requests, sorted by `(tenant, index)`.
     pub requests: Vec<RequestRun>,
-    /// Per-device aggregates (`tenants` counts *requests served*).
+    /// Per-device aggregates (`tenants` counts *placements*: one per
+    /// request on fault-free runs, and one per fault-driven re-placement
+    /// on top of that, so the sum may exceed the request count).
     pub devices: Vec<DeviceStats>,
     pub fabric: FabricReport,
     /// Last completion across all requests.
@@ -192,12 +221,23 @@ pub struct SchedReport {
     pub p99_slowdown: f64,
     pub max_slowdown: f64,
     /// Aggregate host busy time across requests' solo runs (sum, not
-    /// union — the host pool is not contended by this layer).
+    /// union — the host pool is not contended by this layer). Failed
+    /// requests contribute nothing: their solo work never completed.
     pub host_busy: Ps,
     /// Sum over devices of the CCM pool busy-union.
     pub ccm_busy: Ps,
     /// Requests per chosen protocol (the policy's decision mix).
     pub proto_mix: BTreeMap<&'static str, u64>,
+    /// Per-fault outcomes (time-to-recover, displacement, lost work) in
+    /// spec order. Empty without an injected fault schedule.
+    pub faults: Vec<FaultOutcome>,
+    /// Total device-wire picoseconds wasted on killed in-service
+    /// attempts across all faults.
+    pub lost_wire: Ps,
+    /// Total CCM PU picoseconds wasted on killed in-service attempts.
+    pub lost_pu: Ps,
+    /// Requests dropped after exhausting the retry budget.
+    pub failed_requests: usize,
 }
 
 impl SchedReport {
@@ -298,13 +338,23 @@ impl SchedReport {
         o.insert("host_idle_frac".into(), Json::Num(self.host_idle_frac()));
         o.insert("ccm_idle_frac".into(), Json::Num(self.ccm_idle_frac()));
         o.insert("proto_mix".into(), Json::Obj(mix));
+        // Sparse, like the per-request retry keys: a run without a fault
+        // schedule keeps its pre-fault-layer JSON byte for byte.
+        if !self.faults.is_empty() {
+            o.insert("faults".into(), Json::Arr(self.faults.iter().map(|f| f.to_json()).collect()));
+            o.insert("lost_wire_ps".into(), Json::Num(self.lost_wire as f64));
+            o.insert("lost_pu_ps".into(), Json::Num(self.lost_pu as f64));
+            o.insert("failed_requests".into(), Json::Num(self.failed_requests as f64));
+        }
         Json::Obj(o)
     }
 }
 
-/// One printable line per request (the `axle sched` table body).
+/// One printable line per request (the `axle sched` table body). Rows
+/// touched by fault recovery carry a trailing retry/failure marker;
+/// fault-free rows print exactly as before.
 pub fn format_request_row(r: &RequestRun) -> String {
-    format!(
+    let mut row = format!(
         "#{:<3}.{:<2} ({}) c{:<2} dev {:<2} {:<6} sub {:>10.2} us  q {:>8.2} us  solo {:>10.2} us  +wire {:>8.2} us  +pu {:>8.2} us  x{:<5.3}",
         r.tenant,
         r.index,
@@ -318,7 +368,16 @@ pub fn format_request_row(r: &RequestRun) -> String {
         ps_to_us(r.wire_wait()),
         ps_to_us(r.pu_wait),
         r.slowdown()
-    )
+    );
+    if r.retries > 0 || r.failed {
+        row.push_str(&format!(
+            "  +retry {:>8.2} us (x{}){}",
+            ps_to_us(r.retry_wait),
+            r.retries,
+            if r.failed { " FAILED" } else { "" }
+        ));
+    }
+    row
 }
 
 // ------------------------------------------------------------------
@@ -378,6 +437,27 @@ impl LinkCalendar {
     fn busy_union(&self) -> Ps {
         self.busy_total
     }
+
+    /// Drop everything scheduled at or after `now`: future intervals are
+    /// removed outright, an interval straddling `now` is clipped (its
+    /// message really started, so it keeps its message count). Used when
+    /// a device dies mid-run — its booked future wire time is phantom
+    /// work that must not appear in the busy union. Safe on an empty or
+    /// fully-past calendar (both are no-ops).
+    fn truncate(&mut self, now: Ps) {
+        let cut: Vec<Ps> = self.busy.range(now..).map(|(&s, _)| s).collect();
+        for s in cut {
+            let e = self.busy.remove(&s).expect("interval listed from the calendar");
+            self.busy_total -= e - s;
+            self.msgs -= 1;
+        }
+        if let Some((&s, &e)) = self.busy.range(..now).next_back() {
+            if e > now {
+                self.busy.insert(s, now);
+                self.busy_total -= e - now;
+            }
+        }
+    }
 }
 
 /// Earliest-free PU pool for online (admission-order) dispatch. Unlike
@@ -434,6 +514,27 @@ impl OnlinePool {
         }
         union
     }
+
+    /// Drop PU work scheduled at or after `now` (mirror of
+    /// [`LinkCalendar::truncate`]): future spans are removed, straddling
+    /// spans clipped. The free heap is left alone — a dead device never
+    /// dispatches again, so only the busy accounting matters.
+    fn truncate(&mut self, now: Ps) {
+        let mut i = 0;
+        while i < self.spans.len() {
+            let (s, e) = self.spans[i];
+            if s >= now {
+                self.busy_total -= e - s;
+                self.spans.swap_remove(i);
+            } else {
+                if e > now {
+                    self.busy_total -= e - now;
+                    self.spans[i].1 = now;
+                }
+                i += 1;
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------------------
@@ -474,6 +575,21 @@ struct DevState {
     queue: VecDeque<u32>,
     in_service: usize,
     stats: DeviceStats,
+    /// `false` once a permanent failure removes the device. Dead devices
+    /// are never placement targets and never admit.
+    alive: bool,
+    /// `false` while a transient stall (or permanent failure) holds the
+    /// admission gate shut; [`try_admit`] is a no-op then.
+    admit_open: bool,
+    /// Link-degradation factor: effective bandwidth is
+    /// `link_bw / bw_factor`. Exactly `1.0` outside degradation windows
+    /// (and `x / 1.0` is exact in IEEE 754, keeping fault-free and
+    /// post-window charging bit-identical).
+    bw_factor: f64,
+    /// PU-degradation factor: CCM lease durations scale by it on
+    /// dispatch. Exactly `1.0` outside degradation windows (guarded, so
+    /// no float round-trip touches the undegraded path).
+    pu_factor: f64,
 }
 
 struct TenantState {
@@ -484,7 +600,14 @@ struct TenantState {
 
 /// Event ordering: `(time, kind, id, seq)` with completions (kind 0)
 /// before submissions (kind 1) at equal times, so freed windows and
-/// service slots are visible to same-instant submissions.
+/// service slots are visible to same-instant submissions. Fault
+/// schedules add kind 2 (fault transition: `id` = spec event index,
+/// `seq` = 0 start / 1 window end), kind 3 (requeue arrival after
+/// backoff: `id` = request, `seq` = attempt) and kind 4 (queued-request
+/// timeout check: `id` = request, `seq` = attempt). Completion events
+/// pack the attempt into `id`'s high 32 bits (device in the low bits) so
+/// stale completions of killed attempts are dropped; fault-free runs
+/// never leave attempt 0, keeping their tuples bit-identical.
 type Ev = (Ps, u8, u64, u64);
 
 /// The solo pass's full output: device classes plus per-class candidate
@@ -646,6 +769,10 @@ pub(super) fn run_closed(
             queue: VecDeque::new(),
             in_service: 0,
             stats: DeviceStats::default(),
+            alive: true,
+            admit_open: true,
+            bw_factor: 1.0,
+            pu_factor: 1.0,
         })
         .collect();
     let mut fabric = Fabric {
@@ -661,6 +788,32 @@ pub(super) fn run_closed(
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut rr_next = 0usize;
 
+    // Fault-injection runtime: constructed only when the spec schedules
+    // events. The fault-free path never builds one, never reroutes
+    // placement, and never packs a nonzero attempt into an event id —
+    // the empty-FaultSpec bit-identity pin in tests/sched_regression.rs.
+    let mut fx: Option<FaultRuntime> = if spec.faults.is_empty() {
+        None
+    } else {
+        spec.faults
+            .validate(topo_spec.devices)
+            .unwrap_or_else(|e| panic!("invalid fault spec: {e}"));
+        Some(FaultRuntime::new(&spec.faults))
+    };
+    if fx.is_some() {
+        for (i, e) in spec.faults.events.iter().enumerate() {
+            // Zero-duration degrade/stall windows schedule no runtime
+            // transitions at all — such a run stays bit-identical to
+            // fault-free (their outcome rows still report, with zeros).
+            if e.kind == FaultKind::Fail || e.until > e.at {
+                heap.push(Reverse((e.at, 2, i as u64, 0)));
+            }
+            if e.kind != FaultKind::Fail && e.until > e.at {
+                heap.push(Reverse((e.until, 2, i as u64, 1)));
+            }
+        }
+    }
+
     // Seeded per-tenant start stagger (same role as the open-loop
     // arrival jitter: break exact ties without coupling tenants).
     let mut rng = Pcg32::seed_from_u64(spec.seed ^ 0x5C4E_D0C1_05ED_0001);
@@ -671,69 +824,173 @@ pub(super) fn run_closed(
     }
 
     while let Some(Reverse((now, kind, id, seq))) = heap.pop() {
-        if kind == 0 {
-            // ---- Completion on device `id` of request `seq`. ----
-            let d = id as usize;
-            let t = requests[seq as usize].tenant as usize;
-            devs[d].in_service -= 1;
-            tenants[t].outstanding -= 1;
-            schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
-            try_admit(now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap);
-        } else {
-            // ---- Submission by tenant `id`. ----
-            let t = id as usize;
-            tenants[t].submit_scheduled = false;
-            let annot = annots[t];
-            let index = tenants[t].next_index as u32;
-            tenants[t].next_index += 1;
-            tenants[t].outstanding += 1;
-            // Place (shared helper with the open-loop Topology::place),
-            // then let the policy pick the protocol for the chosen
-            // device's class.
-            let d = crate::topo::place_device(
-                topo_spec.placement,
-                devs.len(),
-                |i| devs[i].stats.load,
-                &mut rr_next,
-            );
-            let obs = Observed {
-                mem_backlog: devs[d].mem.tail().saturating_sub(now),
-                io_backlog: devs[d].io.tail().saturating_sub(now),
-                pu_backlog: devs[d].pool.earliest_free().saturating_sub(now),
-                queued: devs[d].queue.len(),
-            };
-            let proto = policy.choose(&cand_table[&(devs[d].class, annot)], &obs);
-            let solo_total = table.get(devs[d].class, annot, proto).run.metrics.total;
-            let rid = requests.len() as u32;
-            requests.push(RequestRun {
-                tenant: t as u32,
-                index,
-                annot,
-                class: spec.priority(t),
-                device: d as u32,
-                proto,
-                submit: now,
-                admit: now,
-                solo: solo_total,
-                device_wait: 0,
-                fabric_wait: 0,
-                pu_wait: 0,
-                completion: now,
-            });
-            devs[d].stats.tenants += 1;
-            devs[d].stats.load += solo_total;
-            devs[d].queue.push_back(rid);
-            try_admit(now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap);
-            // Window depth > 1: the tenant may pipeline its next request.
-            schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
+        match kind {
+            0 => {
+                // ---- Completion on device `id & u32::MAX` of request
+                // `seq`, scheduled under attempt `id >> 32`. ----
+                let d = (id & u32::MAX as u64) as usize;
+                if let Some(f) = fx.as_mut() {
+                    if f.rstate[seq as usize].attempt != (id >> 32) as u32 {
+                        // Stale completion of a killed or suspended
+                        // attempt: the kill already released the slot.
+                        continue;
+                    }
+                    f.rstate[seq as usize].loc = Loc::Done;
+                }
+                let t = requests[seq as usize].tenant as usize;
+                devs[d].in_service -= 1;
+                tenants[t].outstanding -= 1;
+                schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
+                try_admit(
+                    now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap,
+                    &mut fx,
+                );
+            }
+            1 => {
+                // ---- Submission by tenant `id`. ----
+                let t = id as usize;
+                tenants[t].submit_scheduled = false;
+                let annot = annots[t];
+                let index = tenants[t].next_index as u32;
+                tenants[t].next_index += 1;
+                tenants[t].outstanding += 1;
+                // Place (shared helper with the open-loop
+                // Topology::place; under a fault schedule the fault-aware
+                // variant that avoids dead and stalled devices), then let
+                // the policy pick the protocol for the chosen device's
+                // class.
+                let d = if fx.is_some() {
+                    pick_device(topo_spec, &devs, &mut rr_next)
+                } else {
+                    crate::topo::place_device(
+                        topo_spec.placement,
+                        devs.len(),
+                        |i| devs[i].stats.load,
+                        &mut rr_next,
+                    )
+                };
+                let obs = Observed {
+                    mem_backlog: devs[d].mem.tail().saturating_sub(now),
+                    io_backlog: devs[d].io.tail().saturating_sub(now),
+                    pu_backlog: devs[d].pool.earliest_free().saturating_sub(now),
+                    queued: devs[d].queue.len(),
+                };
+                let proto = policy.choose(&cand_table[&(devs[d].class, annot)], &obs);
+                let solo_total = table.get(devs[d].class, annot, proto).run.metrics.total;
+                let rid = requests.len() as u32;
+                requests.push(RequestRun {
+                    tenant: t as u32,
+                    index,
+                    annot,
+                    class: spec.priority(t),
+                    device: d as u32,
+                    proto,
+                    submit: now,
+                    admit: now,
+                    solo: solo_total,
+                    device_wait: 0,
+                    fabric_wait: 0,
+                    pu_wait: 0,
+                    completion: now,
+                    retry_wait: 0,
+                    retries: 0,
+                    placed_on: vec![d as u32],
+                    failed: false,
+                });
+                devs[d].stats.tenants += 1;
+                devs[d].stats.load += solo_total;
+                devs[d].queue.push_back(rid);
+                if let Some(f) = fx.as_mut() {
+                    f.rstate.push(ReqState::queued(d as u32, now));
+                    if !devs[d].admit_open {
+                        // Forced onto a non-admitting device (everything
+                        // else is down): arm a timeout so the request
+                        // cannot be stranded if the device never recovers.
+                        let expiry = now + f.timeout(solo_total);
+                        heap.push(Reverse((expiry, 4, rid as u64, 0)));
+                    }
+                }
+                try_admit(
+                    now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap,
+                    &mut fx,
+                );
+                // Window depth > 1: the tenant may pipeline its next request.
+                schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
+            }
+            2 => {
+                // ---- Fault transition: spec event `id` starts (seq 0)
+                // or its window ends (seq 1). ----
+                if seq == 0 {
+                    fault_start(
+                        id as usize, now, topo_spec, spec, &mut devs, &mut tenants, table,
+                        &mut fabric, &mut requests, &mut heap, &mut rr_next, &mut fx,
+                    );
+                } else {
+                    fault_end(
+                        id as usize, now, spec, &mut devs, table, &mut fabric, &mut requests,
+                        &mut heap, &mut fx,
+                    );
+                }
+            }
+            3 => {
+                // ---- Requeue arrival: request `id` finished its backoff
+                // under attempt `seq`. ----
+                let rid = id as usize;
+                let live = {
+                    let f = fx.as_ref().expect("requeue events only exist in fault mode");
+                    f.rstate[rid].attempt == seq as u32 && f.rstate[rid].loc == Loc::Backoff
+                };
+                if live {
+                    re_place(
+                        rid, now, topo_spec, spec, &mut devs, table, &mut fabric, &mut requests,
+                        &mut heap, &mut rr_next, &mut fx,
+                    );
+                }
+            }
+            _ => {
+                // ---- Timeout check: request `id`, armed under attempt
+                // `seq`. Fires only if the request is still queued on a
+                // device that is still not admitting. ----
+                let rid = id as usize;
+                let stuck = {
+                    let f = fx.as_ref().expect("timeout events only exist in fault mode");
+                    let st = &f.rstate[rid];
+                    st.attempt == seq as u32
+                        && st.loc == Loc::Queued
+                        && !devs[st.loc_dev as usize].admit_open
+                };
+                if stuck {
+                    let f = fx.as_mut().expect("timeout events only exist in fault mode");
+                    let st = &mut f.rstate[rid];
+                    let d = st.loc_dev as usize;
+                    st.attempt += 1;
+                    let pos = devs[d]
+                        .queue
+                        .iter()
+                        .position(|&x| x == rid as u32)
+                        .expect("queued request present in its device's admission queue");
+                    devs[d].queue.remove(pos);
+                    retry_or_fail(rid, now, false, spec, &mut tenants, &mut requests, &mut heap, f);
+                }
+            }
         }
     }
 
     // ---- Assemble. ----
+    let (faults, lost_wire, lost_pu) = match fx {
+        Some(f) => {
+            let lw = f.outcomes.iter().map(|o| o.lost_wire).sum();
+            let lp = f.outcomes.iter().map(|o| o.lost_pu).sum();
+            (f.outcomes, lw, lp)
+        }
+        None => (Vec::new(), 0, 0),
+    };
     requests.sort_by_key(|r| (r.tenant, r.index));
+    let failed_requests = requests.iter().filter(|r| r.failed).count();
     let makespan = requests.iter().map(|r| r.completion).max().unwrap_or(0);
     let host_busy = requests
         .iter()
+        .filter(|r| !r.failed)
         .map(|r| table.get(devs[r.device as usize].class, r.annot, r.proto).run.metrics.host_busy)
         .sum();
     let mut proto_mix: BTreeMap<&'static str, u64> = BTreeMap::new();
@@ -782,6 +1039,10 @@ pub(super) fn run_closed(
         host_busy,
         ccm_busy,
         proto_mix,
+        faults,
+        lost_wire,
+        lost_pu,
+        failed_requests,
     }
 }
 
@@ -810,6 +1071,266 @@ fn schedule_submit(
     }
 }
 
+/// Fault-aware placement: among alive devices, preferring ones whose
+/// admission gate is open (not stalled). Only consulted when a fault
+/// schedule is active — the fault-free path calls
+/// [`crate::topo::place_device`] directly and identically (with every
+/// device alive and admitting the filtered variants choose the same
+/// device, so a schedule whose windows never open still matches
+/// fault-free placement exactly).
+fn pick_device(topo_spec: &TopologySpec, devs: &[DevState], rr_next: &mut usize) -> usize {
+    crate::topo::place_device_filtered(
+        topo_spec.placement,
+        devs.len(),
+        |i| devs[i].alive && devs[i].admit_open,
+        |i| devs[i].stats.load,
+        rr_next,
+    )
+    .or_else(|| {
+        // Everything alive is stalled: place on a stalled device anyway
+        // (timeouts keep the request from being stranded there).
+        crate::topo::place_device_filtered(
+            topo_spec.placement,
+            devs.len(),
+            |i| devs[i].alive,
+            |i| devs[i].stats.load,
+            rr_next,
+        )
+    })
+    .expect("validated fault spec leaves at least one device alive")
+}
+
+/// Apply fault event `i` at its onset `now`: install degradation
+/// factors, shut the admission gate (suspending in-service work and
+/// arming queue timeouts) on a stall, or remove the device outright on
+/// a permanent failure —
+/// killing in-service attempts (their charges become the fault's lost
+/// work), draining the queue onto survivors, and truncating the dead
+/// device's calendars and pool so its phantom future work vanishes from
+/// the busy accounting. The shared fabric calendar is deliberately NOT
+/// truncated: killed requests' upstream occupancy really blocked the
+/// wire, and that waste is what `lost_wire` measures.
+#[allow(clippy::too_many_arguments)]
+fn fault_start(
+    i: usize,
+    now: Ps,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    devs: &mut [DevState],
+    tenants: &mut [TenantState],
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut Vec<RequestRun>,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    rr_next: &mut usize,
+    fx: &mut Option<FaultRuntime>,
+) {
+    let e = spec.faults.events[i];
+    let d = e.device as usize;
+    match e.kind {
+        FaultKind::DegradePus => devs[d].pu_factor = e.factor,
+        FaultKind::DegradeLink => devs[d].bw_factor = e.factor,
+        FaultKind::Stall => {
+            devs[d].admit_open = false;
+            let f = fx.as_mut().expect("fault transitions only exist in fault mode");
+            // Suspend in-service work: completion (and its pu_wait
+            // charge) slides by the remaining window. The old completion
+            // event goes stale via the attempt bump; the device resumes
+            // where it left off, so these requests recover exactly at
+            // the window end.
+            let delta = e.until - now;
+            for rid in 0..requests.len() {
+                let st = &mut f.rstate[rid];
+                if st.loc == Loc::InService && st.loc_dev == d as u32 {
+                    let r = &mut requests[rid];
+                    r.completion += delta;
+                    r.pu_wait += delta;
+                    st.attempt += 1;
+                    let ev_id = ((st.attempt as u64) << 32) | d as u64;
+                    heap.push(Reverse((r.completion, 0, ev_id, rid as u64)));
+                    f.outcomes[i].displaced += 1;
+                    f.outcomes[i].recover = f.outcomes[i].recover.max(e.until - e.at);
+                }
+            }
+            // Queued work gets a requeue timeout sized from its solo
+            // estimate; it fires only if the device is still stalled.
+            for &rid in &devs[d].queue {
+                let st = &f.rstate[rid as usize];
+                let expiry = (st.enqueued + f.timeout(requests[rid as usize].solo)).max(now);
+                heap.push(Reverse((expiry, 4, rid as u64, st.attempt as u64)));
+            }
+        }
+        FaultKind::Fail => {
+            devs[d].alive = false;
+            devs[d].admit_open = false;
+            // Kill in-service attempts: wire/PU charges are lost work,
+            // the requests retry with backoff on surviving devices.
+            let killed: Vec<usize> = {
+                let f = fx.as_ref().expect("fault transitions only exist in fault mode");
+                (0..requests.len())
+                    .filter(|&rid| {
+                        let st = &f.rstate[rid];
+                        st.loc == Loc::InService && st.loc_dev == d as u32
+                    })
+                    .collect()
+            };
+            for &rid in &killed {
+                devs[d].in_service -= 1;
+                let f = fx.as_mut().expect("fault transitions only exist in fault mode");
+                let st = &mut f.rstate[rid];
+                st.attempt += 1;
+                st.displaced_by = Some(i);
+                let (w, p) = (st.attempt_wire, st.attempt_pu);
+                f.outcomes[i].displaced += 1;
+                f.outcomes[i].lost_wire += w;
+                f.outcomes[i].lost_pu += p;
+                retry_or_fail(rid, now, true, spec, tenants, requests, heap, f);
+            }
+            // Drain the admission queue in order onto survivors. These
+            // requests never started, so re-placement is free: no retry
+            // consumed, no backoff, queue time keeps accruing normally.
+            while let Some(rid) = devs[d].queue.pop_front() {
+                {
+                    let f = fx.as_mut().expect("fault transitions only exist in fault mode");
+                    f.outcomes[i].displaced += 1;
+                    f.rstate[rid as usize].displaced_by = Some(i);
+                }
+                re_place(
+                    rid as usize, now, topo_spec, spec, devs, table, fabric, requests, heap,
+                    rr_next, fx,
+                );
+            }
+            devs[d].mem.truncate(now);
+            devs[d].io.truncate(now);
+            devs[d].pool.truncate(now);
+        }
+    }
+}
+
+/// Close fault event `i`'s window at `now`: degradation factors reset
+/// to exactly 1.0, a stalled device reopens its admission gate and
+/// immediately admits what queued up during the window. Permanent
+/// failures never schedule an end event.
+#[allow(clippy::too_many_arguments)]
+fn fault_end(
+    i: usize,
+    now: Ps,
+    spec: &SchedSpec,
+    devs: &mut [DevState],
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut Vec<RequestRun>,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    fx: &mut Option<FaultRuntime>,
+) {
+    let e = spec.faults.events[i];
+    let d = e.device as usize;
+    match e.kind {
+        FaultKind::DegradePus => devs[d].pu_factor = 1.0,
+        FaultKind::DegradeLink => devs[d].bw_factor = 1.0,
+        FaultKind::Stall => {
+            // `alive` guard: a permanent failure may have struck after
+            // this stall began — the gate stays shut forever then.
+            if devs[d].alive {
+                devs[d].admit_open = true;
+                try_admit(now, d, spec, &mut devs[d], table, fabric, requests, heap, fx);
+            }
+        }
+        FaultKind::Fail => unreachable!("permanent failures schedule no end event"),
+    }
+}
+
+/// Queue request `rid` on a freshly chosen surviving device: placement
+/// provenance and load accounting are updated, the solo estimate is
+/// re-resolved against the new device's class (heterogeneous topologies
+/// may re-place onto a different class), and admission is attempted
+/// immediately. Used by requeue-after-backoff and the failure drain.
+#[allow(clippy::too_many_arguments)]
+fn re_place(
+    rid: usize,
+    now: Ps,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    devs: &mut [DevState],
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    requests: &mut Vec<RequestRun>,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    rr_next: &mut usize,
+    fx: &mut Option<FaultRuntime>,
+) {
+    let d = pick_device(topo_spec, devs, rr_next);
+    {
+        let r = &mut requests[rid];
+        r.device = d as u32;
+        r.placed_on.push(d as u32);
+        r.solo = table.get(devs[d].class, r.annot, r.proto).run.metrics.total;
+        devs[d].stats.tenants += 1;
+        devs[d].stats.load += r.solo;
+    }
+    devs[d].queue.push_back(rid as u32);
+    {
+        let f = fx.as_mut().expect("re-placement only exists in fault mode");
+        let st = &mut f.rstate[rid];
+        st.loc = Loc::Queued;
+        st.loc_dev = d as u32;
+        st.enqueued = now;
+        if !devs[d].admit_open {
+            // Forced onto a stalled device (everything else is down):
+            // arm a timeout so the run can never hang here.
+            let expiry = now + f.timeout(requests[rid].solo);
+            heap.push(Reverse((expiry, 4, rid as u64, st.attempt as u64)));
+        }
+    }
+    try_admit(now, d, spec, &mut devs[d], table, fabric, requests, heap, fx);
+}
+
+/// Consume one retry for request `rid` at `now`. Within budget: charge
+/// `retry_wait` (a killed in-service attempt forfeits its whole service
+/// time plus the backoff; a timed-out queued request pays only the
+/// backoff — its queue time stays inside `queue_wait`) and schedule the
+/// requeue arrival after exponential backoff. Out of budget: the
+/// request is dropped — its record closes at the drop instant with
+/// zeroed service charges (`failed = true`) and the tenant's window
+/// reopens so the rest of the run proceeds. Graceful degradation means
+/// a faulted run terminates either way.
+#[allow(clippy::too_many_arguments)]
+fn retry_or_fail(
+    rid: usize,
+    now: Ps,
+    from_service: bool,
+    spec: &SchedSpec,
+    tenants: &mut [TenantState],
+    requests: &mut [RequestRun],
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    f: &mut FaultRuntime,
+) {
+    let st = &mut f.rstate[rid];
+    st.retries += 1;
+    let r = &mut requests[rid];
+    r.retries = st.retries;
+    if st.retries > f.spec.max_retries {
+        st.loc = Loc::Failed;
+        r.failed = true;
+        if from_service {
+            r.retry_wait += now - r.admit;
+        }
+        r.admit = now;
+        r.device_wait = 0;
+        r.fabric_wait = 0;
+        r.pu_wait = 0;
+        r.completion = now;
+        let t = r.tenant as usize;
+        tenants[t].outstanding -= 1;
+        schedule_submit(&mut tenants[t], t, spec, now, heap);
+    } else {
+        let delay = f.backoff_delay(st.retries);
+        r.retry_wait += if from_service { (now - r.admit) + delay } else { delay };
+        st.loc = Loc::Backoff;
+        heap.push(Reverse((now + delay, 3, rid as u64, st.attempt as u64)));
+    }
+}
+
 /// Pop the next request to admit: the earliest-queued request of the
 /// highest priority class. With all classes equal the winner is index
 /// 0 — exactly the PR-4 FIFO `pop_front`, which keeps default-priority
@@ -825,7 +1346,10 @@ fn pop_admit(queue: &mut VecDeque<u32>, requests: &[RequestRun]) -> Option<u32> 
 /// The admission *batch* (everything entering service at this instant)
 /// is popped highest-class-first, then its wire traffic is charged
 /// either in pure admission order (FCFS — the PR-4 path, verbatim) or
-/// through the per-wire [`QosState`] schedulers (WRR/DRR).
+/// through the per-wire [`QosState`] schedulers (WRR/DRR). A stalled or
+/// dead device keeps its admission gate shut (`admit_open == false`)
+/// and this is a no-op — as it is on an empty queue, which any device
+/// can be drained to mid-run once faults redistribute work.
 #[allow(clippy::too_many_arguments)]
 fn try_admit(
     now: Ps,
@@ -836,7 +1360,11 @@ fn try_admit(
     fabric: &mut Fabric,
     requests: &mut [RequestRun],
     heap: &mut BinaryHeap<Reverse<Ev>>,
+    fx: &mut Option<FaultRuntime>,
 ) {
+    if !dev.admit_open {
+        return;
+    }
     let mut batch: Vec<u32> = Vec::new();
     while dev.in_service + batch.len() < spec.admit {
         let Some(rid) = pop_admit(&mut dev.queue, requests) else { break };
@@ -846,14 +1374,19 @@ fn try_admit(
         return;
     }
     if dev.qos_mem.is_none() {
-        admit_fcfs(now, d, dev, table, fabric, requests, heap, &batch);
+        admit_fcfs(now, d, dev, table, fabric, requests, heap, &batch, fx);
     } else {
-        admit_qos(now, d, spec.streams, dev, table, fabric, requests, heap, &batch);
+        admit_qos(now, d, spec.streams, dev, table, fabric, requests, heap, &batch, fx);
     }
 }
 
 /// Charge one admission batch in pure admission order — the PR-4 online
-/// contention accounting, kept verbatim (the FCFS bit-identity pin).
+/// contention accounting. Outside link-degradation windows
+/// `bw == dev.link_bw` exactly (`x / 1.0`), every lateness expression
+/// reduces to the historical `start - issue`, and the path stays the
+/// FCFS bit-identity pin; inside a window the device link serializes at
+/// `link_bw / bw_factor` and each message's own inflated serialization
+/// is charged against its full-bandwidth solo finish.
 #[allow(clippy::too_many_arguments)]
 fn admit_fcfs(
     now: Ps,
@@ -864,7 +1397,9 @@ fn admit_fcfs(
     requests: &mut [RequestRun],
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
+    fx: &mut Option<FaultRuntime>,
 ) {
+    let bw = dev.link_bw / dev.bw_factor;
     for &rid in batch {
         let (annot, proto) = {
             let r = &requests[rid as usize];
@@ -872,20 +1407,23 @@ fn admit_fcfs(
         };
         let s = table.get(dev.class, annot, proto);
         let a = now;
-        // Device-link replay: lateness is the start shift (the device's
-        // own link serializes at the same bandwidth the trace was
-        // recorded at).
+        // Device-link replay: lateness is the finish shift versus the
+        // solo finish at the trace's recorded bandwidth.
         let mut mem_late: Ps = 0;
         for m in &s.run.mem_trace {
             let issue = a + m.start;
-            let start = dev.mem.place(issue, transfer_ps(m.bytes, dev.link_bw));
-            mem_late = mem_late.max(start - issue);
+            let dur = transfer_ps(m.bytes, bw);
+            let start = dev.mem.place(issue, dur);
+            let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
+            mem_late = mem_late.max((start + dur).saturating_sub(solo_finish));
         }
         let mut io_late: Ps = 0;
         for m in &s.run.io_trace {
             let issue = a + m.start;
-            let start = dev.io.place(issue, transfer_ps(m.bytes, dev.link_bw));
-            io_late = io_late.max(start - issue);
+            let dur = transfer_ps(m.bytes, bw);
+            let start = dev.io.place(issue, dur);
+            let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
+            io_late = io_late.max((start + dur).saturating_sub(solo_finish));
         }
         // Shared-fabric replay: the same bytes cross the upstream link;
         // lateness compares against the solo finish at device bandwidth.
@@ -901,7 +1439,7 @@ fn admit_fcfs(
             }
         }
         finish_admission(
-            now, d, dev, table, fabric, requests, heap, rid, mem_late, io_late, fab_late,
+            now, d, dev, table, fabric, requests, heap, rid, mem_late, io_late, fab_late, fx,
         );
     }
 }
@@ -940,8 +1478,13 @@ fn admit_qos(
     requests: &mut [RequestRun],
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
+    fx: &mut Option<FaultRuntime>,
 ) {
     let a = now;
+    // Effective device-link bandwidth: degraded inside a fault window,
+    // exactly `link_bw` otherwise (`x / 1.0` — the bit-identity pin).
+    // Lateness always compares against the full-bandwidth solo finish.
+    let bw = dev.link_bw / dev.bw_factor;
     let n = batch.len();
     let mut mem_late: Vec<Ps> = vec![0; n];
     let mut io_late: Vec<Ps> = vec![0; n];
@@ -959,14 +1502,16 @@ fn admit_qos(
         let s = table.get(dev.class, annot, proto);
         for m in &s.run.mem_trace {
             let issue = a + m.start;
-            let dur = transfer_ps(m.bytes, dev.link_bw);
-            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish: issue + dur, slot };
+            let dur = transfer_ps(m.bytes, bw);
+            let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
+            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish, slot };
             mem_q[tenant].push(q);
         }
         for m in &s.run.io_trace {
             let issue = a + m.start;
-            let dur = transfer_ps(m.bytes, dev.link_bw);
-            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish: issue + dur, slot };
+            let dur = transfer_ps(m.bytes, bw);
+            let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
+            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish, slot };
             io_q[tenant].push(q);
         }
         if let Some((fbw, _)) = fabric.link.as_ref() {
@@ -1010,6 +1555,7 @@ fn admit_qos(
             mem_late[slot],
             io_late[slot],
             fab_late[slot],
+            fx,
         );
     }
 }
@@ -1065,6 +1611,13 @@ fn drain_qos(cal: &mut LinkCalendar, qos: &mut QosState, queues: &[Vec<QMsg>], l
 
 /// Fold one admitted request's charges into its record, the device
 /// stats and the event heap — shared tail of both admission paths.
+/// Under a PU-degradation window, lease durations scale by `pu_factor`
+/// on dispatch; the inflation lands in `pu_wait` because lateness is
+/// still measured against the undegraded solo lease end (guarded by an
+/// exact `== 1.0` check so the fault-free path never round-trips
+/// through floats). In fault mode this also records the attempt's
+/// wire/PU charges (the lost work if the attempt is later killed) and
+/// packs the attempt into the completion event id.
 #[allow(clippy::too_many_arguments)]
 fn finish_admission(
     now: Ps,
@@ -1078,6 +1631,7 @@ fn finish_admission(
     mem_late: Ps,
     io_late: Ps,
     fab_late: Ps,
+    fx: &mut Option<FaultRuntime>,
 ) {
     let (annot, proto) = {
         let r = &requests[rid as usize];
@@ -1085,10 +1639,12 @@ fn finish_admission(
     };
     let s = table.get(dev.class, annot, proto);
     // CCM PU-pool replay (earliest-free, admission order).
+    let f = dev.pu_factor;
+    let scale = |dur: Ps| if f == 1.0 { dur } else { (dur as f64 * f) as Ps };
     let mut pu_late: Ps = 0;
     for sp in &s.run.ccm_trace {
         let ready = now + sp.start;
-        let (_, end) = dev.pool.dispatch(ready, sp.dur());
+        let (_, end) = dev.pool.dispatch(ready, scale(sp.dur()));
         pu_late = pu_late.max(end - (ready + sp.dur()));
     }
     let r = &mut requests[rid as usize];
@@ -1103,7 +1659,26 @@ fn finish_admission(
     dev.stats.pu_wait += pu_late;
     dev.stats.bytes += s.mem_bytes + s.io_bytes;
     fabric.wait += fab_late;
-    heap.push(Reverse((r.completion, 0, d as u64, rid as u64)));
+    let mut attempt: u32 = 0;
+    if let Some(fxr) = fx.as_mut() {
+        let bw = dev.link_bw / dev.bw_factor;
+        let wire: Ps = s
+            .run
+            .mem_trace
+            .iter()
+            .chain(s.run.io_trace.iter())
+            .map(|m| transfer_ps(m.bytes, bw))
+            .sum();
+        let pu: Ps = s.run.ccm_trace.iter().map(|sp| scale(sp.dur())).sum();
+        let st = &mut fxr.rstate[rid as usize];
+        st.loc = Loc::InService;
+        st.loc_dev = d as u32;
+        st.attempt_wire = wire;
+        st.attempt_pu = pu;
+        attempt = st.attempt;
+        fxr.note_recovered(rid as usize, now);
+    }
+    heap.push(Reverse((r.completion, 0, ((attempt as u64) << 32) | d as u64, rid as u64)));
 }
 
 /// The open-loop pin: delegate to the PR-3 tenant driver verbatim and
@@ -1116,6 +1691,10 @@ fn run_sched_open(
     spec: &SchedSpec,
     jobs: usize,
 ) -> SchedReport {
+    assert!(
+        spec.faults.is_empty(),
+        "fault injection requires the closed-loop engine (drop --open)"
+    );
     let proto = match spec.policy {
         PolicyKind::Static(p) => p,
         _ => panic!(
@@ -1149,6 +1728,10 @@ fn run_sched_open(
             fabric_wait: t.fabric_wait,
             pu_wait: t.pu_wait,
             completion: t.arrival + t.total(),
+            retry_wait: 0,
+            retries: 0,
+            placed_on: vec![t.device],
+            failed: false,
         })
         .collect();
     let host_busy = r.tenants.iter().map(|t| t.solo.host_busy).sum();
@@ -1173,6 +1756,10 @@ fn run_sched_open(
         host_busy,
         ccm_busy,
         proto_mix,
+        faults: Vec::new(),
+        lost_wire: 0,
+        lost_pu: 0,
+        failed_requests: 0,
     }
 }
 
@@ -1195,6 +1782,10 @@ fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
         host_busy: 0,
         ccm_busy: 0,
         proto_mix: BTreeMap::new(),
+        faults: Vec::new(),
+        lost_wire: 0,
+        lost_pu: 0,
+        failed_requests: 0,
     }
 }
 
@@ -1399,6 +1990,10 @@ mod tests {
             fabric_wait: 0,
             pu_wait: 0,
             completion: 0,
+            retry_wait: 0,
+            retries: 0,
+            placed_on: vec![0],
+            failed: false,
         }
     }
 
@@ -1551,5 +2146,220 @@ mod tests {
         assert_eq!(r.qos, crate::config::QosPolicy::Wrr);
         assert!(r.class_slowdowns().is_empty());
         assert!(r.to_json().to_string().contains("\"qos\""));
+    }
+
+    // ---- Fault injection + recovery. ----
+
+    use crate::config::{FaultEvent, FaultSpec};
+
+    /// Two-device strong+weak topology with a fault schedule installed.
+    fn faulted(spec: SchedSpec, faults: FaultSpec) -> SchedReport {
+        let cfg = SimConfig::m2ndp();
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+        run_sched(&cfg, &topo, &spec.with_faults(faults), 2)
+    }
+
+    #[test]
+    fn calendar_truncate_drops_future_work_and_clips_straddlers() {
+        let mut cal = LinkCalendar::default();
+        cal.place(0, 100); // [0, 100)
+        cal.place(200, 100); // [200, 300)
+        cal.place(400, 100); // [400, 500)
+        cal.truncate(250);
+        // [400, 500) removed, [200, 300) clipped to [200, 250).
+        assert_eq!(cal.busy_union(), 150);
+        assert_eq!(cal.tail(), 250);
+        assert_eq!(cal.msgs, 2);
+        // No-ops: truncating past the tail, and an empty calendar.
+        cal.truncate(1000);
+        assert_eq!(cal.busy_union(), 150);
+        let mut empty = LinkCalendar::default();
+        empty.truncate(0);
+        assert_eq!(empty.busy_union(), 0);
+        // Truncating everything (a device dead from t=0) is also safe.
+        cal.truncate(0);
+        assert_eq!(cal.busy_union(), 0);
+        assert_eq!(cal.tail(), 0);
+    }
+
+    #[test]
+    fn pool_truncate_mirrors_calendar_semantics() {
+        let mut p = OnlinePool::new(2);
+        p.dispatch(0, 100); // [0, 100)
+        p.dispatch(0, 300); // [0, 300)
+        p.dispatch(150, 100); // [150, 250) hmm: earliest free is 100 → [150, 250)
+        p.truncate(200);
+        // [150, 250) clipped to [150, 200), [0, 300) clipped to [0, 200).
+        assert_eq!(p.busy_total, 100 + 200 + 50);
+        p.truncate(0);
+        assert_eq!(p.busy_total, 0);
+        assert_eq!(p.busy_union(), 0);
+        let mut empty = OnlinePool::new(1);
+        empty.truncate(50);
+        assert_eq!(empty.busy_total, 0);
+    }
+
+    #[test]
+    fn empty_fault_spec_is_structurally_fault_free() {
+        // `FaultSpec::default()` never constructs a FaultRuntime, so no
+        // fault keys appear in the JSON and nothing retries.
+        let r = faulted(light_spec(3), FaultSpec::default());
+        assert!(r.faults.is_empty());
+        assert_eq!((r.lost_wire, r.lost_pu, r.failed_requests), (0, 0, 0));
+        let json = r.to_json().to_string();
+        assert!(!json.contains("\"faults\""));
+        assert!(!json.contains("\"retries\""));
+        assert!(!json.contains("\"placed_on\""));
+        for q in &r.requests {
+            assert_eq!(q.retries, 0);
+            assert_eq!(q.retry_wait, 0);
+            assert_eq!(q.placed_on.len(), 1);
+            assert!(!q.failed);
+        }
+    }
+
+    /// A baseline request served on device 0, plus an instant strictly
+    /// inside its service window. The engine is deterministic and a
+    /// faulted run matches the fault-free one bit for bit up to its
+    /// first fault event, so a fault injected at this instant is
+    /// guaranteed to catch exactly this request in service.
+    fn mid_service_on_dev0(base: &SchedReport) -> (RequestRun, Ps) {
+        let q = base
+            .requests
+            .iter()
+            .filter(|q| q.device == 0 && q.completion > q.admit + 1)
+            .max_by_key(|q| q.completion - q.admit)
+            .expect("baseline places service on device 0");
+        (q.clone(), q.admit + (q.completion - q.admit) / 2)
+    }
+
+    #[test]
+    fn permanent_failure_completes_on_survivor_with_zero_lost_requests() {
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(3);
+        let base = faulted(spec.clone(), FaultSpec::default());
+        let (_, at) = mid_service_on_dev0(&base);
+        let r = faulted(spec, FaultSpec::with(vec![FaultEvent::fail(0, at)]));
+        assert_eq!(r.requests.len(), 12, "no request may be lost");
+        assert_eq!(r.failed_requests, 0, "survivor absorbs everything within the retry budget");
+        for q in &r.requests {
+            // Every request submitted after the failure ends on device 1.
+            if q.submit > at {
+                assert_eq!(q.device, 1);
+            }
+            assert!(!q.failed);
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait
+            );
+        }
+        let row = &r.faults[0];
+        assert_eq!(row.kind, crate::config::FaultKind::Fail);
+        assert_eq!((row.device, row.at, row.until), (0, at, at));
+        // The kill caught at least one in-service attempt: displaced and
+        // retried work, wasted wire/PU charges, time-to-recover.
+        assert!(row.displaced > 0, "mid-service kill must displace live work");
+        assert!(row.recover > 0, "displaced work must re-enter service after the fault");
+        assert!(row.lost_wire + row.lost_pu > 0, "killed attempt charges count as lost work");
+        assert!(r.requests.iter().any(|q| q.retries > 0));
+        assert_eq!((r.lost_wire, r.lost_pu), (row.lost_wire, row.lost_pu));
+        // Provenance: displaced requests record both devices.
+        assert!(r.requests.iter().any(|q| q.placed_on.len() > 1));
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"faults\"") && json.contains("\"recover_ps\""));
+    }
+
+    #[test]
+    fn stall_window_suspends_and_recovers() {
+        let spec = SchedSpec::new(2)
+            .with_workloads(vec!['f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(2);
+        let base = faulted(spec.clone(), FaultSpec::default());
+        let (victim, at) = mid_service_on_dev0(&base);
+        let until = at + 300 * US;
+        let r = faulted(spec, FaultSpec::with(vec![FaultEvent::stall(0, at, until)]));
+        assert_eq!(r.requests.len(), 4);
+        assert_eq!(r.failed_requests, 0);
+        let row = &r.faults[0];
+        // The suspended in-service attempt cannot resume before the
+        // window closes, so recovery spans at least the window.
+        assert!(row.displaced > 0, "mid-service stall must suspend live work");
+        assert!(row.recover >= until - at);
+        assert_eq!((row.lost_wire, row.lost_pu), (0, 0), "stalls waste no completed work");
+        // Suspension slides the victim's completion by exactly the
+        // remaining window, charged to its pu_wait.
+        let rq = r
+            .requests
+            .iter()
+            .find(|q| q.tenant == victim.tenant && q.index == victim.index)
+            .expect("victim request present");
+        assert_eq!(rq.completion, victim.completion + (until - at));
+        assert_eq!(rq.pu_wait, victim.pu_wait + (until - at));
+        for q in &r.requests {
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait
+            );
+        }
+    }
+
+    #[test]
+    fn degradation_slows_work_without_displacing_it() {
+        let spec = SchedSpec::new(3)
+            .with_workloads(vec!['a'])
+            .with_policy(PolicyKind::Static(Protocol::Bs))
+            .with_requests(2)
+            .with_admit(3);
+        let base = faulted(spec.clone(), FaultSpec::default());
+        // Degrade both resources of device 0 heavily over a long window.
+        let r = faulted(
+            spec,
+            FaultSpec::with(vec![
+                FaultEvent::degrade_pus(0, 0, 4_000_000 * US, 8.0),
+                FaultEvent::degrade_link(0, 0, 4_000_000 * US, 8.0),
+            ]),
+        );
+        assert_eq!(r.requests.len(), base.requests.len());
+        assert_eq!(r.failed_requests, 0);
+        for row in &r.faults {
+            assert_eq!(row.displaced, 0, "degradation displaces nothing");
+            assert_eq!(row.recover, 0);
+        }
+        assert!(
+            r.makespan > base.makespan,
+            "an 8x degraded device must stretch the run ({} vs {})",
+            r.makespan,
+            base.makespan
+        );
+        for q in &r.requests {
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait
+            );
+        }
+    }
+
+    #[test]
+    fn fault_mode_placement_matches_fault_free_before_any_fault() {
+        // A schedule whose only window opens after the run ends leaves
+        // request-level results identical to fault-free (the outcome
+        // rows differ, so compare per-request fields, not whole JSON).
+        let spec = light_spec(3);
+        let base = faulted(spec.clone(), FaultSpec::default());
+        let far = faulted(
+            spec,
+            FaultSpec::with(vec![FaultEvent::stall(0, 4_000_000_000 * US, 4_000_001_000 * US)]),
+        );
+        assert_eq!(base.requests.len(), far.requests.len());
+        for (a, b) in base.requests.iter().zip(far.requests.iter()) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+        assert_eq!(base.makespan, far.makespan);
+        assert_eq!(far.faults.len(), 1);
+        assert_eq!(far.faults[0].displaced, 0);
     }
 }

@@ -1,0 +1,243 @@
+//! Fault-injection runtime for the closed-loop scheduler.
+//!
+//! The ROADMAP's production-traffic gap starts here: every run so far
+//! assumed devices that never fail. This module holds the *state* a
+//! faulted run threads through [`super::driver`] — the driver owns the
+//! event loop and the recovery transitions; this file owns what they
+//! read and write:
+//!
+//! - [`FaultRuntime`] — the per-run bundle: the validated
+//!   [`FaultSpec`], one [`ReqState`] per submitted request (attempt
+//!   counter, lifecycle location, charge accounting for lost work), and
+//!   one [`FaultOutcome`] per scheduled fault event.
+//! - [`FaultOutcome`] — what one injected fault *cost*: how many
+//!   requests it displaced, the time-to-recover (last displaced request
+//!   back in service, measured from the fault instant), and the wasted
+//!   wire/PU picoseconds of killed in-service attempts.
+//!
+//! **Recovery model** (enforced by the driver, documented in
+//! `docs/ARCHITECTURE.md`):
+//!
+//! - A **stall** suspends in-service work (completion slides by the
+//!   remaining window, charged to `pu_wait`) and arms a timeout on each
+//!   queued request, sized `solo × timeout_factor`. A request whose
+//!   timeout fires while its device is still not admitting is pulled
+//!   from the queue and retried elsewhere after exponential backoff.
+//! - A **permanent failure** kills in-service attempts (their wire/PU
+//!   charges are the fault's lost work, the attempts retry with
+//!   backoff) and drains the admission queue in order onto surviving
+//!   devices (free re-placement — that work never started).
+//! - Retries are bounded by `max_retries`; a request that exhausts them
+//!   is dropped (`failed = true`) and releases its tenant window, so a
+//!   faulted run always terminates.
+//!
+//! The attempt counter is the staleness guard: every scheduled
+//! completion carries the attempt it was issued under, and the driver
+//! drops completions whose attempt no longer matches. Fault-free runs
+//! never leave attempt 0, which keeps their event tuples — and hence
+//! the whole report — bit-identical to a run without this module.
+
+use crate::config::{FaultKind, FaultSpec};
+use crate::sim::Ps;
+use crate::util::json::Json;
+
+/// Where one request currently is in its fault-aware lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum Loc {
+    /// Waiting in a device's admission queue.
+    Queued,
+    /// Admitted; a completion event is in flight.
+    InService,
+    /// Between attempts, waiting out an exponential-backoff delay.
+    Backoff,
+    /// Completed.
+    Done,
+    /// Dropped after exhausting `max_retries`.
+    Failed,
+}
+
+/// Per-request recovery bookkeeping, indexed by request id.
+#[derive(Debug, Clone)]
+pub(super) struct ReqState {
+    /// Bumped on every kill/suspend/timeout; completions carry the
+    /// attempt they were scheduled under and stale ones are dropped.
+    pub attempt: u32,
+    /// Retry count (kills + timeouts; free failure-drain re-placements
+    /// are not retries).
+    pub retries: u32,
+    pub loc: Loc,
+    /// Device currently holding the request (queue or service).
+    pub loc_dev: u32,
+    /// When the request last entered an admission queue (timeout base).
+    pub enqueued: Ps,
+    /// Device-wire picoseconds charged for the current attempt — lost
+    /// work if the attempt is killed.
+    pub attempt_wire: Ps,
+    /// CCM PU picoseconds charged for the current attempt.
+    pub attempt_pu: Ps,
+    /// Fault event that displaced the current attempt, if any; cleared
+    /// (and folded into that fault's time-to-recover) on re-admission.
+    pub displaced_by: Option<usize>,
+}
+
+impl ReqState {
+    pub fn queued(dev: u32, now: Ps) -> Self {
+        Self {
+            attempt: 0,
+            retries: 0,
+            loc: Loc::Queued,
+            loc_dev: dev,
+            enqueued: now,
+            attempt_wire: 0,
+            attempt_pu: 0,
+            displaced_by: None,
+        }
+    }
+}
+
+/// What one injected fault event cost the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOutcome {
+    /// Device the fault struck.
+    pub device: u32,
+    pub kind: FaultKind,
+    /// Fault onset (ps).
+    pub at: Ps,
+    /// Window end (`== at` for permanent failures and zero-duration
+    /// windows).
+    pub until: Ps,
+    /// Requests displaced: in-service attempts killed or suspended plus
+    /// queued requests redistributed or timed out because of this fault.
+    pub displaced: u32,
+    /// Time-to-recover: latest displaced request's return to service,
+    /// measured from `at`. Zero when nothing was displaced (pure
+    /// degradation slows work but displaces none).
+    pub recover: Ps,
+    /// Device-wire picoseconds wasted on killed in-service attempts.
+    pub lost_wire: Ps,
+    /// CCM PU picoseconds wasted on killed in-service attempts.
+    pub lost_pu: Ps,
+}
+
+impl FaultOutcome {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("device".into(), Json::Num(self.device as f64));
+        o.insert("kind".into(), Json::Str(self.kind.label().into()));
+        o.insert("at_ps".into(), Json::Num(self.at as f64));
+        o.insert("until_ps".into(), Json::Num(self.until as f64));
+        o.insert("displaced".into(), Json::Num(self.displaced as f64));
+        o.insert("recover_ps".into(), Json::Num(self.recover as f64));
+        o.insert("lost_wire_ps".into(), Json::Num(self.lost_wire as f64));
+        o.insert("lost_pu_ps".into(), Json::Num(self.lost_pu as f64));
+        Json::Obj(o)
+    }
+}
+
+/// The per-run fault state the driver threads through its event loop.
+/// Present (`Some`) exactly when the spec schedules at least one event;
+/// the fault-free path never constructs one.
+#[derive(Debug)]
+pub(super) struct FaultRuntime {
+    pub spec: FaultSpec,
+    /// One entry per submitted request, indexed by request id.
+    pub rstate: Vec<ReqState>,
+    /// One row per spec event, in spec order, updated as faults land.
+    pub outcomes: Vec<FaultOutcome>,
+}
+
+impl FaultRuntime {
+    pub fn new(spec: &FaultSpec) -> Self {
+        let outcomes = spec
+            .events
+            .iter()
+            .map(|e| FaultOutcome {
+                device: e.device,
+                kind: e.kind,
+                at: e.at,
+                until: if e.kind == FaultKind::Fail { e.at } else { e.until },
+                displaced: 0,
+                recover: 0,
+                lost_wire: 0,
+                lost_pu: 0,
+            })
+            .collect();
+        Self { spec: spec.clone(), rstate: Vec::new(), outcomes }
+    }
+
+    /// Exponential-backoff delay before retry `retry` (1-based):
+    /// `backoff << (retry - 1)`, shift capped so the delay saturates
+    /// instead of wrapping.
+    pub fn backoff_delay(&self, retry: u32) -> Ps {
+        self.spec.backoff.saturating_mul(1u64 << retry.saturating_sub(1).min(20))
+    }
+
+    /// Requeue timeout for a request with solo estimate `solo`.
+    pub fn timeout(&self, solo: Ps) -> Ps {
+        (solo as f64 * self.spec.timeout_factor) as Ps
+    }
+
+    /// Fold a displaced request's return to service at `now` into the
+    /// displacing fault's time-to-recover.
+    pub fn note_recovered(&mut self, rid: usize, now: Ps) {
+        if let Some(ei) = self.rstate[rid].displaced_by.take() {
+            let o = &mut self.outcomes[ei];
+            o.recover = o.recover.max(now.saturating_sub(o.at));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultEvent;
+    use crate::sim::US;
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let f = FaultRuntime::new(&FaultSpec::with(vec![FaultEvent::fail(0, 0)]));
+        let base = f.spec.backoff;
+        assert_eq!(f.backoff_delay(1), base);
+        assert_eq!(f.backoff_delay(2), 2 * base);
+        assert_eq!(f.backoff_delay(3), 4 * base);
+        // Shift is capped: huge retry counts saturate, never wrap.
+        assert!(f.backoff_delay(u32::MAX) >= f.backoff_delay(40));
+    }
+
+    #[test]
+    fn timeout_scales_solo_estimate() {
+        let mut spec = FaultSpec::with(vec![FaultEvent::stall(0, 0, US)]);
+        spec.timeout_factor = 4.0;
+        let f = FaultRuntime::new(&spec);
+        assert_eq!(f.timeout(10 * US), 40 * US);
+    }
+
+    #[test]
+    fn outcomes_pin_fail_window_to_onset() {
+        let f = FaultRuntime::new(&FaultSpec::with(vec![
+            FaultEvent::fail(1, 5 * US),
+            FaultEvent::stall(0, US, 3 * US),
+        ]));
+        assert_eq!(f.outcomes.len(), 2);
+        assert_eq!((f.outcomes[0].at, f.outcomes[0].until), (5 * US, 5 * US));
+        assert_eq!((f.outcomes[1].at, f.outcomes[1].until), (US, 3 * US));
+        assert!(f.outcomes.iter().all(|o| o.displaced == 0 && o.recover == 0));
+    }
+
+    #[test]
+    fn recover_tracks_latest_displaced_return() {
+        let mut f = FaultRuntime::new(&FaultSpec::with(vec![FaultEvent::fail(0, 10 * US)]));
+        f.rstate.push(ReqState::queued(0, 0));
+        f.rstate.push(ReqState::queued(0, 0));
+        f.rstate[0].displaced_by = Some(0);
+        f.rstate[1].displaced_by = Some(0);
+        f.note_recovered(0, 12 * US);
+        assert_eq!(f.outcomes[0].recover, 2 * US);
+        f.note_recovered(1, 15 * US);
+        assert_eq!(f.outcomes[0].recover, 5 * US);
+        // Cleared on fold: a later re-admission of rid 0 is not a
+        // recovery of this fault.
+        f.note_recovered(0, 50 * US);
+        assert_eq!(f.outcomes[0].recover, 5 * US);
+    }
+}

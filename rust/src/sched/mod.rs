@@ -32,6 +32,16 @@
 //!   [`DeviceOverride`](crate::config::DeviceOverride)s; the driver's
 //!   solo pass simulates every candidate per *device class*, so policies
 //!   see real placement trade-offs.
+//! - [`fault`] — fault injection and recovery: a
+//!   [`FaultSpec`](crate::config::FaultSpec) schedules deterministic
+//!   device degradation / transient stalls / permanent failures, and
+//!   the driver heals around them with timeouts, bounded
+//!   exponential-backoff retries and requeue onto surviving devices,
+//!   reporting per-fault time-to-recover and lost work
+//!   ([`FaultOutcome`]) plus a `retry_wait` term in every request's
+//!   decomposition. An empty spec is pinned bit-identical to the
+//!   fault-free engine. Surfaces: `axle sched --faults`, `axle
+//!   scenario`, `axle report fig20`.
 //!
 //! Surfaces: `axle sched --streams K --policy static|heuristic|oracle
 //! --depth N --qos fcfs|wrr|drr --prio C0,C1,...`,
@@ -41,9 +51,11 @@
 //! p50/p99 slowdown columns under all three QoS policies).
 
 pub mod driver;
+pub mod fault;
 pub mod policy;
 
 pub use driver::{format_request_row, run_sched, RequestRun, SchedReport};
+pub use fault::FaultOutcome;
 pub use policy::{Candidate, Observed, OffloadPolicy};
 
 use crate::config::{PolicyKind, QosPolicy, QosSpec, SchedSpec, SimConfig, TopologySpec};

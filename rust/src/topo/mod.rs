@@ -214,6 +214,38 @@ pub fn place_device(
     }
 }
 
+/// As [`place_device`], but restricted to the devices `eligible` admits
+/// — the closed-loop scheduler's fault-aware placement point (requeue
+/// after a kill or timeout, admission-queue redistribution after a
+/// permanent device failure). Returns `None` when no device is
+/// eligible. With every device eligible the choice matches
+/// [`place_device`] exactly. Round-robin probes at most one full
+/// rotation, advancing the cursor past ineligible devices so the
+/// rotation stays deterministic as devices come and go.
+pub fn place_device_filtered(
+    placement: Placement,
+    devices: usize,
+    eligible: impl Fn(usize) -> bool,
+    load: impl Fn(usize) -> Ps,
+    rr_next: &mut usize,
+) -> Option<usize> {
+    match placement {
+        Placement::RoundRobin => {
+            for _ in 0..devices {
+                let d = *rr_next % devices;
+                *rr_next += 1;
+                if eligible(d) {
+                    return Some(d);
+                }
+            }
+            None
+        }
+        Placement::LeastLoaded => {
+            (0..devices).filter(|&i| eligible(i)).min_by_key(|&i| (load(i), i))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

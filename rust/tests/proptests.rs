@@ -718,3 +718,155 @@ mod sched_props {
         });
     }
 }
+
+// ------------------------------------------------------------------
+// Fault injection + recovery invariants (sched::fault, PR-6 subsystem).
+// ------------------------------------------------------------------
+
+mod fault_props {
+    use axle::config::{
+        DeviceOverride, FaultEvent, FaultSpec, PolicyKind, Protocol, SchedSpec, SimConfig,
+        TopologySpec,
+    };
+    use axle::sched::run_sched;
+    use axle::sim::US;
+    use axle::util::prop::run_prop;
+    use axle::util::rng::Pcg32;
+
+    fn two_device_topo(cfg: &SimConfig) -> TopologySpec {
+        TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+    }
+
+    fn random_spec(rng: &mut Pcg32) -> SchedSpec {
+        SchedSpec::new(rng.range(1, 4) as usize)
+            .with_workloads(vec!['a', 'f'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_depth(rng.range(1, 3) as usize)
+            .with_admit(rng.range(1, 3) as usize)
+            .with_requests(rng.range(1, 3) as usize)
+            .with_seed(rng.next_u64())
+    }
+
+    /// A random, always-valid fault schedule over the two-device
+    /// topology: permanent failures only ever target device 0 (so device
+    /// 1 survives and the spec always validates), stalls and
+    /// degradations land anywhere, and windows — placed inside the
+    /// fault-free run's horizon so they actually bite — may be
+    /// zero-length.
+    fn random_faults(rng: &mut Pcg32, horizon: u64) -> FaultSpec {
+        let n = rng.range(1, 4) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = rng.below(horizon.max(1));
+            let dur = rng.below(300) * US;
+            let device = rng.below(2) as u32;
+            let factor = 1.0 + rng.below(8) as f64;
+            events.push(match rng.below(4) {
+                0 => FaultEvent::fail(0, at),
+                1 => FaultEvent::stall(device, at, at + dur),
+                2 => FaultEvent::degrade_pus(device, at, at + dur, factor),
+                _ => FaultEvent::degrade_link(device, at, at + dur, factor),
+            });
+        }
+        let mut spec = FaultSpec::with(events);
+        spec.max_retries = rng.range(1, 5) as u32;
+        spec.backoff = rng.range(1, 100) * US;
+        spec.timeout_factor = 2.0 + rng.below(8) as f64;
+        spec
+    }
+
+    /// Under arbitrary fault schedules the run never loses or hangs a
+    /// request: exactly `streams x requests` requests come back, each
+    /// either completed or explicitly failed after exhausting the retry
+    /// budget, and every completed request obeys the fault-extended
+    /// decomposition identity
+    /// `total = queue_wait + retry_wait + solo + wire_wait + pu_wait`.
+    #[test]
+    fn prop_no_request_lost_under_random_faults() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("fault_conservation", 12, |rng| {
+            let topo = two_device_topo(&cfg);
+            let spec = random_spec(rng);
+            let base = run_sched(&cfg, &topo, &spec, 2);
+            let faults = random_faults(rng, base.makespan.max(1));
+            let max_retries = faults.max_retries;
+            let r = run_sched(&cfg, &topo, &spec.clone().with_faults(faults), 2);
+
+            assert_eq!(r.requests.len(), base.requests.len(), "request lost or duplicated");
+            let failed = r.requests.iter().filter(|q| q.failed).count();
+            assert_eq!(failed, r.failed_requests, "failed-request count drifted");
+            for q in &r.requests {
+                assert!(q.admit >= q.submit);
+                assert!(q.completion >= q.admit);
+                assert!(!q.placed_on.is_empty());
+                if q.failed {
+                    // Dropped exactly at the retry budget, with its
+                    // waits zeroed out of the aggregates.
+                    assert_eq!(q.retries, max_retries + 1);
+                    assert_eq!(q.admit, q.completion);
+                } else {
+                    assert_eq!(
+                        q.total(),
+                        q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait,
+                        "decomposition identity under faults"
+                    );
+                }
+            }
+            // Lost work is reported iff some in-service attempt died.
+            let lost = r.lost_wire + r.lost_pu;
+            let displaced: u32 = r.faults.iter().map(|f| f.displaced).sum();
+            if lost > 0 {
+                assert!(displaced > 0, "lost work without displacement");
+            }
+        });
+    }
+
+    /// A schedule of only zero-duration windows is bit-identical to the
+    /// fault-free run: the engine schedules no fault transitions at all,
+    /// so every request record — serialized, byte for byte — and every
+    /// aggregate matches; only the all-zero fault outcome rows differ.
+    #[test]
+    fn prop_zero_duration_windows_are_bit_identical_to_fault_free() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("fault_zero_window_identity", 12, |rng| {
+            let topo = two_device_topo(&cfg);
+            let spec = random_spec(rng);
+            let base = run_sched(&cfg, &topo, &spec, 2);
+            let n = rng.range(1, 3) as usize;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                let at = rng.below(base.makespan.max(1));
+                let device = rng.below(2) as u32;
+                events.push(match rng.below(3) {
+                    0 => FaultEvent::stall(device, at, at),
+                    1 => FaultEvent::degrade_pus(device, at, at, 8.0),
+                    _ => FaultEvent::degrade_link(device, at, at, 8.0),
+                });
+            }
+            let r = run_sched(&cfg, &topo, &spec.clone().with_faults(FaultSpec::with(events)), 2);
+
+            assert_eq!(base.requests.len(), r.requests.len());
+            for (a, b) in base.requests.iter().zip(&r.requests) {
+                assert_eq!(
+                    a.to_json().to_string(),
+                    b.to_json().to_string(),
+                    "request record drifted under a zero-duration window"
+                );
+            }
+            assert_eq!(base.makespan, r.makespan);
+            assert_eq!(base.p50_slowdown.to_bits(), r.p50_slowdown.to_bits());
+            assert_eq!(base.p99_slowdown.to_bits(), r.p99_slowdown.to_bits());
+            assert_eq!(base.max_slowdown.to_bits(), r.max_slowdown.to_bits());
+            assert_eq!(base.host_busy, r.host_busy);
+            assert_eq!(base.ccm_busy, r.ccm_busy);
+            // The outcome rows exist but report nothing happening.
+            assert_eq!(r.faults.len(), n);
+            for row in &r.faults {
+                assert_eq!((row.displaced, row.recover), (0, 0));
+                assert_eq!((row.lost_wire, row.lost_pu), (0, 0));
+            }
+            assert_eq!(r.failed_requests, 0);
+        });
+    }
+}

@@ -13,7 +13,8 @@
 //!    `heuristic` must beat the worst static protocol.
 
 use axle::config::{
-    DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
+    DeviceOverride, FaultEvent, FaultSpec, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig,
+    TopologySpec,
 };
 use axle::sched::{run_sched, SchedReport};
 use axle::topo::{run_tenants, TenantSpec};
@@ -254,4 +255,120 @@ fn oracle_bounds_and_heuristic_beats_worst_static_on_hetero_devices() {
         heuristic.makespan,
         worst_static
     );
+}
+
+/// The fault-layer bit-identity pin (PR 6): a spec whose fault schedule
+/// is empty — even with every recovery knob moved off its default —
+/// must reproduce the fault-free run **exactly**. The engine never
+/// constructs a fault runtime for an empty schedule, so placement,
+/// admission, calendars, percentiles (down to the f64 bits) and the
+/// serialized JSON all match byte for byte, and none of the sparse
+/// fault keys appear.
+#[test]
+fn empty_fault_spec_is_bit_identical_to_fault_free() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let spec = SchedSpec::new(4)
+        .with_workloads(data_heavy_mix())
+        .with_requests(2)
+        .with_admit(2)
+        .with_priorities(vec![1, 0]);
+    let knobbed =
+        FaultSpec { events: Vec::new(), max_retries: 9, backoff: 123_456, timeout_factor: 2.5 };
+    let base = run_sched(&cfg, &topo, &spec, 2);
+    let faultless = run_sched(&cfg, &topo, &spec.clone().with_faults(knobbed), 2);
+
+    assert_eq!(base.requests.len(), faultless.requests.len());
+    for (a, b) in base.requests.iter().zip(&faultless.requests) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.proto, b.proto);
+        assert_eq!(a.submit, b.submit);
+        assert_eq!(a.admit, b.admit);
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.solo, b.solo);
+        assert_eq!(a.device_wait, b.device_wait);
+        assert_eq!(a.fabric_wait, b.fabric_wait);
+        assert_eq!(a.pu_wait, b.pu_wait);
+        assert_eq!(a.slowdown().to_bits(), b.slowdown().to_bits());
+        assert_eq!((b.retries, b.retry_wait, b.failed), (0, 0, false));
+        assert_eq!(b.placed_on.len(), 1);
+    }
+    assert_eq!(base.makespan, faultless.makespan);
+    assert_eq!(base.p50_slowdown.to_bits(), faultless.p50_slowdown.to_bits());
+    assert_eq!(base.p99_slowdown.to_bits(), faultless.p99_slowdown.to_bits());
+    assert_eq!(base.max_slowdown.to_bits(), faultless.max_slowdown.to_bits());
+    assert_eq!(base.host_busy, faultless.host_busy);
+    assert_eq!(base.ccm_busy, faultless.ccm_busy);
+    assert_eq!(base.fabric.busy, faultless.fabric.busy);
+    assert_eq!(base.fabric.utilization.to_bits(), faultless.fabric.utilization.to_bits());
+    assert!(faultless.faults.is_empty());
+    assert_eq!((faultless.lost_wire, faultless.lost_pu, faultless.failed_requests), (0, 0, 0));
+    let json = faultless.to_json().to_string();
+    assert_eq!(base.to_json().to_string(), json);
+    assert!(!json.contains("\"faults\"") && !json.contains("\"retries\""));
+}
+
+/// The PR-6 acceptance scenario: a permanent device failure injected
+/// mid-service on the strong+weak two-device topology. Under every QoS
+/// policy the run must complete on the survivor with zero lost
+/// requests, report a positive time-to-recover and the killed attempts'
+/// lost work, and stay worker-count invariant.
+#[test]
+fn mid_run_device_failure_recovers_on_survivor_across_qos_policies() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![4, 1]), QosSpec::drr(vec![0.75, 0.25])] {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+            .with_qos(qos.clone());
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'e'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(2)
+            .with_admit(2);
+        // Derive the kill instant from the fault-free baseline: strictly
+        // inside a device-0 service window. The engine is deterministic
+        // and bit-identical up to the first fault event, so the kill is
+        // guaranteed to catch that request in service.
+        let base = run_sched(&cfg, &topo, &spec, 2);
+        let victim = base
+            .requests
+            .iter()
+            .filter(|q| q.device == 0 && q.completion > q.admit + 1)
+            .max_by_key(|q| q.completion - q.admit)
+            .expect("device 0 serves work in the baseline");
+        let at = victim.admit + (victim.completion - victim.admit) / 2;
+        let spec = spec.with_faults(FaultSpec::with(vec![FaultEvent::fail(0, at)]));
+        let r = run_sched(&cfg, &topo, &spec, 2);
+
+        // Conservation: nothing lost, nothing hung, nothing dropped.
+        assert_eq!(r.requests.len(), base.requests.len(), "{:?}", qos.policy);
+        assert_eq!(r.failed_requests, 0, "{:?}", qos.policy);
+        for q in &r.requests {
+            if q.submit > at {
+                assert_eq!(q.device, 1, "post-failure work must land on the survivor");
+            }
+            assert!(!q.failed);
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait,
+                "{:?}",
+                qos.policy
+            );
+        }
+        // The fault row reports the displacement, recovery and lost work.
+        assert_eq!(r.faults.len(), 1);
+        let row = &r.faults[0];
+        assert!(row.displaced > 0, "{:?}", qos.policy);
+        assert!(row.recover > 0, "{:?}", qos.policy);
+        assert!(row.lost_wire + row.lost_pu > 0, "{:?}", qos.policy);
+        assert_eq!((r.lost_wire, r.lost_pu), (row.lost_wire, row.lost_pu));
+        assert!(r.requests.iter().any(|q| q.placed_on.len() > 1));
+
+        // Faulted runs stay worker-count invariant and deterministic.
+        let again = run_sched(&cfg, &topo, &spec, 4);
+        assert_eq!(r.to_json().to_string(), again.to_json().to_string(), "{:?}", qos.policy);
+    }
 }
