@@ -8,7 +8,10 @@
 //! (`*_serial`) so the serial/parallel ratio is recorded alongside.
 //!
 //! Results are written to `BENCH_sweep.json` (schema `axle-bench-v1`,
-//! see `harness::write_json`) to give future PRs a perf trajectory.
+//! see `harness::write_json`) to give future PRs a perf trajectory. The
+//! closed-loop scheduler's million-request throughput run is recorded
+//! separately in `BENCH_sched.json` (same schema) alongside the
+//! `sched requests/sec = N` line CI greps into its summary.
 
 mod harness;
 
@@ -33,6 +36,40 @@ fn print_fig10_ratio(stats: &[BenchStat]) {
             par * 1e3,
             ser * 1e3
         );
+    }
+}
+
+/// Million-request closed-loop scheduler run: 256 tenants × 4096
+/// requests each on an 8-device fabric-free pinned topology, streaming
+/// aggregation (no per-request retention), sharded across `jobs`
+/// workers. Writes `BENCH_sched.json` and prints the
+/// `sched requests/sec = N` throughput line CI greps into its summary.
+fn bench_sched(cfg: &SimConfig, jobs: usize, target_s: f64) {
+    use axle::config::{Placement, PolicyKind, SchedSpec, TopologySpec};
+    const STREAMS: usize = 256;
+    const REQUESTS: usize = 4096;
+    let topo = TopologySpec { devices: 8, ..Default::default() }
+        .with_placement(Placement::Pinned);
+    let spec = SchedSpec::new(STREAMS)
+        .with_workloads(vec!['f'])
+        .with_policy(PolicyKind::Static(Protocol::Axle))
+        .with_requests(REQUESTS)
+        .with_depth(2)
+        .with_retain(false);
+    let stat = bench_target("sched_closed_loop_1m", target_s, || {
+        let r = axle::sched::run_sched(cfg, &topo, &spec, jobs);
+        assert!(r.streamed, "retain=false must stream");
+        assert_eq!(r.scheduled, (STREAMS * REQUESTS) as u64);
+        std::hint::black_box(r);
+    });
+    println!("sched requests/sec = {:.0}", (STREAMS * REQUESTS) as f64 / stat.mean_s);
+    match write_json("BENCH_sched.json", jobs, std::slice::from_ref(&stat)) {
+        Ok(()) => println!("wrote BENCH_sched.json (1 entry, {jobs} worker threads)"),
+        Err(e) => {
+            // CI depends on the artifact: fail the step, don't just warn.
+            eprintln!("could not write BENCH_sched.json: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -64,6 +101,7 @@ fn main() {
             }
         }
         print_fig10_ratio(&stats);
+        bench_sched(&cfg, jobs, 0.15);
         return;
     }
 
@@ -212,4 +250,5 @@ fn main() {
         Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
     }
     print_fig10_ratio(&stats);
+    bench_sched(&cfg, jobs, 0.5);
 }

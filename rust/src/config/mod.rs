@@ -428,6 +428,14 @@ pub enum Placement {
     /// Greedy: each stream lands on the device with the least accumulated
     /// solo service demand (ties broken by lowest device id).
     LeastLoaded,
+    /// Stream `i` is pinned to device `i mod D` for its whole lifetime,
+    /// independent of observed load. Unlike `RoundRobin` (which hands out
+    /// devices in *arrival* order) the target is a pure function of the
+    /// stream id, so disjoint tenant subsets never interact through the
+    /// placement state — the property the sharded closed-loop driver
+    /// (`axle sched --jobs N`) relies on to partition devices across
+    /// worker threads with a deterministic merge.
+    Pinned,
 }
 
 impl Placement {
@@ -435,6 +443,7 @@ impl Placement {
         match self {
             Placement::RoundRobin => "rr",
             Placement::LeastLoaded => "least-loaded",
+            Placement::Pinned => "pinned",
         }
     }
 
@@ -442,6 +451,7 @@ impl Placement {
         match s {
             "rr" | "round-robin" | "round_robin" => Some(Placement::RoundRobin),
             "least-loaded" | "least_loaded" | "ll" => Some(Placement::LeastLoaded),
+            "pinned" | "pin" => Some(Placement::Pinned),
             _ => None,
         }
     }
@@ -1062,6 +1072,15 @@ pub struct SchedSpec {
     /// Deterministic fault-injection schedule + recovery knobs. Empty
     /// (the default) means the fault-free engine, bit-identically.
     pub faults: FaultSpec,
+    /// `true` (default): retain every [`crate::sched::RequestRun`] for
+    /// the report's per-request JSON array and exact percentile math —
+    /// the PR-6 behavior, O(n) memory. `false`: streaming mode — the
+    /// driver aggregates into fixed-size quantile sketches and recycles
+    /// per-request buffers, so a run holds O(live requests) regardless
+    /// of total volume; the report's `requests` array is empty and
+    /// percentiles are sketch-derived (`axle sched` default; flip back
+    /// with `--dump-requests`).
+    pub retain: bool,
 }
 
 impl SchedSpec {
@@ -1082,6 +1101,7 @@ impl SchedSpec {
             load: 1.0,
             seed: 0x5C_4ED0,
             faults: FaultSpec::default(),
+            retain: true,
         }
     }
 
@@ -1153,6 +1173,13 @@ impl SchedSpec {
         self
     }
 
+    /// Toggle per-request retention (see the `retain` field). `false`
+    /// selects streaming aggregation with recycled request buffers.
+    pub fn with_retain(mut self, retain: bool) -> Self {
+        self.retain = retain;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("streams".into(), Json::Num(self.streams as f64));
@@ -1170,6 +1197,7 @@ impl SchedSpec {
         o.insert("load".into(), Json::Num(self.load));
         o.insert("seed".into(), Json::Num(self.seed as f64));
         o.insert("faults".into(), self.faults.to_json());
+        o.insert("retain".into(), Json::Bool(self.retain));
         Json::Obj(o)
     }
 
@@ -1217,6 +1245,9 @@ impl SchedSpec {
             // Malformed fault schedules are config-parse-time errors with
             // the validation message attached (never a mid-run panic).
             s.faults = FaultSpec::from_json(j.get("faults")).expect("invalid fault spec");
+        }
+        if let Json::Bool(b) = j.get("retain") {
+            s.retain = *b;
         }
         s
     }
@@ -1392,7 +1423,7 @@ mod tests {
 
     #[test]
     fn placement_parse_labels() {
-        for p in [Placement::RoundRobin, Placement::LeastLoaded] {
+        for p in [Placement::RoundRobin, Placement::LeastLoaded, Placement::Pinned] {
             assert_eq!(Placement::parse(p.label()), Some(p));
         }
         assert_eq!(Placement::parse("nope"), None);
@@ -1494,6 +1525,11 @@ mod tests {
         assert_eq!(sparse.depth, 1);
         assert!(sparse.closed);
         assert!(sparse.faults.is_empty());
+        assert!(sparse.retain);
+        // Streaming mode (retain = false) survives the round trip too.
+        let st = SchedSpec::new(2).with_retain(false);
+        let j3 = st.to_json().to_string();
+        assert_eq!(SchedSpec::from_json(&Json::parse(&j3).unwrap()), st);
     }
 
     #[test]

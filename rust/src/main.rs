@@ -39,7 +39,7 @@ USAGE:
              [--protocol rp|bs|axle|axle-interrupt] [--profile ...] [--json]
         # the evaluation matrix on N worker threads (default: all cores);
         # results are bit-identical to the serial path in spec order
-  axle tenants [--devices D] [--streams K] [--placement rr|least-loaded]
+  axle tenants [--devices D] [--streams K] [--placement rr|least-loaded|pinned]
                [--fabric-gbps X | --no-fabric] [--topo FILE.json]
                [--qos fcfs|wrr|drr] [--weights W0,W1,...] [--floors F0,F1,...]
                [--workloads <mix, e.g. adei>] [--protocol ...] [--load F]
@@ -55,10 +55,11 @@ USAGE:
              [--depth N] [--admit M] [--prio C0,C1,...] [--think-ns T]
              [--qos fcfs|wrr|drr] [--weights W0,W1,...] [--floors F0,F1,...]
              [--open [--load F]]
-             [--devices D] [--placement rr|least-loaded]
+             [--devices D] [--placement rr|least-loaded|pinned]
              [--fabric-gbps X | --no-fabric] [--topo FILE.json]
              [--dev-ccm-pus P0,P1,...] [--dev-gbps B0,B1,...]
              [--workloads <mix>] [--sched-seed N] [--jobs N]
+             [--dump-requests]
              [--faults SPEC] [--max-retries N] [--backoff-us T]
              [--timeout-factor F]
              [--profile ...] [--json]
@@ -82,7 +83,12 @@ USAGE:
         # 'fail@0:800' 'stall@0:100..300' 'degrade-pus@1:50..150x4';
         # recovery is tuned by --max-retries (default 3), --backoff-us
         # (base exponential backoff, default 50) and --timeout-factor
-        # (requeue timeout as a multiple of the solo estimate, default 8)
+        # (requeue timeout as a multiple of the solo estimate, default 8);
+        # the closed loop aggregates through streaming sketches (O(1)
+        # memory per request — million-request runs are fine) unless
+        # --dump-requests retains per-request rows; --jobs N also shards
+        # the event engine across worker threads on fabric-free --placement
+        # pinned topologies (identical results to --jobs 1)
   axle scenario [--streams K] [--requests R] [--jobs N] [--profile ...]
                 [--json]
         # canned failover demo (the CI smoke): closed-loop tenants over
@@ -599,6 +605,10 @@ fn main() -> Result<()> {
                 faults.validate(topo.devices).map_err(|e| anyhow::anyhow!(e))?;
             }
             spec = spec.with_faults(faults);
+            // Per-request retention is opt-in on the CLI: the default
+            // streams every request through O(1) sketches so
+            // million-request runs hold no per-request memory.
+            spec = spec.with_retain(a.has("dump-requests"));
             if open {
                 // Closed-loop knobs would be silently meaningless under
                 // the PR-3 open-loop replay; refuse them instead.
@@ -650,6 +660,12 @@ fn main() -> Result<()> {
                     r.policy.label(),
                     topo.devices,
                     topo.placement.label()
+                );
+            }
+            if r.streamed {
+                println!(
+                    "  {} request(s) aggregated through streaming sketches (--dump-requests retains per-request rows)",
+                    r.scheduled
                 );
             }
             for q in &r.requests {

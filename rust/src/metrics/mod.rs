@@ -13,6 +13,10 @@
 //! - **back-pressure cycles** (Fig. 16b): time the CCM's DMA executor is
 //!   blocked waiting for host ring credit.
 
+pub mod sketch;
+
+pub use sketch::QuantileSketch;
+
 use std::collections::BTreeMap;
 
 use crate::sim::Ps;

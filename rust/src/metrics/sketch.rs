@@ -1,0 +1,249 @@
+//! Deterministic streaming quantile sketch for million-request runs.
+//!
+//! The closed-loop scheduler historically retained every request's
+//! slowdown in a `Vec<f64>` and sorted it at report time — O(n) memory
+//! and O(n log n) post-processing that caps a run at thousands of
+//! requests. [`QuantileSketch`] replaces that with a **fixed-size
+//! log-linear histogram** (HdrHistogram-style): 64 octaves × 128
+//! sub-buckets taken straight from the top mantissa bits of the `f64`
+//! bit pattern, 8192 `u64` counters total (64 KiB), O(1) record, O(1)
+//! memory, O(buckets) quantile.
+//!
+//! Determinism is the design constraint, not an accident:
+//!
+//! - bucket indexing is pure bit arithmetic on the IEEE-754
+//!   representation (no `ln`/`log2`, whose libm implementations vary
+//!   across platforms);
+//! - bucket representatives are reconstructed with `f64::from_bits`, so
+//!   a quantile is a bit-exact function of the recorded multiset;
+//! - merging two sketches is element-wise counter addition, so a
+//!   sharded run's merged quantiles are bit-identical to the same
+//!   requests recorded into one sketch in any order.
+//!
+//! The quantile rank rule mirrors [`crate::metrics::percentile`]
+//! (`round(q/100 · (n−1))` on the sorted multiset), and results are
+//! clamped to the exactly-tracked `[min, max]`, so p0/p100 are exact
+//! and any interior quantile is within one sub-bucket (relative error
+//! ≤ 2⁻⁸ ≈ 0.4%) of the retained-vector answer.
+
+use crate::util::json::Json;
+
+/// Lowest tracked octave: values below 2⁻¹⁶ clamp into bucket 0.
+const EXP_LO: i64 = -16;
+/// Number of octaves (binary orders of magnitude) tracked.
+const OCTAVES: i64 = 64;
+/// log₂(sub-buckets per octave): 7 bits of mantissa → 128 sub-buckets.
+const SUB_BITS: u64 = 7;
+/// Total bucket count: 64 octaves × 128 sub-buckets.
+const BUCKETS: usize = (OCTAVES as usize) << SUB_BITS;
+
+/// Fixed-size deterministic quantile sketch (see module docs).
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], count: 0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Bucket index of `v`: octave from the exponent bits, sub-bucket
+    /// from the top 7 mantissa bits. Non-positive and NaN values clamp
+    /// to bucket 0, values above the top octave to the last bucket.
+    fn index(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0;
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7FF) as i64 - 1023;
+        if exp < EXP_LO {
+            return 0;
+        }
+        if exp >= EXP_LO + OCTAVES {
+            return BUCKETS - 1;
+        }
+        let sub = (bits >> (52 - SUB_BITS)) & ((1 << SUB_BITS) - 1);
+        ((((exp - EXP_LO) as u64) << SUB_BITS) | sub) as usize
+    }
+
+    /// Representative value of bucket `idx`: the bit-exact midpoint of
+    /// the bucket's value range (`1.mmmmmmm1000…` × 2^octave).
+    fn value_of(idx: usize) -> f64 {
+        let exp = EXP_LO + (idx >> SUB_BITS) as i64;
+        let sub = (idx as u64) & ((1 << SUB_BITS) - 1);
+        let bits =
+            (((exp + 1023) as u64) << 52) | (sub << (52 - SUB_BITS)) | (1 << (52 - SUB_BITS - 1));
+        f64::from_bits(bits)
+    }
+
+    /// Record one observation. O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.counts[Self::index(v)] += 1;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact minimum recorded value (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded value (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile `q` in `0..=100` under the same rank rule as
+    /// [`crate::metrics::percentile`]: the bucket holding sorted element
+    /// `round(q/100 · (n−1))`, clamped to the exact `[min, max]`. NaN
+    /// when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 100.0) / 100.0 * (self.count - 1) as f64).round() as u64;
+        // Extreme ranks answer from the exactly-tracked bounds: a bucket
+        // representative sits mid-bucket, so without these the clamp
+        // alone would leave p0/p100 one half-bucket off.
+        if rank == 0 {
+            return self.min;
+        }
+        if rank == self.count - 1 {
+            return self.max;
+        }
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::value_of(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold `other` into `self`: counter addition plus min/max folds.
+    /// Merge order never affects any subsequent quantile.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Compact JSON summary (count + the headline quantiles).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("p50".into(), Json::Num(self.quantile(50.0)));
+        o.insert("p99".into(), Json::Num(self.quantile(99.0)));
+        o.insert("max".into(), Json::Num(self.max()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::percentile;
+
+    #[test]
+    fn empty_sketch_reports_nan() {
+        let sk = QuantileSketch::new();
+        assert_eq!(sk.count(), 0);
+        assert!(sk.quantile(50.0).is_nan());
+        assert!(sk.min().is_nan() && sk.max().is_nan());
+    }
+
+    #[test]
+    fn single_value_is_exact_at_every_quantile() {
+        let mut sk = QuantileSketch::new();
+        sk.record(3.25);
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(sk.quantile(q), 3.25, "q={q}");
+        }
+    }
+
+    #[test]
+    fn extremes_are_exact_and_interior_is_within_a_bucket() {
+        let mut sk = QuantileSketch::new();
+        let xs: Vec<f64> = (0..1000).map(|i| 1.0 + (i as f64) * 0.01).collect();
+        for &x in &xs {
+            sk.record(x);
+        }
+        assert_eq!(sk.quantile(0.0), 1.0);
+        assert_eq!(sk.quantile(100.0), 1.0 + 999.0 * 0.01);
+        for q in [25.0, 50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, q);
+            let approx = sk.quantile(q);
+            assert!(
+                (approx - exact).abs() / exact <= 1.0 / 128.0,
+                "q={q}: sketch {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_sketch_bit_for_bit() {
+        let mut whole = QuantileSketch::new();
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for i in 0..500 {
+            let v = 1.0 + (i % 97) as f64 * 0.37;
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [0.0, 10.0, 50.0, 99.0, 100.0] {
+            assert_eq!(a.quantile(q).to_bits(), whole.quantile(q).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_instead_of_panicking() {
+        let mut sk = QuantileSketch::new();
+        sk.record(0.0);
+        sk.record(-4.0);
+        sk.record(f64::MAX);
+        sk.record(f64::NAN); // ignored
+        assert_eq!(sk.count(), 3);
+        assert_eq!(sk.min(), -4.0);
+        assert_eq!(sk.max(), f64::MAX);
+        // Quantiles stay inside the exact range even for clamped values.
+        let q = sk.quantile(50.0);
+        assert!((-4.0..=f64::MAX).contains(&q));
+    }
+}

@@ -691,11 +691,15 @@ pub fn fig20(cfg: &SimConfig) {
         1,
         crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
     );
+    // Retention is explicit (the library default): this report reads
+    // per-request rows to pick the kill instant and bucket slowdowns by
+    // submission phase, so it must not run in streaming-sketch mode.
     let spec = crate::config::SchedSpec::new(4)
         .with_workloads(vec!['a', 'e'])
         .with_policy(crate::config::PolicyKind::Static(Protocol::Axle))
         .with_requests(2)
-        .with_admit(2);
+        .with_admit(2)
+        .with_retain(true);
     for qos in [
         crate::config::QosSpec::fcfs(),
         crate::config::QosSpec::wrr(vec![4, 1]),

@@ -74,8 +74,10 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::config::{FaultKind, PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec};
-use crate::metrics::percentile;
+use crate::config::{
+    FaultKind, Placement, PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec,
+};
+use crate::metrics::{percentile, QuantileSketch};
 use crate::sim::{ps_to_us, transfer_ps, Ps, US};
 use crate::sweep::{self, SpecJob, TracedRun};
 use crate::topo::fabric::QosState;
@@ -238,6 +240,17 @@ pub struct SchedReport {
     pub lost_pu: Ps,
     /// Requests dropped after exhausting the retry budget.
     pub failed_requests: usize,
+    /// Requests scheduled to completion (success or terminal failure).
+    /// Equals `requests.len()` on retained runs; on streaming runs it is
+    /// the only record of run size, since `requests` stays empty.
+    pub scheduled: u64,
+    /// `true` when the run aggregated through streaming sketches instead
+    /// of retaining per-request rows (`SchedSpec::retain == false`).
+    pub streamed: bool,
+    /// Streaming-mode per-class rows (`class_slowdowns` shape), filled
+    /// from the per-class sketches at assembly time. Empty on retained
+    /// runs, where `class_slowdowns` recomputes from `requests`.
+    pub class_rows: Vec<(u32, usize, f64, f64)>,
 }
 
 impl SchedReport {
@@ -266,6 +279,9 @@ impl SchedReport {
     /// `(class, requests, p50 slowdown, p99 slowdown)` — the fig19
     /// per-class columns. Empty when the run scheduled nothing.
     pub fn class_slowdowns(&self) -> Vec<(u32, usize, f64, f64)> {
+        if self.streamed {
+            return self.class_rows.clone();
+        }
         let mut by_class: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
         for r in &self.requests {
             by_class.entry(r.class).or_default().push(r.slowdown());
@@ -346,6 +362,12 @@ impl SchedReport {
             o.insert("lost_pu_ps".into(), Json::Num(self.lost_pu as f64));
             o.insert("failed_requests".into(), Json::Num(self.failed_requests as f64));
         }
+        // Streaming runs carry their size explicitly (requests is empty);
+        // retained JSON stays byte-identical by omitting both keys.
+        if self.streamed {
+            o.insert("scheduled".into(), Json::Num(self.scheduled as f64));
+            o.insert("streamed".into(), Json::Bool(true));
+        }
         Json::Obj(o)
     }
 }
@@ -388,153 +410,561 @@ pub fn format_request_row(r: &RequestRun) -> String {
 /// non-overlapping intervals; a new transfer goes into the earliest idle
 /// gap at or after its issue time that fits its serialization (no
 /// preemption, no splitting).
-#[derive(Debug, Default)]
-struct LinkCalendar {
-    /// start → end of each placed interval.
-    busy: BTreeMap<Ps, Ps>,
+///
+/// The representation is a sorted `Vec` of **coalesced** busy intervals
+/// (abutting placements merge), not one entry per message: in the
+/// steady closed-loop state almost every placement lands at or past the
+/// tail, so the common case is an O(1) append/extend of the last
+/// element, and the backfill case is a binary search over the (far
+/// shorter) coalesced list. `rust/tests/proptests.rs` pins this
+/// equivalent to the PR-6 per-message BTreeMap under random
+/// place/truncate sequences. Message *starts* are only needed by
+/// [`Self::truncate`] (fault kills), so the per-message log is optional:
+/// fault-free runs use [`Self::untracked`] and keep O(1) state.
+#[derive(Debug)]
+pub struct LinkCalendar {
+    /// Coalesced busy intervals, sorted, non-overlapping, non-abutting.
+    segs: Vec<(Ps, Ps)>,
     busy_total: Ps,
     msgs: u64,
+    /// Start instant of every placed message, for [`Self::truncate`]'s
+    /// message recount. `None` on untracked (fault-free) calendars.
+    log: Option<Vec<Ps>>,
+}
+
+impl Default for LinkCalendar {
+    /// A message-tracked calendar (supports [`Self::truncate`]).
+    fn default() -> Self {
+        Self { segs: Vec::new(), busy_total: 0, msgs: 0, log: Some(Vec::new()) }
+    }
 }
 
 impl LinkCalendar {
+    /// A calendar without the per-message start log: O(1) memory in the
+    /// message count, but [`Self::truncate`] panics. For fault-free runs.
+    pub fn untracked() -> Self {
+        Self { segs: Vec::new(), busy_total: 0, msgs: 0, log: None }
+    }
+
     /// Place a `dur`-long transfer issued at `issue`; returns its start
     /// (>= `issue`). Zero-length transfers occupy no wire time.
-    fn place(&mut self, issue: Ps, dur: Ps) -> Ps {
+    pub fn place(&mut self, issue: Ps, dur: Ps) -> Ps {
         if dur == 0 {
             return issue;
         }
-        let mut t = issue;
-        // Clamp past an interval already covering the issue instant
-        // (non-overlap means only the latest-starting one can).
-        if let Some((_, &e)) = self.busy.range(..=t).next_back() {
-            if e > t {
-                t = e;
+        // Fast path: at or past the tail (copy the tail end out first —
+        // matching on `last_mut()` would hold the borrow across the push).
+        let t = match self.segs.last().map(|&(_, e)| e) {
+            Some(tail_end) if issue < tail_end => self.place_slow(issue, dur),
+            Some(tail_end) if issue == tail_end => {
+                self.segs.last_mut().expect("tail exists").1 = issue + dur;
+                issue
             }
-        }
-        // Walk forward until a gap fits. Intervals are sorted and
-        // non-overlapping, so each visited start is >= the running
-        // frontier `t` and the subtraction cannot underflow.
-        for (&s, &e) in self.busy.range(t..) {
-            if s - t >= dur {
-                break;
+            _ => {
+                self.segs.push((issue, issue + dur));
+                issue
             }
-            t = e;
-        }
-        self.busy.insert(t, t + dur);
+        };
         self.busy_total += dur;
         self.msgs += 1;
+        if let Some(log) = self.log.as_mut() {
+            log.push(t);
+        }
+        t
+    }
+
+    /// Backfill path: the issue instant is before the calendar tail.
+    /// Binary-search the first interval ending after `issue`, clamp past
+    /// it if it covers the instant, then walk gaps until `dur` fits.
+    #[cold]
+    fn place_slow(&mut self, issue: Ps, dur: Ps) -> Ps {
+        let mut i = self.segs.partition_point(|&(_, e)| e <= issue);
+        let mut t = issue;
+        if i < self.segs.len() && self.segs[i].0 <= issue {
+            // An interval covers the issue instant: start no earlier
+            // than its end.
+            t = self.segs[i].1;
+            i += 1;
+        }
+        while i < self.segs.len() && self.segs[i].0 - t < dur {
+            t = self.segs[i].1;
+            i += 1;
+        }
+        // Insert [t, t+dur), coalescing with abutting neighbours.
+        let merge_left = i > 0 && self.segs[i - 1].1 == t;
+        let merge_right = i < self.segs.len() && self.segs[i].0 == t + dur;
+        match (merge_left, merge_right) {
+            (true, true) => {
+                let right_end = self.segs[i].1;
+                self.segs[i - 1].1 = right_end;
+                self.segs.remove(i);
+            }
+            (true, false) => self.segs[i - 1].1 = t + dur,
+            (false, true) => self.segs[i].0 = t,
+            (false, false) => self.segs.insert(i, (t, t + dur)),
+        }
         t
     }
 
     /// End of the last placed interval (0 when never busy) — the
     /// occupancy-tail signal policies observe.
-    fn tail(&self) -> Ps {
-        self.busy.iter().next_back().map(|(_, &e)| e).unwrap_or(0)
+    pub fn tail(&self) -> Ps {
+        self.segs.last().map(|&(_, e)| e).unwrap_or(0)
     }
 
-    /// Wire busy time (placed intervals never overlap, so the union is
-    /// the sum of durations).
-    fn busy_union(&self) -> Ps {
+    /// Messages placed (zero-length transfers excluded).
+    pub fn msgs(&self) -> u64 {
+        self.msgs
+    }
+
+    /// Wire busy time (placed transfers never overlap, so the union is
+    /// the sum of durations, maintained incrementally).
+    pub fn busy_union(&self) -> Ps {
         self.busy_total
     }
 
     /// Drop everything scheduled at or after `now`: future intervals are
-    /// removed outright, an interval straddling `now` is clipped (its
-    /// message really started, so it keeps its message count). Used when
-    /// a device dies mid-run — its booked future wire time is phantom
-    /// work that must not appear in the busy union. Safe on an empty or
-    /// fully-past calendar (both are no-ops).
-    fn truncate(&mut self, now: Ps) {
-        let cut: Vec<Ps> = self.busy.range(now..).map(|(&s, _)| s).collect();
-        for s in cut {
-            let e = self.busy.remove(&s).expect("interval listed from the calendar");
-            self.busy_total -= e - s;
-            self.msgs -= 1;
-        }
-        if let Some((&s, &e)) = self.busy.range(..now).next_back() {
-            if e > now {
-                self.busy.insert(s, now);
-                self.busy_total -= e - now;
+    /// removed outright, an interval straddling `now` is clipped. The
+    /// message count is recomputed from the start log — a message that
+    /// *started* before the cut really went out and keeps its count.
+    /// Used when a device dies mid-run — its booked future wire time is
+    /// phantom work that must not appear in the busy union. Safe on an
+    /// empty or fully-past calendar (both are no-ops). Panics on an
+    /// [`Self::untracked`] calendar.
+    pub fn truncate(&mut self, now: Ps) {
+        while let Some(&(s, e)) = self.segs.last() {
+            if s >= now {
+                self.busy_total -= e - s;
+                self.segs.pop();
+            } else {
+                if e > now {
+                    self.busy_total -= e - now;
+                    self.segs.last_mut().expect("tail exists").1 = now;
+                }
+                break;
             }
         }
+        let log = self.log.as_mut().expect("truncate requires a message-tracked calendar");
+        log.retain(|&s| s < now);
+        self.msgs = log.len() as u64;
     }
 }
 
 /// Earliest-free PU pool for online (admission-order) dispatch. Unlike
 /// [`crate::sim::PuPool`], ready times may regress across requests
-/// admitted at different instants, so the busy union is computed from
-/// the collected spans at report time.
+/// admitted at different instants. The busy union is maintained
+/// incrementally at dispatch time: dispatch starts are monotone per PU
+/// and near-monotone overall, so the common case is an O(1)
+/// extend-the-last-interval, with a `#[cold]` merge for regressed
+/// starts — no clone-and-sort at report time. The raw span list is only
+/// needed by [`Self::truncate`] (fault kills), so fault-free runs use
+/// [`Self::untracked`] and keep O(1) state.
 #[derive(Debug)]
-struct OnlinePool {
+pub struct OnlinePool {
     free_at: BinaryHeap<Reverse<Ps>>,
-    spans: Vec<(Ps, Ps)>,
+    /// Coalesced union of all dispatched spans (sorted, disjoint).
+    union: Vec<(Ps, Ps)>,
+    union_total: Ps,
     busy_total: Ps,
+    /// Raw spans for [`Self::truncate`]. `None` on untracked pools.
+    spans: Option<Vec<(Ps, Ps)>>,
 }
 
 impl OnlinePool {
-    fn new(n: usize) -> Self {
+    /// A span-tracked pool of `n` PUs (supports [`Self::truncate`]).
+    pub fn new(n: usize) -> Self {
+        Self::build(n, true)
+    }
+
+    /// A pool without the raw span list: O(1) memory in the dispatch
+    /// count, but [`Self::truncate`] panics. For fault-free runs.
+    pub fn untracked(n: usize) -> Self {
+        Self::build(n, false)
+    }
+
+    fn build(n: usize, tracked: bool) -> Self {
         assert!(n > 0, "pool needs at least one PU");
         let mut free_at = BinaryHeap::with_capacity(n);
         for _ in 0..n {
             free_at.push(Reverse(0));
         }
-        Self { free_at, spans: Vec::new(), busy_total: 0 }
+        Self {
+            free_at,
+            union: Vec::new(),
+            union_total: 0,
+            busy_total: 0,
+            spans: tracked.then(Vec::new),
+        }
     }
 
-    fn dispatch(&mut self, ready: Ps, dur: Ps) -> (Ps, Ps) {
+    /// Run a `dur`-long span on the earliest-free PU, no earlier than
+    /// `ready`; returns `(start, end)`.
+    pub fn dispatch(&mut self, ready: Ps, dur: Ps) -> (Ps, Ps) {
         let Reverse(free) = self.free_at.pop().expect("pool never empty");
         let start = free.max(ready);
         let end = start + dur;
         self.free_at.push(Reverse(end));
         if dur > 0 {
-            self.spans.push((start, end));
             self.busy_total += dur;
+            self.union_insert(start, end);
+            if let Some(spans) = self.spans.as_mut() {
+                spans.push((start, end));
+            }
         }
         (start, end)
     }
 
-    fn earliest_free(&self) -> Ps {
+    /// Fold span `[s, e)` into the coalesced union.
+    fn union_insert(&mut self, s: Ps, e: Ps) {
+        match self.union.last().map(|&(_, ue)| ue) {
+            Some(last_end) if s < last_end => self.union_insert_slow(s, e),
+            _ => {
+                // At or past the covered frontier: extend or append.
+                match self.union.last_mut() {
+                    Some(last) if s == last.1 => last.1 = e,
+                    _ => self.union.push((s, e)),
+                }
+                self.union_total += e - s;
+            }
+        }
+    }
+
+    /// Regressed-start path: binary-search the overlap range and splice
+    /// the merged interval in.
+    #[cold]
+    fn union_insert_slow(&mut self, s: Ps, e: Ps) {
+        let lo = self.union.partition_point(|&(_, ue)| ue < s);
+        let mut hi = lo;
+        let (mut ns, mut ne) = (s, e);
+        while hi < self.union.len() && self.union[hi].0 <= e {
+            ns = ns.min(self.union[hi].0);
+            ne = ne.max(self.union[hi].1);
+            self.union_total -= self.union[hi].1 - self.union[hi].0;
+            hi += 1;
+        }
+        self.union.splice(lo..hi, std::iter::once((ns, ne)));
+        self.union_total += ne - ns;
+    }
+
+    /// Earliest instant any PU is free.
+    pub fn earliest_free(&self) -> Ps {
         self.free_at.peek().map(|Reverse(t)| *t).unwrap_or(0)
     }
 
     /// Wall-clock time during which at least one PU was busy.
-    fn busy_union(&self) -> Ps {
-        let mut spans = self.spans.clone();
-        spans.sort_unstable();
-        let mut union = 0;
-        let mut covered = 0;
-        for (s, e) in spans {
-            if s >= covered {
-                union += e - s;
-                covered = e;
-            } else if e > covered {
-                union += e - covered;
-                covered = e;
-            }
-        }
-        union
+    pub fn busy_union(&self) -> Ps {
+        self.union_total
+    }
+
+    /// Sum of dispatched durations (PU-seconds, overlaps counted).
+    pub fn busy_total(&self) -> Ps {
+        self.busy_total
     }
 
     /// Drop PU work scheduled at or after `now` (mirror of
     /// [`LinkCalendar::truncate`]): future spans are removed, straddling
-    /// spans clipped. The free heap is left alone — a dead device never
-    /// dispatches again, so only the busy accounting matters.
-    fn truncate(&mut self, now: Ps) {
+    /// spans clipped, and the union rebuilt from the surviving spans.
+    /// The free heap is left alone — a dead device never dispatches
+    /// again, so only the busy accounting matters. Panics on an
+    /// [`Self::untracked`] pool.
+    pub fn truncate(&mut self, now: Ps) {
+        let spans = self.spans.as_mut().expect("truncate requires a span-tracked pool");
         let mut i = 0;
-        while i < self.spans.len() {
-            let (s, e) = self.spans[i];
+        while i < spans.len() {
+            let (s, e) = spans[i];
             if s >= now {
                 self.busy_total -= e - s;
-                self.spans.swap_remove(i);
+                spans.swap_remove(i);
             } else {
                 if e > now {
                     self.busy_total -= e - now;
-                    self.spans[i].1 = now;
+                    spans[i].1 = now;
                 }
                 i += 1;
             }
         }
+        // The union is a set of disjoint sorted intervals: truncating it
+        // at `now` is exactly the union of the truncated spans.
+        while let Some(&(s, e)) = self.union.last() {
+            if s >= now {
+                self.union_total -= e - s;
+                self.union.pop();
+            } else {
+                if e > now {
+                    self.union_total -= e - now;
+                    self.union.last_mut().expect("tail exists").1 = now;
+                }
+                break;
+            }
+        }
     }
+}
+
+/// Per-device admission queue: FIFO within a priority class, classes
+/// served highest-first. Replaces the PR-4 flat `VecDeque` + O(queue)
+/// highest-class scan with per-class deques keyed by class in a
+/// `BTreeMap` — pop is O(log classes) and preserves the scan's exact
+/// earliest-of-highest-class order via a global arrival sequence number
+/// (unit-tested equivalent in this module's tests).
+///
+/// Invariant: no empty per-class deque is ever stored (the map's last
+/// key is always a non-empty class).
+#[derive(Debug, Default)]
+pub struct AdmitQueue {
+    /// class → FIFO of `(arrival_seq, rid)`.
+    classes: BTreeMap<u32, VecDeque<(u64, u32)>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl AdmitQueue {
+    /// Enqueue `rid` under `class`, behind everything already queued.
+    pub fn push(&mut self, rid: u32, class: u32) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.classes.entry(class).or_default().push_back((seq, rid));
+        self.len += 1;
+    }
+
+    /// Queued request count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pop the earliest-queued request of the highest present class —
+    /// the admission order ([`SchedSpec::priority`] semantics).
+    pub fn pop_admit(&mut self) -> Option<u32> {
+        let (&class, _) = self.classes.iter().next_back()?;
+        Some(self.pop_class(class))
+    }
+
+    /// Pop the globally earliest-queued request regardless of class —
+    /// the fault drain order (the PR-6 `pop_front` on the flat queue).
+    pub fn pop_front_fifo(&mut self) -> Option<u32> {
+        let (&class, _) = self
+            .classes
+            .iter()
+            .min_by_key(|(_, q)| q.front().expect("no empty class deque is stored").0)?;
+        Some(self.pop_class(class))
+    }
+
+    fn pop_class(&mut self, class: u32) -> u32 {
+        let q = self.classes.get_mut(&class).expect("class present");
+        let (_, rid) = q.pop_front().expect("no empty class deque is stored");
+        if q.is_empty() {
+            self.classes.remove(&class);
+        }
+        self.len -= 1;
+        rid
+    }
+
+    /// Remove a specific queued request (timeout eviction). Panics if
+    /// absent — the caller tracked it as queued on this device.
+    pub fn remove(&mut self, rid: u32, class: u32) {
+        let q = self.classes.get_mut(&class).expect("class present");
+        let pos = q
+            .iter()
+            .position(|&(_, r)| r == rid)
+            .expect("queued request present in its device's admission queue");
+        q.remove(pos);
+        if q.is_empty() {
+            self.classes.remove(&class);
+        }
+        self.len -= 1;
+    }
+
+    /// Iterate queued rids (class-major order; order-insensitive uses
+    /// only — the fault layer arms one timeout per queued request).
+    pub fn iter_rids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.classes.values().flat_map(|q| q.iter().map(|&(_, rid)| rid))
+    }
+}
+
+// ------------------------------------------------------------------
+// Streaming aggregation.
+// ------------------------------------------------------------------
+
+/// Request-slot arena. Retained mode (`recycle == false`) is the PR-6
+/// layout verbatim: slot index == rid == event ticket, rows kept
+/// forever. Streaming mode recycles the slot of every finished request
+/// through a free list, so live memory is O(depth × streams) instead of
+/// O(total requests); events then carry a monotone *ticket* resolved
+/// through `live`, which doubles as the staleness filter for events
+/// addressed to a recycled slot.
+struct ReqArena {
+    runs: Vec<RequestRun>,
+    /// Current ticket held by each slot (parallel to `runs`).
+    tickets: Vec<u64>,
+    /// Recycled slot indices.
+    free: Vec<u32>,
+    /// ticket → slot, live requests only. Unused in retained mode.
+    live: HashMap<u64, u32>,
+    next_ticket: u64,
+    recycle: bool,
+}
+
+impl ReqArena {
+    fn new(recycle: bool, cap: usize) -> Self {
+        Self {
+            runs: Vec::with_capacity(cap),
+            tickets: Vec::with_capacity(cap),
+            free: Vec::new(),
+            live: HashMap::new(),
+            next_ticket: 0,
+            recycle,
+        }
+    }
+
+    /// Allocate a slot for a new submission; returns `(ticket, slot)`.
+    /// The caller fills every `RequestRun` field; only `placed_on` needs
+    /// clearing here (the one field reused rather than overwritten).
+    fn alloc(&mut self) -> (u64, usize) {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let s = s as usize;
+                self.runs[s].placed_on.clear();
+                self.tickets[s] = ticket;
+                s
+            }
+            None => {
+                self.runs.push(RequestRun {
+                    tenant: 0,
+                    index: 0,
+                    annot: ' ',
+                    class: 0,
+                    device: 0,
+                    proto: Protocol::Axle,
+                    submit: 0,
+                    admit: 0,
+                    solo: 0,
+                    device_wait: 0,
+                    fabric_wait: 0,
+                    pu_wait: 0,
+                    completion: 0,
+                    retry_wait: 0,
+                    retries: 0,
+                    placed_on: Vec::new(),
+                    failed: false,
+                });
+                self.tickets.push(ticket);
+                self.runs.len() - 1
+            }
+        };
+        if self.recycle {
+            self.live.insert(ticket, slot as u32);
+        }
+        (ticket, slot)
+    }
+
+    /// Resolve an event ticket to its slot, `None` when the request
+    /// already finished (stale event against a recycled slot).
+    fn slot_of(&self, ticket: u64) -> Option<usize> {
+        if self.recycle {
+            self.live.get(&ticket).map(|&s| s as usize)
+        } else {
+            Some(ticket as usize)
+        }
+    }
+
+    /// Mark `slot` finished: in streaming mode its ticket dies and the
+    /// slot returns to the free list. No-op in retained mode.
+    fn release(&mut self, slot: usize) {
+        if self.recycle {
+            self.live.remove(&self.tickets[slot]);
+            self.free.push(slot as u32);
+        }
+    }
+}
+
+/// Streaming slowdown sketches: the whole population plus one per class.
+struct SkSet {
+    all: QuantileSketch,
+    by_class: BTreeMap<u32, QuantileSketch>,
+}
+
+impl SkSet {
+    fn new() -> Self {
+        Self { all: QuantileSketch::new(), by_class: BTreeMap::new() }
+    }
+
+    /// Counter-wise merge; order never affects any quantile.
+    fn merge(&mut self, other: &SkSet) {
+        self.all.merge(&other.all);
+        for (c, s) in &other.by_class {
+            self.by_class.entry(*c).or_default().merge(s);
+        }
+    }
+}
+
+/// Online scalar aggregates for streaming mode — everything the report
+/// derives from the retained request vector, folded per terminal
+/// request instead. Every fold is order-independent (sums, maxes,
+/// counter maps, sketch records), so the result is independent of
+/// completion order and equals the post-hoc computation exactly
+/// (pinned in `rust/tests/sched_regression.rs`).
+struct Agg {
+    scheduled: u64,
+    failed: u64,
+    host_busy: Ps,
+    makespan: Ps,
+    proto_mix: BTreeMap<&'static str, u64>,
+    sk: SkSet,
+}
+
+impl Agg {
+    fn new() -> Self {
+        Self {
+            scheduled: 0,
+            failed: 0,
+            host_busy: 0,
+            makespan: 0,
+            proto_mix: BTreeMap::new(),
+            sk: SkSet::new(),
+        }
+    }
+
+    /// Fold one terminal (completed or failed) request. `host_busy` is
+    /// the request's solo host-busy charge — 0 for failed requests,
+    /// whose solo work never completed.
+    fn finish(&mut self, r: &RequestRun, host_busy: Ps) {
+        self.scheduled += 1;
+        if r.failed {
+            self.failed += 1;
+        }
+        self.host_busy += host_busy;
+        self.makespan = self.makespan.max(r.completion);
+        *self.proto_mix.entry(r.proto.label()).or_insert(0) += 1;
+        let s = r.slowdown();
+        self.sk.all.record(s);
+        self.sk.by_class.entry(r.class).or_default().record(s);
+    }
+}
+
+/// One engine run's raw result, before report assembly: either the
+/// retained request vector (`sk == None`) or the streaming aggregates.
+/// Shards of a partitioned run produce one each; [`merge_shards`] folds
+/// them into a single equivalent `RawRun`.
+struct RawRun {
+    requests: Vec<RequestRun>,
+    sk: Option<SkSet>,
+    scheduled: u64,
+    failed_requests: usize,
+    makespan: Ps,
+    host_busy: Ps,
+    proto_mix: BTreeMap<&'static str, u64>,
+    devices: Vec<DeviceStats>,
+    ccm_busy: Ps,
+    fabric: FabricReport,
+    faults: Vec<FaultOutcome>,
+    lost_wire: Ps,
+    lost_pu: Ps,
 }
 
 // ------------------------------------------------------------------
@@ -572,7 +1002,7 @@ struct DevState {
     qos_mem: Option<QosState>,
     qos_io: Option<QosState>,
     pool: OnlinePool,
-    queue: VecDeque<u32>,
+    queue: AdmitQueue,
     in_service: usize,
     stats: DeviceStats,
     /// `false` once a permanent failure removes the device. Dead devices
@@ -724,19 +1154,175 @@ pub fn run_sched(
         return empty_report(topo_spec, spec);
     }
     let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
-    run_closed(topo_spec, spec, &pass)
+    run_closed_jobs(topo_spec, spec, &pass, jobs)
 }
 
-/// The closed-loop event engine over an already-prepared solo pass.
-/// `pass` must have been prepared with the same topology, workload mix
-/// and policy (only `depth`/`admit`/`requests`/`think`/`seed`/
-/// `priorities` and the topology's `qos` may vary — none of them affect
-/// solo results).
+/// The closed-loop event engine over an already-prepared solo pass,
+/// single-sharded. `pass` must have been prepared with the same
+/// topology, workload mix and policy (only `depth`/`admit`/`requests`/
+/// `think`/`seed`/`priorities` and the topology's `qos` may vary — none
+/// of them affect solo results).
 pub(super) fn run_closed(
     topo_spec: &TopologySpec,
     spec: &SchedSpec,
     pass: &SoloPass,
 ) -> SchedReport {
+    assemble(topo_spec, spec, run_closed_core(topo_spec, spec, pass, None))
+}
+
+/// How many engine shards a run may be partitioned into. Sharding is
+/// only sound when the shards share **no** mutable state: `Pinned`
+/// placement (a pure function of the tenant id, so each tenant's whole
+/// request stream stays on `tenant % devices` — no load/rr coupling),
+/// no shared fabric, no fault schedule (faults re-place work across
+/// devices). Everything else runs single-sharded.
+fn shard_count(topo_spec: &TopologySpec, spec: &SchedSpec, jobs: usize) -> usize {
+    let shardable = topo_spec.placement == Placement::Pinned
+        && topo_spec.fabric_bw_gbps.is_none()
+        && spec.faults.is_empty()
+        && topo_spec.devices > 1;
+    if shardable {
+        jobs.min(topo_spec.devices).max(1)
+    } else {
+        1
+    }
+}
+
+/// The closed-loop engine, fanned over up to `jobs` device shards when
+/// [`shard_count`] allows. Shard `s` of `n` simulates exactly the
+/// devices `{d : d % n == s}` and the tenants pinned to them; the
+/// per-shard results are disjoint and merged deterministically
+/// (order-free folds), so the merged report is identical to `--jobs 1`
+/// — pinned in `rust/tests/sched_regression.rs`.
+pub(super) fn run_closed_jobs(
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    pass: &SoloPass,
+    jobs: usize,
+) -> SchedReport {
+    let shards = shard_count(topo_spec, spec, jobs);
+    if shards <= 1 {
+        return run_closed(topo_spec, spec, pass);
+    }
+    let raws: Vec<RawRun> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..shards)
+            .map(|s| scope.spawn(move || run_closed_core(topo_spec, spec, pass, Some((s, shards)))))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    });
+    assemble(topo_spec, spec, merge_shards(raws))
+}
+
+/// Fold per-shard raw results into one, equivalent to the unsharded
+/// run: requests re-sorted under the global `(tenant, index)` order,
+/// each device row taken from its owning shard (every shard carries the
+/// full device vector; the rows of devices it does not own stay zero),
+/// scalars summed/maxed, sketches counter-merged (all order-free).
+/// Shardable runs have no fabric and no faults, so those stay empty.
+fn merge_shards(mut raws: Vec<RawRun>) -> RawRun {
+    let shards = raws.len();
+    let n_dev = raws[0].devices.len();
+    let mut requests: Vec<RequestRun> = Vec::new();
+    for raw in &mut raws {
+        requests.append(&mut raw.requests);
+    }
+    requests.sort_by_key(|r| (r.tenant, r.index));
+    let devices: Vec<DeviceStats> =
+        (0..n_dev).map(|d| raws[d % shards].devices[d].clone()).collect();
+    let mut sk = raws[0].sk.take();
+    if let Some(sk) = sk.as_mut() {
+        for raw in raws.iter().skip(1) {
+            sk.merge(raw.sk.as_ref().expect("every shard runs the same aggregation mode"));
+        }
+    }
+    let mut merged = RawRun {
+        requests,
+        sk,
+        scheduled: 0,
+        failed_requests: 0,
+        makespan: 0,
+        host_busy: 0,
+        proto_mix: BTreeMap::new(),
+        devices,
+        ccm_busy: 0,
+        fabric: FabricReport::default(),
+        faults: Vec::new(),
+        lost_wire: 0,
+        lost_pu: 0,
+    };
+    for raw in &raws {
+        merged.scheduled += raw.scheduled;
+        merged.failed_requests += raw.failed_requests;
+        merged.makespan = merged.makespan.max(raw.makespan);
+        merged.host_busy += raw.host_busy;
+        merged.ccm_busy += raw.ccm_busy;
+        for (p, n) in &raw.proto_mix {
+            *merged.proto_mix.entry(*p).or_insert(0) += *n;
+        }
+    }
+    merged
+}
+
+/// Raw-result → report assembly: the percentile math, retained from the
+/// request vector exactly as PR-6, streamed from the sketches.
+fn assemble(topo_spec: &TopologySpec, spec: &SchedSpec, raw: RawRun) -> SchedReport {
+    let (p50, p99, max_slowdown, class_rows, streamed) = match &raw.sk {
+        None => {
+            let slowdowns: Vec<f64> = raw.requests.iter().map(|r| r.slowdown()).collect();
+            (
+                if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 50.0) },
+                if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 99.0) },
+                slowdowns.iter().cloned().fold(1.0, f64::max),
+                Vec::new(),
+                false,
+            )
+        }
+        Some(sk) => {
+            let q = |s: &QuantileSketch, p: f64| if s.count() == 0 { 1.0 } else { s.quantile(p) };
+            let rows: Vec<(u32, usize, f64, f64)> = sk
+                .by_class
+                .iter()
+                .map(|(&c, s)| (c, s.count() as usize, q(s, 50.0), q(s, 99.0)))
+                .collect();
+            // Empty-run floor matches the retained fold's 1.0 seed.
+            let max = if sk.all.count() == 0 { 1.0 } else { sk.all.max().max(1.0) };
+            (q(&sk.all, 50.0), q(&sk.all, 99.0), max, rows, true)
+        }
+    };
+    SchedReport {
+        policy: spec.policy,
+        qos: topo_spec.qos.policy,
+        closed: true,
+        depth: spec.depth,
+        admit: spec.admit,
+        p50_slowdown: p50,
+        p99_slowdown: p99,
+        max_slowdown,
+        requests: raw.requests,
+        devices: raw.devices,
+        fabric: raw.fabric,
+        makespan: raw.makespan,
+        host_busy: raw.host_busy,
+        ccm_busy: raw.ccm_busy,
+        proto_mix: raw.proto_mix,
+        faults: raw.faults,
+        lost_wire: raw.lost_wire,
+        lost_pu: raw.lost_pu,
+        failed_requests: raw.failed_requests,
+        scheduled: raw.scheduled,
+        streamed,
+        class_rows,
+    }
+}
+
+/// One shard of the closed-loop event engine (the whole run when
+/// `shard` is `None`). Returns the raw, unassembled result.
+fn run_closed_core(
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    pass: &SoloPass,
+    shard: Option<(usize, usize)>,
+) -> RawRun {
     assert!(spec.depth > 0, "closed-loop window needs depth >= 1");
     assert!(spec.admit > 0, "device admission needs at least one service slot");
     let SoloPass { class_cfgs, class_of, annots, table, cand_table } = pass;
@@ -757,16 +1343,24 @@ pub(super) fn run_closed(
         .unwrap_or(1);
     let online_qos =
         || (qos.policy != QosPolicy::Fcfs).then(|| QosState::new(qos, spec.streams, max_bytes));
+    // Only fault schedules ever truncate calendars or pools, so only
+    // they pay for per-message/per-span logs; fault-free runs keep O(1)
+    // resource-model state regardless of run length.
+    let faulted = !spec.faults.is_empty();
     let mut devs: Vec<DevState> = (0..topo_spec.devices)
         .map(|d| DevState {
             class: class_of[d],
             link_bw: class_cfgs[class_of[d]].cxl_bw_gbps,
-            mem: LinkCalendar::default(),
-            io: LinkCalendar::default(),
+            mem: if faulted { LinkCalendar::default() } else { LinkCalendar::untracked() },
+            io: if faulted { LinkCalendar::default() } else { LinkCalendar::untracked() },
             qos_mem: online_qos(),
             qos_io: online_qos(),
-            pool: OnlinePool::new(class_cfgs[class_of[d]].ccm.num_pus),
-            queue: VecDeque::new(),
+            pool: if faulted {
+                OnlinePool::new(class_cfgs[class_of[d]].ccm.num_pus)
+            } else {
+                OnlinePool::untracked(class_cfgs[class_of[d]].ccm.num_pus)
+            },
+            queue: AdmitQueue::default(),
             in_service: 0,
             stats: DeviceStats::default(),
             alive: true,
@@ -775,8 +1369,10 @@ pub(super) fn run_closed(
             pu_factor: 1.0,
         })
         .collect();
+    // The fabric calendar is never truncated (faults kill devices, not
+    // the fabric), so it never needs the message log.
     let mut fabric = Fabric {
-        link: topo_spec.fabric_bw_gbps.map(|bw| (bw, LinkCalendar::default())),
+        link: topo_spec.fabric_bw_gbps.map(|bw| (bw, LinkCalendar::untracked())),
         qos: if topo_spec.fabric_bw_gbps.is_some() { online_qos() } else { None },
         wait: 0,
         bytes: 0,
@@ -784,7 +1380,13 @@ pub(super) fn run_closed(
     let mut tenants: Vec<TenantState> = (0..spec.streams)
         .map(|_| TenantState { next_index: 0, outstanding: 0, submit_scheduled: false })
         .collect();
-    let mut requests: Vec<RequestRun> = Vec::with_capacity(spec.streams * spec.requests);
+    // Retained mode pre-sizes for every request (the PR-6 layout);
+    // streaming mode starts empty and grows only to the live window.
+    let mut arena = ReqArena::new(
+        !spec.retain,
+        if spec.retain { spec.streams * spec.requests } else { 0 },
+    );
+    let mut agg: Option<Agg> = (!spec.retain).then(Agg::new);
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut rr_next = 0usize;
 
@@ -815,34 +1417,54 @@ pub(super) fn run_closed(
     }
 
     // Seeded per-tenant start stagger (same role as the open-loop
-    // arrival jitter: break exact ties without coupling tenants).
+    // arrival jitter: break exact ties without coupling tenants). Every
+    // shard draws the full tenant sequence — identical per-tenant values
+    // regardless of shard count — but seeds submissions only for the
+    // tenants whose pinned device it owns.
     let mut rng = Pcg32::seed_from_u64(spec.seed ^ 0x5C4E_D0C1_05ED_0001);
     for (t, ten) in tenants.iter_mut().enumerate() {
         let start = rng.below(US);
-        ten.submit_scheduled = true;
-        heap.push(Reverse((start, 1, t as u64, 0)));
+        let owned = match shard {
+            None => true,
+            Some((s, n)) => (t % topo_spec.devices) % n == s,
+        };
+        if owned {
+            ten.submit_scheduled = true;
+            heap.push(Reverse((start, 1, t as u64, 0)));
+        }
     }
 
     while let Some(Reverse((now, kind, id, seq))) = heap.pop() {
         match kind {
             0 => {
-                // ---- Completion on device `id & u32::MAX` of request
-                // `seq`, scheduled under attempt `id >> 32`. ----
+                // ---- Completion on device `id & u32::MAX` of the
+                // request holding ticket `seq`, scheduled under attempt
+                // `id >> 32`. ----
                 let d = (id & u32::MAX as u64) as usize;
+                let Some(rid) = arena.slot_of(seq) else {
+                    // Ticket already retired: a stale completion whose
+                    // slot was recycled (streaming fault mode only).
+                    continue;
+                };
                 if let Some(f) = fx.as_mut() {
-                    if f.rstate[seq as usize].attempt != (id >> 32) as u32 {
+                    if f.rstate[rid].attempt != (id >> 32) as u32 {
                         // Stale completion of a killed or suspended
                         // attempt: the kill already released the slot.
                         continue;
                     }
-                    f.rstate[seq as usize].loc = Loc::Done;
+                    f.rstate[rid].loc = Loc::Done;
                 }
-                let t = requests[seq as usize].tenant as usize;
+                let t = arena.runs[rid].tenant as usize;
                 devs[d].in_service -= 1;
                 tenants[t].outstanding -= 1;
+                if let Some(a) = agg.as_mut() {
+                    let r = &arena.runs[rid];
+                    a.finish(r, table.get(devs[d].class, r.annot, r.proto).run.metrics.host_busy);
+                }
+                arena.release(rid);
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
                 try_admit(
-                    now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap,
+                    now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
                     &mut fx,
                 );
             }
@@ -860,11 +1482,12 @@ pub(super) fn run_closed(
                 // the policy pick the protocol for the chosen device's
                 // class.
                 let d = if fx.is_some() {
-                    pick_device(topo_spec, &devs, &mut rr_next)
+                    pick_device(topo_spec, &devs, t, &mut rr_next)
                 } else {
                     crate::topo::place_device(
                         topo_spec.placement,
                         devs.len(),
+                        t,
                         |i| devs[i].stats.load,
                         &mut rr_next,
                     )
@@ -877,41 +1500,51 @@ pub(super) fn run_closed(
                 };
                 let proto = policy.choose(&cand_table[&(devs[d].class, annot)], &obs);
                 let solo_total = table.get(devs[d].class, annot, proto).run.metrics.total;
-                let rid = requests.len() as u32;
-                requests.push(RequestRun {
-                    tenant: t as u32,
-                    index,
-                    annot,
-                    class: spec.priority(t),
-                    device: d as u32,
-                    proto,
-                    submit: now,
-                    admit: now,
-                    solo: solo_total,
-                    device_wait: 0,
-                    fabric_wait: 0,
-                    pu_wait: 0,
-                    completion: now,
-                    retry_wait: 0,
-                    retries: 0,
-                    placed_on: vec![d as u32],
-                    failed: false,
-                });
+                let class = spec.priority(t);
+                let (ticket, rid) = arena.alloc();
+                {
+                    let r = &mut arena.runs[rid];
+                    r.tenant = t as u32;
+                    r.index = index;
+                    r.annot = annot;
+                    r.class = class;
+                    r.device = d as u32;
+                    r.proto = proto;
+                    r.submit = now;
+                    r.admit = now;
+                    r.solo = solo_total;
+                    r.device_wait = 0;
+                    r.fabric_wait = 0;
+                    r.pu_wait = 0;
+                    r.completion = now;
+                    r.retry_wait = 0;
+                    r.retries = 0;
+                    r.placed_on.push(d as u32);
+                    r.failed = false;
+                }
                 devs[d].stats.tenants += 1;
                 devs[d].stats.load += solo_total;
-                devs[d].queue.push_back(rid);
+                devs[d].queue.push(rid as u32, class);
                 if let Some(f) = fx.as_mut() {
-                    f.rstate.push(ReqState::queued(d as u32, now));
+                    if rid < f.rstate.len() {
+                        // Recycled slot: reset its fault-layer state,
+                        // carrying the attempt counter so completions of
+                        // the slot's previous life stay stale.
+                        f.rstate[rid].recycle(d as u32, now);
+                    } else {
+                        f.rstate.push(ReqState::queued(d as u32, now));
+                    }
                     if !devs[d].admit_open {
                         // Forced onto a non-admitting device (everything
                         // else is down): arm a timeout so the request
                         // cannot be stranded if the device never recovers.
                         let expiry = now + f.timeout(solo_total);
-                        heap.push(Reverse((expiry, 4, rid as u64, 0)));
+                        let attempt = f.rstate[rid].attempt as u64;
+                        heap.push(Reverse((expiry, 4, ticket, attempt)));
                     }
                 }
                 try_admit(
-                    now, d, spec, &mut devs[d], table, &mut fabric, &mut requests, &mut heap,
+                    now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
                     &mut fx,
                 );
                 // Window depth > 1: the tenant may pipeline its next request.
@@ -923,35 +1556,40 @@ pub(super) fn run_closed(
                 if seq == 0 {
                     fault_start(
                         id as usize, now, topo_spec, spec, &mut devs, &mut tenants, table,
-                        &mut fabric, &mut requests, &mut heap, &mut rr_next, &mut fx,
+                        &mut fabric, &mut arena, &mut agg, &mut heap, &mut rr_next, &mut fx,
                     );
                 } else {
                     fault_end(
-                        id as usize, now, spec, &mut devs, table, &mut fabric, &mut requests,
+                        id as usize, now, spec, &mut devs, table, &mut fabric, &mut arena,
                         &mut heap, &mut fx,
                     );
                 }
             }
             3 => {
-                // ---- Requeue arrival: request `id` finished its backoff
-                // under attempt `seq`. ----
-                let rid = id as usize;
+                // ---- Requeue arrival: the request holding ticket `id`
+                // finished its backoff under attempt `seq`. ----
+                let Some(rid) = arena.slot_of(id) else {
+                    continue;
+                };
                 let live = {
                     let f = fx.as_ref().expect("requeue events only exist in fault mode");
                     f.rstate[rid].attempt == seq as u32 && f.rstate[rid].loc == Loc::Backoff
                 };
                 if live {
                     re_place(
-                        rid, now, topo_spec, spec, &mut devs, table, &mut fabric, &mut requests,
+                        rid, now, topo_spec, spec, &mut devs, table, &mut fabric, &mut arena,
                         &mut heap, &mut rr_next, &mut fx,
                     );
                 }
             }
             _ => {
-                // ---- Timeout check: request `id`, armed under attempt
-                // `seq`. Fires only if the request is still queued on a
-                // device that is still not admitting. ----
-                let rid = id as usize;
+                // ---- Timeout check: the request holding ticket `id`,
+                // armed under attempt `seq`. Fires only if the request
+                // is still queued on a device that is still not
+                // admitting. ----
+                let Some(rid) = arena.slot_of(id) else {
+                    continue;
+                };
                 let stuck = {
                     let f = fx.as_ref().expect("timeout events only exist in fault mode");
                     let st = &f.rstate[rid];
@@ -961,22 +1599,18 @@ pub(super) fn run_closed(
                 };
                 if stuck {
                     let f = fx.as_mut().expect("timeout events only exist in fault mode");
-                    let st = &mut f.rstate[rid];
-                    let d = st.loc_dev as usize;
-                    st.attempt += 1;
-                    let pos = devs[d]
-                        .queue
-                        .iter()
-                        .position(|&x| x == rid as u32)
-                        .expect("queued request present in its device's admission queue");
-                    devs[d].queue.remove(pos);
-                    retry_or_fail(rid, now, false, spec, &mut tenants, &mut requests, &mut heap, f);
+                    let d = f.rstate[rid].loc_dev as usize;
+                    f.rstate[rid].attempt += 1;
+                    devs[d].queue.remove(rid as u32, arena.runs[rid].class);
+                    retry_or_fail(
+                        rid, now, false, spec, &mut tenants, &mut arena, &mut agg, &mut heap, f,
+                    );
                 }
             }
         }
     }
 
-    // ---- Assemble. ----
+    // ---- Raw assembly. ----
     let (faults, lost_wire, lost_pu) = match fx {
         Some(f) => {
             let lw = f.outcomes.iter().map(|o| o.lost_wire).sum();
@@ -985,18 +1619,33 @@ pub(super) fn run_closed(
         }
         None => (Vec::new(), 0, 0),
     };
-    requests.sort_by_key(|r| (r.tenant, r.index));
-    let failed_requests = requests.iter().filter(|r| r.failed).count();
-    let makespan = requests.iter().map(|r| r.completion).max().unwrap_or(0);
-    let host_busy = requests
-        .iter()
-        .filter(|r| !r.failed)
-        .map(|r| table.get(devs[r.device as usize].class, r.annot, r.proto).run.metrics.host_busy)
-        .sum();
-    let mut proto_mix: BTreeMap<&'static str, u64> = BTreeMap::new();
-    for r in &requests {
-        *proto_mix.entry(r.proto.label()).or_insert(0) += 1;
-    }
+    let (requests, sk, scheduled, failed_requests, makespan, host_busy, proto_mix) = match agg {
+        None => {
+            // Retained: the PR-6 post-hoc computation, verbatim.
+            let mut requests = arena.runs;
+            requests.sort_by_key(|r| (r.tenant, r.index));
+            let failed_requests = requests.iter().filter(|r| r.failed).count();
+            let makespan = requests.iter().map(|r| r.completion).max().unwrap_or(0);
+            let host_busy = requests
+                .iter()
+                .filter(|r| !r.failed)
+                .map(|r| {
+                    table.get(devs[r.device as usize].class, r.annot, r.proto).run.metrics.host_busy
+                })
+                .sum();
+            let mut proto_mix: BTreeMap<&'static str, u64> = BTreeMap::new();
+            for r in &requests {
+                *proto_mix.entry(r.proto.label()).or_insert(0) += 1;
+            }
+            let scheduled = requests.len() as u64;
+            (requests, None, scheduled, failed_requests, makespan, host_busy, proto_mix)
+        }
+        Some(a) => {
+            // Streaming: everything was folded per terminal request.
+            (Vec::new(), Some(a.sk), a.scheduled, a.failed as usize, a.makespan, a.host_busy,
+             a.proto_mix)
+        }
+    };
     let mut ccm_busy: Ps = 0;
     let devices: Vec<DeviceStats> = devs
         .iter_mut()
@@ -1010,7 +1659,7 @@ pub(super) fn run_closed(
     let fabric_report = match &fabric.link {
         Some((bw, cal)) => FabricReport {
             bw_gbps: Some(*bw),
-            messages: cal.msgs,
+            messages: cal.msgs(),
             bytes: fabric.bytes,
             busy: cal.busy_union(),
             wait: fabric.wait,
@@ -1022,27 +1671,20 @@ pub(super) fn run_closed(
         },
         None => FabricReport::default(),
     };
-    let slowdowns: Vec<f64> = requests.iter().map(|r| r.slowdown()).collect();
-    SchedReport {
-        policy: spec.policy,
-        qos: qos.policy,
-        closed: true,
-        depth: spec.depth,
-        admit: spec.admit,
-        p50_slowdown: if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 50.0) },
-        p99_slowdown: if slowdowns.is_empty() { 1.0 } else { percentile(&slowdowns, 99.0) },
-        max_slowdown: slowdowns.iter().cloned().fold(1.0, f64::max),
+    RawRun {
         requests,
-        devices,
-        fabric: fabric_report,
+        sk,
+        scheduled,
+        failed_requests,
         makespan,
         host_busy,
-        ccm_busy,
         proto_mix,
+        devices,
+        ccm_busy,
+        fabric: fabric_report,
         faults,
         lost_wire,
         lost_pu,
-        failed_requests,
     }
 }
 
@@ -1078,10 +1720,16 @@ fn schedule_submit(
 /// device alive and admitting the filtered variants choose the same
 /// device, so a schedule whose windows never open still matches
 /// fault-free placement exactly).
-fn pick_device(topo_spec: &TopologySpec, devs: &[DevState], rr_next: &mut usize) -> usize {
+fn pick_device(
+    topo_spec: &TopologySpec,
+    devs: &[DevState],
+    ordinal: usize,
+    rr_next: &mut usize,
+) -> usize {
     crate::topo::place_device_filtered(
         topo_spec.placement,
         devs.len(),
+        ordinal,
         |i| devs[i].alive && devs[i].admit_open,
         |i| devs[i].stats.load,
         rr_next,
@@ -1092,6 +1740,7 @@ fn pick_device(topo_spec: &TopologySpec, devs: &[DevState], rr_next: &mut usize)
         crate::topo::place_device_filtered(
             topo_spec.placement,
             devs.len(),
+            ordinal,
             |i| devs[i].alive,
             |i| devs[i].stats.load,
             rr_next,
@@ -1120,7 +1769,8 @@ fn fault_start(
     tenants: &mut [TenantState],
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut Vec<RequestRun>,
+    arena: &mut ReqArena,
+    agg: &mut Option<Agg>,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
@@ -1137,27 +1787,28 @@ fn fault_start(
             // charge) slides by the remaining window. The old completion
             // event goes stale via the attempt bump; the device resumes
             // where it left off, so these requests recover exactly at
-            // the window end.
+            // the window end. The slot sweep covers live requests only
+            // (recycled slots sit at Done/Failed and never match).
             let delta = e.until - now;
-            for rid in 0..requests.len() {
+            for rid in 0..arena.runs.len() {
                 let st = &mut f.rstate[rid];
                 if st.loc == Loc::InService && st.loc_dev == d as u32 {
-                    let r = &mut requests[rid];
+                    let r = &mut arena.runs[rid];
                     r.completion += delta;
                     r.pu_wait += delta;
                     st.attempt += 1;
                     let ev_id = ((st.attempt as u64) << 32) | d as u64;
-                    heap.push(Reverse((r.completion, 0, ev_id, rid as u64)));
+                    heap.push(Reverse((r.completion, 0, ev_id, arena.tickets[rid])));
                     f.outcomes[i].displaced += 1;
                     f.outcomes[i].recover = f.outcomes[i].recover.max(e.until - e.at);
                 }
             }
             // Queued work gets a requeue timeout sized from its solo
             // estimate; it fires only if the device is still stalled.
-            for &rid in &devs[d].queue {
+            for rid in devs[d].queue.iter_rids() {
                 let st = &f.rstate[rid as usize];
-                let expiry = (st.enqueued + f.timeout(requests[rid as usize].solo)).max(now);
-                heap.push(Reverse((expiry, 4, rid as u64, st.attempt as u64)));
+                let expiry = (st.enqueued + f.timeout(arena.runs[rid as usize].solo)).max(now);
+                heap.push(Reverse((expiry, 4, arena.tickets[rid as usize], st.attempt as u64)));
             }
         }
         FaultKind::Fail => {
@@ -1167,7 +1818,7 @@ fn fault_start(
             // the requests retry with backoff on surviving devices.
             let killed: Vec<usize> = {
                 let f = fx.as_ref().expect("fault transitions only exist in fault mode");
-                (0..requests.len())
+                (0..arena.runs.len())
                     .filter(|&rid| {
                         let st = &f.rstate[rid];
                         st.loc == Loc::InService && st.loc_dev == d as u32
@@ -1184,20 +1835,20 @@ fn fault_start(
                 f.outcomes[i].displaced += 1;
                 f.outcomes[i].lost_wire += w;
                 f.outcomes[i].lost_pu += p;
-                retry_or_fail(rid, now, true, spec, tenants, requests, heap, f);
+                retry_or_fail(rid, now, true, spec, tenants, arena, agg, heap, f);
             }
             // Drain the admission queue in order onto survivors. These
             // requests never started, so re-placement is free: no retry
             // consumed, no backoff, queue time keeps accruing normally.
-            while let Some(rid) = devs[d].queue.pop_front() {
+            while let Some(rid) = devs[d].queue.pop_front_fifo() {
                 {
                     let f = fx.as_mut().expect("fault transitions only exist in fault mode");
                     f.outcomes[i].displaced += 1;
                     f.rstate[rid as usize].displaced_by = Some(i);
                 }
                 re_place(
-                    rid as usize, now, topo_spec, spec, devs, table, fabric, requests, heap,
-                    rr_next, fx,
+                    rid as usize, now, topo_spec, spec, devs, table, fabric, arena, heap, rr_next,
+                    fx,
                 );
             }
             devs[d].mem.truncate(now);
@@ -1219,7 +1870,7 @@ fn fault_end(
     devs: &mut [DevState],
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut Vec<RequestRun>,
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
 ) {
@@ -1233,7 +1884,7 @@ fn fault_end(
             // this stall began — the gate stays shut forever then.
             if devs[d].alive {
                 devs[d].admit_open = true;
-                try_admit(now, d, spec, &mut devs[d], table, fabric, requests, heap, fx);
+                try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx);
             }
         }
         FaultKind::Fail => unreachable!("permanent failures schedule no end event"),
@@ -1254,23 +1905,26 @@ fn re_place(
     devs: &mut [DevState],
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut Vec<RequestRun>,
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
 ) {
-    let d = pick_device(topo_spec, devs, rr_next);
-    {
-        let r = &mut requests[rid];
+    let ordinal = arena.runs[rid].tenant as usize;
+    let d = pick_device(topo_spec, devs, ordinal, rr_next);
+    let class = {
+        let r = &mut arena.runs[rid];
         r.device = d as u32;
         r.placed_on.push(d as u32);
         r.solo = table.get(devs[d].class, r.annot, r.proto).run.metrics.total;
         devs[d].stats.tenants += 1;
         devs[d].stats.load += r.solo;
-    }
-    devs[d].queue.push_back(rid as u32);
+        r.class
+    };
+    devs[d].queue.push(rid as u32, class);
     {
         let f = fx.as_mut().expect("re-placement only exists in fault mode");
+        let timeout = f.timeout(arena.runs[rid].solo);
         let st = &mut f.rstate[rid];
         st.loc = Loc::Queued;
         st.loc_dev = d as u32;
@@ -1278,11 +1932,10 @@ fn re_place(
         if !devs[d].admit_open {
             // Forced onto a stalled device (everything else is down):
             // arm a timeout so the run can never hang here.
-            let expiry = now + f.timeout(requests[rid].solo);
-            heap.push(Reverse((expiry, 4, rid as u64, st.attempt as u64)));
+            heap.push(Reverse((now + timeout, 4, arena.tickets[rid], st.attempt as u64)));
         }
     }
-    try_admit(now, d, spec, &mut devs[d], table, fabric, requests, heap, fx);
+    try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx);
 }
 
 /// Consume one retry for request `rid` at `now`. Within budget: charge
@@ -1301,50 +1954,58 @@ fn retry_or_fail(
     from_service: bool,
     spec: &SchedSpec,
     tenants: &mut [TenantState],
-    requests: &mut [RequestRun],
+    arena: &mut ReqArena,
+    agg: &mut Option<Agg>,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     f: &mut FaultRuntime,
 ) {
-    let st = &mut f.rstate[rid];
-    st.retries += 1;
-    let r = &mut requests[rid];
-    r.retries = st.retries;
-    if st.retries > f.spec.max_retries {
-        st.loc = Loc::Failed;
-        r.failed = true;
-        if from_service {
-            r.retry_wait += now - r.admit;
+    let max_retries = f.spec.max_retries;
+    f.rstate[rid].retries += 1;
+    let retries = f.rstate[rid].retries;
+    arena.runs[rid].retries = retries;
+    if retries > max_retries {
+        f.rstate[rid].loc = Loc::Failed;
+        let t = {
+            let r = &mut arena.runs[rid];
+            r.failed = true;
+            if from_service {
+                r.retry_wait += now - r.admit;
+            }
+            r.admit = now;
+            r.device_wait = 0;
+            r.fabric_wait = 0;
+            r.pu_wait = 0;
+            r.completion = now;
+            r.tenant as usize
+        };
+        // A dropped request is terminal: fold it into the streaming
+        // aggregates (no host-busy charge — its solo work never
+        // completed) and retire its slot.
+        if let Some(a) = agg.as_mut() {
+            a.finish(&arena.runs[rid], 0);
         }
-        r.admit = now;
-        r.device_wait = 0;
-        r.fabric_wait = 0;
-        r.pu_wait = 0;
-        r.completion = now;
-        let t = r.tenant as usize;
+        arena.release(rid);
         tenants[t].outstanding -= 1;
         schedule_submit(&mut tenants[t], t, spec, now, heap);
     } else {
-        let delay = f.backoff_delay(st.retries);
+        let delay = f.backoff_delay(retries);
+        let attempt = f.rstate[rid].attempt as u64;
+        f.rstate[rid].loc = Loc::Backoff;
+        let r = &mut arena.runs[rid];
         r.retry_wait += if from_service { (now - r.admit) + delay } else { delay };
-        st.loc = Loc::Backoff;
-        heap.push(Reverse((now + delay, 3, rid as u64, st.attempt as u64)));
+        heap.push(Reverse((now + delay, 3, arena.tickets[rid], attempt)));
     }
-}
-
-/// Pop the next request to admit: the earliest-queued request of the
-/// highest priority class. With all classes equal the winner is index
-/// 0 — exactly the PR-4 FIFO `pop_front`, which keeps default-priority
-/// calendars bit-identical. A higher class jumps the queue at admission
-/// time but never revokes in-service work (no preemption of service).
-fn pop_admit(queue: &mut VecDeque<u32>, requests: &[RequestRun]) -> Option<u32> {
-    let idx = (0..queue.len()).min_by_key(|&i| (Reverse(requests[queue[i] as usize].class), i))?;
-    queue.remove(idx)
 }
 
 /// Admit queued requests into service while the device has free slots,
 /// charging each one's contention against the online resource models.
 /// The admission *batch* (everything entering service at this instant)
-/// is popped highest-class-first, then its wire traffic is charged
+/// is popped in [`AdmitQueue::pop_admit`] order — earliest-queued of
+/// the highest present class; with all classes equal that is exactly
+/// the PR-4 FIFO `pop_front`, which keeps default-priority calendars
+/// bit-identical, and a higher class jumps the queue at admission time
+/// but never revokes in-service work. The batch's wire traffic is then
+/// charged
 /// either in pure admission order (FCFS — the PR-4 path, verbatim) or
 /// through the per-wire [`QosState`] schedulers (WRR/DRR). A stalled or
 /// dead device keeps its admission gate shut (`admit_open == false`)
@@ -1358,7 +2019,7 @@ fn try_admit(
     dev: &mut DevState,
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut [RequestRun],
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
 ) {
@@ -1367,16 +2028,16 @@ fn try_admit(
     }
     let mut batch: Vec<u32> = Vec::new();
     while dev.in_service + batch.len() < spec.admit {
-        let Some(rid) = pop_admit(&mut dev.queue, requests) else { break };
+        let Some(rid) = dev.queue.pop_admit() else { break };
         batch.push(rid);
     }
     if batch.is_empty() {
         return;
     }
     if dev.qos_mem.is_none() {
-        admit_fcfs(now, d, dev, table, fabric, requests, heap, &batch, fx);
+        admit_fcfs(now, d, dev, table, fabric, arena, heap, &batch, fx);
     } else {
-        admit_qos(now, d, spec.streams, dev, table, fabric, requests, heap, &batch, fx);
+        admit_qos(now, d, spec.streams, dev, table, fabric, arena, heap, &batch, fx);
     }
 }
 
@@ -1394,7 +2055,7 @@ fn admit_fcfs(
     dev: &mut DevState,
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut [RequestRun],
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
     fx: &mut Option<FaultRuntime>,
@@ -1402,7 +2063,7 @@ fn admit_fcfs(
     let bw = dev.link_bw / dev.bw_factor;
     for &rid in batch {
         let (annot, proto) = {
-            let r = &requests[rid as usize];
+            let r = &arena.runs[rid as usize];
             (r.annot, r.proto)
         };
         let s = table.get(dev.class, annot, proto);
@@ -1439,7 +2100,7 @@ fn admit_fcfs(
             }
         }
         finish_admission(
-            now, d, dev, table, fabric, requests, heap, rid, mem_late, io_late, fab_late, fx,
+            now, d, dev, table, fabric, arena, heap, rid, mem_late, io_late, fab_late, fx,
         );
     }
 }
@@ -1475,7 +2136,7 @@ fn admit_qos(
     dev: &mut DevState,
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut [RequestRun],
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
     fx: &mut Option<FaultRuntime>,
@@ -1496,7 +2157,7 @@ fn admit_qos(
     let mut fab_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
     for (slot, &rid) in batch.iter().enumerate() {
         let (tenant, annot, proto) = {
-            let r = &requests[rid as usize];
+            let r = &arena.runs[rid as usize];
             (r.tenant as usize, r.annot, r.proto)
         };
         let s = table.get(dev.class, annot, proto);
@@ -1549,7 +2210,7 @@ fn admit_qos(
             dev,
             table,
             fabric,
-            requests,
+            arena,
             heap,
             rid,
             mem_late[slot],
@@ -1625,7 +2286,7 @@ fn finish_admission(
     dev: &mut DevState,
     table: &SoloTable,
     fabric: &mut Fabric,
-    requests: &mut [RequestRun],
+    arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     rid: u32,
     mem_late: Ps,
@@ -1634,7 +2295,7 @@ fn finish_admission(
     fx: &mut Option<FaultRuntime>,
 ) {
     let (annot, proto) = {
-        let r = &requests[rid as usize];
+        let r = &arena.runs[rid as usize];
         (r.annot, r.proto)
     };
     let s = table.get(dev.class, annot, proto);
@@ -1647,12 +2308,15 @@ fn finish_admission(
         let (_, end) = dev.pool.dispatch(ready, scale(sp.dur()));
         pu_late = pu_late.max(end - (ready + sp.dur()));
     }
-    let r = &mut requests[rid as usize];
-    r.admit = now;
-    r.device_wait = mem_late.max(io_late);
-    r.fabric_wait = fab_late;
-    r.pu_wait = pu_late;
-    r.completion = now + r.solo + r.device_wait.max(fab_late) + pu_late;
+    let completion = {
+        let r = &mut arena.runs[rid as usize];
+        r.admit = now;
+        r.device_wait = mem_late.max(io_late);
+        r.fabric_wait = fab_late;
+        r.pu_wait = pu_late;
+        r.completion = now + r.solo + r.device_wait.max(fab_late) + pu_late;
+        r.completion
+    };
     dev.in_service += 1;
     dev.stats.mem_wait += mem_late;
     dev.stats.io_wait += io_late;
@@ -1678,7 +2342,12 @@ fn finish_admission(
         attempt = st.attempt;
         fxr.note_recovered(rid as usize, now);
     }
-    heap.push(Reverse((r.completion, 0, ((attempt as u64) << 32) | d as u64, rid as u64)));
+    heap.push(Reverse((
+        completion,
+        0,
+        ((attempt as u64) << 32) | d as u64,
+        arena.tickets[rid as usize],
+    )));
 }
 
 /// The open-loop pin: delegate to the PR-3 tenant driver verbatim and
@@ -1740,6 +2409,7 @@ fn run_sched_open(
     if !requests.is_empty() {
         proto_mix.insert(proto.label(), requests.len() as u64);
     }
+    let scheduled = requests.len() as u64;
     SchedReport {
         policy: spec.policy,
         qos: r.qos,
@@ -1760,6 +2430,9 @@ fn run_sched_open(
         lost_wire: 0,
         lost_pu: 0,
         failed_requests: 0,
+        scheduled,
+        streamed: false,
+        class_rows: Vec::new(),
     }
 }
 
@@ -1786,6 +2459,9 @@ fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
         lost_wire: 0,
         lost_pu: 0,
         failed_requests: 0,
+        scheduled: 0,
+        streamed: false,
+        class_rows: Vec::new(),
     }
 }
 
@@ -1843,6 +2519,55 @@ mod tests {
         assert_eq!(p.busy_total, 140);
         assert_eq!(p.busy_union(), 80); // [100, 180)
         assert_eq!(p.earliest_free(), 160);
+    }
+
+    /// Reference union: sort-and-sweep over the raw span list (the PR-6
+    /// report-time computation).
+    fn brute_union(spans: &[(Ps, Ps)]) -> Ps {
+        let mut spans = spans.to_vec();
+        spans.sort_unstable();
+        let mut union = 0;
+        let mut covered = 0;
+        for (s, e) in spans {
+            if s >= covered {
+                union += e - s;
+                covered = e;
+            } else if e > covered {
+                union += e - covered;
+                covered = e;
+            }
+        }
+        union
+    }
+
+    #[test]
+    fn online_pool_incremental_union_matches_brute_force() {
+        // Random dispatch/truncate traffic: the incrementally maintained
+        // union must equal the sort-and-sweep union of the live spans at
+        // every step.
+        let mut rng = Pcg32::seed_from_u64(0x0901);
+        for pus in [1usize, 3] {
+            let mut p = OnlinePool::new(pus);
+            let mut spans: Vec<(Ps, Ps)> = Vec::new();
+            for _ in 0..500 {
+                let ready = rng.below(10_000);
+                let dur = rng.below(200);
+                let (s, e) = p.dispatch(ready, dur);
+                if dur > 0 {
+                    spans.push((s, e));
+                }
+                if rng.below(50) == 0 {
+                    let cut = rng.below(12_000);
+                    p.truncate(cut);
+                    spans = spans
+                        .iter()
+                        .filter(|&&(s, _)| s < cut)
+                        .map(|&(s, e)| (s, e.min(cut)))
+                        .collect();
+                }
+                assert_eq!(p.busy_union(), brute_union(&spans));
+            }
+        }
     }
 
     // ---- Closed-loop driver. ----
@@ -1973,50 +2698,64 @@ mod tests {
 
     // ---- Priority admission + online QoS. ----
 
-    /// Minimal request record for queue-order tests (only `class` is
-    /// read by the admission pop).
-    fn req_with_class(tenant: u32, class: u32) -> RequestRun {
-        RequestRun {
-            tenant,
-            index: 0,
-            annot: 'f',
-            class,
-            device: 0,
-            proto: Protocol::Axle,
-            submit: 0,
-            admit: 0,
-            solo: 0,
-            device_wait: 0,
-            fabric_wait: 0,
-            pu_wait: 0,
-            completion: 0,
-            retry_wait: 0,
-            retries: 0,
-            placed_on: vec![0],
-            failed: false,
-        }
+    /// The PR-4 admission pop kept as a test-only reference: O(queue)
+    /// scan of a flat FIFO for the earliest-queued request of the
+    /// highest class.
+    fn pop_admit_scan(queue: &mut VecDeque<u32>, class_of: &[u32]) -> Option<u32> {
+        let idx = (0..queue.len())
+            .min_by_key(|&i| (std::cmp::Reverse(class_of[queue[i] as usize]), i))?;
+        queue.remove(idx)
     }
 
     #[test]
     fn pop_admit_is_fifo_for_equal_classes_and_jumps_for_higher() {
         // All class 0: exact FIFO (the PR-4 pop_front pin).
-        let requests: Vec<RequestRun> = (0..4).map(|t| req_with_class(t, 0)).collect();
-        let mut q: VecDeque<u32> = (0..4).collect();
-        let order: Vec<u32> =
-            std::iter::from_fn(|| pop_admit(&mut q, &requests)).collect();
+        let mut q = AdmitQueue::default();
+        for rid in 0..4 {
+            q.push(rid, 0);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop_admit()).collect();
         assert_eq!(order, vec![0, 1, 2, 3]);
         // Mixed classes: highest class first, FIFO within a class.
-        let requests = vec![
-            req_with_class(0, 0),
-            req_with_class(1, 2),
-            req_with_class(2, 0),
-            req_with_class(3, 2),
-        ];
-        let mut q: VecDeque<u32> = (0..4).collect();
-        let order: Vec<u32> =
-            std::iter::from_fn(|| pop_admit(&mut q, &requests)).collect();
+        let mut q = AdmitQueue::default();
+        for (rid, class) in [(0, 0), (1, 2), (2, 0), (3, 2)] {
+            q.push(rid, class);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop_admit()).collect();
         assert_eq!(order, vec![1, 3, 0, 2]);
-        assert_eq!(pop_admit(&mut q, &requests), None);
+        assert_eq!(q.pop_admit(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admit_queue_matches_the_reference_scan_on_random_traffic() {
+        // Random interleavings of push / priority-pop / FIFO-pop against
+        // the PR-4 flat-queue scan: every pop must agree, in every state.
+        let mut rng = Pcg32::seed_from_u64(0xADC1);
+        let mut classes: Vec<u32> = Vec::new();
+        let mut q = AdmitQueue::default();
+        let mut flat: VecDeque<u32> = VecDeque::new();
+        for _ in 0..2000 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let rid = classes.len() as u32;
+                    let class = rng.below(3) as u32;
+                    classes.push(class);
+                    q.push(rid, class);
+                    flat.push_back(rid);
+                }
+                2 => assert_eq!(q.pop_admit(), pop_admit_scan(&mut flat, &classes)),
+                // FIFO drain (the fault-kill path) is the flat pop_front.
+                _ => assert_eq!(q.pop_front_fifo(), flat.pop_front()),
+            }
+            assert_eq!(q.len(), flat.len());
+        }
+        // Targeted removal (the timeout path) evicts one rid anywhere in
+        // the queue; drain the survivors through it.
+        while let Some(rid) = flat.pop_front() {
+            q.remove(rid, classes[rid as usize]);
+        }
+        assert!(q.is_empty());
     }
 
     #[test]

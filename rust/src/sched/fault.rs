@@ -93,6 +93,22 @@ impl ReqState {
             displaced_by: None,
         }
     }
+
+    /// Re-initialize a recycled request slot for a fresh submission.
+    /// The attempt counter is *carried forward* (bumped, never reset):
+    /// a stale event addressed to the slot's previous occupant then
+    /// fails the attempt match and is dropped, exactly like a stale
+    /// completion of a killed attempt.
+    pub fn recycle(&mut self, dev: u32, now: Ps) {
+        self.attempt += 1;
+        self.retries = 0;
+        self.loc = Loc::Queued;
+        self.loc_dev = dev;
+        self.enqueued = now;
+        self.attempt_wire = 0;
+        self.attempt_pu = 0;
+        self.displaced_by = None;
+    }
 }
 
 /// What one injected fault event cost the run.

@@ -14,8 +14,8 @@
 //! - [`Topology`] — N identical CCM devices described by a
 //!   [`TopologySpec`] (per-device pools and links, optional shared
 //!   upstream fabric link), plus tenant placement
-//!   ([`Placement::RoundRobin`] / [`Placement::LeastLoaded`]) and
-//!   per-device contention accounting.
+//!   ([`Placement::RoundRobin`] / [`Placement::LeastLoaded`] /
+//!   [`Placement::Pinned`]) and per-device contention accounting.
 //! - [`tenant`] — the multi-tenant driver: K concurrent workload streams
 //!   with deterministic open-loop arrivals, placed across devices;
 //!   per-device link contention and shared-fabric serialization are
@@ -136,13 +136,16 @@ pub struct Topology {
     spec: TopologySpec,
     devices: Vec<DeviceStats>,
     rr_next: usize,
+    /// Streams placed so far — the placement ordinal [`Placement::Pinned`]
+    /// keys on (streams are placed in id order, so ordinal == stream id).
+    placed: usize,
 }
 
 impl Topology {
     pub fn new(cfg: SimConfig, spec: TopologySpec) -> Self {
         assert!(spec.devices > 0, "topology needs at least one device");
         let devices = vec![DeviceStats::default(); spec.devices];
-        Self { cfg, spec, devices, rr_next: 0 }
+        Self { cfg, spec, devices, rr_next: 0, placed: 0 }
     }
 
     pub fn config(&self) -> &SimConfig {
@@ -173,9 +176,12 @@ impl Topology {
     /// placement policy; returns the chosen device id and updates its
     /// load accounting.
     pub fn place(&mut self, solo: Ps) -> u32 {
+        let ordinal = self.placed;
+        self.placed += 1;
         let d = place_device(
             self.spec.placement,
             self.devices.len(),
+            ordinal,
             |i| self.devices[i].load,
             &mut self.rr_next,
         );
@@ -187,12 +193,15 @@ impl Topology {
 
 /// Pick the next placement target among `devices` devices: round-robin
 /// advances `rr_next`; least-loaded greedily takes the device with the
-/// smallest accumulated `load` (ties broken by lowest id). One shared
+/// smallest accumulated `load` (ties broken by lowest id); pinned maps
+/// the caller-supplied `ordinal` (stream / tenant id) straight to
+/// `ordinal % devices` without touching any shared state. One shared
 /// implementation for [`Topology::place`] and the closed-loop
 /// scheduler's per-request placement, so the two paths cannot drift.
 pub fn place_device(
     placement: Placement,
     devices: usize,
+    ordinal: usize,
     load: impl Fn(usize) -> Ps,
     rr_next: &mut usize,
 ) -> usize {
@@ -211,6 +220,7 @@ pub fn place_device(
             }
             best
         }
+        Placement::Pinned => ordinal % devices,
     }
 }
 
@@ -221,10 +231,14 @@ pub fn place_device(
 /// eligible. With every device eligible the choice matches
 /// [`place_device`] exactly. Round-robin probes at most one full
 /// rotation, advancing the cursor past ineligible devices so the
-/// rotation stays deterministic as devices come and go.
+/// rotation stays deterministic as devices come and go; pinned probes
+/// `ordinal % D, ordinal % D + 1, …` and takes the first eligible
+/// device (the home device when it is alive, the nearest survivor in id
+/// order otherwise).
 pub fn place_device_filtered(
     placement: Placement,
     devices: usize,
+    ordinal: usize,
     eligible: impl Fn(usize) -> bool,
     load: impl Fn(usize) -> Ps,
     rr_next: &mut usize,
@@ -243,6 +257,7 @@ pub fn place_device_filtered(
         Placement::LeastLoaded => {
             (0..devices).filter(|&i| eligible(i)).min_by_key(|&i| (load(i), i))
         }
+        Placement::Pinned => (0..devices).map(|k| (ordinal + k) % devices).find(|&d| eligible(d)),
     }
 }
 
@@ -281,6 +296,21 @@ mod tests {
         assert_eq!(t.place(10), 1); // still lighter (20 < 100)
         assert_eq!(t.device(0).tenants, 1);
         assert_eq!(t.device(1).tenants, 3);
+    }
+
+    #[test]
+    fn pinned_placement_is_a_pure_function_of_the_stream_id() {
+        let spec = TopologySpec::shared_fabric(3, 16.0).with_placement(Placement::Pinned);
+        let mut t = Topology::new(SimConfig::m2ndp(), spec);
+        // Load-independent: heavy early streams never push later ones off
+        // their home device (contrast least_loaded_placement_fills_gaps).
+        let got: Vec<u32> = [1_000_000, 10, 10, 10, 10, 10].iter().map(|&s| t.place(s)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+        // Filtered probing falls back to the nearest eligible id.
+        let mut rr = 0;
+        let pick = place_device_filtered(Placement::Pinned, 3, 4, |d| d != 1, |_| 0, &mut rr);
+        assert_eq!(pick, Some(2));
+        assert_eq!(place_device_filtered(Placement::Pinned, 3, 4, |_| false, |_| 0, &mut rr), None);
     }
 
     #[test]

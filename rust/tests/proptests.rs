@@ -870,3 +870,152 @@ mod fault_props {
         });
     }
 }
+
+// ------------------------------------------------------------------
+// PR-7 event-core structures: the coalesced wire calendar against the
+// PR-6 per-message reference, and sketch percentiles against exact.
+// ------------------------------------------------------------------
+
+mod event_core_props {
+    use axle::metrics::{percentile, QuantileSketch};
+    use axle::sched::driver::LinkCalendar;
+    use axle::sim::Ps;
+    use axle::util::prop::run_prop;
+
+    /// The PR-6 wire calendar, kept verbatim as the test oracle: one
+    /// map entry per placed message, linear gap walk from the issue
+    /// instant. The engine replaced it with the coalesced-interval
+    /// [`LinkCalendar`]; this reference pins every observable.
+    #[derive(Default)]
+    struct RefCalendar {
+        /// `start → end`, one entry per message (non-overlapping).
+        msgs: std::collections::BTreeMap<Ps, Ps>,
+    }
+
+    impl RefCalendar {
+        fn place(&mut self, issue: Ps, dur: Ps) -> Ps {
+            if dur == 0 {
+                return issue;
+            }
+            let mut t = issue;
+            for (&s, &e) in &self.msgs {
+                if e <= t {
+                    continue;
+                }
+                if s >= t + dur {
+                    break;
+                }
+                t = e;
+            }
+            self.msgs.insert(t, t + dur);
+            t
+        }
+
+        fn tail(&self) -> Ps {
+            self.msgs.values().copied().max().unwrap_or(0)
+        }
+
+        fn msgs(&self) -> u64 {
+            self.msgs.len() as u64
+        }
+
+        fn busy_union(&self) -> Ps {
+            self.msgs.iter().map(|(&s, &e)| e - s).sum()
+        }
+
+        /// Mirror of the engine's truncate: future messages vanish, a
+        /// straddler is clipped but keeps its message count (it really
+        /// started before the cut).
+        fn truncate(&mut self, now: Ps) {
+            self.msgs.retain(|&s, _| s < now);
+            for e in self.msgs.values_mut() {
+                *e = (*e).min(now);
+            }
+        }
+    }
+
+    /// Random place/truncate sequences: the coalesced calendar must
+    /// grant the same start instant for every placement and agree with
+    /// the reference on tail, message count and busy union after every
+    /// operation — including backfills before the tail, abutting merges
+    /// and zero-length transfers.
+    #[test]
+    fn prop_coalesced_calendar_matches_pr6_reference() {
+        run_prop("calendar_vs_reference", 150, |rng| {
+            let mut cal = LinkCalendar::default();
+            let mut oracle = RefCalendar::default();
+            for _ in 0..rng.range(10, 300) {
+                if rng.next_f64() < 0.9 {
+                    let issue = rng.below(cal.tail() + 100);
+                    let dur = rng.below(50); // zero-length included
+                    let a = cal.place(issue, dur);
+                    let b = oracle.place(issue, dur);
+                    assert_eq!(a, b, "placement start drifted");
+                } else {
+                    let now = rng.below(cal.tail() + 100);
+                    cal.truncate(now);
+                    oracle.truncate(now);
+                }
+                assert_eq!(cal.tail(), oracle.tail());
+                assert_eq!(cal.msgs(), oracle.msgs());
+                assert_eq!(cal.busy_union(), oracle.busy_union());
+            }
+        });
+    }
+
+    /// On random slowdown-like samples spanning several octaves the
+    /// sketch answers p0/p100 exactly (bit for bit) and every interior
+    /// quantile within one sub-bucket (relative error ≤ 2⁻⁷) of the
+    /// retained-vector [`percentile`] under the same rank rule.
+    #[test]
+    fn prop_sketch_quantiles_track_exact_percentiles() {
+        run_prop("sketch_percentile_error", 120, |rng| {
+            let n = rng.range(1, 500) as usize;
+            let mut xs = Vec::with_capacity(n);
+            let mut sk = QuantileSketch::new();
+            for _ in 0..n {
+                let v = 1.0 + rng.next_f64() * f64::exp2(rng.below(10) as f64);
+                xs.push(v);
+                sk.record(v);
+            }
+            assert_eq!(sk.count(), n as u64);
+            assert_eq!(sk.quantile(0.0).to_bits(), percentile(&xs, 0.0).to_bits());
+            assert_eq!(sk.quantile(100.0).to_bits(), percentile(&xs, 100.0).to_bits());
+            for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
+                let exact = percentile(&xs, q);
+                let approx = sk.quantile(q);
+                assert!(
+                    (approx - exact).abs() <= exact / 128.0,
+                    "q={q}: sketch {approx} vs exact {exact}"
+                );
+            }
+        });
+    }
+
+    /// Counter merge is order-free and lossless: recording a sample
+    /// split across several sketches and merging them answers every
+    /// quantile bit-identically to one sketch that saw everything.
+    #[test]
+    fn prop_sketch_merge_is_bit_identical_to_single() {
+        run_prop("sketch_merge_identity", 120, |rng| {
+            let parts = rng.range(2, 5) as usize;
+            let mut whole = QuantileSketch::new();
+            let mut shards = vec![QuantileSketch::new(); parts];
+            for _ in 0..rng.range(1, 400) {
+                let v = 0.5 + rng.next_f64() * 100.0;
+                whole.record(v);
+                shards[rng.below(parts as u64) as usize].record(v);
+            }
+            // Fold in a rotated order to exercise order-freedom.
+            let start = rng.below(parts as u64) as usize;
+            let mut merged = QuantileSketch::new();
+            for i in 0..parts {
+                merged.merge(&shards[(start + i) % parts]);
+            }
+            assert_eq!(merged.count(), whole.count());
+            for q in [0.0, 10.0, 50.0, 99.0, 100.0] {
+                assert_eq!(merged.quantile(q).to_bits(), whole.quantile(q).to_bits(), "q={q}");
+            }
+        });
+    }
+}

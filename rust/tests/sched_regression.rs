@@ -13,8 +13,8 @@
 //!    `heuristic` must beat the worst static protocol.
 
 use axle::config::{
-    DeviceOverride, FaultEvent, FaultSpec, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig,
-    TopologySpec,
+    DeviceOverride, FaultEvent, FaultSpec, Placement, PolicyKind, Protocol, QosSpec, SchedSpec,
+    SimConfig, TopologySpec,
 };
 use axle::sched::{run_sched, SchedReport};
 use axle::topo::{run_tenants, TenantSpec};
@@ -371,4 +371,150 @@ fn mid_run_device_failure_recovers_on_survivor_across_qos_policies() {
         let again = run_sched(&cfg, &topo, &spec, 4);
         assert_eq!(r.to_json().to_string(), again.to_json().to_string(), "{:?}", qos.policy);
     }
+}
+
+/// The PR-7 sharding pin: on a fabric-free pinned topology the event
+/// engine really shards (devices partitioned across workers, one event
+/// heap per shard) — and the merged result must reproduce the
+/// single-worker run **byte for byte**, for every policy, with worker
+/// counts that divide the device count evenly, unevenly, and exceed it,
+/// in both retained and streaming aggregation modes.
+#[test]
+fn sharded_pinned_runs_match_single_worker_exactly() {
+    let cfg = SimConfig::m2ndp();
+    let topo =
+        TopologySpec { devices: 4, ..TopologySpec::default() }.with_placement(Placement::Pinned);
+    for policy in PolicyKind::ALL {
+        for retain in [true, false] {
+            let spec = SchedSpec::new(8)
+                .with_workloads(vec!['a', 'e'])
+                .with_policy(policy)
+                .with_requests(2)
+                .with_admit(2)
+                .with_priorities(vec![1, 0])
+                .with_retain(retain);
+            let one = run_sched(&cfg, &topo, &spec, 1);
+            for jobs in [2, 3, 8] {
+                let n = run_sched(&cfg, &topo, &spec, jobs);
+                assert_eq!(
+                    one.to_json().to_string(),
+                    n.to_json().to_string(),
+                    "{} retain={retain} jobs={jobs}",
+                    policy.label()
+                );
+            }
+        }
+    }
+}
+
+/// Sharding under online per-device QoS arbitration: each device link's
+/// WRR/DRR calendar is wholly owned by one shard, so arbitration state
+/// never crosses workers and the merge stays exact.
+#[test]
+fn sharded_pinned_runs_match_single_worker_under_qos() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::wrr(vec![4, 1]), QosSpec::drr(vec![0.75, 0.25])] {
+        let topo = TopologySpec { devices: 4, ..TopologySpec::default() }
+            .with_placement(Placement::Pinned)
+            .with_qos(qos.clone());
+        let spec = SchedSpec::new(8)
+            .with_workloads(data_heavy_mix())
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(2)
+            .with_admit(2)
+            .with_priorities(vec![1, 0]);
+        let one = run_sched(&cfg, &topo, &spec, 1);
+        let four = run_sched(&cfg, &topo, &spec, 4);
+        assert_eq!(one.to_json().to_string(), four.to_json().to_string(), "{:?}", qos.policy);
+    }
+}
+
+/// Streaming aggregation (the CLI default without `--dump-requests`)
+/// versus the retained run it replaces: every counter and busy-union
+/// aggregate must match exactly — only the slowdown percentiles go
+/// through the sketch, and those are bounded by its 2⁻⁸ relative error.
+#[test]
+fn streaming_aggregates_match_retained_run() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let base = SchedSpec::new(6)
+        .with_workloads(data_heavy_mix())
+        .with_requests(3)
+        .with_admit(2)
+        .with_priorities(vec![1, 0]);
+    let kept = run_sched(&cfg, &topo, &base, 2);
+    let streamed = run_sched(&cfg, &topo, &base.clone().with_retain(false), 2);
+
+    assert!(streamed.streamed && !kept.streamed);
+    assert!(streamed.requests.is_empty());
+    assert_eq!(streamed.scheduled as usize, kept.requests.len());
+    assert_eq!(streamed.makespan, kept.makespan);
+    assert_eq!(streamed.host_busy, kept.host_busy);
+    assert_eq!(streamed.ccm_busy, kept.ccm_busy);
+    assert_eq!(streamed.max_slowdown.to_bits(), kept.max_slowdown.to_bits());
+    assert_eq!(streamed.proto_mix, kept.proto_mix);
+    let close = |a: f64, b: f64| (a - b).abs() <= b.abs() * 0.01 + 1e-9;
+    assert!(close(streamed.p50_slowdown, kept.p50_slowdown));
+    assert!(close(streamed.p99_slowdown, kept.p99_slowdown));
+    let kc = kept.class_slowdowns();
+    let sc = streamed.class_slowdowns();
+    assert_eq!(kc.len(), sc.len());
+    for ((ca, na, p50a, p99a), (cb, nb, p50b, p99b)) in sc.iter().zip(&kc) {
+        assert_eq!((ca, na), (cb, nb));
+        assert!(close(*p50a, *p50b), "class {ca} p50 {p50a} vs {p50b}");
+        assert!(close(*p99a, *p99b), "class {ca} p99 {p99a} vs {p99b}");
+    }
+    // Per-device and fabric rows are pure counters: exact either way.
+    assert_eq!(streamed.devices.len(), kept.devices.len());
+    for (a, b) in streamed.devices.iter().zip(&kept.devices) {
+        assert_eq!(a.tenants, b.tenants);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.link_busy, b.link_busy);
+        assert_eq!(a.pu_busy, b.pu_busy);
+        assert_eq!(a.mem_wait, b.mem_wait);
+        assert_eq!(a.io_wait, b.io_wait);
+        assert_eq!(a.pu_wait, b.pu_wait);
+    }
+    assert_eq!(streamed.fabric.bytes, kept.fabric.bytes);
+    assert_eq!(streamed.fabric.busy, kept.fabric.busy);
+    // The sparse JSON keys appear exactly when streaming.
+    assert!(streamed.to_json().to_string().contains("streamed"));
+    assert!(!kept.to_json().to_string().contains("streamed"));
+}
+
+/// Fault injection under streaming: request slots are recycled, so the
+/// attempt-staleness guard must keep kills, retries and recovery
+/// accounting identical to the retained run.
+#[test]
+fn streaming_fault_run_matches_retained_accounting() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let spec = SchedSpec::new(4)
+        .with_workloads(vec!['a', 'e'])
+        .with_policy(PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_admit(2);
+    let base = run_sched(&cfg, &topo, &spec, 2);
+    let victim = base
+        .requests
+        .iter()
+        .filter(|q| q.device == 0 && q.completion > q.admit + 1)
+        .max_by_key(|q| q.completion - q.admit)
+        .expect("device 0 serves work in the baseline");
+    let at = victim.admit + (victim.completion - victim.admit) / 2;
+    let spec = spec.with_faults(FaultSpec::with(vec![FaultEvent::fail(0, at)]));
+    let kept = run_sched(&cfg, &topo, &spec, 2);
+    let streamed = run_sched(&cfg, &topo, &spec.clone().with_retain(false), 2);
+
+    assert!(streamed.streamed);
+    assert_eq!(streamed.scheduled as usize, kept.requests.len());
+    assert_eq!(streamed.makespan, kept.makespan);
+    assert_eq!(streamed.failed_requests, kept.failed_requests);
+    assert_eq!(streamed.lost_wire, kept.lost_wire);
+    assert_eq!(streamed.lost_pu, kept.lost_pu);
+    assert_eq!(streamed.faults, kept.faults);
+    assert_eq!(streamed.host_busy, kept.host_busy);
+    assert_eq!(streamed.ccm_busy, kept.ccm_busy);
 }
