@@ -2,7 +2,7 @@
 # `lint` + `doc` + `doc-drift`, plus the `bench-smoke` measurement job.
 CARGO ?= cargo
 
-.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke artifacts
+.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke pipeline-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -66,6 +66,20 @@ bench-smoke:
 # "time-to-recover" line CI lifts into its job summary.
 scenario-smoke:
 	@$(CARGO) run --release --bin axle -- scenario --streams 3 --requests 2
+
+# Downsized pipelining smoke (CI): the same contended strong+weak
+# closed loop run whole-request and chunked (`--chunks 4`). Each run's
+# final line prints "host idle X% ccm idle Y%"; CI lifts both into its
+# job summary to show the idle-fraction reduction chunking buys.
+pipeline-smoke:
+	@echo "whole-request (chunks 1):"
+	@$(CARGO) run --release --bin axle -- sched --streams 3 --requests 2 \
+		--policy static --protocol axle --workloads aei \
+		--dev-ccm-pus 16,4 --devices 2 --admit 1 --depth 2 | tail -1
+	@echo "chunked (chunks 4):"
+	@$(CARGO) run --release --bin axle -- sched --streams 3 --requests 2 \
+		--policy static --protocol axle --workloads aei \
+		--dev-ccm-pus 16,4 --devices 2 --admit 1 --depth 2 --chunks 4 | tail -1
 
 # AOT-compile the workload kernels to HLO text (needs the Python/JAX
 # toolchain; the simulator itself never requires this).

@@ -27,6 +27,7 @@ fn main() {
         "fig17" | "tenants" => report::fig17(&cfg),
         "fig19" | "sched" => report::fig19(&cfg),
         "fig20" | "faults" => report::fig20(&cfg),
+        "fig21" | "pipeline" => report::fig21(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

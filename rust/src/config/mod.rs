@@ -1027,6 +1027,105 @@ impl FaultSpec {
     }
 }
 
+/// How a chunked request's stage DAG is wired (`axle sched
+/// --chunk-mode`). The mode decides which happens-after lane edges the
+/// protocol emitters install between consecutive chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Per-protocol default: the synchronous engines (RP, BS) chunk
+    /// serially — they back-stream nothing before the offload returns —
+    /// while the AXLE variants pipeline chunk back-streams against the
+    /// next chunk's transfer.
+    Auto,
+    /// Force barrier chaining: every stage of chunk k waits for every
+    /// stage of chunk k-1 (chunking without overlap).
+    Serial,
+    /// Force lane pipelining: a chunk's back-stream starts as soon as
+    /// its CCM stage finishes, while the next chunk is still in flight.
+    Pipelined,
+}
+
+impl PipelineMode {
+    pub const ALL: [PipelineMode; 3] =
+        [PipelineMode::Auto, PipelineMode::Serial, PipelineMode::Pipelined];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(PipelineMode::Auto),
+            "serial" => Some(PipelineMode::Serial),
+            "pipelined" => Some(PipelineMode::Pipelined),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PipelineMode::Auto => "auto",
+            PipelineMode::Serial => "serial",
+            PipelineMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Intra-request pipelining: split every offload into `chunks` stage
+/// groups (wire transfer, CCM compute, back-stream per chunk) admitted
+/// stage-by-stage against the device calendars (`axle sched --chunks`).
+/// `chunks = 1` — and an absent spec — is the identity: whole-request
+/// admission, pinned bit-identical in `sched_regression.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    /// Chunk count every request's traces are partitioned into (>= 1).
+    pub chunks: u32,
+    /// How consecutive chunks' stages are ordered.
+    pub mode: PipelineMode,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        Self { chunks: 1, mode: PipelineMode::Auto }
+    }
+}
+
+impl PipelineSpec {
+    /// A spec with the default (per-protocol) chunk wiring.
+    pub fn with_chunks(chunks: u32) -> Self {
+        Self { chunks, ..Self::default() }
+    }
+
+    /// Validate at config-parse time (CLI and JSON surfaces) so a
+    /// malformed spec fails with a clear message, never a mid-run panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.chunks == 0 {
+            return Err(
+                "pipeline spec: chunks must be >= 1 (0 chunks would emit no stages)".into()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("chunks".into(), Json::Num(self.chunks as f64));
+        o.insert("mode".into(), Json::Str(self.mode.label().into()));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the defaults (sparse files work);
+    /// validates before returning.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut s = Self::default();
+        if let Some(v) = j.get("chunks").as_u64() {
+            s.chunks = v as u32;
+        }
+        if let Some(m) = j.get("mode").as_str() {
+            s.mode = PipelineMode::parse(m)
+                .ok_or_else(|| format!("pipeline spec: unknown mode {m:?} (want auto | serial | pipelined)"))?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+}
+
 /// Declarative description of one closed-loop scheduling run (`axle
 /// sched`, [`crate::sched::run_sched`]): K tenants issuing requests
 /// against completion feedback, per-device admission queues, and a
@@ -1081,6 +1180,9 @@ pub struct SchedSpec {
     /// percentiles are sketch-derived (`axle sched` default; flip back
     /// with `--dump-requests`).
     pub retain: bool,
+    /// Intra-request pipelining: `None` (the default) and `chunks = 1`
+    /// both mean whole-request admission, bit-identically (`--chunks`).
+    pub pipeline: Option<PipelineSpec>,
 }
 
 impl SchedSpec {
@@ -1102,6 +1204,7 @@ impl SchedSpec {
             seed: 0x5C_4ED0,
             faults: FaultSpec::default(),
             retain: true,
+            pipeline: None,
         }
     }
 
@@ -1180,6 +1283,24 @@ impl SchedSpec {
         self
     }
 
+    /// Install an intra-request pipelining spec (see [`PipelineSpec`]).
+    pub fn with_pipeline(mut self, pipeline: PipelineSpec) -> Self {
+        assert!(pipeline.validate().is_ok(), "invalid pipeline spec");
+        self.pipeline = Some(pipeline);
+        self
+    }
+
+    /// Effective chunk count: 1 (whole-request admission) without a
+    /// pipeline spec.
+    pub fn chunks(&self) -> u32 {
+        self.pipeline.as_ref().map_or(1, |p| p.chunks.max(1))
+    }
+
+    /// Effective chunk wiring mode.
+    pub fn chunk_mode(&self) -> PipelineMode {
+        self.pipeline.as_ref().map_or(PipelineMode::Auto, |p| p.mode)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("streams".into(), Json::Num(self.streams as f64));
@@ -1198,6 +1319,9 @@ impl SchedSpec {
         o.insert("seed".into(), Json::Num(self.seed as f64));
         o.insert("faults".into(), self.faults.to_json());
         o.insert("retain".into(), Json::Bool(self.retain));
+        if let Some(p) = &self.pipeline {
+            o.insert("pipeline".into(), p.to_json());
+        }
         Json::Obj(o)
     }
 
@@ -1248,6 +1372,12 @@ impl SchedSpec {
         }
         if let Json::Bool(b) = j.get("retain") {
             s.retain = *b;
+        }
+        if j.get("pipeline").as_obj().is_some() {
+            // Malformed pipeline specs are config-parse-time errors with
+            // the validation message attached (never a mid-run panic).
+            s.pipeline =
+                Some(PipelineSpec::from_json(j.get("pipeline")).expect("invalid pipeline spec"));
         }
         s
     }
@@ -1604,5 +1734,46 @@ mod tests {
         assert!(FaultSpec::default().validate(1).is_ok());
         // A Fail event's `until` is ignored (constructors pin it to `at`).
         assert!(FaultSpec::with(vec![FaultEvent::fail(0, US)]).validate(2).is_ok());
+    }
+
+    #[test]
+    fn pipeline_spec_validate_rejects_zero_chunks() {
+        let e = PipelineSpec::with_chunks(0).validate().unwrap_err();
+        assert_eq!(e, "pipeline spec: chunks must be >= 1 (0 chunks would emit no stages)");
+        assert!(PipelineSpec::with_chunks(1).validate().is_ok());
+        assert!(PipelineSpec::with_chunks(64).validate().is_ok());
+        // JSON parsing funnels through the same validation.
+        let e = PipelineSpec::from_json(&Json::parse(r#"{"chunks": 0}"#).unwrap()).unwrap_err();
+        assert!(e.contains("chunks must be >= 1"), "{e}");
+        let e = PipelineSpec::from_json(&Json::parse(r#"{"mode": "warp"}"#).unwrap()).unwrap_err();
+        assert!(e.contains("unknown mode"), "{e}");
+    }
+
+    #[test]
+    fn pipeline_spec_json_roundtrip_and_chunk_helpers() {
+        let p = PipelineSpec { chunks: 4, mode: PipelineMode::Pipelined };
+        let j = p.to_json().to_string();
+        assert_eq!(PipelineSpec::from_json(&Json::parse(&j).unwrap()).unwrap(), p);
+        // Sparse object keeps the defaults.
+        let sparse = PipelineSpec::from_json(&Json::parse(r#"{"chunks": 2}"#).unwrap()).unwrap();
+        assert_eq!(sparse, PipelineSpec::with_chunks(2));
+        assert_eq!(sparse.mode, PipelineMode::Auto);
+        for m in PipelineMode::ALL {
+            assert_eq!(PipelineMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(PipelineMode::parse("nope"), None);
+        // SchedSpec helpers: absent spec means whole-request admission,
+        // and the `pipeline` key stays out of the JSON (the PR-7 shape).
+        let plain = SchedSpec::new(2);
+        assert_eq!(plain.chunks(), 1);
+        assert_eq!(plain.chunk_mode(), PipelineMode::Auto);
+        assert!(!plain.to_json().to_string().contains("\"pipeline\""));
+        // With a spec attached the SchedSpec round-trip carries it.
+        let s = SchedSpec::new(2).with_pipeline(p.clone());
+        assert_eq!(s.chunks(), 4);
+        assert_eq!(s.chunk_mode(), PipelineMode::Pipelined);
+        let sj = s.to_json().to_string();
+        assert!(sj.contains("\"pipeline\""));
+        assert_eq!(SchedSpec::from_json(&Json::parse(&sj).unwrap()), s);
     }
 }

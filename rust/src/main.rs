@@ -15,8 +15,8 @@
 use anyhow::{bail, Context, Result};
 
 use axle::config::{
-    FaultEvent, FaultKind, FaultSpec, Placement, PolicyKind, Protocol, QosPolicy, SchedPolicy,
-    SchedSpec, SimConfig, TopologySpec,
+    FaultEvent, FaultKind, FaultSpec, Placement, PipelineMode, PipelineSpec, PolicyKind, Protocol,
+    QosPolicy, SchedPolicy, SchedSpec, SimConfig, TopologySpec,
 };
 use axle::sched;
 use axle::sim::{ps_to_us, NS};
@@ -62,6 +62,7 @@ USAGE:
              [--dump-requests]
              [--faults SPEC] [--max-retries N] [--backoff-us T]
              [--timeout-factor F]
+             [--chunks N] [--chunk-mode auto|serial|pipelined]
              [--profile ...] [--json]
         # closed-loop scheduling: K tenants submit requests against
         # completion feedback (at most --depth outstanding each), each
@@ -88,7 +89,10 @@ USAGE:
         # memory per request — million-request runs are fine) unless
         # --dump-requests retains per-request rows; --jobs N also shards
         # the event engine across worker threads on fabric-free --placement
-        # pinned topologies (identical results to --jobs 1)
+        # pinned topologies (identical results to --jobs 1); --chunks N
+        # splits each request into N stage-DAG chunks admitted at stage
+        # granularity (back-streaming overlaps the next chunk's
+        # transfer; --chunk-mode overrides the per-protocol DAG shape)
   axle scenario [--streams K] [--requests R] [--jobs N] [--profile ...]
                 [--json]
         # canned failover demo (the CI smoke): closed-loop tenants over
@@ -97,7 +101,7 @@ USAGE:
         # work, and makespan/slowdown deltas against the fault-free
         # baseline
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20|fig21>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
@@ -609,6 +613,18 @@ fn main() -> Result<()> {
             // streams every request through O(1) sketches so
             // million-request runs hold no per-request memory.
             spec = spec.with_retain(a.has("dump-requests"));
+            if a.has("chunks") || a.has("chunk-mode") {
+                let chunks = a.get_as::<u32>("chunks").unwrap_or(1);
+                let mode = match a.get("chunk-mode") {
+                    Some(m) => PipelineMode::parse(m).with_context(|| {
+                        format!("unknown chunk mode {m:?} (auto|serial|pipelined)")
+                    })?,
+                    None => PipelineMode::Auto,
+                };
+                let p = PipelineSpec { chunks, mode };
+                p.validate().map_err(|e| anyhow::anyhow!(e))?;
+                spec = spec.with_pipeline(p);
+            }
             if open {
                 // Closed-loop knobs would be silently meaningless under
                 // the PR-3 open-loop replay; refuse them instead.
@@ -622,6 +638,8 @@ fn main() -> Result<()> {
                     "max-retries",
                     "backoff-us",
                     "timeout-factor",
+                    "chunks",
+                    "chunk-mode",
                 ] {
                     if a.has(flag) {
                         bail!("--{flag} is a closed-loop knob; the --open replay runs one open-loop request per tenant");
@@ -819,6 +837,7 @@ fn main() -> Result<()> {
                 "fig17" | "tenants" => report::fig17(&cfg),
                 "fig19" | "sched" => report::fig19(&cfg),
                 "fig20" | "faults" => report::fig20(&cfg),
+                "fig21" | "pipeline" => report::fig21(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

@@ -33,7 +33,7 @@ use crate::sim::{EventQueue, Ps};
 use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
-use super::{dispatch_order_into, jittered_dur, POSTED_STORE_COST};
+use super::{dispatch_order_into, jittered_dur, Lane, Stage, StageGraph, POSTED_STORE_COST};
 
 /// Metadata record bytes on the wire (payload slot id + task tag).
 const META_RECORD_BYTES: u64 = 8;
@@ -595,6 +595,37 @@ impl<'a> AxleSim<'a> {
             }
         }
     }
+}
+
+/// Pipelined stage DAG for a traced request: chunk k's DMA back-stream
+/// (`IoWire`) may start as soon as its CCM stage finishes, while chunk
+/// k+1's transfer is already in flight — per-lane chains (M_k after
+/// M_{k-1}, C_k after C_{k-1}, I_k after I_{k-1}) plus the intra-chunk
+/// M_k → C_k → I_k edges. Lanes with no items in a chunk emit no stage
+/// and their chain passes through.
+pub fn stage_graph(chunks: u32, mem_len: usize, io_len: usize, ccm_len: usize) -> StageGraph {
+    let mut stages: Vec<Stage> = Vec::new();
+    let (mut m_prev, mut c_prev, mut i_prev): (Option<u32>, Option<u32>, Option<u32>) =
+        (None, None, None);
+    for k in 0..chunks {
+        let mut emit = |lane: Lane, len: usize, deps: &[Option<u32>]| -> Option<u32> {
+            let (lo, hi) = StageGraph::chunk_range(len, chunks, k);
+            if lo == hi {
+                return None;
+            }
+            let after: Vec<u32> = deps.iter().filter_map(|d| *d).collect();
+            let idx = stages.len() as u32;
+            stages.push(Stage { lane, chunk: k, lo, hi, after });
+            Some(idx)
+        };
+        let m = emit(Lane::MemWire, mem_len, &[m_prev]);
+        let c = emit(Lane::Ccm, ccm_len, &[m, c_prev]);
+        let i = emit(Lane::IoWire, io_len, &[c, i_prev]);
+        m_prev = m.or(m_prev);
+        c_prev = c.or(c_prev);
+        i_prev = i.or(i_prev);
+    }
+    StageGraph { chunks, stages, serial: false }
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@ use crate::sim::Ps;
 use crate::topo::DeviceCtx;
 use crate::workload::WorkloadSpec;
 
-use super::{dispatch_order_into, jittered_dur};
+use super::{dispatch_order_into, jittered_dur, Lane, Stage, StageGraph};
 
 pub fn run(w: &WorkloadSpec, cfg: &SimConfig, ctx: &mut DeviceCtx) -> RunMetrics {
     let mut t: Ps = 0;
@@ -71,6 +71,33 @@ pub fn run(w: &WorkloadSpec, cfg: &SimConfig, ctx: &mut DeviceCtx) -> RunMetrics
     m.host_stall = stall;
     m.result_bytes = result_bytes;
     m
+}
+
+/// Serial stage DAG for a traced request: the synchronous BS flow
+/// back-streams nothing until the offload returns, so every stage of
+/// chunk k happens after every stage of chunk k-1 (a barrier chain).
+/// Within a chunk the traced item offsets already encode the
+/// launch → CCM → result-load ordering; lanes with no items in a chunk
+/// emit no stage.
+pub fn stage_graph(chunks: u32, mem_len: usize, io_len: usize, ccm_len: usize) -> StageGraph {
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut prev: Vec<u32> = Vec::new();
+    for k in 0..chunks {
+        let mut cur = Vec::new();
+        let lanes = [(Lane::MemWire, mem_len), (Lane::IoWire, io_len), (Lane::Ccm, ccm_len)];
+        for (lane, len) in lanes {
+            let (lo, hi) = StageGraph::chunk_range(len, chunks, k);
+            if lo == hi {
+                continue;
+            }
+            cur.push(stages.len() as u32);
+            stages.push(Stage { lane, chunk: k, lo, hi, after: prev.clone() });
+        }
+        if !cur.is_empty() {
+            prev = cur;
+        }
+    }
+    StageGraph { chunks, stages, serial: true }
 }
 
 #[cfg(test)]

@@ -97,6 +97,84 @@ pub(crate) fn dispatch_order_into(
     }
 }
 
+/// A resource lane one pipelined stage occupies (stage-DAG admission,
+/// `axle sched --chunks` — see `docs/ARCHITECTURE.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// CXL.mem wire messages (kernel launches, result loads).
+    MemWire,
+    /// CXL.io wire messages (DMA back-stream batches).
+    IoWire,
+    /// CCM PU lease windows.
+    Ccm,
+}
+
+/// One stage of a chunked request: a contiguous slice of one traced
+/// channel plus the happens-after edges that gate it. `after` only ever
+/// names lower stage indices, so graph order is already topological.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage {
+    pub lane: Lane,
+    /// Which chunk this stage belongs to.
+    pub chunk: u32,
+    /// Half-open item range `[lo, hi)` into the lane's trace.
+    pub lo: u32,
+    pub hi: u32,
+    /// Happens-after predecessors (stage indices in the same graph).
+    pub after: Vec<u32>,
+}
+
+/// The per-request stage DAG a protocol emitter produces for chunked
+/// admission: `chunks` near-equal contiguous slices of each traced
+/// channel, wired serially ([`bs::stage_graph`]) or pipelined
+/// ([`axle::stage_graph`]). The traced item offsets already encode the
+/// solo overlap structure; the DAG edges tell the closed-loop driver
+/// which *contention delays* must propagate between stages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageGraph {
+    pub chunks: u32,
+    pub stages: Vec<Stage>,
+    /// True when consecutive chunks are barrier-chained — the driver
+    /// then holds the admission slot until full completion instead of
+    /// releasing it at the last CCM stage.
+    pub serial: bool,
+}
+
+impl StageGraph {
+    /// Item range of chunk `k` of `chunks` over a `len`-item trace:
+    /// contiguous, near-equal, exactly partitioning `[0, len)`.
+    pub fn chunk_range(len: usize, chunks: u32, k: u32) -> (u32, u32) {
+        let (len, chunks, k) = (len as u64, chunks as u64, k as u64);
+        ((k * len / chunks) as u32, ((k + 1) * len / chunks) as u32)
+    }
+}
+
+/// Emit the stage DAG for one traced request under `proto` and `mode`:
+/// the asynchronous AXLE engines pipeline chunk back-streams by default
+/// while the synchronous RP/BS flows chunk serially
+/// ([`crate::config::PipelineMode::Auto`]); `Serial` / `Pipelined`
+/// force the wiring regardless of protocol.
+pub fn stage_graph_for(
+    proto: Protocol,
+    mode: crate::config::PipelineMode,
+    chunks: u32,
+    mem_len: usize,
+    io_len: usize,
+    ccm_len: usize,
+) -> StageGraph {
+    use crate::config::PipelineMode as Pm;
+    let pipelined = match mode {
+        Pm::Serial => false,
+        Pm::Pipelined => true,
+        Pm::Auto => matches!(proto, Protocol::Axle | Protocol::AxleInterrupt),
+    };
+    if pipelined {
+        axle::stage_graph(chunks, mem_len, io_len, ccm_len)
+    } else {
+        bs::stage_graph(chunks, mem_len, io_len, ccm_len)
+    }
+}
+
 /// Jittered duration of CCM task `task` in iteration `iter`.
 pub(crate) fn jittered_dur(cfg: &SimConfig, base: Ps, iter: usize, task: u32) -> Ps {
     crate::workload::cost::jitter(
@@ -138,6 +216,101 @@ mod tests {
         let a = dispatch_order(64, SchedPolicy::RoundRobin, 7, 0);
         let b = dispatch_order(64, SchedPolicy::RoundRobin, 7, 1);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chunk_ranges_partition_every_length() {
+        for len in [0usize, 1, 2, 3, 7, 16, 100] {
+            for chunks in [1u32, 2, 3, 4, 7, 32] {
+                let mut next = 0u32;
+                for k in 0..chunks {
+                    let (lo, hi) = StageGraph::chunk_range(len, chunks, k);
+                    assert_eq!(lo, next, "len {len} chunks {chunks} k {k}");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next as usize, len);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_graph_barrier_chains_chunks() {
+        let g = bs::stage_graph(3, 6, 0, 9);
+        assert!(g.serial);
+        assert_eq!(g.chunks, 3);
+        // Two lanes per chunk (io empty), every chunk-k stage naming
+        // every chunk-(k-1) stage.
+        assert_eq!(g.stages.len(), 6);
+        for (i, s) in g.stages.iter().enumerate() {
+            assert!(s.after.iter().all(|&a| (a as usize) < i), "topological order");
+            let expect: Vec<u32> = if s.chunk == 0 {
+                vec![]
+            } else {
+                g.stages
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.chunk + 1 == s.chunk)
+                    .map(|(j, _)| j as u32)
+                    .collect()
+            };
+            assert_eq!(s.after, expect, "barrier edges for stage {i}");
+        }
+    }
+
+    #[test]
+    fn pipelined_graph_wires_lane_chains() {
+        let g = axle::stage_graph(4, 4, 8, 8);
+        assert!(!g.serial);
+        assert_eq!(g.stages.len(), 12);
+        for (i, s) in g.stages.iter().enumerate() {
+            assert!(s.after.iter().all(|&a| (a as usize) < i), "topological order");
+            for &a in &s.after {
+                let p = &g.stages[a as usize];
+                // Edges are either the same-lane chain or the intra-chunk
+                // MemWire → Ccm → IoWire forwarding.
+                let same_lane_chain = p.lane == s.lane && p.chunk + 1 == s.chunk;
+                let intra_chunk = p.chunk == s.chunk
+                    && matches!(
+                        (p.lane, s.lane),
+                        (Lane::MemWire, Lane::Ccm) | (Lane::Ccm, Lane::IoWire)
+                    );
+                assert!(same_lane_chain || intra_chunk, "stage {i} edge to {a}");
+            }
+        }
+        // Every Ccm stage waits for its chunk's transfer; every IoWire
+        // back-stream waits for its chunk's Ccm stage.
+        for s in &g.stages {
+            match s.lane {
+                Lane::Ccm => assert!(s
+                    .after
+                    .iter()
+                    .any(|&a| g.stages[a as usize].lane == Lane::MemWire
+                        && g.stages[a as usize].chunk == s.chunk)),
+                Lane::IoWire => assert!(s
+                    .after
+                    .iter()
+                    .any(|&a| g.stages[a as usize].lane == Lane::Ccm
+                        && g.stages[a as usize].chunk == s.chunk)),
+                Lane::MemWire => {}
+            }
+        }
+        // An empty lane's chain passes through missing chunks.
+        let sparse = axle::stage_graph(4, 2, 0, 4);
+        assert!(sparse.stages.iter().all(|s| s.lane != Lane::IoWire));
+    }
+
+    #[test]
+    fn stage_graph_for_dispatches_on_protocol_and_mode() {
+        use crate::config::PipelineMode as Pm;
+        // Auto: synchronous flows chunk serially, AXLE pipelines.
+        assert!(stage_graph_for(Protocol::Bs, Pm::Auto, 2, 2, 2, 2).serial);
+        assert!(stage_graph_for(Protocol::Rp, Pm::Auto, 2, 2, 2, 2).serial);
+        assert!(!stage_graph_for(Protocol::Axle, Pm::Auto, 2, 2, 2, 2).serial);
+        assert!(!stage_graph_for(Protocol::AxleInterrupt, Pm::Auto, 2, 2, 2, 2).serial);
+        // Forced modes override the protocol default.
+        assert!(stage_graph_for(Protocol::Axle, Pm::Serial, 2, 2, 2, 2).serial);
+        assert!(!stage_graph_for(Protocol::Bs, Pm::Pipelined, 2, 2, 2, 2).serial);
     }
 
     #[test]

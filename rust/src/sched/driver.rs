@@ -48,6 +48,21 @@
 //! sum. Queueing in the admission path appears separately as
 //! `admit − submit`.
 //!
+//! # Intra-request pipelining (`--chunks`)
+//!
+//! With a [`crate::config::PipelineSpec`] of `chunks > 1`, a request is
+//! admitted as a **stage DAG** ([`crate::protocol::StageGraph`]) instead
+//! of an opaque triple: each chunk's wire transfer, CCM lease and
+//! back-stream become stages wired with happens-after lane edges, and
+//! [`admit_chunked`] places them in graph order, propagating each
+//! stage's contention delay to its successors. Pipelined (AXLE-style)
+//! graphs additionally release the admission slot when their last CCM
+//! stage finishes (a kind-5 event), so the next request's transfer
+//! overlaps the current one's back-stream drain — the paper's idle-time
+//! mechanism at the multi-tenant scheduling level. `chunks == 1` (and an
+//! absent spec) never enters any of this: whole-request admission stays
+//! byte-identical to the PR-7 engine.
+//!
 //! Everything is a pure function of `(config, topology, sched spec)`;
 //! the solo pass fans out across workers without affecting results.
 //!
@@ -78,6 +93,7 @@ use crate::config::{
     FaultKind, Placement, PolicyKind, Protocol, QosPolicy, SchedSpec, SimConfig, TopologySpec,
 };
 use crate::metrics::{percentile, QuantileSketch};
+use crate::protocol::{stage_graph_for, Lane, StageGraph};
 use crate::sim::{ps_to_us, transfer_ps, Ps, US};
 use crate::sweep::{self, SpecJob, TracedRun};
 use crate::topo::fabric::QosState;
@@ -988,6 +1004,25 @@ impl SoloTable {
     fn get(&self, class: usize, annot: char, proto: Protocol) -> &SoloRun {
         &self.runs[self.idx[&(class, annot, proto)]]
     }
+
+    /// Run index of one `(class, annot, proto)` point — the key chunked
+    /// admission uses to pair a solo run with its stage graph.
+    fn idx_of(&self, class: usize, annot: char, proto: Protocol) -> usize {
+        self.idx[&(class, annot, proto)]
+    }
+}
+
+/// Chunked-admission runtime (`spec.chunks() > 1` only): the per-solo-run
+/// stage graphs plus the per-slot early-release flags. Whole-request
+/// runs never construct one — the `chunks = 1` bit-identity pin.
+struct PipeRt {
+    /// Stage graph per [`SoloTable`] run index (shared by every request
+    /// of that `(class, annot, proto)` point).
+    graphs: Vec<StageGraph>,
+    /// Per arena slot: true once a kind-5 event freed the admission slot
+    /// early, so the completion event must not free it again. Reset at
+    /// every admission (slots recycle in streaming mode).
+    released: Vec<bool>,
 }
 
 struct DevState {
@@ -1034,7 +1069,10 @@ struct TenantState {
 /// schedules add kind 2 (fault transition: `id` = spec event index,
 /// `seq` = 0 start / 1 window end), kind 3 (requeue arrival after
 /// backoff: `id` = request, `seq` = attempt) and kind 4 (queued-request
-/// timeout check: `id` = request, `seq` = attempt). Completion events
+/// timeout check: `id` = request, `seq` = attempt). Chunked pipelined
+/// admission adds kind 5 (early slot release at the last CCM stage:
+/// `id` = ticket, `seq` = device — fault-free chunked runs only).
+/// Completion events
 /// pack the attempt into `id`'s high 32 bits (device in the low bits) so
 /// stale completions of killed attempts are dropped; fault-free runs
 /// never leave attempt 0, keeping their tuples bit-identical.
@@ -1416,6 +1454,29 @@ fn run_closed_core(
         }
     }
 
+    // Chunked stage-DAG admission: pre-build one stage graph per solo
+    // run, shared by every request of its (class, annot, proto) point.
+    // `chunks() == 1` never constructs this, so whole-request admission
+    // stays byte-identical to the PR-7 engine.
+    let mut pipe: Option<PipeRt> = (spec.chunks() > 1).then(|| {
+        let mut graphs: Vec<Option<StageGraph>> = vec![None; table.runs.len()];
+        for (&(_, _, proto), &i) in &table.idx {
+            let s = &table.runs[i];
+            graphs[i] = Some(stage_graph_for(
+                proto,
+                spec.chunk_mode(),
+                spec.chunks(),
+                s.run.mem_trace.len(),
+                s.run.io_trace.len(),
+                s.run.ccm_trace.len(),
+            ));
+        }
+        PipeRt {
+            graphs: graphs.into_iter().map(|g| g.expect("every solo run is indexed")).collect(),
+            released: Vec::new(),
+        }
+    });
+
     // Seeded per-tenant start stagger (same role as the open-loop
     // arrival jitter: break exact ties without coupling tenants). Every
     // shard draws the full tenant sequence — identical per-tenant values
@@ -1455,7 +1516,17 @@ fn run_closed_core(
                     f.rstate[rid].loc = Loc::Done;
                 }
                 let t = arena.runs[rid].tenant as usize;
-                devs[d].in_service -= 1;
+                // A pipelined chunked request may have freed its slot at
+                // its last CCM stage already (kind 5) — don't free twice.
+                let early_released = match pipe.as_mut() {
+                    Some(p) if rid < p.released.len() => {
+                        std::mem::replace(&mut p.released[rid], false)
+                    }
+                    _ => false,
+                };
+                if !early_released {
+                    devs[d].in_service -= 1;
+                }
                 tenants[t].outstanding -= 1;
                 if let Some(a) = agg.as_mut() {
                     let r = &arena.runs[rid];
@@ -1465,7 +1536,7 @@ fn run_closed_core(
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
                 try_admit(
                     now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
-                    &mut fx,
+                    &mut fx, &mut pipe,
                 );
             }
             1 => {
@@ -1545,7 +1616,7 @@ fn run_closed_core(
                 }
                 try_admit(
                     now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
-                    &mut fx,
+                    &mut fx, &mut pipe,
                 );
                 // Window depth > 1: the tenant may pipeline its next request.
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
@@ -1557,11 +1628,12 @@ fn run_closed_core(
                     fault_start(
                         id as usize, now, topo_spec, spec, &mut devs, &mut tenants, table,
                         &mut fabric, &mut arena, &mut agg, &mut heap, &mut rr_next, &mut fx,
+                        &mut pipe,
                     );
                 } else {
                     fault_end(
                         id as usize, now, spec, &mut devs, table, &mut fabric, &mut arena,
-                        &mut heap, &mut fx,
+                        &mut heap, &mut fx, &mut pipe,
                     );
                 }
             }
@@ -1578,7 +1650,33 @@ fn run_closed_core(
                 if live {
                     re_place(
                         rid, now, topo_spec, spec, &mut devs, table, &mut fabric, &mut arena,
-                        &mut heap, &mut rr_next, &mut fx,
+                        &mut heap, &mut rr_next, &mut fx, &mut pipe,
+                    );
+                }
+            }
+            5 => {
+                // ---- Pipeline early release: the request holding
+                // ticket `id` finished its last CCM stage on device
+                // `seq`; the admission slot frees while its back-stream
+                // drains (fault-free chunked runs only). ----
+                let Some(rid) = arena.slot_of(id) else {
+                    continue;
+                };
+                let d = seq as usize;
+                let fire = {
+                    let p = pipe.as_mut().expect("release events only exist in chunked mode");
+                    if rid < p.released.len() && !p.released[rid] {
+                        p.released[rid] = true;
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if fire {
+                    devs[d].in_service -= 1;
+                    try_admit(
+                        now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
+                        &mut fx, &mut pipe,
                     );
                 }
             }
@@ -1774,6 +1872,7 @@ fn fault_start(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
+    pipe: &mut Option<PipeRt>,
 ) {
     let e = spec.faults.events[i];
     let d = e.device as usize;
@@ -1796,6 +1895,10 @@ fn fault_start(
                     let r = &mut arena.runs[rid];
                     r.completion += delta;
                     r.pu_wait += delta;
+                    // Chunked attempts: chunks still incomplete at the
+                    // stall onset slide with the suspension too, so a
+                    // later kill still loses exactly the right chunks.
+                    st.slide_pending_chunks(now, delta);
                     st.attempt += 1;
                     let ev_id = ((st.attempt as u64) << 32) | d as u64;
                     heap.push(Reverse((r.completion, 0, ev_id, arena.tickets[rid])));
@@ -1831,7 +1934,11 @@ fn fault_start(
                 let st = &mut f.rstate[rid];
                 st.attempt += 1;
                 st.displaced_by = Some(i);
-                let (w, p) = (st.attempt_wire, st.attempt_pu);
+                // Chunk-granular loss: completed chunks' wire/PU time is
+                // banked — only chunks still in flight at the kill count
+                // as lost work. Unchunked attempts fall back to the whole
+                // attempt totals inside `lost_work`.
+                let (w, p) = st.lost_work(now);
                 f.outcomes[i].displaced += 1;
                 f.outcomes[i].lost_wire += w;
                 f.outcomes[i].lost_pu += p;
@@ -1848,7 +1955,7 @@ fn fault_start(
                 }
                 re_place(
                     rid as usize, now, topo_spec, spec, devs, table, fabric, arena, heap, rr_next,
-                    fx,
+                    fx, pipe,
                 );
             }
             devs[d].mem.truncate(now);
@@ -1873,6 +1980,7 @@ fn fault_end(
     arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
+    pipe: &mut Option<PipeRt>,
 ) {
     let e = spec.faults.events[i];
     let d = e.device as usize;
@@ -1884,7 +1992,7 @@ fn fault_end(
             // this stall began — the gate stays shut forever then.
             if devs[d].alive {
                 devs[d].admit_open = true;
-                try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx);
+                try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe);
             }
         }
         FaultKind::Fail => unreachable!("permanent failures schedule no end event"),
@@ -1909,6 +2017,7 @@ fn re_place(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
+    pipe: &mut Option<PipeRt>,
 ) {
     let ordinal = arena.runs[rid].tenant as usize;
     let d = pick_device(topo_spec, devs, ordinal, rr_next);
@@ -1935,7 +2044,7 @@ fn re_place(
             heap.push(Reverse((now + timeout, 4, arena.tickets[rid], st.attempt as u64)));
         }
     }
-    try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx);
+    try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe);
 }
 
 /// Consume one retry for request `rid` at `now`. Within budget: charge
@@ -2022,6 +2131,7 @@ fn try_admit(
     arena: &mut ReqArena,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
+    pipe: &mut Option<PipeRt>,
 ) {
     if !dev.admit_open {
         return;
@@ -2034,7 +2144,9 @@ fn try_admit(
     if batch.is_empty() {
         return;
     }
-    if dev.qos_mem.is_none() {
+    if let Some(p) = pipe.as_mut() {
+        admit_chunked(now, d, dev, table, fabric, arena, heap, &batch, fx, p);
+    } else if dev.qos_mem.is_none() {
         admit_fcfs(now, d, dev, table, fabric, arena, heap, &batch, fx);
     } else {
         admit_qos(now, d, spec.streams, dev, table, fabric, arena, heap, &batch, fx);
@@ -2102,6 +2214,250 @@ fn admit_fcfs(
         finish_admission(
             now, d, dev, table, fabric, arena, heap, rid, mem_late, io_late, fab_late, fx,
         );
+    }
+}
+
+/// Charge one admission batch at *stage* granularity (`--chunks > 1`).
+///
+/// Each request is decomposed by its protocol's [`StageGraph`] into
+/// per-chunk wire/CCM stages. Traced solo-relative offsets already
+/// encode the engine's internal overlap structure, so DAG edges
+/// propagate only *contention delay*: a stage's inbound delay is the
+/// max outbound delay over its lane predecessors, and its outbound
+/// delay adds the stage's own lateness against the solo schedule. On
+/// empty calendars every lateness is zero and the placement is exactly
+/// the whole-request replay sliced — chunking is free without
+/// contention.
+///
+/// Attribution walks the critical chain back from the stage with the
+/// largest outbound delay, folding each link's own lateness into the
+/// wire (`device_wait`/`fabric_wait`) or PU (`pu_wait`) bucket, so the
+/// decomposition identity `total = queue + retry + solo + wire + pu`
+/// holds exactly in u64 at every chunk count.
+///
+/// Fault-free pipelined graphs additionally schedule a kind-5 *early
+/// slot release* at the last CCM stage's bound: once a request's CCM
+/// work is provably done, the next request may enter service while the
+/// back-stream drains — CCM spans of consecutive requests never
+/// overlap, so device busy time is conserved while makespan (and both
+/// idle fractions) shrink. Fault mode instead records per-chunk
+/// completion bounds so a mid-service kill loses only unfinished
+/// chunks.
+#[allow(clippy::too_many_arguments)]
+fn admit_chunked(
+    now: Ps,
+    d: usize,
+    dev: &mut DevState,
+    table: &SoloTable,
+    fabric: &mut Fabric,
+    arena: &mut ReqArena,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    batch: &[u32],
+    fx: &mut Option<FaultRuntime>,
+    pipe: &mut PipeRt,
+) {
+    let bw = dev.link_bw / dev.bw_factor;
+    let link_bw = dev.link_bw;
+    let puf = dev.pu_factor;
+    let scale = move |dur: Ps| if puf == 1.0 { dur } else { (dur as f64 * puf) as Ps };
+    for &rid in batch {
+        if pipe.released.len() <= rid as usize {
+            pipe.released.resize(rid as usize + 1, false);
+        }
+        pipe.released[rid as usize] = false;
+        let (annot, proto) = {
+            let r = &arena.runs[rid as usize];
+            (r.annot, r.proto)
+        };
+        let si = table.idx_of(dev.class, annot, proto);
+        let s = &table.runs[si];
+        let g = &pipe.graphs[si];
+        let n = g.stages.len();
+        let mut delay_out: Vec<Ps> = vec![0; n];
+        let mut own: Vec<Ps> = vec![0; n];
+        let mut own_fab: Vec<Ps> = vec![0; n];
+        let mut wend: Vec<Ps> = vec![0; n];
+        let mut crit_pred: Vec<u32> = vec![u32::MAX; n];
+        for i in 0..n {
+            let st = &g.stages[i];
+            // Inbound contention delay: argmax over lane predecessors
+            // (first on ties — stable critical-chain attribution).
+            let mut din: Ps = 0;
+            let mut cp = u32::MAX;
+            for &p in &st.after {
+                let dout = delay_out[p as usize];
+                if cp == u32::MAX || dout > din {
+                    din = dout;
+                    cp = p;
+                }
+            }
+            let (lo, hi) = (st.lo as usize, st.hi as usize);
+            let mut late: Ps = 0;
+            let mut fab_late: Ps = 0;
+            let mut end: Ps = 0;
+            match st.lane {
+                Lane::MemWire | Lane::IoWire => {
+                    let trace =
+                        if st.lane == Lane::MemWire { &s.run.mem_trace } else { &s.run.io_trace };
+                    let cal = if st.lane == Lane::MemWire { &mut dev.mem } else { &mut dev.io };
+                    for m in &trace[lo..hi] {
+                        let issue = now + m.start + din;
+                        let dur = transfer_ps(m.bytes, bw);
+                        let start = cal.place(issue, dur);
+                        let ser_solo = transfer_ps(m.bytes, link_bw);
+                        late = late.max((start + dur).saturating_sub(issue + ser_solo));
+                        end = end.max(m.start + ser_solo);
+                    }
+                    if let Some((fbw, cal)) = fabric.link.as_mut() {
+                        for m in &trace[lo..hi] {
+                            let issue = now + m.start + din;
+                            let ser_f = transfer_ps(m.bytes, *fbw);
+                            let start = cal.place(issue, ser_f);
+                            let ser_solo = transfer_ps(m.bytes, link_bw);
+                            fab_late = fab_late.max((start + ser_f).saturating_sub(issue + ser_solo));
+                            fabric.bytes += m.bytes;
+                        }
+                    }
+                }
+                Lane::Ccm => {
+                    for sp in &s.run.ccm_trace[lo..hi] {
+                        let ready = now + sp.start + din;
+                        let (_, e) = dev.pool.dispatch(ready, scale(sp.dur()));
+                        late = late.max(e - (ready + sp.dur()));
+                        end = end.max(sp.start + sp.dur());
+                    }
+                }
+            }
+            own[i] = late.max(fab_late);
+            own_fab[i] = fab_late.min(own[i]);
+            wend[i] = end;
+            delay_out[i] = din + own[i];
+            crit_pred[i] = cp;
+        }
+        // Critical-chain attribution: the chain's own latenesses sum to
+        // the max outbound delay, each charged to its stage's lane.
+        let (mut dwait, mut fwait, mut pwait): (Ps, Ps, Ps) = (0, 0, 0);
+        let (mut mem_wait, mut io_wait): (Ps, Ps) = (0, 0);
+        if n > 0 {
+            let mut cur = (0..n).max_by_key(|&i| delay_out[i]).expect("non-empty stage graph");
+            loop {
+                match g.stages[cur].lane {
+                    Lane::Ccm => pwait += own[cur],
+                    Lane::MemWire => {
+                        dwait += own[cur];
+                        fwait += own_fab[cur];
+                        mem_wait += own[cur];
+                    }
+                    Lane::IoWire => {
+                        dwait += own[cur];
+                        fwait += own_fab[cur];
+                        io_wait += own[cur];
+                    }
+                }
+                if crit_pred[cur] == u32::MAX {
+                    break;
+                }
+                cur = crit_pred[cur] as usize;
+            }
+        }
+        let completion = {
+            let r = &mut arena.runs[rid as usize];
+            r.admit = now;
+            r.device_wait = dwait;
+            r.fabric_wait = fwait;
+            r.pu_wait = pwait;
+            r.completion = now + r.solo + dwait.max(fwait) + pwait;
+            r.completion
+        };
+        dev.in_service += 1;
+        dev.stats.mem_wait += mem_wait;
+        dev.stats.io_wait += io_wait;
+        dev.stats.pu_wait += pwait;
+        dev.stats.bytes += s.mem_bytes + s.io_bytes;
+        fabric.wait += fwait;
+        let mut attempt: u32 = 0;
+        if let Some(fxr) = fx.as_mut() {
+            let wire: Ps = s
+                .run
+                .mem_trace
+                .iter()
+                .chain(s.run.io_trace.iter())
+                .map(|m| transfer_ps(m.bytes, bw))
+                .sum();
+            let pu: Ps = s.run.ccm_trace.iter().map(|sp| scale(sp.dur())).sum();
+            let st = &mut fxr.rstate[rid as usize];
+            st.loc = Loc::InService;
+            st.loc_dev = d as u32;
+            st.attempt_wire = wire;
+            st.attempt_pu = pu;
+            // Per-chunk completion bounds and charges: a kill mid-service
+            // forfeits only the chunks whose bound lies past the kill.
+            st.attempt_chunks.clear();
+            for k in 0..g.chunks {
+                let mut cend: Ps = 0;
+                let mut cw: Ps = 0;
+                let mut cpu: Ps = 0;
+                let mut any = false;
+                for (i, stg) in g.stages.iter().enumerate() {
+                    if stg.chunk != k {
+                        continue;
+                    }
+                    any = true;
+                    cend = cend.max(wend[i] + delay_out[i]);
+                    let (lo, hi) = (stg.lo as usize, stg.hi as usize);
+                    match stg.lane {
+                        Lane::MemWire => {
+                            cw += s.run.mem_trace[lo..hi]
+                                .iter()
+                                .map(|m| transfer_ps(m.bytes, bw))
+                                .sum::<Ps>();
+                        }
+                        Lane::IoWire => {
+                            cw += s.run.io_trace[lo..hi]
+                                .iter()
+                                .map(|m| transfer_ps(m.bytes, bw))
+                                .sum::<Ps>();
+                        }
+                        Lane::Ccm => {
+                            cpu += s.run.ccm_trace[lo..hi]
+                                .iter()
+                                .map(|sp| scale(sp.dur()))
+                                .sum::<Ps>();
+                        }
+                    }
+                }
+                if any {
+                    st.attempt_chunks.push((now + cend, cw, cpu));
+                }
+            }
+            attempt = st.attempt;
+            fxr.note_recovered(rid as usize, now);
+        } else if !g.serial {
+            // Early slot release: the last CCM stage's bound dominates
+            // every actual CCM span end, so releasing there can never
+            // let two requests' CCM work overlap. Serial graphs gain
+            // nothing (the bound coincides with completion); fault mode
+            // holds the slot so kills find the request in service.
+            let mut ccm_done: Option<Ps> = None;
+            for (i, stg) in g.stages.iter().enumerate() {
+                if stg.lane == Lane::Ccm {
+                    let e = wend[i] + delay_out[i];
+                    ccm_done = Some(ccm_done.map_or(e, |c: Ps| c.max(e)));
+                }
+            }
+            if let Some(rel) = ccm_done {
+                let release_at = now + rel;
+                if release_at < completion {
+                    heap.push(Reverse((release_at, 5, arena.tickets[rid as usize], d as u64)));
+                }
+            }
+        }
+        heap.push(Reverse((
+            completion,
+            0,
+            ((attempt as u64) << 32) | d as u64,
+            arena.tickets[rid as usize],
+        )));
     }
 }
 
@@ -2363,6 +2719,10 @@ fn run_sched_open(
     assert!(
         spec.faults.is_empty(),
         "fault injection requires the closed-loop engine (drop --open)"
+    );
+    assert!(
+        spec.chunks() == 1,
+        "chunked pipelining requires the closed-loop engine (drop --open)"
     );
     let proto = match spec.policy {
         PolicyKind::Static(p) => p,

@@ -78,6 +78,13 @@ pub(super) struct ReqState {
     /// Fault event that displaced the current attempt, if any; cleared
     /// (and folded into that fault's time-to-recover) on re-admission.
     pub displaced_by: Option<usize>,
+    /// Chunk-granular attempt profile, filled only by chunked admission
+    /// (`--chunks > 1`): one `(end, wire, pu)` row per emitted chunk,
+    /// where `end` is the absolute completion bound of the chunk's last
+    /// stage and `wire`/`pu` are the chunk's charged picoseconds. Empty
+    /// for whole-request attempts — [`ReqState::lost_work`] then falls
+    /// back to the attempt totals.
+    pub attempt_chunks: Vec<(Ps, Ps, Ps)>,
 }
 
 impl ReqState {
@@ -91,6 +98,7 @@ impl ReqState {
             attempt_wire: 0,
             attempt_pu: 0,
             displaced_by: None,
+            attempt_chunks: Vec::new(),
         }
     }
 
@@ -108,6 +116,39 @@ impl ReqState {
         self.attempt_wire = 0;
         self.attempt_pu = 0;
         self.displaced_by = None;
+        self.attempt_chunks.clear();
+    }
+
+    /// Wire/PU picoseconds forfeited if this attempt is killed at
+    /// `now`. Chunk-granular attempts lose only the chunks whose
+    /// completion bound lies past the kill — a fully back-streamed
+    /// chunk's work is banked, never double-counted as lost. Attempts
+    /// without a chunk profile (whole-request admission) lose the whole
+    /// attempt, exactly the pre-pipelining accounting.
+    pub fn lost_work(&self, now: Ps) -> (Ps, Ps) {
+        if self.attempt_chunks.is_empty() {
+            return (self.attempt_wire, self.attempt_pu);
+        }
+        let (mut w, mut p): (Ps, Ps) = (0, 0);
+        for &(end, cw, cp) in &self.attempt_chunks {
+            if end > now {
+                w += cw;
+                p += cp;
+            }
+        }
+        (w, p)
+    }
+
+    /// Slide the completion bound of every chunk still pending at `now`
+    /// by `delta` — the chunked counterpart of a stall suspending an
+    /// in-service request. Chunks already complete at the stall onset
+    /// keep their bounds, so a later kill still sees them as banked.
+    pub fn slide_pending_chunks(&mut self, now: Ps, delta: Ps) {
+        for c in self.attempt_chunks.iter_mut() {
+            if c.0 > now {
+                c.0 += delta;
+            }
+        }
     }
 }
 
@@ -218,6 +259,29 @@ mod tests {
         assert_eq!(f.backoff_delay(3), 4 * base);
         // Shift is capped: huge retry counts saturate, never wrap.
         assert!(f.backoff_delay(u32::MAX) >= f.backoff_delay(40));
+    }
+
+    #[test]
+    fn lost_work_counts_only_pending_chunks() {
+        let mut st = ReqState::queued(0, 0);
+        st.attempt_wire = 100;
+        st.attempt_pu = 200;
+        // No chunk profile: the whole attempt is lost.
+        assert_eq!(st.lost_work(50), (100, 200));
+        // Three chunks ending at 10/20/30; a kill at 20 forfeits only
+        // the chunk still in flight (bound 30) — completed chunks are
+        // banked, and the totals are never double-counted.
+        st.attempt_chunks = vec![(10, 30, 60), (20, 30, 60), (30, 40, 80)];
+        assert_eq!(st.lost_work(20), (40, 80));
+        assert_eq!(st.lost_work(5), (100, 200));
+        assert_eq!(st.lost_work(30), (0, 0));
+        // A stall at 15 slides only the pending bounds (20, 30) by 7.
+        st.slide_pending_chunks(15, 7);
+        assert_eq!(st.attempt_chunks, vec![(10, 30, 60), (27, 30, 60), (37, 40, 80)]);
+        // Recycling clears the profile along with the attempt charges.
+        st.recycle(0, 0);
+        assert!(st.attempt_chunks.is_empty());
+        assert_eq!(st.lost_work(0), (0, 0));
     }
 
     #[test]

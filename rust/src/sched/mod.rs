@@ -49,6 +49,16 @@
 //! (policy × qos × depth axes; also re-exported as
 //! `topo::sweep_sched_grid`) and `axle report fig19` (per-priority-class
 //! p50/p99 slowdown columns under all three QoS policies).
+//!
+//! PR 8 adds **intra-request pipelining**: `--chunks N` decomposes each
+//! request into a per-protocol stage DAG (host/wire/CCM stages tagged
+//! with happens-after lane masks, built by the protocol engines'
+//! `stage_graph` constructors) and the driver admits *stages*, so one
+//! request's back-stream overlaps the next chunk's transfer and stages
+//! of different requests interleave on the same calendars and PU pool.
+//! Surfaces: `axle sched --chunks N [--chunk-mode auto|serial|pipelined]`,
+//! [`sweep_pipeline_grid`] (qos × chunk-count axes) and `axle report
+//! fig21` (host/CCM idle fractions vs chunk count per QoS policy).
 
 pub mod driver;
 pub mod fault;
@@ -100,6 +110,44 @@ pub fn sweep_sched_grid(
                 };
                 out.push((policy, qos, depth, report));
             }
+        }
+    }
+    out
+}
+
+/// Sweep chunked admission: one [`SchedReport`] per `(qos, chunks)`
+/// grid point, with the base specs' other knobs held fixed — the table
+/// `axle report fig21` walks. `chunks == 1` runs the whole-request
+/// engine verbatim (the pipelining layer is gated off), so each qos
+/// row's first column doubles as its unchunked baseline.
+///
+/// Neither axis can change solo simulations, so the solo candidate pass
+/// is prepared **once** and shared across every grid point.
+pub fn sweep_pipeline_grid(
+    cfg: &SimConfig,
+    topo_base: &TopologySpec,
+    sched_base: &SchedSpec,
+    qos_axis: &[QosPolicy],
+    chunks_axis: &[u32],
+    jobs: usize,
+) -> Vec<(QosPolicy, u32, SchedReport)> {
+    let mut out = Vec::with_capacity(qos_axis.len() * chunks_axis.len());
+    let pass = (sched_base.closed && sched_base.streams > 0 && sched_base.requests > 0)
+        .then(|| driver::prepare_solo_pass(cfg, topo_base, sched_base, jobs));
+    for &qos in qos_axis {
+        let topo = TopologySpec {
+            qos: QosSpec { policy: qos, ..topo_base.qos.clone() },
+            ..topo_base.clone()
+        };
+        for &chunks in chunks_axis {
+            let spec = sched_base
+                .clone()
+                .with_pipeline(crate::config::PipelineSpec::with_chunks(chunks));
+            let report = match &pass {
+                Some(p) => driver::run_closed(&topo, &spec, p),
+                None => run_sched(cfg, &topo, &spec, jobs),
+            };
+            out.push((qos, chunks, report));
         }
     }
     out

@@ -1019,3 +1019,207 @@ mod event_core_props {
         });
     }
 }
+
+// ------------------------------------------------------------------
+// PR-8 intra-request pipelining: stage-graph structure and the chunked
+// closed loop (protocol::{bs,axle}::stage_graph, sched --chunks).
+// ------------------------------------------------------------------
+
+mod pipeline_props {
+    use axle::config::{
+        PipelineMode, PipelineSpec, PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec,
+    };
+    use axle::protocol::{self, Lane, StageGraph};
+    use axle::sched::run_sched;
+    use axle::util::prop::run_prop;
+
+    /// Ancestor sets over the `after` DAG (indices are emitted in
+    /// topological order, so one forward pass suffices).
+    fn ancestors(g: &StageGraph) -> Vec<Vec<bool>> {
+        let n = g.stages.len();
+        let mut anc = vec![vec![false; n]; n];
+        for i in 0..n {
+            for &p in &g.stages[i].after {
+                let p = p as usize;
+                anc[i][p] = true;
+                for j in 0..n {
+                    if anc[p][j] {
+                        anc[i][j] = true;
+                    }
+                }
+            }
+        }
+        anc
+    }
+
+    /// Structural invariants every emitted stage graph must satisfy:
+    /// - per lane, the stage ranges partition `[0, len)` contiguously in
+    ///   chunk order (byte/flop totals are conserved by construction)
+    ///   and empty ranges are never emitted;
+    /// - `after` edges point strictly backwards (emission order is
+    ///   topological) and chunk tags are non-decreasing;
+    /// - **lane precedence**: each lane's consecutive stages are
+    ///   ordered by an `after` path, so no stage can start before its
+    ///   lane predecessor finishes;
+    /// - BS graphs are barrier chains (`serial`), AXLE graphs overlap
+    ///   (`!serial`), and `stage_graph_for` honors a forced mode.
+    #[test]
+    fn prop_stage_graphs_partition_lanes_and_order_predecessors() {
+        run_prop("stage_graph_structure", 200, |rng| {
+            let chunks = rng.range(1, 12) as u32;
+            let mem_len = rng.below(40) as usize;
+            let io_len = rng.below(40) as usize;
+            let ccm_len = rng.below(40) as usize;
+            let bs = protocol::bs::stage_graph(chunks, mem_len, io_len, ccm_len);
+            let ax = protocol::axle::stage_graph(chunks, mem_len, io_len, ccm_len);
+            assert!(bs.serial);
+            assert!(!ax.serial);
+            for g in [&bs, &ax] {
+                assert_eq!(g.chunks, chunks);
+                let mut last_chunk = 0u32;
+                for (i, st) in g.stages.iter().enumerate() {
+                    assert!(st.lo < st.hi, "empty stage emitted");
+                    assert!(st.chunk < chunks);
+                    assert!(st.chunk >= last_chunk, "chunk tags go backwards");
+                    last_chunk = st.chunk;
+                    for &p in &st.after {
+                        assert!((p as usize) < i, "forward dependency edge");
+                    }
+                }
+                let anc = ancestors(g);
+                for (lane, len) in
+                    [(Lane::MemWire, mem_len), (Lane::IoWire, io_len), (Lane::Ccm, ccm_len)]
+                {
+                    let of_lane: Vec<usize> = (0..g.stages.len())
+                        .filter(|&i| g.stages[i].lane == lane)
+                        .collect();
+                    // Contiguous partition of [0, len) in chunk order.
+                    let mut cursor = 0u32;
+                    for &i in &of_lane {
+                        assert_eq!(g.stages[i].lo, cursor, "gap or overlap in lane ranges");
+                        cursor = g.stages[i].hi;
+                    }
+                    assert_eq!(cursor as usize, len, "lane items dropped or duplicated");
+                    // Lane precedence via the after DAG.
+                    for w in of_lane.windows(2) {
+                        assert!(
+                            anc[w[1]][w[0]],
+                            "lane stage {} not ordered after predecessor {}",
+                            w[1],
+                            w[0]
+                        );
+                    }
+                }
+            }
+            // Every chunk_range is sane on its own, any k, any len.
+            let len = rng.below(200) as usize;
+            let k = rng.below(chunks as u64) as u32;
+            let (lo, hi) = StageGraph::chunk_range(len, chunks, k);
+            assert!(lo <= hi && hi as usize <= len);
+            // Forced modes override the per-protocol default shape.
+            for proto in [Protocol::Bs, Protocol::Axle] {
+                let ser =
+                    protocol::stage_graph_for(proto, PipelineMode::Serial, chunks, 5, 5, 5);
+                let pip =
+                    protocol::stage_graph_for(proto, PipelineMode::Pipelined, chunks, 5, 5, 5);
+                assert!(ser.serial && !pip.serial, "{proto:?}");
+            }
+        });
+    }
+
+    /// The chunked closed loop conserves work and keeps the request
+    /// algebra at every chunk count: the same byte multiset crosses the
+    /// same wires as the unchunked run (equal device/fabric bytes and
+    /// link busy time), the request count is exact, every request's
+    /// decomposition identity holds, and `completion >= admit + solo`.
+    #[test]
+    fn prop_chunked_runs_conserve_bytes_and_decomposition() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("chunked_conservation", 4, |rng| {
+            let streams = rng.range(2, 3) as usize;
+            let devices = rng.range(1, 2) as usize;
+            let requests = rng.range(1, 2) as usize;
+            let admit = rng.range(1, 2) as usize;
+            let depth = rng.range(1, 2) as usize;
+            let mut topo = TopologySpec { devices, ..TopologySpec::default() };
+            if rng.below(2) == 1 {
+                topo.fabric_bw_gbps = Some(cfg.cxl_bw_gbps);
+            }
+            let base = SchedSpec::new(streams)
+                .with_workloads(vec!['a', 'f'])
+                .with_policy(PolicyKind::Static(Protocol::Axle))
+                .with_depth(depth)
+                .with_admit(admit)
+                .with_requests(requests)
+                .with_seed(rng.next_u64());
+            let whole = run_sched(&cfg, &topo, &base, 2);
+            let bytes = |r: &axle::sched::SchedReport| {
+                r.devices.iter().map(|d| d.bytes).sum::<u64>()
+            };
+            let busy = |r: &axle::sched::SchedReport| {
+                r.devices.iter().map(|d| d.link_busy).sum::<u64>()
+            };
+            for chunks in [2u32, 3, 4, 8] {
+                let spec =
+                    base.clone().with_pipeline(PipelineSpec::with_chunks(chunks));
+                let r = run_sched(&cfg, &topo, &spec, 2);
+                assert_eq!(r.requests.len(), streams * requests, "chunks={chunks}");
+                assert_eq!(bytes(&r), bytes(&whole), "chunks={chunks}: bytes drifted");
+                assert_eq!(busy(&r), busy(&whole), "chunks={chunks}: busy drifted");
+                assert_eq!(r.fabric.bytes, whole.fabric.bytes, "chunks={chunks}");
+                for q in &r.requests {
+                    assert!(q.admit >= q.submit, "chunks={chunks}");
+                    assert!(q.completion >= q.admit + q.solo, "chunks={chunks}");
+                    assert_eq!(
+                        q.total(),
+                        q.queue_wait() + q.solo + q.wire_wait() + q.pu_wait,
+                        "chunks={chunks}: decomposition"
+                    );
+                    assert!(q.slowdown() >= 1.0, "chunks={chunks}");
+                }
+                assert_eq!(
+                    r.makespan,
+                    r.requests.iter().map(|q| q.completion).max().unwrap(),
+                    "chunks={chunks}"
+                );
+            }
+        });
+    }
+
+    /// On a contention-free device (one tenant, window 1 — requests
+    /// never overlap on any resource) chunking is provably free: every
+    /// stage delay is zero, so the chunked run reproduces the unchunked
+    /// run byte for byte, and host + CCM idle are monotone
+    /// non-increasing from chunks 1 → 2 (here: exactly equal).
+    #[test]
+    fn prop_contention_free_chunking_is_free_and_idle_monotone() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("contention_free_chunking", 4, |rng| {
+            let devices = rng.range(1, 2) as usize;
+            let requests = rng.range(2, 3) as usize;
+            let annot = ['a', 'e', 'f', 'i'][rng.below(4) as usize];
+            let topo = TopologySpec { devices, ..TopologySpec::default() };
+            let base = SchedSpec::new(1)
+                .with_workloads(vec![annot])
+                .with_policy(PolicyKind::Static(Protocol::Axle))
+                .with_depth(1)
+                .with_requests(requests)
+                .with_seed(rng.next_u64());
+            let one = run_sched(&cfg, &topo, &base, 2);
+            let two = run_sched(
+                &cfg,
+                &topo,
+                &base.clone().with_pipeline(PipelineSpec::with_chunks(2)),
+                2,
+            );
+            for q in one.requests.iter().chain(&two.requests) {
+                assert_eq!(q.queue_wait(), 0);
+                assert_eq!(q.wire_wait(), 0);
+                assert_eq!(q.pu_wait, 0);
+            }
+            assert!(two.host_idle_frac() <= one.host_idle_frac());
+            assert!(two.ccm_idle_frac() <= one.ccm_idle_frac());
+            assert_eq!(one.to_json().to_string(), two.to_json().to_string());
+        });
+    }
+}

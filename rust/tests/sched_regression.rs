@@ -13,8 +13,8 @@
 //!    `heuristic` must beat the worst static protocol.
 
 use axle::config::{
-    DeviceOverride, FaultEvent, FaultSpec, Placement, PolicyKind, Protocol, QosSpec, SchedSpec,
-    SimConfig, TopologySpec,
+    DeviceOverride, FaultEvent, FaultSpec, Placement, PipelineMode, PipelineSpec, PolicyKind,
+    Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
 };
 use axle::sched::{run_sched, SchedReport};
 use axle::topo::{run_tenants, TenantSpec};
@@ -517,4 +517,251 @@ fn streaming_fault_run_matches_retained_accounting() {
     assert_eq!(streamed.faults, kept.faults);
     assert_eq!(streamed.host_busy, kept.host_busy);
     assert_eq!(streamed.ccm_busy, kept.ccm_busy);
+}
+
+/// The PR-8 pipelining bit-identity pin: `chunks = 1` — whether the
+/// [`PipelineSpec`] is absent, default, or explicitly `chunks = 1` in
+/// any mode — must reproduce the whole-request engine **exactly**,
+/// field by field down to the f64 bit patterns, across policy × qos ×
+/// retention × worker count. The stage-DAG layer is gated off entirely
+/// at one chunk, so nothing may move.
+#[test]
+fn single_chunk_pipeline_is_bit_identical_to_whole_request_engine() {
+    let cfg = SimConfig::m2ndp();
+    for policy in [PolicyKind::Static(Protocol::Axle), PolicyKind::Heuristic, PolicyKind::Oracle] {
+        for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![4, 1]), QosSpec::drr(vec![0.75, 0.25])] {
+            let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+                .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+                .with_qos(qos.clone());
+            for retain in [true, false] {
+                let spec = SchedSpec::new(4)
+                    .with_workloads(vec!['a', 'e'])
+                    .with_policy(policy)
+                    .with_requests(2)
+                    .with_admit(2)
+                    .with_priorities(vec![1, 0])
+                    .with_retain(retain);
+                for jobs in [1, 4] {
+                    let tag = format!("{} {:?} retain={retain} jobs={jobs}", policy.label(), qos.policy);
+                    let plain = run_sched(&cfg, &topo, &spec, jobs);
+                    for mode in [PipelineMode::Auto, PipelineMode::Serial, PipelineMode::Pipelined]
+                    {
+                        let chunked = run_sched(
+                            &cfg,
+                            &topo,
+                            &spec
+                                .clone()
+                                .with_pipeline(PipelineSpec { chunks: 1, mode }),
+                            jobs,
+                        );
+                        assert_eq!(
+                            plain.to_json().to_string(),
+                            chunked.to_json().to_string(),
+                            "{tag} mode={mode:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // Field-by-field spot check on one retained config, including the
+    // f64 bit patterns the JSON round-trip could in principle mask.
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let spec = SchedSpec::new(4)
+        .with_workloads(data_heavy_mix())
+        .with_requests(2)
+        .with_admit(2)
+        .with_priorities(vec![1, 0]);
+    let plain = run_sched(&cfg, &topo, &spec, 2);
+    let pinned =
+        run_sched(&cfg, &topo, &spec.clone().with_pipeline(PipelineSpec::default()), 2);
+    assert_eq!(plain.requests.len(), pinned.requests.len());
+    for (a, b) in plain.requests.iter().zip(&pinned.requests) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.proto, b.proto);
+        assert_eq!(a.submit, b.submit);
+        assert_eq!(a.admit, b.admit);
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.solo, b.solo);
+        assert_eq!(a.device_wait, b.device_wait);
+        assert_eq!(a.fabric_wait, b.fabric_wait);
+        assert_eq!(a.pu_wait, b.pu_wait);
+        assert_eq!(a.slowdown().to_bits(), b.slowdown().to_bits());
+    }
+    assert_eq!(plain.makespan, pinned.makespan);
+    assert_eq!(plain.host_busy, pinned.host_busy);
+    assert_eq!(plain.ccm_busy, pinned.ccm_busy);
+    assert_eq!(plain.p50_slowdown.to_bits(), pinned.p50_slowdown.to_bits());
+    assert_eq!(plain.p99_slowdown.to_bits(), pinned.p99_slowdown.to_bits());
+    assert_eq!(plain.max_slowdown.to_bits(), pinned.max_slowdown.to_bits());
+    assert_eq!(plain.fabric.busy, pinned.fabric.busy);
+    assert_eq!(plain.fabric.utilization.to_bits(), pinned.fabric.utilization.to_bits());
+}
+
+/// The PR-8 acceptance direction: on the fig19 strong+weak contended
+/// scenario, chunked admission (`--chunks 4`) must *reduce* both the
+/// host and CCM idle fractions versus whole-request admission, under
+/// FCFS and DRR arbitration alike. One service slot per device with a
+/// depth-2 window keeps a successor queued, so every early slot release
+/// has work to admit; device busy time is conserved while the makespan
+/// shrinks, which is exactly an idle-fraction drop.
+#[test]
+fn chunked_admission_reduces_host_and_ccm_idle_under_contention() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::fcfs(), QosSpec::drr(vec![0.75, 0.25])] {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+            .with_qos(qos.clone());
+        let base = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'e', 'i'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(2)
+            .with_admit(1)
+            .with_depth(2);
+        let whole = run_sched(&cfg, &topo, &base, 2);
+        let chunked = run_sched(
+            &cfg,
+            &topo,
+            &base.clone().with_pipeline(PipelineSpec::with_chunks(4)),
+            2,
+        );
+        assert_eq!(whole.requests.len(), chunked.requests.len(), "{:?}", qos.policy);
+        assert!(
+            chunked.makespan < whole.makespan,
+            "{:?}: chunked makespan {} !< whole {}",
+            qos.policy,
+            chunked.makespan,
+            whole.makespan
+        );
+        assert!(
+            chunked.host_idle_frac() < whole.host_idle_frac(),
+            "{:?}: chunked host idle {} !< whole {}",
+            qos.policy,
+            chunked.host_idle_frac(),
+            whole.host_idle_frac()
+        );
+        assert!(
+            chunked.ccm_idle_frac() < whole.ccm_idle_frac(),
+            "{:?}: chunked ccm idle {} !< whole {}",
+            qos.policy,
+            chunked.ccm_idle_frac(),
+            whole.ccm_idle_frac()
+        );
+        // The five-way decomposition stays an identity per request at
+        // stage granularity, and chunking is deterministic and
+        // worker-count invariant like every other engine path.
+        for q in &chunked.requests {
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait,
+                "{:?}",
+                qos.policy
+            );
+        }
+        let again = run_sched(
+            &cfg,
+            &topo,
+            &base.clone().with_pipeline(PipelineSpec::with_chunks(4)),
+            4,
+        );
+        assert_eq!(chunked.to_json().to_string(), again.to_json().to_string(), "{:?}", qos.policy);
+    }
+}
+
+/// Chunk-granular fault accounting: a mid-service kill of a partially
+/// back-streamed chunked request forfeits only its incomplete chunks —
+/// strictly less lost work than the same kill under whole-request
+/// admission, and never zero (the kill lands mid-attempt). The scenario
+/// is zero-contention by construction (one tenant, window 1), where
+/// chunked placement provably reproduces the whole-request timeline —
+/// so the kill instant derived from the whole-request baseline lands
+/// inside the *same* service window in both runs and only the loss
+/// accounting can differ.
+#[test]
+fn mid_service_kill_of_chunked_request_loses_only_incomplete_chunks() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec { devices: 2, ..TopologySpec::default() };
+    let spec = SchedSpec::new(1)
+        .with_workloads(vec!['e'])
+        .with_policy(PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_depth(1);
+    let chunked_spec = spec.clone().with_pipeline(PipelineSpec::with_chunks(8));
+    let base = run_sched(&cfg, &topo, &spec, 2);
+    let victim = base
+        .requests
+        .iter()
+        .filter(|q| q.device == 0 && q.completion > q.admit + 4)
+        .max_by_key(|q| q.completion - q.admit)
+        .expect("device 0 serves work in the baseline");
+    let at = victim.admit + (victim.completion - victim.admit) / 2;
+    let faults = FaultSpec::with(vec![FaultEvent::fail(0, at)]);
+
+    let whole = run_sched(&cfg, &topo, &spec.clone().with_faults(faults.clone()), 2);
+    let chunked = run_sched(&cfg, &topo, &chunked_spec.clone().with_faults(faults), 2);
+
+    // No request is ever lost: the run completes on the survivor.
+    for r in [&whole, &chunked] {
+        assert_eq!(r.failed_requests, 0);
+        assert_eq!(r.requests.len(), base.requests.len());
+        assert!(r.faults[0].displaced > 0);
+        assert!(r.requests.iter().all(|q| !q.failed));
+    }
+    // Whole-request accounting forfeits the entire attempt; chunked
+    // accounting banks every chunk whose completion bound precedes the
+    // kill, so its lost work is strictly smaller but still positive.
+    assert!(chunked.lost_wire + chunked.lost_pu > 0, "kill lands mid-attempt");
+    assert!(
+        chunked.lost_wire + chunked.lost_pu < whole.lost_wire + whole.lost_pu,
+        "chunked lost {}+{} !< whole lost {}+{}",
+        chunked.lost_wire,
+        chunked.lost_pu,
+        whole.lost_wire,
+        whole.lost_pu
+    );
+}
+
+/// No request is ever lost at chunk granularity: random-ish but
+/// deterministic fault schedules (stalls, degradations and a permanent
+/// failure) over a chunked closed loop must complete every request
+/// within the retry budget, keep the five-way decomposition an
+/// identity, and report non-negative bounded lost work.
+#[test]
+fn chunked_runs_survive_mixed_fault_schedules_without_losing_requests() {
+    let cfg = SimConfig::m2ndp();
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let us = axle::sim::US;
+    for chunks in [2, 4, 8] {
+        let faults = FaultSpec::with(vec![
+            FaultEvent::stall(0, 3 * us, 9 * us),
+            FaultEvent::degrade_pus(1, 2 * us, 20 * us, 3.0),
+            FaultEvent::degrade_link(0, 12 * us, 30 * us, 2.0),
+            FaultEvent::fail(1, 40 * us),
+        ]);
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'e'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(3)
+            .with_admit(2)
+            .with_pipeline(PipelineSpec::with_chunks(chunks))
+            .with_faults(faults);
+        let r = run_sched(&cfg, &topo, &spec, 2);
+        assert_eq!(r.requests.len(), 4 * 3, "chunks={chunks}");
+        assert_eq!(r.failed_requests, 0, "chunks={chunks}");
+        for q in &r.requests {
+            assert!(!q.failed, "chunks={chunks}");
+            assert_eq!(
+                q.total(),
+                q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait,
+                "chunks={chunks}"
+            );
+        }
+        // Deterministic across worker counts, like every engine path.
+        let again = run_sched(&cfg, &topo, &spec, 4);
+        assert_eq!(r.to_json().to_string(), again.to_json().to_string(), "chunks={chunks}");
+    }
 }
