@@ -2,7 +2,7 @@
 # `lint` + `doc` + `doc-drift`, plus the `bench-smoke` measurement job.
 CARGO ?= cargo
 
-.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke pipeline-smoke artifacts
+.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke pipeline-smoke trace-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -80,6 +80,18 @@ pipeline-smoke:
 	@$(CARGO) run --release --bin axle -- sched --streams 3 --requests 2 \
 		--policy static --protocol axle --workloads aei \
 		--dev-ccm-pus 16,4 --devices 2 --admit 1 --depth 2 --chunks 4 | tail -1
+
+# Downsized tracing smoke (CI): the pipeline-smoke contention point
+# re-run with the tracer armed. The run validates its own trace before
+# exiting (the CLI runs every exported trace through trace::validate),
+# writes trace-smoke.json (Chrome trace-event JSON — load in Perfetto),
+# and prints the "trace events = N, host util p50 = X%" line plus the
+# 8-bucket window table CI lifts into its job summary.
+trace-smoke:
+	@$(CARGO) run --release --bin axle -- sched --streams 3 --requests 2 \
+		--policy static --protocol axle --workloads aei \
+		--dev-ccm-pus 16,4 --devices 2 --admit 1 --depth 2 \
+		--trace trace-smoke.json --trace-buckets 8
 
 # AOT-compile the workload kernels to HLO text (needs the Python/JAX
 # toolchain; the simulator itself never requires this).

@@ -28,6 +28,7 @@ fn main() {
         "fig19" | "sched" => report::fig19(&cfg),
         "fig20" | "faults" => report::fig20(&cfg),
         "fig21" | "pipeline" => report::fig21(&cfg),
+        "fig22" | "trace" => report::fig22(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

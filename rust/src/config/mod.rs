@@ -1126,6 +1126,55 @@ impl PipelineSpec {
     }
 }
 
+/// Deterministic event tracing: record typed scheduler events into a
+/// [`crate::trace::Trace`] alongside the run (`axle sched --trace`,
+/// [`crate::sched::run_sched_traced`]). Tracing is observation-only —
+/// a traced run's report is bit-identical to the untraced one, pinned
+/// in `sched_regression.rs`. `buckets` sizes the fixed-width windowed
+/// telemetry view (`--trace-buckets`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    /// Fixed-width telemetry window count over the run's makespan.
+    pub buckets: u32,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self { buckets: 16 }
+    }
+}
+
+impl TraceSpec {
+    /// Validate at config-parse time (CLI and JSON surfaces) so a
+    /// malformed spec fails with a clear message, never a mid-run panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.buckets == 0 {
+            return Err("trace spec: buckets must be >= 1 (0 windows would drop the run)".into());
+        }
+        if self.buckets > 65536 {
+            return Err("trace spec: buckets must be <= 65536".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("buckets".into(), Json::Num(self.buckets as f64));
+        Json::Obj(o)
+    }
+
+    /// Deserialize, starting from the defaults (sparse files work);
+    /// validates before returning.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut s = Self::default();
+        if let Some(v) = j.get("buckets").as_u64() {
+            s.buckets = v as u32;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+}
+
 /// Declarative description of one closed-loop scheduling run (`axle
 /// sched`, [`crate::sched::run_sched`]): K tenants issuing requests
 /// against completion feedback, per-device admission queues, and a
@@ -1183,6 +1232,11 @@ pub struct SchedSpec {
     /// Intra-request pipelining: `None` (the default) and `chunks = 1`
     /// both mean whole-request admission, bit-identically (`--chunks`).
     pub pipeline: Option<PipelineSpec>,
+    /// Deterministic event tracing: `None` (the default) records
+    /// nothing; `Some` makes [`crate::sched::run_sched_traced`] return
+    /// a [`crate::trace::Trace`] without perturbing the run
+    /// (`--trace`, `--trace-buckets`).
+    pub trace: Option<TraceSpec>,
 }
 
 impl SchedSpec {
@@ -1205,6 +1259,7 @@ impl SchedSpec {
             faults: FaultSpec::default(),
             retain: true,
             pipeline: None,
+            trace: None,
         }
     }
 
@@ -1290,6 +1345,13 @@ impl SchedSpec {
         self
     }
 
+    /// Enable deterministic event tracing (see [`TraceSpec`]).
+    pub fn with_trace(mut self, trace: TraceSpec) -> Self {
+        assert!(trace.validate().is_ok(), "invalid trace spec");
+        self.trace = Some(trace);
+        self
+    }
+
     /// Effective chunk count: 1 (whole-request admission) without a
     /// pipeline spec.
     pub fn chunks(&self) -> u32 {
@@ -1321,6 +1383,9 @@ impl SchedSpec {
         o.insert("retain".into(), Json::Bool(self.retain));
         if let Some(p) = &self.pipeline {
             o.insert("pipeline".into(), p.to_json());
+        }
+        if let Some(t) = &self.trace {
+            o.insert("trace".into(), t.to_json());
         }
         Json::Obj(o)
     }
@@ -1378,6 +1443,11 @@ impl SchedSpec {
             // the validation message attached (never a mid-run panic).
             s.pipeline =
                 Some(PipelineSpec::from_json(j.get("pipeline")).expect("invalid pipeline spec"));
+        }
+        if j.get("trace").as_obj().is_some() {
+            // Malformed trace specs are config-parse-time errors with
+            // the validation message attached (never a mid-run panic).
+            s.trace = Some(TraceSpec::from_json(j.get("trace")).expect("invalid trace spec"));
         }
         s
     }

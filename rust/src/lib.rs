@@ -65,6 +65,7 @@ pub mod sched;
 pub mod sim;
 pub mod sweep;
 pub mod topo;
+pub mod trace;
 pub mod workload;
 
 pub use config::{

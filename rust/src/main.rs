@@ -18,11 +18,14 @@ use axle::config::{
     FaultEvent, FaultKind, FaultSpec, Placement, PipelineMode, PipelineSpec, PolicyKind, Protocol,
     QosPolicy, SchedPolicy, SchedSpec, SimConfig, TopologySpec,
 };
+use axle::config::TraceSpec;
 use axle::sched;
 use axle::sim::{ps_to_us, NS};
 use axle::sweep::{self, ConfigDelta, SweepSpec};
 use axle::topo::{self, TenantSpec};
+use axle::trace;
 use axle::util::args::Args;
+use axle::util::fmt::{fmt_pct, fmt_time};
 use axle::util::json::Json;
 use axle::{report, Coordinator, RunMetrics};
 
@@ -63,6 +66,7 @@ USAGE:
              [--faults SPEC] [--max-retries N] [--backoff-us T]
              [--timeout-factor F]
              [--chunks N] [--chunk-mode auto|serial|pipelined]
+             [--trace FILE.json] [--trace-buckets N]
              [--profile ...] [--json]
         # closed-loop scheduling: K tenants submit requests against
         # completion feedback (at most --depth outstanding each), each
@@ -92,7 +96,13 @@ USAGE:
         # pinned topologies (identical results to --jobs 1); --chunks N
         # splits each request into N stage-DAG chunks admitted at stage
         # granularity (back-streaming overlaps the next chunk's
-        # transfer; --chunk-mode overrides the per-protocol DAG shape)
+        # transfer; --chunk-mode overrides the per-protocol DAG shape);
+        # --trace FILE records every engine event (admissions, wire
+        # grants, PU leases, retries, fault windows) and writes a
+        # Chrome trace-event JSON loadable in Perfetto — tracing is
+        # observation-only, results are bit-identical with it on or
+        # off; --trace-buckets N also prints an N-window telemetry
+        # table (host/CCM utilization, queue depth, p99 slowdown)
   axle scenario [--streams K] [--requests R] [--jobs N] [--profile ...]
                 [--json]
         # canned failover demo (the CI smoke): closed-loop tenants over
@@ -101,7 +111,7 @@ USAGE:
         # work, and makespan/slowdown deltas against the fault-free
         # baseline
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20|fig21>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20|fig21|fig22>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
@@ -497,29 +507,29 @@ fn main() -> Result<()> {
             }
             for (d, dev) in r.devices.iter().enumerate() {
                 println!(
-                    "  device {d}: {} tenant(s), link busy {:.2} us, wire wait {:.2} us, pu busy {:.2} us, pu wait {:.2} us, {} data bytes",
+                    "  device {d}: {} tenant(s), link busy {}, wire wait {}, pu busy {}, pu wait {}, {} data bytes",
                     dev.tenants,
-                    ps_to_us(dev.link_busy),
-                    ps_to_us(dev.mem_wait + dev.io_wait),
-                    ps_to_us(dev.pu_busy),
-                    ps_to_us(dev.pu_wait),
+                    fmt_time(dev.link_busy),
+                    fmt_time(dev.mem_wait + dev.io_wait),
+                    fmt_time(dev.pu_busy),
+                    fmt_time(dev.pu_wait),
                     dev.bytes
                 );
             }
             match topo.fabric_bw_gbps {
                 Some(bw) => println!(
-                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {:.2} us, wait {:.2} us, util {:.1}%",
+                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {}, wait {}, util {}",
                     r.fabric.messages,
                     r.fabric.bytes,
-                    ps_to_us(r.fabric.busy),
-                    ps_to_us(r.fabric.wait),
-                    100.0 * r.fabric.utilization
+                    fmt_time(r.fabric.busy),
+                    fmt_time(r.fabric.wait),
+                    fmt_pct(r.fabric.utilization)
                 ),
                 None => println!("  fabric: none (dedicated per-device uplinks)"),
             }
             println!(
-                "  makespan {:.2} us | slowdown p50 {:.3} p99 {:.3} max {:.3}",
-                ps_to_us(r.makespan),
+                "  makespan {} | slowdown p50 {:.3} p99 {:.3} max {:.3}",
+                fmt_time(r.makespan),
                 r.p50_slowdown,
                 r.p99_slowdown,
                 r.max_slowdown
@@ -625,6 +635,13 @@ fn main() -> Result<()> {
                 p.validate().map_err(|e| anyhow::anyhow!(e))?;
                 spec = spec.with_pipeline(p);
             }
+            let trace_path = a.get("trace").map(str::to_string);
+            let trace_buckets = a.get_as::<u32>("trace-buckets");
+            if trace_path.is_some() || trace_buckets.is_some() {
+                let t = TraceSpec { buckets: trace_buckets.unwrap_or(TraceSpec::default().buckets) };
+                t.validate().map_err(|e| anyhow::anyhow!(e))?;
+                spec = spec.with_trace(t);
+            }
             if open {
                 // Closed-loop knobs would be silently meaningless under
                 // the PR-3 open-loop replay; refuse them instead.
@@ -640,6 +657,8 @@ fn main() -> Result<()> {
                     "timeout-factor",
                     "chunks",
                     "chunk-mode",
+                    "trace",
+                    "trace-buckets",
                 ] {
                     if a.has(flag) {
                         bail!("--{flag} is a closed-loop knob; the --open replay runs one open-loop request per tenant");
@@ -654,7 +673,17 @@ fn main() -> Result<()> {
                 spec = spec.open_loop();
             }
             let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
-            let r = sched::run_sched(&cfg, &topo, &spec, jobs);
+            let (r, tr) = sched::run_sched_traced(&cfg, &topo, &spec, jobs);
+            // The exported trace must reconcile with the report it
+            // shipped with before anything is written or summarized.
+            if let Some(tr) = &tr {
+                trace::validate(tr, &r)
+                    .map_err(|e| anyhow::anyhow!("trace validation failed: {e}"))?;
+            }
+            if let (Some(path), Some(tr)) = (trace_path.as_deref(), &tr) {
+                let doc = trace::chrome::to_json(tr).to_string();
+                std::fs::write(path, doc).with_context(|| format!("writing trace to {path}"))?;
+            }
             if a.has("json") {
                 println!("{}", r.to_json());
                 return Ok(());
@@ -691,36 +720,36 @@ fn main() -> Result<()> {
             }
             for (d, dev) in r.devices.iter().enumerate() {
                 println!(
-                    "  device {d}: {} request(s), link busy {:.2} us, wire wait {:.2} us, pu busy {:.2} us, pu wait {:.2} us, {} data bytes",
+                    "  device {d}: {} request(s), link busy {}, wire wait {}, pu busy {}, pu wait {}, {} data bytes",
                     dev.tenants,
-                    ps_to_us(dev.link_busy),
-                    ps_to_us(dev.mem_wait + dev.io_wait),
-                    ps_to_us(dev.pu_busy),
-                    ps_to_us(dev.pu_wait),
+                    fmt_time(dev.link_busy),
+                    fmt_time(dev.mem_wait + dev.io_wait),
+                    fmt_time(dev.pu_busy),
+                    fmt_time(dev.pu_wait),
                     dev.bytes
                 );
             }
             match topo.fabric_bw_gbps {
                 Some(bw) => println!(
-                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {:.2} us, wait {:.2} us, util {:.1}%",
+                    "  fabric ({bw:.1} GB/s): {} msgs, {} bytes, busy {}, wait {}, util {}",
                     r.fabric.messages,
                     r.fabric.bytes,
-                    ps_to_us(r.fabric.busy),
-                    ps_to_us(r.fabric.wait),
-                    100.0 * r.fabric.utilization
+                    fmt_time(r.fabric.busy),
+                    fmt_time(r.fabric.wait),
+                    fmt_pct(r.fabric.utilization)
                 ),
                 None => println!("  fabric: none (dedicated per-device uplinks)"),
             }
             let mix: Vec<String> =
                 r.proto_mix.iter().map(|(proto, n)| format!("{proto}:{n}")).collect();
             println!(
-                "  makespan {:.2} us | slowdown p50 {:.3} p99 {:.3} max {:.3} | host idle {:.1}% ccm idle {:.1}% | mix {}",
-                ps_to_us(r.makespan),
+                "  makespan {} | slowdown p50 {:.3} p99 {:.3} max {:.3} | host idle {} ccm idle {} | mix {}",
+                fmt_time(r.makespan),
                 r.p50_slowdown,
                 r.p99_slowdown,
                 r.max_slowdown,
-                100.0 * r.host_idle_frac(),
-                100.0 * r.ccm_idle_frac(),
+                fmt_pct(r.host_idle_frac()),
+                fmt_pct(r.ccm_idle_frac()),
                 mix.join(" ")
             );
             let classes = r.class_slowdowns();
@@ -734,23 +763,62 @@ fn main() -> Result<()> {
             if !r.faults.is_empty() {
                 for f in &r.faults {
                     println!(
-                        "  fault {} device {} at {:.2} us (until {:.2} us): {} displaced, recover {:.2} us, lost wire {:.2} us pu {:.2} us",
+                        "  fault {} device {} at {} (until {}): {} displaced, recover {}, lost wire {} pu {}",
                         f.kind.label(),
                         f.device,
-                        ps_to_us(f.at),
-                        ps_to_us(f.until),
+                        fmt_time(f.at),
+                        fmt_time(f.until),
                         f.displaced,
-                        ps_to_us(f.recover),
-                        ps_to_us(f.lost_wire),
-                        ps_to_us(f.lost_pu)
+                        fmt_time(f.recover),
+                        fmt_time(f.lost_wire),
+                        fmt_time(f.lost_pu)
                     );
                 }
                 println!(
-                    "  lost work: wire {:.2} us, pu {:.2} us | failed requests {}",
-                    ps_to_us(r.lost_wire),
-                    ps_to_us(r.lost_pu),
+                    "  lost work: wire {}, pu {} | failed requests {}",
+                    fmt_time(r.lost_wire),
+                    fmt_time(r.lost_pu),
                     r.failed_requests
                 );
+            }
+            if let Some(tr) = &tr {
+                let buckets = spec.trace.as_ref().map(|t| t.buckets).unwrap_or(16);
+                let tel = trace::telemetry::windows(tr, buckets, r.makespan);
+                println!(
+                    "  trace events = {}, host util p50 = {}",
+                    tr.len(),
+                    fmt_pct(tel.host_util_p50())
+                );
+                if let Some(path) = trace_path.as_deref() {
+                    println!("  trace written to {path} (load in Perfetto / chrome://tracing)");
+                }
+                if trace_buckets.is_some() {
+                    println!(
+                        "  {:<22} {:>7} {:>7} {:>12} {:>7} {:>6} {:>5} {:>4} {:>8}",
+                        "window", "host", "ccm", "wire busy", "qdepth", "outst", "done", "rtry",
+                        "p99 sd"
+                    );
+                    for w in &tel.windows {
+                        let p99 = if w.slowdown.count() == 0 {
+                            "-".to_string()
+                        } else {
+                            format!("{:.3}", w.slowdown.quantile(99.0))
+                        };
+                        println!(
+                            "  [{:>9} {:>9}] {:>7} {:>7} {:>12} {:>7.2} {:>6.2} {:>5} {:>4} {:>8}",
+                            fmt_time(w.start),
+                            fmt_time(w.end),
+                            fmt_pct(w.host_util()),
+                            fmt_pct(w.ccm_util(tel.devices)),
+                            fmt_time(w.wire_busy),
+                            w.queue_depth,
+                            w.outstanding,
+                            w.completions,
+                            w.retries,
+                            p99
+                        );
+                    }
+                }
             }
         }
         Some("scenario") => {
@@ -779,21 +847,21 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             println!(
-                "failover scenario: {streams} tenant(s) x {requests} request(s) over 2 devices (strong+weak), device 0 fails at {:.2} us",
-                ps_to_us(at)
+                "failover scenario: {streams} tenant(s) x {requests} request(s) over 2 devices (strong+weak), device 0 fails at {}",
+                fmt_time(at)
             );
             println!(
-                "  time-to-recover {:.2} us | {} displaced, {} failed | lost work wire {:.2} us pu {:.2} us",
-                ps_to_us(row.recover),
+                "  time-to-recover {} | {} displaced, {} failed | lost work wire {} pu {}",
+                fmt_time(row.recover),
                 row.displaced,
                 faulted.failed_requests,
-                ps_to_us(faulted.lost_wire),
-                ps_to_us(faulted.lost_pu)
+                fmt_time(faulted.lost_wire),
+                fmt_time(faulted.lost_pu)
             );
             println!(
-                "  makespan {:.2} -> {:.2} us | slowdown p50 {:.3} -> {:.3}, p99 {:.3} -> {:.3}",
-                ps_to_us(base.makespan),
-                ps_to_us(faulted.makespan),
+                "  makespan {} -> {} | slowdown p50 {:.3} -> {:.3}, p99 {:.3} -> {:.3}",
+                fmt_time(base.makespan),
+                fmt_time(faulted.makespan),
                 base.p50_slowdown,
                 faulted.p50_slowdown,
                 base.p99_slowdown,
@@ -838,6 +906,7 @@ fn main() -> Result<()> {
                 "fig19" | "sched" => report::fig19(&cfg),
                 "fig20" | "faults" => report::fig20(&cfg),
                 "fig21" | "pipeline" => report::fig21(&cfg),
+                "fig22" | "trace" => report::fig22(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

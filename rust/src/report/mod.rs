@@ -828,6 +828,107 @@ pub fn fig21(cfg: &SimConfig) {
     }
 }
 
+/// Fig. 22 (observability): windowed telemetry rendered from the
+/// deterministic event trace. Two runs of the Fig. 21 strong+weak
+/// contention point (`admit 1`, `depth 2` — every device queue stays
+/// non-empty), each with the tracer armed (`--trace`):
+///
+/// 1. **fault-free** — per-window host/CCM utilization, time-averaged
+///    admission-queue depth and outstanding occupancy, completions and
+///    per-window p99 slowdown, straight from the recorded wire grants,
+///    PU leases and request lifecycle events;
+/// 2. **mid-run failure** — device 0 killed at the midpoint of its
+///    longest fault-free service window (the Fig. 20 heuristic), so the
+///    windows show the utilization dip at the kill, the retry burst,
+///    and the recovery on the surviving device.
+///
+/// Both traces are run through [`crate::trace::validate`] against their
+/// own reports first: every figure this emitter prints reconciles
+/// exactly (integer picoseconds) with the run's `SchedReport`. Tracing
+/// is observation-only, so both reports are bit-identical to untraced
+/// runs of the same specs.
+pub fn fig22(cfg: &SimConfig) {
+    header("Fig. 22: windowed telemetry from the deterministic event trace");
+    let jobs = sweep::available_jobs();
+    let fmt_time = crate::util::fmt::fmt_time;
+    let fmt_pct = crate::util::fmt::fmt_pct;
+    let topo = crate::config::TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps).with_override(
+        1,
+        crate::config::DeviceOverride { ccm_pus: Some(4), ..Default::default() },
+    );
+    let spec = crate::config::SchedSpec::new(4)
+        .with_workloads(vec!['a', 'e', 'i'])
+        .with_policy(crate::config::PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_admit(1)
+        .with_depth(2)
+        .with_retain(true)
+        .with_trace(crate::config::TraceSpec { buckets: 8 });
+    let print_windows = |tel: &crate::trace::telemetry::Telemetry| {
+        println!(
+            "  {:<25} {:>7} {:>7} {:>7} {:>6} {:>5} {:>5} {:>8}",
+            "window", "host", "ccm", "qdepth", "outst", "done", "rtry", "p99 sd"
+        );
+        for w in &tel.windows {
+            let p99 = if w.slowdown.count() == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.3}", w.slowdown.quantile(99.0))
+            };
+            println!(
+                "  [{:>10} {:>12}] {:>7} {:>7} {:>7.2} {:>6.2} {:>5} {:>5} {:>8}",
+                fmt_time(w.start),
+                fmt_time(w.end),
+                fmt_pct(w.host_util()),
+                fmt_pct(w.ccm_util(tel.devices)),
+                w.queue_depth,
+                w.outstanding,
+                w.completions,
+                w.retries,
+                p99
+            );
+        }
+    };
+
+    let (r, tr) = crate::sched::run_sched_traced(cfg, &topo, &spec, jobs);
+    let tr = tr.expect("trace spec is set");
+    crate::trace::validate(&tr, &r).expect("fault-free trace reconciles with its report");
+    let tel = crate::trace::telemetry::windows(&tr, 8, r.makespan);
+    println!(
+        "fault-free contention point: {} trace events, makespan {}, host util p50 {}",
+        tr.len(),
+        fmt_time(r.makespan),
+        fmt_pct(tel.host_util_p50())
+    );
+    print_windows(&tel);
+
+    // The kill instant comes from the fault-free run's own rows — the
+    // engine is bit-identical up to the first fault event, so the
+    // midpoint of the longest device-0 service window is guaranteed to
+    // catch that request in flight (same heuristic as Fig. 20).
+    let at = r
+        .requests
+        .iter()
+        .filter(|q| q.device == 0 && q.completion > q.admit + 1)
+        .max_by_key(|q| q.completion - q.admit)
+        .map(|q| q.admit + (q.completion - q.admit) / 2)
+        .unwrap_or(r.makespan / 2);
+    let faults = crate::config::FaultSpec::with(vec![crate::config::FaultEvent::fail(0, at)]);
+    let (rf, trf) =
+        crate::sched::run_sched_traced(cfg, &topo, &spec.clone().with_faults(faults), jobs);
+    let trf = trf.expect("trace spec is set");
+    crate::trace::validate(&trf, &rf).expect("faulted trace reconciles with its report");
+    let telf = crate::trace::telemetry::windows(&trf, 8, rf.makespan);
+    println!(
+        "device 0 fails at {}: {} displaced, {} retries recorded, makespan {}",
+        fmt_time(at),
+        rf.faults[0].displaced,
+        telf.windows.iter().map(|w| w.retries as u64).sum::<u64>(),
+        fmt_time(rf.makespan)
+    );
+    print_windows(&telf);
+}
+
 /// Table I echo: what each workload offloads.
 pub fn table1() {
     header("Table I: offloaded functions");
@@ -892,6 +993,11 @@ mod tests {
     }
 
     #[test]
+    fn trace_report_runs() {
+        fig22(&SimConfig::m2ndp());
+    }
+
+    #[test]
     fn fig10_and_idle_reports_run() {
         let cfg = SimConfig::m2ndp();
         fig10(&cfg);
@@ -933,4 +1039,5 @@ pub fn all() {
     fig19(&cfg);
     fig20(&cfg);
     fig21(&cfg);
+    fig22(&cfg);
 }

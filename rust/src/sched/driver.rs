@@ -99,6 +99,7 @@ use crate::sweep::{self, SpecJob, TracedRun};
 use crate::topo::fabric::QosState;
 use crate::topo::tenant::{self, FabricReport, TenantSpec};
 use crate::topo::DeviceStats;
+use crate::trace::{Trace, TraceEvent, Tracer, Wire};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
@@ -981,6 +982,10 @@ struct RawRun {
     faults: Vec<FaultOutcome>,
     lost_wire: Ps,
     lost_pu: Ps,
+    /// Recorded trace events (`Some` iff the engine ran traced; shard
+    /// buffers are concatenated by [`merge_shards`] and canonicalized
+    /// in [`Trace::new`]).
+    trace: Option<Vec<TraceEvent>>,
 }
 
 // ------------------------------------------------------------------
@@ -1195,6 +1200,33 @@ pub fn run_sched(
     run_closed_jobs(topo_spec, spec, &pass, jobs)
 }
 
+/// [`run_sched`] plus deterministic event tracing: when `spec.trace` is
+/// set, the closed-loop engine records a [`Trace`] alongside the run.
+/// Tracing is observation-only — the returned report is bit-identical
+/// (including every f64 bit) to [`run_sched`]'s for the same spec with
+/// `trace` unset, pinned in `rust/tests/sched_regression.rs`. Open-loop
+/// runs and unset trace specs return `None` and defer to [`run_sched`]
+/// outright.
+pub fn run_sched_traced(
+    cfg: &SimConfig,
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    jobs: usize,
+) -> (SchedReport, Option<Trace>) {
+    if !spec.closed || spec.trace.is_none() {
+        return (run_sched(cfg, topo_spec, spec, jobs), None);
+    }
+    assert!(topo_spec.devices > 0, "topology needs at least one device");
+    assert!(!spec.workloads.is_empty(), "scheduler mix needs at least one workload");
+    if spec.streams == 0 || spec.requests == 0 {
+        let trace = Trace::new(topo_spec.devices, topo_spec.fabric_bw_gbps.is_some(), Vec::new());
+        return (empty_report(topo_spec, spec), Some(trace));
+    }
+    let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
+    let (report, trace) = run_closed_traced(topo_spec, spec, &pass, jobs);
+    (report, Some(trace))
+}
+
 /// The closed-loop event engine over an already-prepared solo pass,
 /// single-sharded. `pass` must have been prepared with the same
 /// topology, workload mix and policy (only `depth`/`admit`/`requests`/
@@ -1205,7 +1237,7 @@ pub(super) fn run_closed(
     spec: &SchedSpec,
     pass: &SoloPass,
 ) -> SchedReport {
-    assemble(topo_spec, spec, run_closed_core(topo_spec, spec, pass, None))
+    assemble(topo_spec, spec, run_closed_core(topo_spec, spec, pass, None, false))
 }
 
 /// How many engine shards a run may be partitioned into. Sharding is
@@ -1238,17 +1270,49 @@ pub(super) fn run_closed_jobs(
     pass: &SoloPass,
     jobs: usize,
 ) -> SchedReport {
+    run_closed_jobs_inner(topo_spec, spec, pass, jobs, false).0
+}
+
+/// [`run_closed_jobs`] with the tracer armed: also returns the run's
+/// canonical [`Trace`]. Shard event buffers carry disjoint multisets
+/// whose union equals the single-shard recording, so the canonical sort
+/// makes the merged trace byte-identical to `--jobs 1` — pinned in
+/// `rust/tests/sched_regression.rs`.
+pub(super) fn run_closed_traced(
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    pass: &SoloPass,
+    jobs: usize,
+) -> (SchedReport, Trace) {
+    let (report, events) = run_closed_jobs_inner(topo_spec, spec, pass, jobs, true);
+    (report, Trace::new(topo_spec.devices, topo_spec.fabric_bw_gbps.is_some(), events))
+}
+
+fn run_closed_jobs_inner(
+    topo_spec: &TopologySpec,
+    spec: &SchedSpec,
+    pass: &SoloPass,
+    jobs: usize,
+    traced: bool,
+) -> (SchedReport, Vec<TraceEvent>) {
     let shards = shard_count(topo_spec, spec, jobs);
-    if shards <= 1 {
-        return run_closed(topo_spec, spec, pass);
-    }
-    let raws: Vec<RawRun> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..shards)
-            .map(|s| scope.spawn(move || run_closed_core(topo_spec, spec, pass, Some((s, shards)))))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
-    });
-    assemble(topo_spec, spec, merge_shards(raws))
+    let mut raw = if shards <= 1 {
+        run_closed_core(topo_spec, spec, pass, None, traced)
+    } else {
+        let raws: Vec<RawRun> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..shards)
+                .map(|s| {
+                    scope.spawn(move || {
+                        run_closed_core(topo_spec, spec, pass, Some((s, shards)), traced)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        merge_shards(raws)
+    };
+    let events = raw.trace.take().unwrap_or_default();
+    (assemble(topo_spec, spec, raw), events)
 }
 
 /// Fold per-shard raw results into one, equivalent to the unsharded
@@ -1273,6 +1337,15 @@ fn merge_shards(mut raws: Vec<RawRun>) -> RawRun {
             sk.merge(raw.sk.as_ref().expect("every shard runs the same aggregation mode"));
         }
     }
+    // Trace buffers concatenate: shards record disjoint event multisets
+    // (each owns its devices and their pinned tenants outright), so the
+    // canonical sort downstream restores the single-shard order.
+    let mut trace = raws[0].trace.take();
+    if let Some(tv) = trace.as_mut() {
+        for raw in raws.iter_mut().skip(1) {
+            tv.append(raw.trace.as_mut().expect("every shard runs the same tracing mode"));
+        }
+    }
     let mut merged = RawRun {
         requests,
         sk,
@@ -1287,6 +1360,7 @@ fn merge_shards(mut raws: Vec<RawRun>) -> RawRun {
         faults: Vec::new(),
         lost_wire: 0,
         lost_pu: 0,
+        trace,
     };
     for raw in &raws {
         merged.scheduled += raw.scheduled;
@@ -1360,6 +1434,7 @@ fn run_closed_core(
     spec: &SchedSpec,
     pass: &SoloPass,
     shard: Option<(usize, usize)>,
+    traced: bool,
 ) -> RawRun {
     assert!(spec.depth > 0, "closed-loop window needs depth >= 1");
     assert!(spec.admit > 0, "device admission needs at least one service slot");
@@ -1427,6 +1502,11 @@ fn run_closed_core(
     let mut agg: Option<Agg> = (!spec.retain).then(Agg::new);
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut rr_next = 0usize;
+    // Deterministic event tracing: every recording site below is behind
+    // this option, and the engine never reads it back — tracing is
+    // observation-only by construction (the trace-on/off bit-identity
+    // pin in tests/sched_regression.rs).
+    let mut tr: Option<Tracer> = traced.then(Tracer::new);
 
     // Fault-injection runtime: constructed only when the spec schedules
     // events. The fault-free path never builds one, never reroutes
@@ -1532,11 +1612,28 @@ fn run_closed_core(
                     let r = &arena.runs[rid];
                     a.finish(r, table.get(devs[d].class, r.annot, r.proto).run.metrics.host_busy);
                 }
+                if let Some(tx) = tr.as_mut() {
+                    let r = &arena.runs[rid];
+                    tx.push(TraceEvent::Complete {
+                        at: now,
+                        tenant: r.tenant,
+                        index: r.index,
+                        device: d as u32,
+                        submit: r.submit,
+                        admit: r.admit,
+                        solo: r.solo,
+                        host_busy: table
+                            .get(devs[d].class, r.annot, r.proto)
+                            .run
+                            .metrics
+                            .host_busy,
+                    });
+                }
                 arena.release(rid);
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
                 try_admit(
                     now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
-                    &mut fx, &mut pipe,
+                    &mut fx, &mut pipe, &mut tr,
                 );
             }
             1 => {
@@ -1593,6 +1690,16 @@ fn run_closed_core(
                     r.placed_on.push(d as u32);
                     r.failed = false;
                 }
+                if let Some(tx) = tr.as_mut() {
+                    tx.push(TraceEvent::Submit {
+                        at: now,
+                        tenant: t as u32,
+                        index,
+                        class,
+                        device: d as u32,
+                        proto,
+                    });
+                }
                 devs[d].stats.tenants += 1;
                 devs[d].stats.load += solo_total;
                 devs[d].queue.push(rid as u32, class);
@@ -1616,7 +1723,7 @@ fn run_closed_core(
                 }
                 try_admit(
                     now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
-                    &mut fx, &mut pipe,
+                    &mut fx, &mut pipe, &mut tr,
                 );
                 // Window depth > 1: the tenant may pipeline its next request.
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
@@ -1628,12 +1735,12 @@ fn run_closed_core(
                     fault_start(
                         id as usize, now, topo_spec, spec, &mut devs, &mut tenants, table,
                         &mut fabric, &mut arena, &mut agg, &mut heap, &mut rr_next, &mut fx,
-                        &mut pipe,
+                        &mut pipe, &mut tr,
                     );
                 } else {
                     fault_end(
                         id as usize, now, spec, &mut devs, table, &mut fabric, &mut arena,
-                        &mut heap, &mut fx, &mut pipe,
+                        &mut heap, &mut fx, &mut pipe, &mut tr,
                     );
                 }
             }
@@ -1650,7 +1757,7 @@ fn run_closed_core(
                 if live {
                     re_place(
                         rid, now, topo_spec, spec, &mut devs, table, &mut fabric, &mut arena,
-                        &mut heap, &mut rr_next, &mut fx, &mut pipe,
+                        &mut heap, &mut rr_next, &mut fx, &mut pipe, true, &mut tr,
                     );
                 }
             }
@@ -1673,10 +1780,19 @@ fn run_closed_core(
                     }
                 };
                 if fire {
+                    if let Some(tx) = tr.as_mut() {
+                        let r = &arena.runs[rid];
+                        tx.push(TraceEvent::EarlyRelease {
+                            at: now,
+                            tenant: r.tenant,
+                            index: r.index,
+                            device: d as u32,
+                        });
+                    }
                     devs[d].in_service -= 1;
                     try_admit(
                         now, d, spec, &mut devs[d], table, &mut fabric, &mut arena, &mut heap,
-                        &mut fx, &mut pipe,
+                        &mut fx, &mut pipe, &mut tr,
                     );
                 }
             }
@@ -1700,8 +1816,18 @@ fn run_closed_core(
                     let d = f.rstate[rid].loc_dev as usize;
                     f.rstate[rid].attempt += 1;
                     devs[d].queue.remove(rid as u32, arena.runs[rid].class);
+                    if let Some(tx) = tr.as_mut() {
+                        let r = &arena.runs[rid];
+                        tx.push(TraceEvent::Timeout {
+                            at: now,
+                            tenant: r.tenant,
+                            index: r.index,
+                            device: d as u32,
+                        });
+                    }
                     retry_or_fail(
                         rid, now, false, spec, &mut tenants, &mut arena, &mut agg, &mut heap, f,
+                        &mut tr,
                     );
                 }
             }
@@ -1783,6 +1909,7 @@ fn run_closed_core(
         faults,
         lost_wire,
         lost_pu,
+        trace: tr.map(|t| t.events),
     }
 }
 
@@ -1873,9 +2000,18 @@ fn fault_start(
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
     pipe: &mut Option<PipeRt>,
+    tr: &mut Option<Tracer>,
 ) {
     let e = spec.faults.events[i];
     let d = e.device as usize;
+    if let Some(tx) = tr.as_mut() {
+        tx.push(TraceEvent::FaultBegin {
+            at: now,
+            device: d as u32,
+            kind: e.kind,
+            until: (e.kind != FaultKind::Fail).then_some(e.until),
+        });
+    }
     match e.kind {
         FaultKind::DegradePus => devs[d].pu_factor = e.factor,
         FaultKind::DegradeLink => devs[d].bw_factor = e.factor,
@@ -1942,7 +2078,7 @@ fn fault_start(
                 f.outcomes[i].displaced += 1;
                 f.outcomes[i].lost_wire += w;
                 f.outcomes[i].lost_pu += p;
-                retry_or_fail(rid, now, true, spec, tenants, arena, agg, heap, f);
+                retry_or_fail(rid, now, true, spec, tenants, arena, agg, heap, f, tr);
             }
             // Drain the admission queue in order onto survivors. These
             // requests never started, so re-placement is free: no retry
@@ -1955,12 +2091,17 @@ fn fault_start(
                 }
                 re_place(
                     rid as usize, now, topo_spec, spec, devs, table, fabric, arena, heap, rr_next,
-                    fx, pipe,
+                    fx, pipe, false, tr,
                 );
             }
             devs[d].mem.truncate(now);
             devs[d].io.truncate(now);
             devs[d].pool.truncate(now);
+            // Mirror the calendar/pool truncation onto recorded grants so
+            // the trace's busy unions stay equal to the report's.
+            if let Some(tx) = tr.as_mut() {
+                tx.truncate_device(d as u32, now);
+            }
         }
     }
 }
@@ -1981,9 +2122,13 @@ fn fault_end(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
     pipe: &mut Option<PipeRt>,
+    tr: &mut Option<Tracer>,
 ) {
     let e = spec.faults.events[i];
     let d = e.device as usize;
+    if let Some(tx) = tr.as_mut() {
+        tx.push(TraceEvent::FaultEnd { at: now, device: d as u32, kind: e.kind });
+    }
     match e.kind {
         FaultKind::DegradePus => devs[d].pu_factor = 1.0,
         FaultKind::DegradeLink => devs[d].bw_factor = 1.0,
@@ -1992,7 +2137,7 @@ fn fault_end(
             // this stall began — the gate stays shut forever then.
             if devs[d].alive {
                 devs[d].admit_open = true;
-                try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe);
+                try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe, tr);
             }
         }
         FaultKind::Fail => unreachable!("permanent failures schedule no end event"),
@@ -2018,6 +2163,8 @@ fn re_place(
     rr_next: &mut usize,
     fx: &mut Option<FaultRuntime>,
     pipe: &mut Option<PipeRt>,
+    from_backoff: bool,
+    tr: &mut Option<Tracer>,
 ) {
     let ordinal = arena.runs[rid].tenant as usize;
     let d = pick_device(topo_spec, devs, ordinal, rr_next);
@@ -2031,6 +2178,16 @@ fn re_place(
         r.class
     };
     devs[d].queue.push(rid as u32, class);
+    if let Some(tx) = tr.as_mut() {
+        let r = &arena.runs[rid];
+        tx.push(TraceEvent::Requeue {
+            at: now,
+            tenant: r.tenant,
+            index: r.index,
+            device: d as u32,
+            from_backoff,
+        });
+    }
     {
         let f = fx.as_mut().expect("re-placement only exists in fault mode");
         let timeout = f.timeout(arena.runs[rid].solo);
@@ -2044,7 +2201,7 @@ fn re_place(
             heap.push(Reverse((now + timeout, 4, arena.tickets[rid], st.attempt as u64)));
         }
     }
-    try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe);
+    try_admit(now, d, spec, &mut devs[d], table, fabric, arena, heap, fx, pipe, tr);
 }
 
 /// Consume one retry for request `rid` at `now`. Within budget: charge
@@ -2067,6 +2224,7 @@ fn retry_or_fail(
     agg: &mut Option<Agg>,
     heap: &mut BinaryHeap<Reverse<Ev>>,
     f: &mut FaultRuntime,
+    tr: &mut Option<Tracer>,
 ) {
     let max_retries = f.spec.max_retries;
     f.rstate[rid].retries += 1;
@@ -2087,6 +2245,16 @@ fn retry_or_fail(
             r.completion = now;
             r.tenant as usize
         };
+        if let Some(tx) = tr.as_mut() {
+            let r = &arena.runs[rid];
+            tx.push(TraceEvent::Failed {
+                at: now,
+                tenant: r.tenant,
+                index: r.index,
+                device: r.device,
+                submit: r.submit,
+            });
+        }
         // A dropped request is terminal: fold it into the streaming
         // aggregates (no host-busy charge — its solo work never
         // completed) and retire its slot.
@@ -2102,6 +2270,16 @@ fn retry_or_fail(
         f.rstate[rid].loc = Loc::Backoff;
         let r = &mut arena.runs[rid];
         r.retry_wait += if from_service { (now - r.admit) + delay } else { delay };
+        if let Some(tx) = tr.as_mut() {
+            tx.push(TraceEvent::Retry {
+                at: now,
+                tenant: r.tenant,
+                index: r.index,
+                retries,
+                backoff: delay,
+                from_service,
+            });
+        }
         heap.push(Reverse((now + delay, 3, arena.tickets[rid], attempt)));
     }
 }
@@ -2132,6 +2310,7 @@ fn try_admit(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     fx: &mut Option<FaultRuntime>,
     pipe: &mut Option<PipeRt>,
+    tr: &mut Option<Tracer>,
 ) {
     if !dev.admit_open {
         return;
@@ -2145,11 +2324,11 @@ fn try_admit(
         return;
     }
     if let Some(p) = pipe.as_mut() {
-        admit_chunked(now, d, dev, table, fabric, arena, heap, &batch, fx, p);
+        admit_chunked(now, d, dev, table, fabric, arena, heap, &batch, fx, p, tr);
     } else if dev.qos_mem.is_none() {
-        admit_fcfs(now, d, dev, table, fabric, arena, heap, &batch, fx);
+        admit_fcfs(now, d, dev, table, fabric, arena, heap, &batch, fx, tr);
     } else {
-        admit_qos(now, d, spec.streams, dev, table, fabric, arena, heap, &batch, fx);
+        admit_qos(now, d, spec.streams, dev, table, fabric, arena, heap, &batch, fx, tr);
     }
 }
 
@@ -2171,12 +2350,13 @@ fn admit_fcfs(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
     fx: &mut Option<FaultRuntime>,
+    tr: &mut Option<Tracer>,
 ) {
     let bw = dev.link_bw / dev.bw_factor;
     for &rid in batch {
-        let (annot, proto) = {
+        let (annot, proto, tnt, ridx) = {
             let r = &arena.runs[rid as usize];
-            (r.annot, r.proto)
+            (r.annot, r.proto, r.tenant, r.index)
         };
         let s = table.get(dev.class, annot, proto);
         let a = now;
@@ -2187,6 +2367,19 @@ fn admit_fcfs(
             let issue = a + m.start;
             let dur = transfer_ps(m.bytes, bw);
             let start = dev.mem.place(issue, dur);
+            if dur > 0 {
+                if let Some(tx) = tr.as_mut() {
+                    tx.push(TraceEvent::WireGrant {
+                        at: start,
+                        dur,
+                        device: d as u32,
+                        wire: Wire::Mem,
+                        tenant: tnt,
+                        index: ridx,
+                        chunk: 0,
+                    });
+                }
+            }
             let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
             mem_late = mem_late.max((start + dur).saturating_sub(solo_finish));
         }
@@ -2195,6 +2388,19 @@ fn admit_fcfs(
             let issue = a + m.start;
             let dur = transfer_ps(m.bytes, bw);
             let start = dev.io.place(issue, dur);
+            if dur > 0 {
+                if let Some(tx) = tr.as_mut() {
+                    tx.push(TraceEvent::WireGrant {
+                        at: start,
+                        dur,
+                        device: d as u32,
+                        wire: Wire::Io,
+                        tenant: tnt,
+                        index: ridx,
+                        chunk: 0,
+                    });
+                }
+            }
             let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
             io_late = io_late.max((start + dur).saturating_sub(solo_finish));
         }
@@ -2206,13 +2412,26 @@ fn admit_fcfs(
                 let issue = a + m.start;
                 let ser_f = transfer_ps(m.bytes, *fbw);
                 let start = cal.place(issue, ser_f);
+                if ser_f > 0 {
+                    if let Some(tx) = tr.as_mut() {
+                        tx.push(TraceEvent::WireGrant {
+                            at: start,
+                            dur: ser_f,
+                            device: d as u32,
+                            wire: Wire::Fabric,
+                            tenant: tnt,
+                            index: ridx,
+                            chunk: 0,
+                        });
+                    }
+                }
                 let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
                 fab_late = fab_late.max((start + ser_f).saturating_sub(solo_finish));
                 fabric.bytes += m.bytes;
             }
         }
         finish_admission(
-            now, d, dev, table, fabric, arena, heap, rid, mem_late, io_late, fab_late, fx,
+            now, d, dev, table, fabric, arena, heap, rid, mem_late, io_late, fab_late, fx, tr,
         );
     }
 }
@@ -2255,6 +2474,7 @@ fn admit_chunked(
     batch: &[u32],
     fx: &mut Option<FaultRuntime>,
     pipe: &mut PipeRt,
+    tr: &mut Option<Tracer>,
 ) {
     let bw = dev.link_bw / dev.bw_factor;
     let link_bw = dev.link_bw;
@@ -2265,9 +2485,9 @@ fn admit_chunked(
             pipe.released.resize(rid as usize + 1, false);
         }
         pipe.released[rid as usize] = false;
-        let (annot, proto) = {
+        let (annot, proto, tnt, ridx) = {
             let r = &arena.runs[rid as usize];
-            (r.annot, r.proto)
+            (r.annot, r.proto, r.tenant, r.index)
         };
         let si = table.idx_of(dev.class, annot, proto);
         let s = &table.runs[si];
@@ -2297,6 +2517,7 @@ fn admit_chunked(
             let mut end: Ps = 0;
             match st.lane {
                 Lane::MemWire | Lane::IoWire => {
+                    let wlane = if st.lane == Lane::MemWire { Wire::Mem } else { Wire::Io };
                     let trace =
                         if st.lane == Lane::MemWire { &s.run.mem_trace } else { &s.run.io_trace };
                     let cal = if st.lane == Lane::MemWire { &mut dev.mem } else { &mut dev.io };
@@ -2304,6 +2525,19 @@ fn admit_chunked(
                         let issue = now + m.start + din;
                         let dur = transfer_ps(m.bytes, bw);
                         let start = cal.place(issue, dur);
+                        if dur > 0 {
+                            if let Some(tx) = tr.as_mut() {
+                                tx.push(TraceEvent::WireGrant {
+                                    at: start,
+                                    dur,
+                                    device: d as u32,
+                                    wire: wlane,
+                                    tenant: tnt,
+                                    index: ridx,
+                                    chunk: st.chunk,
+                                });
+                            }
+                        }
                         let ser_solo = transfer_ps(m.bytes, link_bw);
                         late = late.max((start + dur).saturating_sub(issue + ser_solo));
                         end = end.max(m.start + ser_solo);
@@ -2313,6 +2547,19 @@ fn admit_chunked(
                             let issue = now + m.start + din;
                             let ser_f = transfer_ps(m.bytes, *fbw);
                             let start = cal.place(issue, ser_f);
+                            if ser_f > 0 {
+                                if let Some(tx) = tr.as_mut() {
+                                    tx.push(TraceEvent::WireGrant {
+                                        at: start,
+                                        dur: ser_f,
+                                        device: d as u32,
+                                        wire: Wire::Fabric,
+                                        tenant: tnt,
+                                        index: ridx,
+                                        chunk: st.chunk,
+                                    });
+                                }
+                            }
                             let ser_solo = transfer_ps(m.bytes, link_bw);
                             fab_late = fab_late.max((start + ser_f).saturating_sub(issue + ser_solo));
                             fabric.bytes += m.bytes;
@@ -2322,7 +2569,19 @@ fn admit_chunked(
                 Lane::Ccm => {
                     for sp in &s.run.ccm_trace[lo..hi] {
                         let ready = now + sp.start + din;
-                        let (_, e) = dev.pool.dispatch(ready, scale(sp.dur()));
+                        let (ls, e) = dev.pool.dispatch(ready, scale(sp.dur()));
+                        if e > ls {
+                            if let Some(tx) = tr.as_mut() {
+                                tx.push(TraceEvent::PuLease {
+                                    at: ls,
+                                    end: e,
+                                    device: d as u32,
+                                    tenant: tnt,
+                                    index: ridx,
+                                    chunk: st.chunk,
+                                });
+                            }
+                        }
                         late = late.max(e - (ready + sp.dur()));
                         end = end.max(sp.start + sp.dur());
                     }
@@ -2369,6 +2628,9 @@ fn admit_chunked(
             r.completion = now + r.solo + dwait.max(fwait) + pwait;
             r.completion
         };
+        if let Some(tx) = tr.as_mut() {
+            tx.push(TraceEvent::Admit { at: now, tenant: tnt, index: ridx, device: d as u32 });
+        }
         dev.in_service += 1;
         dev.stats.mem_wait += mem_wait;
         dev.stats.io_wait += io_wait;
@@ -2474,6 +2736,10 @@ struct QMsg {
     solo_finish: Ps,
     /// Index into the admission batch (which request to charge).
     slot: usize,
+    /// Owning tenant (trace attribution).
+    tenant: u32,
+    /// Owning request index within the tenant (trace attribution).
+    index: u32,
 }
 
 /// Charge one admission batch with its wire traffic ordered by the
@@ -2496,6 +2762,7 @@ fn admit_qos(
     heap: &mut BinaryHeap<Reverse<Ev>>,
     batch: &[u32],
     fx: &mut Option<FaultRuntime>,
+    tr: &mut Option<Tracer>,
 ) {
     let a = now;
     // Effective device-link bandwidth: degraded inside a fault window,
@@ -2512,23 +2779,39 @@ fn admit_qos(
     let mut io_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
     let mut fab_q: Vec<Vec<QMsg>> = vec![Vec::new(); streams];
     for (slot, &rid) in batch.iter().enumerate() {
-        let (tenant, annot, proto) = {
+        let (tenant, annot, proto, ridx) = {
             let r = &arena.runs[rid as usize];
-            (r.tenant as usize, r.annot, r.proto)
+            (r.tenant as usize, r.annot, r.proto, r.index)
         };
         let s = table.get(dev.class, annot, proto);
         for m in &s.run.mem_trace {
             let issue = a + m.start;
             let dur = transfer_ps(m.bytes, bw);
             let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
-            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish, slot };
+            let q = QMsg {
+                at: issue,
+                bytes: m.bytes,
+                dur,
+                solo_finish,
+                slot,
+                tenant: tenant as u32,
+                index: ridx,
+            };
             mem_q[tenant].push(q);
         }
         for m in &s.run.io_trace {
             let issue = a + m.start;
             let dur = transfer_ps(m.bytes, bw);
             let solo_finish = issue + transfer_ps(m.bytes, dev.link_bw);
-            let q = QMsg { at: issue, bytes: m.bytes, dur, solo_finish, slot };
+            let q = QMsg {
+                at: issue,
+                bytes: m.bytes,
+                dur,
+                solo_finish,
+                slot,
+                tenant: tenant as u32,
+                index: ridx,
+            };
             io_q[tenant].push(q);
         }
         if let Some((fbw, _)) = fabric.link.as_ref() {
@@ -2540,6 +2823,8 @@ fn admit_qos(
                     dur: transfer_ps(m.bytes, *fbw),
                     solo_finish: issue + transfer_ps(m.bytes, dev.link_bw),
                     slot,
+                    tenant: tenant as u32,
+                    index: ridx,
                 });
                 fabric.bytes += m.bytes;
             }
@@ -2552,12 +2837,12 @@ fn admit_qos(
         q.sort_by_key(|m| m.at);
     }
     let qos_mem = dev.qos_mem.as_mut().expect("admit_qos runs only with QoS state");
-    drain_qos(&mut dev.mem, qos_mem, &mem_q, &mut mem_late);
+    drain_qos(&mut dev.mem, qos_mem, &mem_q, &mut mem_late, tr, Wire::Mem, d as u32);
     let qos_io = dev.qos_io.as_mut().expect("admit_qos runs only with QoS state");
-    drain_qos(&mut dev.io, qos_io, &io_q, &mut io_late);
+    drain_qos(&mut dev.io, qos_io, &io_q, &mut io_late, tr, Wire::Io, d as u32);
     if let Some((_, cal)) = fabric.link.as_mut() {
         let qos_fab = fabric.qos.as_mut().expect("fabric QoS state exists with a fabric link");
-        drain_qos(cal, qos_fab, &fab_q, &mut fab_late);
+        drain_qos(cal, qos_fab, &fab_q, &mut fab_late, tr, Wire::Fabric, d as u32);
     }
     for (slot, &rid) in batch.iter().enumerate() {
         finish_admission(
@@ -2573,6 +2858,7 @@ fn admit_qos(
             io_late[slot],
             fab_late[slot],
             fx,
+            tr,
         );
     }
 }
@@ -2585,7 +2871,16 @@ fn admit_qos(
 /// solo schedule with zero shift, and earlier admissions' placements
 /// are never revoked. Folds each message's lateness versus its solo
 /// finish into `late[slot]` (max accounting, as everywhere).
-fn drain_qos(cal: &mut LinkCalendar, qos: &mut QosState, queues: &[Vec<QMsg>], late: &mut [Ps]) {
+#[allow(clippy::too_many_arguments)]
+fn drain_qos(
+    cal: &mut LinkCalendar,
+    qos: &mut QosState,
+    queues: &[Vec<QMsg>],
+    late: &mut [Ps],
+    tr: &mut Option<Tracer>,
+    wire: Wire,
+    device: u32,
+) {
     let n = queues.len();
     let total: usize = queues.iter().map(|q| q.len()).sum();
     if total == 0 {
@@ -2621,6 +2916,19 @@ fn drain_qos(cal: &mut LinkCalendar, qos: &mut QosState, queues: &[Vec<QMsg>], l
         cursor[i] += 1;
         served += 1;
         let start = cal.place(t.max(m.at), m.dur);
+        if m.dur > 0 {
+            if let Some(tx) = tr.as_mut() {
+                tx.push(TraceEvent::WireGrant {
+                    at: start,
+                    dur: m.dur,
+                    device,
+                    wire,
+                    tenant: m.tenant,
+                    index: m.index,
+                    chunk: 0,
+                });
+            }
+        }
         clock = clock.max(start + m.dur);
         late[m.slot] = late[m.slot].max((start + m.dur).saturating_sub(m.solo_finish));
     }
@@ -2649,10 +2957,11 @@ fn finish_admission(
     io_late: Ps,
     fab_late: Ps,
     fx: &mut Option<FaultRuntime>,
+    tr: &mut Option<Tracer>,
 ) {
-    let (annot, proto) = {
+    let (annot, proto, tnt, ridx) = {
         let r = &arena.runs[rid as usize];
-        (r.annot, r.proto)
+        (r.annot, r.proto, r.tenant, r.index)
     };
     let s = table.get(dev.class, annot, proto);
     // CCM PU-pool replay (earliest-free, admission order).
@@ -2661,7 +2970,19 @@ fn finish_admission(
     let mut pu_late: Ps = 0;
     for sp in &s.run.ccm_trace {
         let ready = now + sp.start;
-        let (_, end) = dev.pool.dispatch(ready, scale(sp.dur()));
+        let (ls, end) = dev.pool.dispatch(ready, scale(sp.dur()));
+        if end > ls {
+            if let Some(tx) = tr.as_mut() {
+                tx.push(TraceEvent::PuLease {
+                    at: ls,
+                    end,
+                    device: d as u32,
+                    tenant: tnt,
+                    index: ridx,
+                    chunk: 0,
+                });
+            }
+        }
         pu_late = pu_late.max(end - (ready + sp.dur()));
     }
     let completion = {
@@ -2673,6 +2994,9 @@ fn finish_admission(
         r.completion = now + r.solo + r.device_wait.max(fab_late) + pu_late;
         r.completion
     };
+    if let Some(tx) = tr.as_mut() {
+        tx.push(TraceEvent::Admit { at: now, tenant: tnt, index: ridx, device: d as u32 });
+    }
     dev.in_service += 1;
     dev.stats.mem_wait += mem_late;
     dev.stats.io_wait += io_late;

@@ -64,7 +64,7 @@ pub mod driver;
 pub mod fault;
 pub mod policy;
 
-pub use driver::{format_request_row, run_sched, RequestRun, SchedReport};
+pub use driver::{format_request_row, run_sched, run_sched_traced, RequestRun, SchedReport};
 pub use fault::FaultOutcome;
 pub use policy::{Candidate, Observed, OffloadPolicy};
 

@@ -1,0 +1,273 @@
+//! Chrome trace-event JSON export.
+//!
+//! Renders a [`Trace`] in the Chrome trace-event format (the JSON
+//! array flavour, wrapped in `{"traceEvents": [...]}`), loadable in
+//! Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`. Track
+//! layout:
+//!
+//! - one *process* per device (`pid = 1 + d`) with four threads:
+//!   `CXL.mem` (0), `CXL.io` (1), `CCM PUs` (2) and `events` (3 —
+//!   fault windows, fail instants, early slot releases);
+//! - one process for the shared fabric wire when the topology models
+//!   one (`pid = 1 + devices`);
+//! - one `requests` process (`pid = 2 + devices`) with a thread per
+//!   tenant carrying request lifetime spans (submit → completion) and
+//!   instants for admissions, retries, timeouts and requeues.
+//!
+//! Timestamps and durations are microseconds (`ps / 1e6`) per the
+//! format; all values derive from integer picoseconds, so the printed
+//! document is deterministic and byte-comparable across worker counts.
+
+use super::{Trace, TraceEvent, Wire};
+use crate::sim::Ps;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn us(ps: Ps) -> Json {
+    Json::Num(ps as f64 / 1e6)
+}
+
+fn span(name: String, pid: u32, tid: u32, ts: Ps, dur: Ps, args: Json) -> Json {
+    obj(vec![
+        ("ph", Json::Str("X".to_string())),
+        ("name", Json::Str(name)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", us(ts)),
+        ("dur", us(dur)),
+        ("args", args),
+    ])
+}
+
+fn instant(name: String, pid: u32, tid: u32, ts: Ps, args: Json) -> Json {
+    obj(vec![
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("t".to_string())),
+        ("name", Json::Str(name)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", us(ts)),
+        ("args", args),
+    ])
+}
+
+fn metadata(kind: &str, pid: u32, tid: u32, name: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".to_string())),
+        ("name", Json::Str(kind.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// Render the trace as a Chrome trace-event document.
+pub fn to_json(tr: &Trace) -> Json {
+    let devices = tr.devices as u32;
+    let dev_pid = |d: u32| 1 + d;
+    let fabric_pid = 1 + devices;
+    let req_pid = 2 + devices;
+
+    let mut ev: Vec<Json> = Vec::with_capacity(tr.events.len() + 8 * tr.devices + 8);
+
+    for d in 0..devices {
+        ev.push(metadata("process_name", dev_pid(d), 0, &format!("device {d}")));
+        ev.push(metadata("thread_name", dev_pid(d), 0, "CXL.mem"));
+        ev.push(metadata("thread_name", dev_pid(d), 1, "CXL.io"));
+        ev.push(metadata("thread_name", dev_pid(d), 2, "CCM PUs"));
+        ev.push(metadata("thread_name", dev_pid(d), 3, "events"));
+    }
+    if tr.has_fabric {
+        ev.push(metadata("process_name", fabric_pid, 0, "fabric"));
+        ev.push(metadata("thread_name", fabric_pid, 0, "wire"));
+    }
+    ev.push(metadata("process_name", req_pid, 0, "requests"));
+    let tenants: BTreeSet<u32> = tr
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Submit { tenant, .. } => Some(*tenant),
+            _ => None,
+        })
+        .collect();
+    for t in tenants {
+        ev.push(metadata("thread_name", req_pid, t, &format!("tenant {t}")));
+    }
+
+    for e in &tr.events {
+        match *e {
+            TraceEvent::Submit { .. } => {} // lifetime span starts here; drawn by Complete/Failed
+            TraceEvent::Admit { at, tenant, index, device } => {
+                ev.push(instant(
+                    format!("admit d{device}"),
+                    req_pid,
+                    tenant,
+                    at,
+                    obj(vec![("index", Json::Num(index as f64))]),
+                ));
+            }
+            TraceEvent::Complete { at, tenant, index, device, submit, admit, solo, host_busy } => {
+                ev.push(span(
+                    format!("t{tenant}#{index}"),
+                    req_pid,
+                    tenant,
+                    submit,
+                    at - submit,
+                    obj(vec![
+                        ("device", Json::Num(device as f64)),
+                        ("admit_us", us(admit)),
+                        ("solo_us", us(solo)),
+                        ("host_busy_us", us(host_busy)),
+                    ]),
+                ));
+            }
+            TraceEvent::Failed { at, tenant, index, device, submit } => {
+                ev.push(span(
+                    format!("t{tenant}#{index} failed"),
+                    req_pid,
+                    tenant,
+                    submit,
+                    at - submit,
+                    obj(vec![("device", Json::Num(device as f64))]),
+                ));
+            }
+            TraceEvent::WireGrant { at, dur, device, wire, tenant, index, chunk } => {
+                let (pid, tid) = match wire {
+                    Wire::Mem => (dev_pid(device), 0),
+                    Wire::Io => (dev_pid(device), 1),
+                    Wire::Fabric => (fabric_pid, 0),
+                };
+                ev.push(span(
+                    format!("t{tenant}#{index}"),
+                    pid,
+                    tid,
+                    at,
+                    dur,
+                    obj(vec![
+                        ("chunk", Json::Num(chunk as f64)),
+                        ("device", Json::Num(device as f64)),
+                    ]),
+                ));
+            }
+            TraceEvent::PuLease { at, end, device, tenant, index, chunk } => {
+                ev.push(span(
+                    format!("t{tenant}#{index}"),
+                    dev_pid(device),
+                    2,
+                    at,
+                    end - at,
+                    obj(vec![("chunk", Json::Num(chunk as f64))]),
+                ));
+            }
+            TraceEvent::EarlyRelease { at, tenant, index, device } => {
+                ev.push(instant(
+                    format!("early-release t{tenant}#{index}"),
+                    dev_pid(device),
+                    3,
+                    at,
+                    obj(vec![]),
+                ));
+            }
+            TraceEvent::Retry { at, tenant, index, retries, backoff, from_service } => {
+                ev.push(instant(
+                    format!("retry #{retries}"),
+                    req_pid,
+                    tenant,
+                    at,
+                    obj(vec![
+                        ("index", Json::Num(index as f64)),
+                        ("backoff_us", us(backoff)),
+                        ("from_service", Json::Bool(from_service)),
+                    ]),
+                ));
+            }
+            TraceEvent::Timeout { at, tenant, index, device } => {
+                ev.push(instant(
+                    format!("timeout d{device}"),
+                    req_pid,
+                    tenant,
+                    at,
+                    obj(vec![("index", Json::Num(index as f64))]),
+                ));
+            }
+            TraceEvent::Requeue { at, tenant, index, device, from_backoff } => {
+                ev.push(instant(
+                    format!("requeue d{device}"),
+                    req_pid,
+                    tenant,
+                    at,
+                    obj(vec![
+                        ("index", Json::Num(index as f64)),
+                        ("from_backoff", Json::Bool(from_backoff)),
+                    ]),
+                ));
+            }
+            TraceEvent::FaultBegin { at, device, kind, until } => match until {
+                Some(u) => {
+                    ev.push(span(kind.label().to_string(), dev_pid(device), 3, at, u - at,
+                        obj(vec![])));
+                }
+                None => {
+                    ev.push(instant(kind.label().to_string(), dev_pid(device), 3, at,
+                        obj(vec![])));
+                }
+            },
+            TraceEvent::FaultEnd { at, device, kind } => {
+                ev.push(instant(format!("{} end", kind.label()), dev_pid(device), 3, at,
+                    obj(vec![])));
+            }
+        }
+    }
+
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(ev)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Protocol;
+
+    #[test]
+    fn chrome_document_shape() {
+        let events = vec![
+            TraceEvent::Submit { at: 0, tenant: 0, index: 0, class: 0, device: 0,
+                proto: Protocol::Axle },
+            TraceEvent::Admit { at: 1_000_000, tenant: 0, index: 0, device: 0 },
+            TraceEvent::WireGrant { at: 1_000_000, dur: 500_000, device: 0, wire: Wire::Mem,
+                tenant: 0, index: 0, chunk: 0 },
+            TraceEvent::PuLease { at: 1_500_000, end: 2_500_000, device: 0, tenant: 0,
+                index: 0, chunk: 0 },
+            TraceEvent::Complete { at: 3_000_000, tenant: 0, index: 0, device: 0, submit: 0,
+                admit: 1_000_000, solo: 3_000_000, host_busy: 400_000 },
+        ];
+        let tr = Trace::new(1, false, events);
+        let doc = to_json(&tr);
+        let arr = doc.get("traceEvents").as_arr().unwrap();
+        // 5 device metadata + 1 requests process + 1 tenant thread + 4 drawn events
+        // (the Submit itself is folded into the lifetime span).
+        assert_eq!(arr.len(), 11);
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        // Every drawn event has integer-µs-friendly f64 ts.
+        let spans: Vec<&Json> =
+            arr.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(spans.len(), 3);
+        // Lifetime span covers submit → completion on the requests pid.
+        let life = spans
+            .iter()
+            .find(|s| s.get("pid").as_u64() == Some(3))
+            .expect("request lifetime span");
+        assert_eq!(life.get("ts").as_f64(), Some(0.0));
+        assert_eq!(life.get("dur").as_f64(), Some(3.0));
+        // Parse round-trip (valid JSON document).
+        let printed = doc.to_string();
+        assert_eq!(Json::parse(&printed).unwrap(), doc);
+    }
+}

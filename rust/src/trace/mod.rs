@@ -1,0 +1,356 @@
+//! Deterministic event tracing for the closed-loop offload engine.
+//!
+//! The scheduler's reports are end-of-run aggregates; this module gives
+//! the engine *eyes over time*: a [`Tracer`] threaded through
+//! [`crate::sched::driver`] records one typed [`TraceEvent`] per
+//! observable transition — request lifecycle (submit / admit / complete
+//! / fail), per-wire calendar grants, CCM PU leases, retry machinery
+//! (timeout, backoff retry, requeue), fault windows and pipelined early
+//! slot releases — and a [`Trace`] is the canonically ordered event
+//! log of one run.
+//!
+//! Three contracts, all pinned in tests:
+//!
+//! - **Observation only.** The engine never reads tracer state; every
+//!   recording site is behind `if let Some(t) = tr`, and a run with
+//!   tracing enabled is **bit-identical** (including f64 bit patterns)
+//!   to the same run without it (`rust/tests/sched_regression.rs`).
+//! - **Worker-count invariance.** Sharded runs (`--jobs N` on pinned
+//!   fabric-free topologies) record into per-shard buffers; the shard
+//!   event multisets are disjoint and their union equals the
+//!   single-shard multiset, so the canonical sort in [`Trace::new`]
+//!   makes the merged trace byte-identical to `--jobs 1`.
+//! - **Conservation.** Wire-grant time per device equals the calendar
+//!   busy union the report carries, PU-lease unions equal the pool busy
+//!   union, and lifecycle counts reconcile with the report's
+//!   `scheduled`/`failed`/retry counters ([`validate`]).
+//!
+//! Export surfaces: [`chrome`] (Chrome trace-event JSON for
+//! Perfetto / `chrome://tracing`, `axle sched --trace out.json`) and
+//! [`telemetry`] (fixed-width windowed utilization / queue-depth /
+//! tail-latency buckets, `--trace-buckets N` and `axle report fig22`).
+
+pub mod chrome;
+pub mod telemetry;
+pub mod validate;
+
+pub use validate::validate;
+
+use crate::config::{FaultKind, Protocol};
+use crate::sim::Ps;
+
+/// Which wire a calendar grant occupied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Wire {
+    /// The device's CXL.mem channel (operand transfer).
+    Mem,
+    /// The device's CXL.io channel (back-streamed results).
+    Io,
+    /// The shared upstream fabric link.
+    Fabric,
+}
+
+impl Wire {
+    pub fn label(self) -> &'static str {
+        match self {
+            Wire::Mem => "CXL.mem",
+            Wire::Io => "CXL.io",
+            Wire::Fabric => "fabric",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            Wire::Mem => 0,
+            Wire::Io => 1,
+            Wire::Fabric => 2,
+        }
+    }
+}
+
+/// One observable engine transition. Every variant carries its absolute
+/// simulated time `at` (integer picoseconds — no floats anywhere in the
+/// event model, so traces merge and compare exactly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A tenant submitted request `index` into device `device`'s
+    /// admission queue, with the protocol the policy chose.
+    Submit { at: Ps, tenant: u32, index: u32, class: u32, device: u32, proto: Protocol },
+    /// The device moved the request from its admission queue into
+    /// service (a re-placed request admits again on its new device).
+    Admit { at: Ps, tenant: u32, index: u32, device: u32 },
+    /// The request completed. `host_busy` is the solo run's host busy
+    /// time (the report's aggregate-sum accounting); failed requests
+    /// never contribute one.
+    Complete {
+        at: Ps,
+        tenant: u32,
+        index: u32,
+        device: u32,
+        submit: Ps,
+        admit: Ps,
+        solo: Ps,
+        host_busy: Ps,
+    },
+    /// The request was dropped after exhausting its retry budget.
+    Failed { at: Ps, tenant: u32, index: u32, device: u32, submit: Ps },
+    /// The link calendar granted `[at, at + dur)` on `wire` to one solo
+    /// trace message of the request (`chunk` tags stage-DAG admission;
+    /// 0 for whole-request admission). Zero-duration messages are never
+    /// granted, matching the calendars' accounting.
+    WireGrant { at: Ps, dur: Ps, device: u32, wire: Wire, tenant: u32, index: u32, chunk: u32 },
+    /// The device's CCM PU pool leased `[at, end)` to one solo CCM span
+    /// of the request. Leases of co-scheduled requests may overlap (the
+    /// pool has many PUs); their per-device interval *union* is the
+    /// report's `pu_busy`.
+    PuLease { at: Ps, end: Ps, device: u32, tenant: u32, index: u32, chunk: u32 },
+    /// Pipelined chunked admission freed the request's service slot at
+    /// its last CCM stage bound, before the back-stream drained.
+    EarlyRelease { at: Ps, tenant: u32, index: u32, device: u32 },
+    /// The request consumed one retry (`retries` so far) and entered
+    /// exponential backoff for `backoff` ps. `from_service` marks a
+    /// killed in-service attempt (vs. a timed-out queued one).
+    Retry { at: Ps, tenant: u32, index: u32, retries: u32, backoff: Ps, from_service: bool },
+    /// A queued request timed out on a non-admitting device.
+    Timeout { at: Ps, tenant: u32, index: u32, device: u32 },
+    /// The request re-entered an admission queue on `device` — after
+    /// backoff (`from_backoff`) or via the free queue drain off a
+    /// failed device.
+    Requeue { at: Ps, tenant: u32, index: u32, device: u32, from_backoff: bool },
+    /// Fault event onset on `device`. `until` carries the window end
+    /// for transient kinds; permanent failures have none.
+    FaultBegin { at: Ps, device: u32, kind: FaultKind, until: Option<Ps> },
+    /// A transient fault window closed.
+    FaultEnd { at: Ps, device: u32, kind: FaultKind },
+}
+
+impl TraceEvent {
+    /// Absolute event time.
+    pub fn at(&self) -> Ps {
+        match *self {
+            TraceEvent::Submit { at, .. }
+            | TraceEvent::Admit { at, .. }
+            | TraceEvent::Complete { at, .. }
+            | TraceEvent::Failed { at, .. }
+            | TraceEvent::WireGrant { at, .. }
+            | TraceEvent::PuLease { at, .. }
+            | TraceEvent::EarlyRelease { at, .. }
+            | TraceEvent::Retry { at, .. }
+            | TraceEvent::Timeout { at, .. }
+            | TraceEvent::Requeue { at, .. }
+            | TraceEvent::FaultBegin { at, .. }
+            | TraceEvent::FaultEnd { at, .. } => at,
+        }
+    }
+
+    /// Total-order key for the canonical (shard-invariant) event order:
+    /// time, then a fixed kind rank, then enough identity fields that
+    /// two distinct events never compare equal (events that *do* tie
+    /// are field-for-field identical, so their mutual order is
+    /// unobservable).
+    pub fn key(&self) -> (Ps, u8, u64, u64, u64) {
+        fn ti(tenant: u32, index: u32) -> u64 {
+            ((tenant as u64) << 32) | index as u64
+        }
+        match *self {
+            TraceEvent::FaultBegin { at, device, kind, until } => {
+                (at, 0, device as u64, kind as u64, until.unwrap_or(0))
+            }
+            TraceEvent::FaultEnd { at, device, kind } => (at, 1, device as u64, kind as u64, 0),
+            TraceEvent::Submit { at, tenant, index, class, device, proto } => {
+                (at, 2, ti(tenant, index), ((class as u64) << 32) | device as u64, proto as u64)
+            }
+            TraceEvent::Requeue { at, tenant, index, device, from_backoff } => {
+                (at, 3, ti(tenant, index), device as u64, from_backoff as u64)
+            }
+            TraceEvent::Admit { at, tenant, index, device } => {
+                (at, 4, ti(tenant, index), device as u64, 0)
+            }
+            // Grants with dur > 0 on one serial calendar never share a
+            // start, so (at, wire, device) is already unique; the tail
+            // fields only make the ordering explicit.
+            TraceEvent::WireGrant { at, dur, device, wire, tenant, index, .. } => {
+                (at, 5, (wire.code() << 32) | device as u64, ti(tenant, index), dur)
+            }
+            TraceEvent::PuLease { at, end, device, tenant, index, chunk } => {
+                (at, 6, ((chunk as u64) << 32) | device as u64, ti(tenant, index), end)
+            }
+            TraceEvent::EarlyRelease { at, tenant, index, device } => {
+                (at, 7, ti(tenant, index), device as u64, 0)
+            }
+            TraceEvent::Timeout { at, tenant, index, device } => {
+                (at, 8, ti(tenant, index), device as u64, 0)
+            }
+            TraceEvent::Retry { at, tenant, index, retries, backoff, from_service } => {
+                (at, 9, ti(tenant, index), ((retries as u64) << 1) | from_service as u64, backoff)
+            }
+            TraceEvent::Complete { at, tenant, index, device, submit, .. } => {
+                (at, 10, ti(tenant, index), device as u64, submit)
+            }
+            TraceEvent::Failed { at, tenant, index, device, submit } => {
+                (at, 11, ti(tenant, index), device as u64, submit)
+            }
+        }
+    }
+}
+
+/// The recording side: an append-only per-shard event buffer. The
+/// driver owns `Option<Tracer>` — `None` costs one branch per site and
+/// records nothing, the zero-cost-when-disabled contract.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, e: TraceEvent) {
+        self.events.push(e);
+    }
+
+    /// Mirror of the engine's permanent-failure cleanup: when a device
+    /// dies, the driver truncates its link calendars and PU pool at the
+    /// kill instant so phantom future work leaves the busy accounting.
+    /// Apply exactly the same surgery to the recorded grants/leases —
+    /// drop those starting at or after `now`, clip ones straddling it —
+    /// so busy-time conservation stays *exact* on fault runs.
+    pub fn truncate_device(&mut self, device: u32, now: Ps) {
+        self.events.retain_mut(|e| match e {
+            TraceEvent::WireGrant { at, dur, device: d, wire, .. }
+                if *d == device && *wire != Wire::Fabric =>
+            {
+                if *at >= now {
+                    return false;
+                }
+                if *at + *dur > now {
+                    *dur = now - *at;
+                }
+                true
+            }
+            TraceEvent::PuLease { at, end, device: d, .. } if *d == device => {
+                if *at >= now {
+                    return false;
+                }
+                if *end > now {
+                    *end = now;
+                }
+                true
+            }
+            _ => true,
+        });
+    }
+}
+
+/// One run's complete, canonically ordered event log.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Device count of the topology the run scheduled over.
+    pub devices: usize,
+    /// Whether a shared upstream fabric was modelled (fabric wire
+    /// grants exist only then).
+    pub has_fabric: bool,
+    /// Events in the canonical total order ([`TraceEvent::key`]).
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Canonicalize a (possibly multi-shard) event buffer. Sorting by
+    /// the total key makes the result a pure function of the event
+    /// *multiset*, which is what the sharded engine preserves — hence
+    /// `--jobs N` traces are byte-identical to `--jobs 1`.
+    pub fn new(devices: usize, has_fabric: bool, mut events: Vec<TraceEvent>) -> Self {
+        events.sort_by(|a, b| a.key().cmp(&b.key()));
+        Self { devices, has_fabric, events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Latest instant any recorded event touches (span ends included).
+    pub fn horizon(&self) -> Ps {
+        self.events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::WireGrant { at, dur, .. } => *at + *dur,
+                TraceEvent::PuLease { end, .. } => *end,
+                other => other.at(),
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grant(at: Ps, dur: Ps, device: u32, wire: Wire) -> TraceEvent {
+        TraceEvent::WireGrant { at, dur, device, wire, tenant: 0, index: 0, chunk: 0 }
+    }
+
+    #[test]
+    fn canonical_order_is_input_order_invariant() {
+        let a = TraceEvent::Submit {
+            at: 5,
+            tenant: 1,
+            index: 0,
+            class: 0,
+            device: 0,
+            proto: Protocol::Axle,
+        };
+        let b = grant(5, 3, 0, Wire::Mem);
+        let c = TraceEvent::PuLease { at: 2, end: 9, device: 1, tenant: 0, index: 1, chunk: 0 };
+        let t1 = Trace::new(2, false, vec![a.clone(), b.clone(), c.clone()]);
+        let t2 = Trace::new(2, false, vec![b, a, c]);
+        assert_eq!(t1.events, t2.events);
+        assert!(t1.events.windows(2).all(|w| w[0].key() <= w[1].key()));
+        assert_eq!(t1.events[0].at(), 2);
+    }
+
+    #[test]
+    fn truncate_mirrors_calendar_and_pool_semantics() {
+        let mut tr = Tracer::new();
+        tr.push(grant(10, 5, 0, Wire::Mem)); // clipped to [10, 12)
+        tr.push(grant(12, 4, 0, Wire::Io)); // dropped (starts at the kill)
+        tr.push(grant(20, 2, 1, Wire::Mem)); // other device: untouched
+        tr.push(grant(11, 9, 0, Wire::Fabric)); // fabric: never truncated
+        tr.push(TraceEvent::PuLease { at: 4, end: 30, device: 0, tenant: 0, index: 0, chunk: 0 });
+        tr.push(TraceEvent::PuLease { at: 13, end: 14, device: 0, tenant: 1, index: 0, chunk: 0 });
+        tr.truncate_device(0, 12);
+        let t = Trace::new(2, true, tr.events);
+        let wire_busy: Ps = t
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::WireGrant { dur, device: 0, wire, .. } if wire != Wire::Fabric => {
+                    Some(dur)
+                }
+                _ => None,
+            })
+            .sum();
+        assert_eq!(wire_busy, 2); // only the clipped mem grant survives
+        let leases: Vec<(Ps, Ps)> = t
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::PuLease { at, end, device: 0, .. } => Some((at, end)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(leases, vec![(4, 12)]);
+        assert!(t.events.iter().any(|e| matches!(
+            e,
+            TraceEvent::WireGrant { wire: Wire::Fabric, dur: 9, .. }
+        )));
+        assert_eq!(t.horizon(), 22);
+    }
+}

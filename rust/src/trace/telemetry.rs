@@ -1,0 +1,326 @@
+//! Windowed telemetry: fixed-width time buckets over a [`Trace`].
+//!
+//! Where the Chrome export shows individual spans, this view answers
+//! "what was the system doing *around* t": per-window host and CCM
+//! utilization, device-wire busy time, time-averaged admission queue
+//! depth and outstanding-window occupancy, completion/retry counts and
+//! a per-window slowdown [`QuantileSketch`] (so `axle report fig22`
+//! and `--trace-buckets` can print p99-over-time).
+//!
+//! All busy accounting is integer-exact: wire/PU overlap is computed in
+//! picoseconds from the recorded grants/leases, and summing a quantity
+//! across all windows reproduces the run totals the `SchedReport`
+//! carries (pinned by tests). Host busy is the one fractional series —
+//! each completion's solo host-busy time is spread uniformly over its
+//! service interval, mirroring the report's aggregate-sum convention.
+
+use super::{Trace, TraceEvent, Wire};
+use crate::metrics::QuantileSketch;
+use crate::sim::Ps;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One fixed-width time bucket.
+#[derive(Debug, Clone)]
+pub struct Window {
+    /// Inclusive window start (ps).
+    pub start: Ps,
+    /// Exclusive window end (ps; the last window is clipped to the
+    /// run's makespan).
+    pub end: Ps,
+    /// Host busy time attributed to this window (fractional ps).
+    pub host_busy: f64,
+    /// Union CCM PU busy time summed over devices (ps).
+    pub ccm_busy: Ps,
+    /// Device wire (CXL.mem + CXL.io) grant time (ps).
+    pub wire_busy: Ps,
+    /// Shared fabric grant time (ps).
+    pub fabric_busy: Ps,
+    /// Time-averaged admission queue depth across devices.
+    pub queue_depth: f64,
+    /// Time-averaged outstanding (submitted, not yet completed/failed)
+    /// request count.
+    pub outstanding: f64,
+    /// Requests completing inside the window.
+    pub completions: u32,
+    /// Retries consumed inside the window.
+    pub retries: u32,
+    /// Slowdowns of the requests completing inside the window.
+    pub slowdown: QuantileSketch,
+}
+
+impl Window {
+    pub fn width(&self) -> Ps {
+        self.end.saturating_sub(self.start)
+    }
+
+    /// Host utilization share. The host-busy series uses the report's
+    /// aggregate-sum accounting (overlapping tenants can sum past one
+    /// host), so the displayed share is clamped at 1.
+    pub fn host_util(&self) -> f64 {
+        let w = self.width();
+        if w == 0 {
+            0.0
+        } else {
+            (self.host_busy / w as f64).min(1.0)
+        }
+    }
+
+    /// Mean CCM PU-pool utilization across `devices` pools.
+    pub fn ccm_util(&self, devices: usize) -> f64 {
+        let w = self.width();
+        if w == 0 || devices == 0 {
+            0.0
+        } else {
+            self.ccm_busy as f64 / (w as f64 * devices as f64)
+        }
+    }
+
+    pub fn to_json(&self, devices: usize) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("start_ps".into(), Json::Num(self.start as f64));
+        o.insert("end_ps".into(), Json::Num(self.end as f64));
+        o.insert("host_util".into(), Json::Num(self.host_util()));
+        o.insert("ccm_util".into(), Json::Num(self.ccm_util(devices)));
+        o.insert("wire_busy_ps".into(), Json::Num(self.wire_busy as f64));
+        o.insert("fabric_busy_ps".into(), Json::Num(self.fabric_busy as f64));
+        o.insert("queue_depth".into(), Json::Num(self.queue_depth));
+        o.insert("outstanding".into(), Json::Num(self.outstanding));
+        o.insert("completions".into(), Json::Num(self.completions as f64));
+        o.insert("retries".into(), Json::Num(self.retries as f64));
+        o.insert("slowdown".into(), self.slowdown.to_json());
+        Json::Obj(o)
+    }
+}
+
+/// The full windowed view of one run.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// Bucket width (ps).
+    pub width: Ps,
+    /// Run makespan the buckets partition (ps).
+    pub makespan: Ps,
+    /// Device count (for CCM utilization denominators).
+    pub devices: usize,
+    pub windows: Vec<Window>,
+}
+
+impl Telemetry {
+    /// Median per-window host utilization (the CI smoke headline).
+    pub fn host_util_p50(&self) -> f64 {
+        let mut u: Vec<f64> =
+            self.windows.iter().filter(|w| w.width() > 0).map(|w| w.host_util()).collect();
+        if u.is_empty() {
+            return 0.0;
+        }
+        u.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        u[u.len() / 2]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("width_ps".into(), Json::Num(self.width as f64));
+        o.insert("makespan_ps".into(), Json::Num(self.makespan as f64));
+        o.insert(
+            "windows".into(),
+            Json::Arr(self.windows.iter().map(|w| w.to_json(self.devices)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Distribute the overlap of `[s, e)` over the bucket grid.
+fn for_overlap(width: Ps, n: usize, s: Ps, e: Ps, mut f: impl FnMut(usize, Ps)) {
+    if e <= s || width == 0 {
+        return;
+    }
+    let mut k = (s / width) as usize;
+    let mut cur = s;
+    while cur < e && k < n {
+        let bend = (k as Ps + 1) * width;
+        let seg = e.min(bend) - cur;
+        f(k, seg);
+        cur = bend;
+        k += 1;
+    }
+}
+
+/// Bucket a trace into `buckets` fixed-width windows over
+/// `[0, makespan)`. Deterministic: a pure fold over the canonical event
+/// order, integer arithmetic everywhere except the host-busy spread.
+pub fn windows(tr: &Trace, buckets: u32, makespan: Ps) -> Telemetry {
+    let n = buckets.max(1) as usize;
+    let span = makespan.max(1);
+    let width = span.div_ceil(n as Ps);
+    let width = width.max(1);
+    let idx = |t: Ps| ((t / width) as usize).min(n - 1);
+
+    let mut host = vec![0f64; n];
+    let mut ccm: Vec<Ps> = vec![0; n];
+    let mut wire: Vec<Ps> = vec![0; n];
+    let mut fabric: Vec<Ps> = vec![0; n];
+    let mut qd = vec![0f64; n];
+    let mut out = vec![0f64; n];
+    let mut completions = vec![0u32; n];
+    let mut retries = vec![0u32; n];
+    let mut sketch: Vec<QuantileSketch> = (0..n).map(|_| QuantileSketch::new()).collect();
+
+    // Per-device CCM lease unions (leases overlap across co-scheduled
+    // requests; busy time is the union, matching `pu_busy`).
+    let mut lease_cursor: Vec<Option<(Ps, Ps)>> = vec![None; tr.devices];
+
+    // Queue-depth / outstanding step functions, folded between events.
+    let mut cur_q: i64 = 0;
+    let mut cur_out: i64 = 0;
+    let mut prev: Ps = 0;
+    let mut step = |from: Ps, to: Ps, q: i64, o: i64, qd: &mut [f64], out: &mut [f64]| {
+        if q != 0 {
+            for_overlap(width, n, from, to, |k, seg| qd[k] += q as f64 * seg as f64);
+        }
+        if o != 0 {
+            for_overlap(width, n, from, to, |k, seg| out[k] += o as f64 * seg as f64);
+        }
+    };
+
+    for e in &tr.events {
+        let at = e.at();
+        step(prev, at, cur_q, cur_out, &mut qd, &mut out);
+        prev = at;
+        match *e {
+            TraceEvent::Submit { .. } => {
+                cur_q += 1;
+                cur_out += 1;
+            }
+            TraceEvent::Admit { .. } => cur_q -= 1,
+            TraceEvent::Timeout { .. } => cur_q -= 1,
+            TraceEvent::Requeue { from_backoff, .. } => {
+                if from_backoff {
+                    cur_q += 1;
+                }
+            }
+            TraceEvent::Complete { at, submit, admit, solo, host_busy, .. } => {
+                cur_out -= 1;
+                let k = idx(at);
+                completions[k] += 1;
+                let sd = if solo == 0 { 1.0 } else { (at - submit) as f64 / solo as f64 };
+                sketch[k].record(sd);
+                // Spread the solo host-busy charge uniformly over the
+                // service interval (all at the completion instant when
+                // it is empty).
+                if at <= admit {
+                    host[k] += host_busy as f64;
+                } else {
+                    let frac = host_busy as f64 / (at - admit) as f64;
+                    for_overlap(width, n, admit, at, |k, seg| host[k] += frac * seg as f64);
+                }
+            }
+            TraceEvent::Failed { .. } => cur_out -= 1,
+            TraceEvent::Retry { at, .. } => retries[idx(at)] += 1,
+            TraceEvent::WireGrant { at, dur, wire: w, .. } => {
+                let acc = if w == Wire::Fabric { &mut fabric } else { &mut wire };
+                for_overlap(width, n, at, at + dur, |k, seg| acc[k] += seg);
+            }
+            TraceEvent::PuLease { at, end, device, .. } => {
+                let d = device as usize;
+                match lease_cursor[d] {
+                    Some((cs, ce)) if at <= ce => {
+                        lease_cursor[d] = Some((cs, ce.max(end)));
+                    }
+                    Some((cs, ce)) => {
+                        for_overlap(width, n, cs, ce, |k, seg| ccm[k] += seg);
+                        lease_cursor[d] = Some((at, end));
+                    }
+                    None => lease_cursor[d] = Some((at, end)),
+                }
+            }
+            _ => {}
+        }
+    }
+    step(prev, span, cur_q, cur_out, &mut qd, &mut out);
+    for cursor in lease_cursor {
+        if let Some((cs, ce)) = cursor {
+            for_overlap(width, n, cs, ce, |k, seg| ccm[k] += seg);
+        }
+    }
+
+    let windows = (0..n)
+        .map(|k| {
+            let start = k as Ps * width;
+            let end = ((k as Ps + 1) * width).min(span).max(start);
+            let w = end - start;
+            Window {
+                start,
+                end,
+                host_busy: host[k],
+                ccm_busy: ccm[k],
+                wire_busy: wire[k],
+                fabric_busy: fabric[k],
+                queue_depth: if w == 0 { 0.0 } else { qd[k] / w as f64 },
+                outstanding: if w == 0 { 0.0 } else { out[k] / w as f64 },
+                completions: completions[k],
+                retries: retries[k],
+                slowdown: sketch[k].clone(),
+            }
+        })
+        .collect();
+
+    Telemetry { width, makespan: span, devices: tr.devices, windows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Protocol;
+
+    fn lease(at: Ps, end: Ps, device: u32) -> TraceEvent {
+        TraceEvent::PuLease { at, end, device, tenant: 0, index: 0, chunk: 0 }
+    }
+
+    #[test]
+    fn busy_time_is_conserved_across_windows() {
+        let events = vec![
+            TraceEvent::WireGrant { at: 0, dur: 40, device: 0, wire: Wire::Mem, tenant: 0,
+                index: 0, chunk: 0 },
+            TraceEvent::WireGrant { at: 90, dur: 20, device: 0, wire: Wire::Io, tenant: 0,
+                index: 0, chunk: 0 },
+            lease(10, 30, 0),
+            lease(20, 50, 0), // overlaps: union [10, 50)
+            lease(70, 80, 1),
+        ];
+        let tr = Trace::new(2, false, events);
+        let tm = windows(&tr, 4, 100);
+        assert_eq!(tm.windows.len(), 4);
+        let wire_total: Ps = tm.windows.iter().map(|w| w.wire_busy).sum();
+        assert_eq!(wire_total, 60);
+        let ccm_total: Ps = tm.windows.iter().map(|w| w.ccm_busy).sum();
+        assert_eq!(ccm_total, 50); // union(10..50) + 70..80
+        // The straddling grant splits exactly at the bucket edge.
+        assert_eq!(tm.windows[0].wire_busy, 25);
+        assert_eq!(tm.windows[1].wire_busy, 15);
+    }
+
+    #[test]
+    fn queue_depth_and_outstanding_are_time_averaged() {
+        let events = vec![
+            TraceEvent::Submit { at: 0, tenant: 0, index: 0, class: 0, device: 0,
+                proto: Protocol::Axle },
+            TraceEvent::Admit { at: 50, tenant: 0, index: 0, device: 0 },
+            TraceEvent::Complete { at: 100, tenant: 0, index: 0, device: 0, submit: 0,
+                admit: 50, solo: 50, host_busy: 10 },
+        ];
+        let tr = Trace::new(1, false, events);
+        let tm = windows(&tr, 2, 100);
+        // Queued for all of window 0, none of window 1.
+        assert!((tm.windows[0].queue_depth - 1.0).abs() < 1e-12);
+        assert!(tm.windows[1].queue_depth.abs() < 1e-12);
+        // Outstanding the whole run.
+        assert!((tm.windows[0].outstanding - 1.0).abs() < 1e-12);
+        assert!((tm.windows[1].outstanding - 1.0).abs() < 1e-12);
+        assert_eq!(tm.windows[1].completions, 1);
+        assert_eq!(tm.windows[1].slowdown.count(), 1);
+        // Host charge spreads over [admit, completion) = window 1.
+        assert!(tm.windows[0].host_busy.abs() < 1e-12);
+        assert!((tm.windows[1].host_busy - 10.0).abs() < 1e-9);
+        assert!(tm.host_util_p50() >= 0.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Trace well-formedness: structural checks plus conservation against
+//! the run's [`SchedReport`].
+//!
+//! A trace that passes [`validate`] is internally consistent (canonical
+//! order, balanced request lifecycles, non-overlapping wire grants,
+//! paired fault windows) *and* reconciles exactly — integer
+//! picoseconds, no tolerance — with the report the same run produced:
+//! wire-grant time per device equals the calendar busy union, PU-lease
+//! unions equal the pool busy union, fabric grants equal the fabric
+//! message/busy counters, lifecycle counts equal
+//! `scheduled`/`failed_requests`, and retained retry counters equal the
+//! recorded retry events. The CI trace-smoke step and the `trace_props`
+//! proptest both run every exported trace through this gate.
+
+use super::{Trace, TraceEvent, Wire};
+use crate::sched::SchedReport;
+use crate::sim::Ps;
+use std::collections::BTreeMap;
+
+fn fail(msg: String) -> Result<(), String> {
+    Err(msg)
+}
+
+/// Check `tr` for well-formedness and conservation against `report`.
+pub fn validate(tr: &Trace, report: &SchedReport) -> Result<(), String> {
+    // Canonical total order (implies per-track monotone timestamps).
+    for w in tr.events.windows(2) {
+        if w[0].key() > w[1].key() {
+            return fail(format!(
+                "events out of canonical order at t={} ps (kind rank {} after {})",
+                w[1].at(),
+                w[1].key().1,
+                w[0].key().1
+            ));
+        }
+    }
+
+    let mut submits: BTreeMap<(u32, u32), Ps> = BTreeMap::new();
+    let mut terminal_submit: BTreeMap<(u32, u32), Ps> = BTreeMap::new();
+    let mut admit_count: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    let mut last_admit: BTreeMap<(u32, u32), Ps> = BTreeMap::new();
+    let mut complete_admit: BTreeMap<(u32, u32), Ps> = BTreeMap::new();
+    let mut wire_prev_end: BTreeMap<(u32, u8), Ps> = BTreeMap::new();
+    let mut wire_sum: BTreeMap<u32, Ps> = BTreeMap::new();
+    let mut fabric_sum: Ps = 0;
+    let mut fabric_count: u64 = 0;
+    let mut fabric_prev_end: Ps = 0;
+    let mut leases: BTreeMap<u32, Vec<(Ps, Ps)>> = BTreeMap::new();
+    let mut host_sum: Ps = 0;
+    let mut completes: u64 = 0;
+    let mut faileds: u64 = 0;
+    let mut retry_events: u64 = 0;
+    let mut window_begins: Vec<(u32, &'static str, Ps)> = Vec::new();
+    let mut window_ends: Vec<(u32, &'static str, Ps)> = Vec::new();
+
+    for e in &tr.events {
+        match *e {
+            TraceEvent::Submit { at, tenant, index, .. } => {
+                if submits.insert((tenant, index), at).is_some() {
+                    return fail(format!("duplicate submit for t{tenant}#{index}"));
+                }
+            }
+            TraceEvent::Admit { at, tenant, index, .. } => {
+                *admit_count.entry((tenant, index)).or_insert(0) += 1;
+                last_admit.insert((tenant, index), at);
+            }
+            TraceEvent::Complete { at, tenant, index, submit, admit, host_busy, .. } => {
+                if terminal_submit.insert((tenant, index), submit).is_some() {
+                    return fail(format!("t{tenant}#{index} terminates twice"));
+                }
+                if admit > at {
+                    return fail(format!("t{tenant}#{index} admitted after completing"));
+                }
+                complete_admit.insert((tenant, index), admit);
+                host_sum += host_busy;
+                completes += 1;
+            }
+            TraceEvent::Failed { tenant, index, submit, .. } => {
+                if terminal_submit.insert((tenant, index), submit).is_some() {
+                    return fail(format!("t{tenant}#{index} terminates twice"));
+                }
+                faileds += 1;
+            }
+            TraceEvent::WireGrant { at, dur, device, wire, tenant, index, .. } => {
+                if dur == 0 {
+                    return fail(format!("zero-length wire grant for t{tenant}#{index}"));
+                }
+                if wire == Wire::Fabric {
+                    if at < fabric_prev_end {
+                        return fail(format!("fabric grants overlap at t={at} ps"));
+                    }
+                    fabric_prev_end = at + dur;
+                    fabric_sum += dur;
+                    fabric_count += 1;
+                } else {
+                    let key = (device, wire as u8);
+                    let prev = wire_prev_end.entry(key).or_insert(0);
+                    if at < *prev {
+                        return fail(format!(
+                            "{} grants overlap on device {device} at t={at} ps",
+                            wire.label()
+                        ));
+                    }
+                    *prev = at + dur;
+                    *wire_sum.entry(device).or_insert(0) += dur;
+                }
+            }
+            TraceEvent::PuLease { at, end, device, tenant, index, .. } => {
+                if end <= at {
+                    return fail(format!("empty PU lease for t{tenant}#{index}"));
+                }
+                leases.entry(device).or_default().push((at, end));
+            }
+            TraceEvent::Retry { .. } => retry_events += 1,
+            TraceEvent::FaultBegin { at, device, kind, until } => {
+                if let Some(u) = until {
+                    if u <= at {
+                        return fail(format!("empty fault window on device {device}"));
+                    }
+                    window_begins.push((device, kind.label(), u));
+                }
+            }
+            TraceEvent::FaultEnd { at, device, kind } => {
+                window_ends.push((device, kind.label(), at));
+            }
+            _ => {}
+        }
+    }
+
+    // Request lifecycle balance against the report's counters.
+    if submits.len() as u64 != report.scheduled {
+        return fail(format!(
+            "submit count {} != scheduled {}",
+            submits.len(),
+            report.scheduled
+        ));
+    }
+    if completes + faileds != report.scheduled {
+        return fail(format!(
+            "terminal count {} != scheduled {}",
+            completes + faileds,
+            report.scheduled
+        ));
+    }
+    if faileds != report.failed_requests as u64 {
+        return fail(format!(
+            "failed count {faileds} != report failed_requests {}",
+            report.failed_requests
+        ));
+    }
+    for (key, submit) in &terminal_submit {
+        match submits.get(key) {
+            None => return fail(format!("t{}#{} terminates without a submit", key.0, key.1)),
+            Some(s) if s != submit => {
+                return fail(format!("t{}#{} submit time mismatch", key.0, key.1))
+            }
+            _ => {}
+        }
+    }
+    for (key, admit) in &complete_admit {
+        match last_admit.get(key) {
+            None => return fail(format!("t{}#{} completed without an admission", key.0, key.1)),
+            Some(a) if a != admit => {
+                return fail(format!(
+                    "t{}#{} completion admit {} != last admission {}",
+                    key.0, key.1, admit, a
+                ))
+            }
+            _ => {}
+        }
+    }
+
+    // Wire busy conservation: per-device grant time equals the
+    // calendar busy union the report carries (grants are disjoint, so
+    // sum == union), fabric grants equal the fabric counters.
+    for (d, stats) in report.devices.iter().enumerate() {
+        let got = wire_sum.get(&(d as u32)).copied().unwrap_or(0);
+        if got != stats.link_busy {
+            return fail(format!(
+                "device {d} wire grants {got} ps != report link_busy {} ps",
+                stats.link_busy
+            ));
+        }
+    }
+    if fabric_sum != report.fabric.busy {
+        return fail(format!(
+            "fabric grants {fabric_sum} ps != report fabric busy {} ps",
+            report.fabric.busy
+        ));
+    }
+    if fabric_count != report.fabric.messages {
+        return fail(format!(
+            "fabric grant count {fabric_count} != report fabric messages {}",
+            report.fabric.messages
+        ));
+    }
+
+    // PU lease unions equal the pool busy unions.
+    for (d, stats) in report.devices.iter().enumerate() {
+        let union = leases
+            .get(&(d as u32))
+            .map(|ls| {
+                let (mut total, mut cs, mut ce): (Ps, Ps, Ps) = (0, ls[0].0, ls[0].1);
+                for &(s, e) in &ls[1..] {
+                    if s > ce {
+                        total += ce - cs;
+                        (cs, ce) = (s, e);
+                    } else {
+                        ce = ce.max(e);
+                    }
+                }
+                total + (ce - cs)
+            })
+            .unwrap_or(0);
+        if union != stats.pu_busy {
+            return fail(format!(
+                "device {d} PU lease union {union} ps != report pu_busy {} ps",
+                stats.pu_busy
+            ));
+        }
+    }
+
+    // Host busy: each completion carries its solo host charge; failed
+    // requests contribute none. Exact sum equality.
+    if host_sum != report.host_busy {
+        return fail(format!(
+            "completion host_busy sum {host_sum} ps != report host_busy {} ps",
+            report.host_busy
+        ));
+    }
+
+    // Retry events reconcile with the retained per-request counters
+    // (the terminal failure consumes the last increment without a
+    // retry event). Streaming runs keep no per-request rows to check.
+    if !report.streamed {
+        let expect: u64 = report.requests.iter().map(|r| r.retries as u64).sum::<u64>()
+            - report.failed_requests as u64;
+        if retry_events != expect {
+            return fail(format!("retry events {retry_events} != report retries {expect}"));
+        }
+    }
+
+    // Every transient fault window that opened also closed, at its
+    // declared end.
+    window_begins.sort_unstable();
+    window_ends.sort_unstable();
+    if window_begins != window_ends {
+        return fail(format!(
+            "fault windows unbalanced: {} begins vs {} matching ends",
+            window_begins.len(),
+            window_ends.len()
+        ));
+    }
+
+    Ok(())
+}

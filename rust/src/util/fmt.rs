@@ -1,0 +1,51 @@
+//! Human-readable quantity formatting shared by the CLI and the report
+//! renderers.
+//!
+//! Every duration in the engine is integer picoseconds ([`Ps`]); the
+//! printed figures historically hand-rolled `ps_to_us(x)` with a
+//! `{:.2} us` format at each call site. [`fmt_time`] centralizes that
+//! and auto-scales: values under 10 ms render in microseconds, larger
+//! ones in milliseconds, so a million-request makespan no longer prints
+//! as a seven-digit microsecond count. [`fmt_pct`] does the same for
+//! the `100.0 * frac` / `{:.1}%` pattern.
+
+use crate::sim::Ps;
+
+/// Render a picosecond duration with automatic unit scaling: two
+/// decimals, microseconds below 10 ms (`"1234.56 us"`), milliseconds at
+/// or above (`"12.35 ms"`).
+pub fn fmt_time(ps: Ps) -> String {
+    let us = ps as f64 / 1e6;
+    if us < 10_000.0 {
+        format!("{us:.2} us")
+    } else {
+        format!("{:.2} ms", us / 1e3)
+    }
+}
+
+/// Render a `0..=1` fraction as a percentage with one decimal:
+/// `fmt_pct(0.42)` is `"42.0%"`.
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", 100.0 * frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_auto_scales_at_ten_ms() {
+        assert_eq!(fmt_time(0), "0.00 us");
+        assert_eq!(fmt_time(1_234_560), "1.23 us");
+        assert_eq!(fmt_time(9_999_990_000), "9999.99 us");
+        assert_eq!(fmt_time(10_000_000_000), "10.00 ms");
+        assert_eq!(fmt_time(12_345_000_000), "12.35 ms");
+    }
+
+    #[test]
+    fn pct_matches_the_historical_format() {
+        assert_eq!(fmt_pct(0.0), "0.0%");
+        assert_eq!(fmt_pct(0.42), "42.0%");
+        assert_eq!(fmt_pct(1.0), "100.0%");
+    }
+}

@@ -8,10 +8,13 @@
 //! - [`json`] — a small recursive-descent JSON parser + writer (artifact
 //!   manifest, config files, metric dumps)
 //! - [`args`] — flag-style CLI argument parsing for the `axle` binary
+//! - [`fmt`] — duration/percentage formatting (us/ms auto-scaling) for
+//!   the CLI and report renderers
 //! - [`prop`] — a miniature property-based testing harness (random case
 //!   generation with seed-reported failures, used by rust/tests/proptests.rs)
 
 pub mod args;
+pub mod fmt;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1223,3 +1223,112 @@ mod pipeline_props {
         });
     }
 }
+
+// ------------------------------------------------------------------
+// Deterministic event tracing (trace::, observability PR).
+// ------------------------------------------------------------------
+
+mod trace_props {
+    use axle::config::{
+        DeviceOverride, FaultEvent, FaultSpec, PipelineSpec, PolicyKind, Protocol, QosSpec,
+        SchedSpec, SimConfig, TopologySpec, TraceSpec,
+    };
+    use axle::sched::{run_sched, run_sched_traced};
+    use axle::sim::US;
+    use axle::util::prop::run_prop;
+    use axle::util::rng::Pcg32;
+
+    fn random_topo(cfg: &SimConfig, rng: &mut Pcg32) -> TopologySpec {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+        match rng.below(3) {
+            0 => topo,
+            1 => topo.with_qos(QosSpec::wrr(vec![rng.range(1, 8) as u32, 1])),
+            _ => topo.with_qos(QosSpec::drr(vec![0.75, 0.25])),
+        }
+    }
+
+    fn random_spec(rng: &mut Pcg32) -> SchedSpec {
+        let spec = SchedSpec::new(rng.range(1, 4) as usize)
+            .with_workloads(vec!['a', 'e', 'i'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_depth(rng.range(1, 3) as usize)
+            .with_admit(rng.range(1, 3) as usize)
+            .with_requests(rng.range(1, 3) as usize)
+            .with_priorities(vec![1, 0])
+            .with_seed(rng.next_u64());
+        if rng.below(2) == 0 {
+            spec.with_pipeline(PipelineSpec::with_chunks(rng.range(2, 5) as u32))
+        } else {
+            spec
+        }
+    }
+
+    /// One random fault event, always valid on the two-device topology
+    /// (permanent failures only target device 0 so device 1 survives).
+    fn random_fault(rng: &mut Pcg32, horizon: u64) -> FaultSpec {
+        let at = rng.below(horizon.max(1));
+        let dur = rng.below(200) * US;
+        let factor = 1.0 + rng.below(6) as f64;
+        FaultSpec::with(vec![match rng.below(4) {
+            0 => FaultEvent::fail(0, at),
+            1 => FaultEvent::stall(rng.below(2) as u32, at, at + dur),
+            2 => FaultEvent::degrade_pus(rng.below(2) as u32, at, at + dur, factor),
+            _ => FaultEvent::degrade_link(rng.below(2) as u32, at, at + dur, factor),
+        }])
+    }
+
+    /// The tracer's master invariants, under random specs, arbitration,
+    /// chunking, and single-event fault schedules:
+    ///
+    /// 1. observation-only — the traced report's JSON dump (every f64
+    ///    included) is byte-identical to the untraced run;
+    /// 2. well-formed — `trace::validate` reconciles the event stream
+    ///    against the report's conserved aggregates;
+    /// 3. telemetry conserves busy time — the windowed CCM busy and
+    ///    per-device wire busy re-derived from the trace equal the
+    ///    report's own counters exactly (integer picoseconds).
+    #[test]
+    fn prop_tracing_observation_only_and_conserving() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("trace_invariants", 8, |rng| {
+            let topo = random_topo(&cfg, rng);
+            let mut spec = random_spec(rng);
+            if rng.below(2) == 0 {
+                let base = run_sched(&cfg, &topo, &spec, 2);
+                spec = spec.with_faults(random_fault(rng, base.makespan.max(1)));
+            }
+            let jobs = rng.range(1, 3) as usize;
+            let plain = run_sched(&cfg, &topo, &spec, jobs);
+            let (traced, tr) = run_sched_traced(
+                &cfg,
+                &topo,
+                &spec.clone().with_trace(TraceSpec::default()),
+                jobs,
+            );
+            assert_eq!(
+                plain.to_json().to_string(),
+                traced.to_json().to_string(),
+                "tracing flipped a result bit"
+            );
+            let tr = tr.expect("trace spec is set");
+            axle::trace::validate(&tr, &traced)
+                .unwrap_or_else(|e| panic!("trace does not reconcile: {e}"));
+
+            // Telemetry window sums conserve the report's busy counters.
+            let buckets = rng.range(1, 32) as u32;
+            let tel = axle::trace::telemetry::windows(&tr, buckets, traced.makespan);
+            let ccm: u64 = tel.windows.iter().map(|w| w.ccm_busy).sum();
+            assert_eq!(ccm, traced.ccm_busy, "windowed CCM busy drifted");
+            let wire: u64 = tel.windows.iter().map(|w| w.wire_busy).sum();
+            let link: u64 = traced.devices.iter().map(|d| d.link_busy).sum();
+            assert_eq!(wire, link, "windowed wire busy drifted");
+            let done: u32 = tel.windows.iter().map(|w| w.completions).sum();
+            assert_eq!(
+                done as usize,
+                traced.requests.iter().filter(|q| !q.failed).count(),
+                "windowed completions drifted"
+            );
+        });
+    }
+}

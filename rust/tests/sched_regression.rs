@@ -14,9 +14,9 @@
 
 use axle::config::{
     DeviceOverride, FaultEvent, FaultSpec, Placement, PipelineMode, PipelineSpec, PolicyKind,
-    Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
+    Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec, TraceSpec,
 };
-use axle::sched::{run_sched, SchedReport};
+use axle::sched::{run_sched, run_sched_traced, SchedReport};
 use axle::topo::{run_tenants, TenantSpec};
 
 fn data_heavy_mix() -> Vec<char> {
@@ -763,5 +763,118 @@ fn chunked_runs_survive_mixed_fault_schedules_without_losing_requests() {
         // Deterministic across worker counts, like every engine path.
         let again = run_sched(&cfg, &topo, &spec, 4);
         assert_eq!(r.to_json().to_string(), again.to_json().to_string(), "chunks={chunks}");
+    }
+}
+
+/// Tracing is observation-only: with `spec.trace` set, the returned
+/// `SchedReport` must be **byte-identical** (its JSON dump, which
+/// carries every f64 through `Json::Num`) to the untraced run of the
+/// same spec, across scheduling policy × link arbitration × chunked
+/// admission × worker count. Each recorded trace must also reconcile
+/// exactly with its own report (`trace::validate`).
+#[test]
+fn tracing_is_observation_only_across_policy_qos_chunks_jobs() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![4, 1]), QosSpec::drr(vec![0.75, 0.25])] {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+            .with_qos(qos.clone());
+        for chunks in [1, 4] {
+            let spec = SchedSpec::new(4)
+                .with_workloads(vec!['a', 'e', 'i'])
+                .with_policy(PolicyKind::Static(Protocol::Axle))
+                .with_requests(2)
+                .with_admit(1)
+                .with_depth(2)
+                .with_priorities(vec![1, 0])
+                .with_pipeline(PipelineSpec::with_chunks(chunks));
+            for jobs in [1, 2] {
+                let plain = run_sched(&cfg, &topo, &spec, jobs);
+                let (traced, tr) = run_sched_traced(
+                    &cfg,
+                    &topo,
+                    &spec.clone().with_trace(TraceSpec::default()),
+                    jobs,
+                );
+                let tag = format!("{:?} chunks={chunks} jobs={jobs}", qos.policy);
+                assert_eq!(
+                    plain.to_json().to_string(),
+                    traced.to_json().to_string(),
+                    "trace flipped a result bit: {tag}"
+                );
+                let tr = tr.expect("trace spec is set");
+                assert!(!tr.is_empty(), "{tag}");
+                axle::trace::validate(&tr, &traced)
+                    .unwrap_or_else(|e| panic!("trace does not reconcile ({tag}): {e}"));
+            }
+        }
+    }
+}
+
+/// Shard trace merge: on a shardable topology (Pinned placement, no
+/// fabric, no faults) the per-shard event buffers are disjoint
+/// multisets whose canonically-sorted union must equal the `--jobs 1`
+/// recording byte-for-byte — pinned on the exported Chrome JSON, the
+/// strictest serialization of the trace.
+#[test]
+fn merged_shard_trace_matches_single_worker_trace() {
+    let cfg = SimConfig::m2ndp();
+    let topo =
+        TopologySpec { devices: 4, ..TopologySpec::default() }.with_placement(Placement::Pinned);
+    let spec = SchedSpec::new(8)
+        .with_workloads(data_heavy_mix())
+        .with_policy(PolicyKind::Static(Protocol::Axle))
+        .with_requests(2)
+        .with_admit(2)
+        .with_trace(TraceSpec::default());
+    let (r1, t1) = run_sched_traced(&cfg, &topo, &spec, 1);
+    let t1 = t1.expect("trace spec is set");
+    axle::trace::validate(&t1, &r1).expect("single-worker trace reconciles");
+    for jobs in [2, 4] {
+        let (rn, tn) = run_sched_traced(&cfg, &topo, &spec, jobs);
+        let tn = tn.expect("trace spec is set");
+        assert_eq!(r1.to_json().to_string(), rn.to_json().to_string(), "jobs={jobs}");
+        assert_eq!(
+            axle::trace::chrome::to_json(&t1).to_string(),
+            axle::trace::chrome::to_json(&tn).to_string(),
+            "merged shard trace diverged from --jobs 1 at jobs={jobs}"
+        );
+    }
+}
+
+/// Fault runs under the tracer: a mid-run device kill exercises the
+/// Failed / Retry / Requeue / FaultBegin / FaultEnd events and the
+/// tracer's calendar-truncation mirror. The report must stay
+/// bit-identical to the untraced faulted run and the trace must still
+/// reconcile (lost-work accounting included).
+#[test]
+fn traced_fault_run_is_bit_identical_and_validates() {
+    let cfg = SimConfig::m2ndp();
+    let us = axle::sim::US;
+    let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() });
+    let faults = FaultSpec::with(vec![
+        FaultEvent::stall(1, 2 * us, 8 * us),
+        FaultEvent::fail(0, 10 * us),
+    ]);
+    for chunks in [1, 4] {
+        let spec = SchedSpec::new(4)
+            .with_workloads(vec!['a', 'e'])
+            .with_policy(PolicyKind::Static(Protocol::Axle))
+            .with_requests(3)
+            .with_admit(2)
+            .with_pipeline(PipelineSpec::with_chunks(chunks))
+            .with_faults(faults.clone());
+        let plain = run_sched(&cfg, &topo, &spec, 2);
+        let (traced, tr) =
+            run_sched_traced(&cfg, &topo, &spec.clone().with_trace(TraceSpec::default()), 2);
+        assert_eq!(
+            plain.to_json().to_string(),
+            traced.to_json().to_string(),
+            "chunks={chunks}"
+        );
+        let tr = tr.expect("trace spec is set");
+        axle::trace::validate(&tr, &traced)
+            .unwrap_or_else(|e| panic!("faulted trace does not reconcile (chunks={chunks}): {e}"));
     }
 }
