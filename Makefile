@@ -2,7 +2,7 @@
 # `lint` + `doc` + `doc-drift`, plus the `bench-smoke` measurement job.
 CARGO ?= cargo
 
-.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke pipeline-smoke trace-smoke artifacts
+.PHONY: build test check-fast lint fmt-check doc doc-drift bench bench-smoke scenario-smoke learned-smoke pipeline-smoke trace-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -66,6 +66,15 @@ bench-smoke:
 # "time-to-recover" line CI lifts into its job summary.
 scenario-smoke:
 	@$(CARGO) run --release --bin axle -- scenario --streams 3 --requests 2
+
+# Downsized nonstationary learned-scheduling smoke (CI): the canned
+# `axle scenario --learned` run — two identical devices behind a shared
+# fabric, an 8x PU+link degradation landing on device 0 a quarter of
+# the way into the fault-free heuristic run, all three deciders
+# replayed on it. Prints the "learned/heuristic/oracle makespan =
+# A/B/C" line CI lifts into its job summary.
+learned-smoke:
+	@$(CARGO) run --release --bin axle -- scenario --learned --streams 4 --requests 3
 
 # Downsized pipelining smoke (CI): the same contended strong+weak
 # closed loop run whole-request and chunked (`--chunks 4`). Each run's

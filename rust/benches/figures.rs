@@ -57,7 +57,8 @@ fn bench_sched(cfg: &SimConfig, jobs: usize, target_s: f64) {
         .with_depth(2)
         .with_retain(false);
     let stat = bench_target("sched_closed_loop_1m", target_s, || {
-        let r = axle::sched::run_sched(cfg, &topo, &spec, jobs);
+        let r = axle::sched::run(&axle::sched::SchedRun::new(cfg, &topo, &spec).with_jobs(jobs))
+            .report;
         assert!(r.streamed, "retain=false must stream");
         assert_eq!(r.scheduled, (STREAMS * REQUESTS) as u64);
         std::hint::black_box(r);

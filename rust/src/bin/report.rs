@@ -29,6 +29,7 @@ fn main() {
         "fig20" | "faults" => report::fig20(&cfg),
         "fig21" | "pipeline" => report::fig21(&cfg),
         "fig22" | "trace" => report::fig22(&cfg),
+        "fig23" | "learned" => report::fig23(&cfg),
         other => {
             eprintln!("unknown report {other:?}");
             std::process::exit(1);

@@ -778,6 +778,14 @@ pub enum PolicyKind {
     /// through the sweep engine's workload cache) — the bound adaptive
     /// policies are reported against.
     Oracle,
+    /// Learned, feedback-driven choice: deterministic per-(device ×
+    /// workload × protocol) latency estimators fed by each completion's
+    /// decomposed latency, with seeded epsilon-greedy exploration whose
+    /// rate decays as arms accumulate observations (see
+    /// [`crate::sched::learn`]). Placement moves inside the policy:
+    /// on non-pinned topologies the learned decider also picks the
+    /// device with the lowest estimated completion.
+    Learned,
 }
 
 impl PolicyKind {
@@ -786,26 +794,29 @@ impl PolicyKind {
             PolicyKind::Static(p) => format!("static-{}", p.key()),
             PolicyKind::Heuristic => "heuristic".into(),
             PolicyKind::Oracle => "oracle".into(),
+            PolicyKind::Learned => "learned".into(),
         }
     }
 
-    /// Parse `static` (pins AXLE), `static-<proto>`, `heuristic`, or
-    /// `oracle`.
+    /// Parse `static` (pins AXLE), `static-<proto>`, `heuristic`,
+    /// `oracle`, or `learned`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "static" => Some(PolicyKind::Static(Protocol::Axle)),
             "heuristic" => Some(PolicyKind::Heuristic),
             "oracle" => Some(PolicyKind::Oracle),
+            "learned" => Some(PolicyKind::Learned),
             _ => s.strip_prefix("static-").and_then(Protocol::parse).map(PolicyKind::Static),
         }
     }
 
-    pub const ALL: [PolicyKind; 5] = [
+    pub const ALL: [PolicyKind; 6] = [
         PolicyKind::Static(Protocol::Rp),
         PolicyKind::Static(Protocol::Bs),
         PolicyKind::Static(Protocol::Axle),
         PolicyKind::Heuristic,
         PolicyKind::Oracle,
+        PolicyKind::Learned,
     ];
 }
 
@@ -1217,6 +1228,13 @@ pub struct SchedSpec {
     pub load: f64,
     /// Arrival-stagger / open-loop jitter seed.
     pub seed: u64,
+    /// Exploration aggressiveness for the [`PolicyKind::Learned`]
+    /// policy: an epsilon-greedy draw explores with probability
+    /// `explore / (visits + explore)` (per device × workload arm set),
+    /// so the rate starts at 1 and decays as observations accumulate.
+    /// `0` disables exploration (pure greedy over the estimators).
+    /// Ignored by the other policies (`--explore`).
+    pub explore: u32,
     /// Deterministic fault-injection schedule + recovery knobs. Empty
     /// (the default) means the fault-free engine, bit-identically.
     pub faults: FaultSpec,
@@ -1256,6 +1274,7 @@ impl SchedSpec {
             closed: true,
             load: 1.0,
             seed: 0x5C_4ED0,
+            explore: 8,
             faults: FaultSpec::default(),
             retain: true,
             pipeline: None,
@@ -1326,6 +1345,13 @@ impl SchedSpec {
         self
     }
 
+    /// Exploration aggressiveness for the learned policy (see the
+    /// `explore` field; `0` = pure greedy).
+    pub fn with_explore(mut self, explore: u32) -> Self {
+        self.explore = explore;
+        self
+    }
+
     pub fn with_faults(mut self, faults: FaultSpec) -> Self {
         self.faults = faults;
         self
@@ -1379,6 +1405,7 @@ impl SchedSpec {
         o.insert("closed".into(), Json::Bool(self.closed));
         o.insert("load".into(), Json::Num(self.load));
         o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("explore".into(), Json::Num(self.explore as f64));
         o.insert("faults".into(), self.faults.to_json());
         o.insert("retain".into(), Json::Bool(self.retain));
         if let Some(p) = &self.pipeline {
@@ -1429,6 +1456,9 @@ impl SchedSpec {
         }
         if let Some(v) = j.get("seed").as_u64() {
             s.seed = v;
+        }
+        if let Some(v) = j.get("explore").as_u64() {
+            s.explore = v as u32;
         }
         if j.get("faults").as_obj().is_some() {
             // Malformed fault schedules are config-parse-time errors with
@@ -1707,7 +1737,8 @@ mod tests {
             .with_priorities(vec![2, 0, 1])
             .with_requests(5)
             .with_think(2 * crate::sim::US)
-            .with_seed(99);
+            .with_seed(99)
+            .with_explore(3);
         let j = s.to_json().to_string();
         assert_eq!(SchedSpec::from_json(&Json::parse(&j).unwrap()), s);
         // Priority classes cycle over tenant ids; empty means class 0.
@@ -1726,6 +1757,7 @@ mod tests {
         assert!(sparse.closed);
         assert!(sparse.faults.is_empty());
         assert!(sparse.retain);
+        assert_eq!(sparse.explore, 8);
         // Streaming mode (retain = false) survives the round trip too.
         let st = SchedSpec::new(2).with_retain(false);
         let j3 = st.to_json().to_string();

@@ -23,6 +23,21 @@ use crate::workload::{self, WorkloadSpec};
 
 pub use numerics::NumericsReport;
 
+/// What [`Coordinator::run_nonstationary_scenario`] produces: the same
+/// degraded, load-shifted run under all three adaptive deciders, plus
+/// the degradation window. The acceptance assertions (learned strictly
+/// beats heuristic, stays within bound of oracle) live in
+/// `rust/tests/sched_regression.rs`.
+pub struct NonstationaryOutcome {
+    pub learned: SchedReport,
+    pub heuristic: SchedReport,
+    pub oracle: SchedReport,
+    /// Degradation onset instant.
+    pub at: crate::sim::Ps,
+    /// Degradation window end (past every run's completion).
+    pub until: crate::sim::Ps,
+}
+
 /// Coordinates workload execution across protocols and the PJRT runtime.
 pub struct Coordinator {
     cfg: SimConfig,
@@ -121,22 +136,24 @@ impl Coordinator {
 
     /// Run a closed-loop scheduling scenario: K tenants submitting
     /// requests against completion feedback over `topo.devices` devices
-    /// (possibly heterogeneous via per-device overrides), the offload
-    /// protocol chosen per request by `spec.policy` — see
-    /// [`crate::sched`]. Solo candidate simulations fan out across all
-    /// available cores.
+    /// (possibly heterogeneous via per-device overrides), placement and
+    /// offload protocol chosen per request by `spec.policy`'s decider —
+    /// see [`crate::sched`]. Equivalent to `sched::run(&SchedRun::new(
+    /// coordinator.config(), topo, spec))`.
+    #[deprecated(note = "use sched::run with a SchedRun options struct")]
     pub fn run_sched(&self, topo: &TopologySpec, spec: &SchedSpec) -> SchedReport {
-        self.run_sched_jobs(topo, spec, sweep::available_jobs())
+        sched::run(&sched::SchedRun::new(&self.cfg, topo, spec)).report
     }
 
-    /// [`Coordinator::run_sched`] with an explicit worker count.
+    /// Deprecated wrapper over [`crate::sched::run`]; kept one release.
+    #[deprecated(note = "use sched::run with a SchedRun options struct")]
     pub fn run_sched_jobs(
         &self,
         topo: &TopologySpec,
         spec: &SchedSpec,
         jobs: usize,
     ) -> SchedReport {
-        sched::run_sched(&self.cfg, topo, spec, jobs)
+        sched::run(&sched::SchedRun::new(&self.cfg, topo, spec).with_jobs(jobs)).report
     }
 
     /// Canned fault-injection scenario (`axle scenario`, the CI smoke):
@@ -163,7 +180,7 @@ impl Coordinator {
             .with_policy(crate::config::PolicyKind::Static(Protocol::Axle))
             .with_requests(requests)
             .with_admit(2);
-        let base = sched::run_sched(&self.cfg, &topo, &spec, jobs);
+        let base = sched::run(&sched::SchedRun::new(&self.cfg, &topo, &spec).with_jobs(jobs)).report;
         let at = base
             .requests
             .iter()
@@ -172,8 +189,54 @@ impl Coordinator {
             .map(|q| q.admit + (q.completion - q.admit) / 2)
             .unwrap_or(base.makespan / 2);
         let faults = crate::config::FaultSpec::with(vec![crate::config::FaultEvent::fail(0, at)]);
-        let faulted = sched::run_sched(&self.cfg, &topo, &spec.with_faults(faults), jobs);
+        let spec = spec.with_faults(faults);
+        let faulted = sched::run(&sched::SchedRun::new(&self.cfg, &topo, &spec).with_jobs(jobs)).report;
         (base, faulted, at)
+    }
+
+    /// Canned **nonstationary** scenario (`axle scenario --learned`, the
+    /// CI learned-smoke): K closed-loop tenants over two identical
+    /// devices with least-loaded placement, where device 0 degrades
+    /// **mid-run** — PUs and link both slowed `8×` from a quarter of the
+    /// fault-free makespan until past the end of the run. The static
+    /// least-loaded metric keeps charging *undegraded* solo estimates,
+    /// so the `Heuristic` and `Oracle` deciders keep splitting work
+    /// ~evenly onto the slowed device; the `Learned` decider's
+    /// estimators absorb the inflated completion latencies and its
+    /// placement re-routes onto device 1, re-converging toward the
+    /// clairvoyant bound. Deterministic for any worker count (faulted
+    /// runs never shard).
+    pub fn run_nonstationary_scenario(
+        &self,
+        streams: usize,
+        requests: usize,
+        jobs: usize,
+    ) -> NonstationaryOutcome {
+        let topo = TopologySpec::shared_fabric(2, self.cfg.cxl_bw_gbps)
+            .with_placement(crate::config::Placement::LeastLoaded);
+        let spec = SchedSpec::new(streams)
+            .with_workloads(vec!['a', 'e'])
+            .with_requests(requests)
+            .with_admit(2);
+        let base_spec = spec.clone().with_policy(crate::config::PolicyKind::Heuristic);
+        let base =
+            sched::run(&sched::SchedRun::new(&self.cfg, &topo, &base_spec).with_jobs(jobs)).report;
+        let at = (base.makespan / 4).max(1);
+        let until = base.makespan.saturating_mul(50).max(at + 1);
+        let faults = crate::config::FaultSpec::with(vec![
+            crate::config::FaultEvent::degrade_pus(0, at, until, 8.0),
+            crate::config::FaultEvent::degrade_link(0, at, until, 8.0),
+        ]);
+        let [learned, heuristic, oracle] = [
+            crate::config::PolicyKind::Learned,
+            crate::config::PolicyKind::Heuristic,
+            crate::config::PolicyKind::Oracle,
+        ]
+        .map(|policy| {
+            let spec = spec.clone().with_policy(policy).with_faults(faults.clone());
+            sched::run(&sched::SchedRun::new(&self.cfg, &topo, &spec).with_jobs(jobs)).report
+        });
+        NonstationaryOutcome { learned, heuristic, oracle, at, until }
     }
 
     /// Validate the offloaded numerics for workload `annot` through the
@@ -237,7 +300,8 @@ mod tests {
     #[test]
     fn sched_through_coordinator_is_worker_count_invariant() {
         // Thread a non-default QoS policy and priority classes end to
-        // end through the coordinator surface.
+        // end through the coordinator surface (the unified sched::run
+        // front door).
         let c = Coordinator::new(SimConfig::m2ndp());
         let topo = TopologySpec::shared_fabric(2, c.config().cxl_bw_gbps)
             .with_qos(crate::config::QosSpec::wrr(vec![2, 1]));
@@ -246,13 +310,22 @@ mod tests {
             .with_requests(2)
             .with_priorities(vec![1, 0])
             .with_policy(crate::config::PolicyKind::Oracle);
-        let r1 = c.run_sched_jobs(&topo, &spec, 1);
-        let r4 = c.run_sched_jobs(&topo, &spec, 4);
+        let r1 = sched::run(&sched::SchedRun::new(c.config(), &topo, &spec).with_jobs(1)).report;
+        let r4 = sched::run(&sched::SchedRun::new(c.config(), &topo, &spec).with_jobs(4)).report;
         assert_eq!(r1.to_json().to_string(), r4.to_json().to_string());
         assert_eq!(r1.requests.len(), 6);
         assert!(r1.closed);
         assert_eq!(r1.qos, crate::config::QosPolicy::Wrr);
         assert_eq!(r1.class_slowdowns().len(), 2);
+        // The deprecated wrappers stay byte-identical to the unified
+        // entry point for their one-release grace period.
+        #[allow(deprecated)]
+        {
+            let legacy = c.run_sched_jobs(&topo, &spec, 4);
+            assert_eq!(legacy.to_json().to_string(), r4.to_json().to_string());
+            let default_jobs = c.run_sched(&topo, &spec);
+            assert_eq!(default_jobs.to_json().to_string(), r4.to_json().to_string());
+        }
     }
 
     #[test]

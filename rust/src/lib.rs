@@ -74,7 +74,11 @@ pub use config::{
 };
 pub use coordinator::Coordinator;
 pub use metrics::RunMetrics;
-pub use sched::{run_sched, sweep_sched_grid, OffloadPolicy, RequestRun, SchedReport};
+#[allow(deprecated)]
+pub use sched::run_sched;
+pub use sched::{
+    run, sweep_sched_grid, Decider, OffloadPolicy, RequestRun, SchedOutcome, SchedReport, SchedRun,
+};
 pub use sweep::{ConfigDelta, SweepSpec, WorkloadCache};
 pub use topo::{DeviceCtx, TenantReport, TenantSpec, Topology};
 pub use workload::{by_annotation, WorkloadSpec, ALL_ANNOTATIONS};

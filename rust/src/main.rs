@@ -53,7 +53,8 @@ USAGE:
         # the link arbitration (fcfs | weighted rr | deficit rr with
         # per-tenant bandwidth floors), --weights/--floors cycle over
         # tenant ids
-  axle sched [--streams K] [--requests R] [--policy static|heuristic|oracle]
+  axle sched [--streams K] [--requests R]
+             [--policy static|heuristic|oracle|learned] [--explore N]
              [--protocol rp|bs|axle|axle-interrupt]  # static policy's pin
              [--depth N] [--admit M] [--prio C0,C1,...] [--think-ns T]
              [--qos fcfs|wrr|drr] [--weights W0,W1,...] [--floors F0,F1,...]
@@ -73,9 +74,14 @@ USAGE:
         # device admits --admit requests at a time from its admission
         # queue (--prio cycles priority classes over tenants: a higher
         # class jumps the FIFO at admission, never revoking in-service
-        # work), and --policy picks the offload protocol per request
-        # (static pins one; heuristic adapts to compute/transfer ratio
-        # + observed occupancy; oracle is the clairvoyant bound); --qos
+        # work), and --policy picks the decider that places each
+        # request and picks its offload protocol (static pins one
+        # protocol; heuristic adapts to compute/transfer ratio +
+        # observed occupancy; oracle is the clairvoyant bound; learned
+        # drives per-device latency estimators from completion feedback
+        # with seeded epsilon-greedy exploration tuned by --explore N —
+        # the rate starts at 1 and decays as N/(visits+N), 0 = pure
+        # greedy); --qos
         # picks how the live link calendars charge wire time (fcfs |
         # weighted rr | deficit rr, --weights/--floors cycle over
         # tenant ids); --dev-ccm-pus/--dev-gbps cycle per-device
@@ -104,14 +110,16 @@ USAGE:
         # off; --trace-buckets N also prints an N-window telemetry
         # table (host/CCM utilization, queue depth, p99 slowdown)
   axle scenario [--streams K] [--requests R] [--jobs N] [--profile ...]
-                [--json]
+                [--learned] [--json]
         # canned failover demo (the CI smoke): closed-loop tenants over
         # one strong + one weak CCM device, the strong device failing
         # permanently mid-service; prints the time-to-recover, lost
         # work, and makespan/slowdown deltas against the fault-free
-        # baseline
+        # baseline; --learned runs the nonstationary scenario instead
+        # (device 0 degrades 8x mid-run) and prints the learned vs
+        # heuristic vs oracle makespans
   axle validate [--artifacts DIR] [--workload <a..i>]
-  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20|fig21|fig22>
+  axle report <all|table1|table2|table4|fig3|fig4|fig5|fig7|fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17|fig19|fig20|fig21|fig22|fig23>
   axle config [--out FILE.json]     # dump the Table III defaults
   axle list
 ";
@@ -558,8 +566,9 @@ fn main() -> Result<()> {
                 spec = spec.with_workloads(ws);
             }
             let mut policy = match a.get("policy") {
-                Some(p) => PolicyKind::parse(p)
-                    .with_context(|| format!("unknown policy {p:?} (static|heuristic|oracle)"))?,
+                Some(p) => PolicyKind::parse(p).with_context(|| {
+                    format!("unknown policy {p:?} (static|heuristic|oracle|learned)")
+                })?,
                 None => PolicyKind::Heuristic,
             };
             if let Some(p) = a.get("protocol").or_else(|| a.get("p")) {
@@ -598,6 +607,12 @@ fn main() -> Result<()> {
             }
             if let Some(s) = a.get_as::<u64>("sched-seed") {
                 spec = spec.with_seed(s);
+            }
+            if let Some(e) = a.get_as::<u32>("explore") {
+                if !matches!(spec.policy, PolicyKind::Learned) {
+                    bail!("--explore tunes the learned policy (add --policy learned)");
+                }
+                spec = spec.with_explore(e);
             }
             let mut faults = FaultSpec::default();
             if let Some(s) = a.get("faults") {
@@ -673,7 +688,8 @@ fn main() -> Result<()> {
                 spec = spec.open_loop();
             }
             let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
-            let (r, tr) = sched::run_sched_traced(&cfg, &topo, &spec, jobs);
+            let out = sched::run(&sched::SchedRun::new(&cfg, &topo, &spec).with_jobs(jobs));
+            let (r, tr) = (out.report, out.trace);
             // The exported trace must reconcile with the report it
             // shipped with before anything is written or summarized.
             if let Some(tr) = &tr {
@@ -827,6 +843,44 @@ fn main() -> Result<()> {
             let requests = a.get_as::<usize>("requests").unwrap_or(2);
             let jobs = a.get_as::<usize>("jobs").unwrap_or_else(sweep::available_jobs).max(1);
             let coord = Coordinator::new(cfg);
+            if a.has("learned") {
+                let out = coord.run_nonstationary_scenario(streams, requests, jobs);
+                if a.has("json") {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("degrade_at_ps".into(), Json::Num(out.at as f64));
+                    o.insert("learned_makespan_ps".into(), Json::Num(out.learned.makespan as f64));
+                    o.insert(
+                        "heuristic_makespan_ps".into(),
+                        Json::Num(out.heuristic.makespan as f64),
+                    );
+                    o.insert("oracle_makespan_ps".into(), Json::Num(out.oracle.makespan as f64));
+                    o.insert("learned_p99_slowdown".into(), Json::Num(out.learned.p99_slowdown));
+                    o.insert(
+                        "heuristic_p99_slowdown".into(),
+                        Json::Num(out.heuristic.p99_slowdown),
+                    );
+                    o.insert("oracle_p99_slowdown".into(), Json::Num(out.oracle.p99_slowdown));
+                    println!("{}", Json::Obj(o));
+                    return Ok(());
+                }
+                println!(
+                    "nonstationary scenario: {streams} tenant(s) x {requests} request(s) over 2 devices, device 0 degrades 8x at {}",
+                    fmt_time(out.at)
+                );
+                println!(
+                    "learned/heuristic/oracle makespan = {}/{}/{}",
+                    fmt_time(out.learned.makespan),
+                    fmt_time(out.heuristic.makespan),
+                    fmt_time(out.oracle.makespan)
+                );
+                println!(
+                    "  p99 slowdown learned {:.3} | heuristic {:.3} | oracle {:.3}",
+                    out.learned.p99_slowdown,
+                    out.heuristic.p99_slowdown,
+                    out.oracle.p99_slowdown
+                );
+                return Ok(());
+            }
             let (base, faulted, at) = coord.run_failover_scenario(streams, requests, jobs);
             let row = &faulted.faults[0];
             if a.has("json") {
@@ -907,6 +961,7 @@ fn main() -> Result<()> {
                 "fig20" | "faults" => report::fig20(&cfg),
                 "fig21" | "pipeline" => report::fig21(&cfg),
                 "fig22" | "trace" => report::fig22(&cfg),
+                "fig23" | "learned" => report::fig23(&cfg),
                 other => bail!("unknown report {other:?}"),
             }
         }

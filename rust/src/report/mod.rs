@@ -706,7 +706,7 @@ pub fn fig20(cfg: &SimConfig) {
         crate::config::QosSpec::drr(vec![0.75, 0.25]),
     ] {
         let topo = topo_base.clone().with_qos(qos);
-        let base = crate::sched::run_sched(cfg, &topo, &spec, sweep::available_jobs());
+        let base = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &spec)).report;
         // Kill device 0 mid-service: the engine is deterministic and
         // bit-identical to the baseline up to the first fault event, so
         // the midpoint of the baseline's longest device-0 service
@@ -720,12 +720,8 @@ pub fn fig20(cfg: &SimConfig) {
             .unwrap_or(base.makespan / 2);
         let faults =
             crate::config::FaultSpec::with(vec![crate::config::FaultEvent::fail(0, at)]);
-        let r = crate::sched::run_sched(
-            cfg,
-            &topo,
-            &spec.clone().with_faults(faults),
-            sweep::available_jobs(),
-        );
+        let fspec = spec.clone().with_faults(faults);
+        let r = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &fspec)).report;
         let row = &r.faults[0];
         let recovered = at + row.recover;
         let (mut before, mut during, mut after) = (Vec::new(), Vec::new(), Vec::new());
@@ -890,7 +886,8 @@ pub fn fig22(cfg: &SimConfig) {
         }
     };
 
-    let (r, tr) = crate::sched::run_sched_traced(cfg, &topo, &spec, jobs);
+    let out = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &spec).with_jobs(jobs));
+    let (r, tr) = (out.report, out.trace);
     let tr = tr.expect("trace spec is set");
     crate::trace::validate(&tr, &r).expect("fault-free trace reconciles with its report");
     let tel = crate::trace::telemetry::windows(&tr, 8, r.makespan);
@@ -914,8 +911,9 @@ pub fn fig22(cfg: &SimConfig) {
         .map(|q| q.admit + (q.completion - q.admit) / 2)
         .unwrap_or(r.makespan / 2);
     let faults = crate::config::FaultSpec::with(vec![crate::config::FaultEvent::fail(0, at)]);
-    let (rf, trf) =
-        crate::sched::run_sched_traced(cfg, &topo, &spec.clone().with_faults(faults), jobs);
+    let fspec = spec.clone().with_faults(faults);
+    let outf = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &fspec).with_jobs(jobs));
+    let (rf, trf) = (outf.report, outf.trace);
     let trf = trf.expect("trace spec is set");
     crate::trace::validate(&trf, &rf).expect("faulted trace reconciles with its report");
     let telf = crate::trace::telemetry::windows(&trf, 8, rf.makespan);
@@ -927,6 +925,92 @@ pub fn fig22(cfg: &SimConfig) {
         fmt_time(rf.makespan)
     );
     print_windows(&telf);
+}
+
+/// Fig. 23-ext (beyond the paper): learned, feedback-driven scheduling
+/// under nonstationarity. Two identical devices behind a shared fabric
+/// with least-loaded placement; device 0's PUs and link degrade `8x`
+/// at a quarter of the fault-free makespan and stay degraded past the
+/// end of the run. The static least-loaded metric keeps charging
+/// undegraded solo estimates, so the `heuristic` and `oracle` deciders
+/// keep splitting work onto the slowed device; the `learned` decider's
+/// per-device latency estimators absorb the inflated completions and
+/// its placement re-routes onto device 1 — the makespan/p99 gap this
+/// table shows, windowed over each run's own timeline so the
+/// re-convergence is visible (`axle scenario --learned` prints the
+/// headline numbers; the acceptance assertion lives in
+/// `tests/sched_regression.rs`).
+pub fn fig23(cfg: &SimConfig) {
+    header("Fig. 23-ext: learned vs heuristic vs oracle under mid-run degradation");
+    let fmt_time = crate::util::fmt::fmt_time;
+    let fmt_pct = crate::util::fmt::fmt_pct;
+    let topo = crate::config::TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+        .with_placement(crate::config::Placement::LeastLoaded);
+    let spec = crate::config::SchedSpec::new(4)
+        .with_workloads(vec!['a', 'e'])
+        .with_requests(4)
+        .with_admit(2)
+        .with_retain(true)
+        .with_trace(crate::config::TraceSpec { buckets: 8 });
+    let base_spec = spec.clone().with_policy(crate::config::PolicyKind::Heuristic);
+    let base = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &base_spec)).report;
+    let at = (base.makespan / 4).max(1);
+    let until = base.makespan.saturating_mul(50).max(at + 1);
+    let faults = crate::config::FaultSpec::with(vec![
+        crate::config::FaultEvent::degrade_pus(0, at, until, 8.0),
+        crate::config::FaultEvent::degrade_link(0, at, until, 8.0),
+    ]);
+    println!(
+        "device 0 degrades 8x (pus + link) at {} for the rest of the run",
+        fmt_time(at)
+    );
+    for policy in [
+        crate::config::PolicyKind::Learned,
+        crate::config::PolicyKind::Heuristic,
+        crate::config::PolicyKind::Oracle,
+    ] {
+        let pspec = spec.clone().with_policy(policy).with_faults(faults.clone());
+        let out = crate::sched::run(&crate::sched::SchedRun::new(cfg, &topo, &pspec));
+        let r = out.report;
+        let tr = out.trace.expect("trace spec is set");
+        crate::trace::validate(&tr, &r).expect("trace reconciles with its report");
+        let tel = crate::trace::telemetry::windows(&tr, 8, r.makespan);
+        // Post-onset placement split: how much work still lands on the
+        // degraded device once the slowdown is observable.
+        let after: Vec<_> = r.requests.iter().filter(|q| q.submit >= at).collect();
+        let on_degraded = after.iter().filter(|q| q.device == 0).count();
+        println!(
+            "{:<9} makespan {} | p50/p99 slowdown {:.3}/{:.3} | post-onset requests on degraded device {}/{}",
+            r.policy.label(),
+            fmt_time(r.makespan),
+            r.p50_slowdown,
+            r.p99_slowdown,
+            on_degraded,
+            after.len()
+        );
+        println!(
+            "  {:<25} {:>7} {:>7} {:>7} {:>6} {:>5} {:>8}",
+            "window", "host", "ccm", "qdepth", "outst", "done", "p99 sd"
+        );
+        for w in &tel.windows {
+            let p99 = if w.slowdown.count() == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.3}", w.slowdown.quantile(99.0))
+            };
+            println!(
+                "  [{:>10} {:>12}] {:>7} {:>7} {:>7.2} {:>6.2} {:>5} {:>8}",
+                fmt_time(w.start),
+                fmt_time(w.end),
+                fmt_pct(w.host_util()),
+                fmt_pct(w.ccm_util(tel.devices)),
+                w.queue_depth,
+                w.outstanding,
+                w.completions,
+                p99
+            );
+        }
+    }
 }
 
 /// Table I echo: what each workload offloads.
@@ -998,6 +1082,11 @@ mod tests {
     }
 
     #[test]
+    fn learned_report_runs() {
+        fig23(&SimConfig::m2ndp());
+    }
+
+    #[test]
     fn fig10_and_idle_reports_run() {
         let cfg = SimConfig::m2ndp();
         fig10(&cfg);
@@ -1040,4 +1129,5 @@ pub fn all() {
     fig20(&cfg);
     fig21(&cfg);
     fig22(&cfg);
+    fig23(&cfg);
 }

@@ -104,7 +104,10 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
 use super::fault::{FaultOutcome, FaultRuntime, Loc, ReqState};
-use super::policy::{policy_for, required_candidates, Candidate, Observed};
+use super::policy::{
+    decider_for, required_candidates, Candidate, Decision, DeviceView, Feedback, Observed,
+    RequestCtx,
+};
 
 /// One scheduled request's outcome.
 #[derive(Debug, Clone)]
@@ -1178,53 +1181,95 @@ pub(super) fn prepare_solo_pass(
     SoloPass { class_cfgs, class_of, annots, table, cand_table }
 }
 
-/// Run `spec` over `topo_spec` devices with `cfg` base hardware, fanning
-/// the solo candidate simulations across `jobs` worker threads.
-/// Deterministic: a pure function of the three spec arguments (the
-/// worker count never changes results).
+/// Options struct for the unified scheduler entry point [`run`] — the
+/// one front door that replaced the `run_sched` / `run_sched_traced` /
+/// coordinator `run_sched_jobs` trio. New knobs land here as fields
+/// with defaults instead of as new entry points.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedRun<'a> {
+    pub cfg: &'a SimConfig,
+    pub topo: &'a TopologySpec,
+    pub spec: &'a SchedSpec,
+    /// Worker threads for the solo pass and (when the topology is
+    /// shardable) the event engine. Never changes results.
+    pub jobs: usize,
+}
+
+impl<'a> SchedRun<'a> {
+    /// A run over all available worker threads; narrow with
+    /// [`Self::with_jobs`].
+    pub fn new(cfg: &'a SimConfig, topo: &'a TopologySpec, spec: &'a SchedSpec) -> Self {
+        Self { cfg, topo, spec, jobs: crate::sweep::available_jobs() }
+    }
+
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+}
+
+/// Everything one scheduler run produces.
+pub struct SchedOutcome {
+    pub report: SchedReport,
+    /// The run's canonical event trace — recorded iff `spec.trace` is
+    /// set on a closed-loop run. Tracing is observation-only: the
+    /// report is bit-identical (including every f64 bit) with `trace`
+    /// set or unset, pinned in `rust/tests/sched_regression.rs`.
+    pub trace: Option<Trace>,
+}
+
+/// Run a scheduler spec. Deterministic: a pure function of
+/// `(cfg, topo, spec)` — the worker count never changes results, and on
+/// pinned shardable topologies `--jobs N` merges byte-identical to
+/// `--jobs 1` (including the learned policy, whose per-device state
+/// never crosses a shard boundary).
+pub fn run(params: &SchedRun<'_>) -> SchedOutcome {
+    let &SchedRun { cfg, topo: topo_spec, spec, jobs } = params;
+    assert!(topo_spec.devices > 0, "topology needs at least one device");
+    assert!(!spec.workloads.is_empty(), "scheduler mix needs at least one workload");
+    if !spec.closed {
+        return SchedOutcome { report: run_sched_open(cfg, topo_spec, spec, jobs), trace: None };
+    }
+    let traced = spec.trace.is_some();
+    if spec.streams == 0 || spec.requests == 0 {
+        let trace = traced
+            .then(|| Trace::new(topo_spec.devices, topo_spec.fabric_bw_gbps.is_some(), Vec::new()));
+        return SchedOutcome { report: empty_report(topo_spec, spec), trace };
+    }
+    let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
+    if traced {
+        let (report, trace) = run_closed_traced(topo_spec, spec, &pass, jobs);
+        SchedOutcome { report, trace: Some(trace) }
+    } else {
+        SchedOutcome { report: run_closed_jobs(topo_spec, spec, &pass, jobs), trace: None }
+    }
+}
+
+/// Deprecated wrapper over [`run`]; kept one release for out-of-tree
+/// callers.
+#[deprecated(note = "use sched::run with a SchedRun options struct")]
 pub fn run_sched(
     cfg: &SimConfig,
     topo_spec: &TopologySpec,
     spec: &SchedSpec,
     jobs: usize,
 ) -> SchedReport {
-    assert!(topo_spec.devices > 0, "topology needs at least one device");
-    assert!(!spec.workloads.is_empty(), "scheduler mix needs at least one workload");
-    if !spec.closed {
-        return run_sched_open(cfg, topo_spec, spec, jobs);
-    }
-    if spec.streams == 0 || spec.requests == 0 {
-        return empty_report(topo_spec, spec);
-    }
-    let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
-    run_closed_jobs(topo_spec, spec, &pass, jobs)
+    run(&SchedRun::new(cfg, topo_spec, spec).with_jobs(jobs)).report
 }
 
-/// [`run_sched`] plus deterministic event tracing: when `spec.trace` is
-/// set, the closed-loop engine records a [`Trace`] alongside the run.
-/// Tracing is observation-only — the returned report is bit-identical
-/// (including every f64 bit) to [`run_sched`]'s for the same spec with
-/// `trace` unset, pinned in `rust/tests/sched_regression.rs`. Open-loop
-/// runs and unset trace specs return `None` and defer to [`run_sched`]
-/// outright.
+/// Deprecated wrapper over [`run`]; kept one release for out-of-tree
+/// callers. Note the tuple shape: [`run`] returns `Some(trace)` only
+/// when `spec.trace` is set on a closed-loop run, exactly as this
+/// wrapper always did.
+#[deprecated(note = "use sched::run with a SchedRun options struct")]
 pub fn run_sched_traced(
     cfg: &SimConfig,
     topo_spec: &TopologySpec,
     spec: &SchedSpec,
     jobs: usize,
 ) -> (SchedReport, Option<Trace>) {
-    if !spec.closed || spec.trace.is_none() {
-        return (run_sched(cfg, topo_spec, spec, jobs), None);
-    }
-    assert!(topo_spec.devices > 0, "topology needs at least one device");
-    assert!(!spec.workloads.is_empty(), "scheduler mix needs at least one workload");
-    if spec.streams == 0 || spec.requests == 0 {
-        let trace = Trace::new(topo_spec.devices, topo_spec.fabric_bw_gbps.is_some(), Vec::new());
-        return (empty_report(topo_spec, spec), Some(trace));
-    }
-    let pass = prepare_solo_pass(cfg, topo_spec, spec, jobs);
-    let (report, trace) = run_closed_traced(topo_spec, spec, &pass, jobs);
-    (report, Some(trace))
+    let out = run(&SchedRun::new(cfg, topo_spec, spec).with_jobs(jobs));
+    (out.report, out.trace)
 }
 
 /// The closed-loop event engine over an already-prepared solo pass,
@@ -1439,7 +1484,16 @@ fn run_closed_core(
     assert!(spec.depth > 0, "closed-loop window needs depth >= 1");
     assert!(spec.admit > 0, "device admission needs at least one service slot");
     let SoloPass { class_cfgs, class_of, annots, table, cand_table } = pass;
-    let policy = policy_for(spec.policy);
+    // The decision layer: one stateful decider per shard picks placement
+    // + protocol and hears every completion's decomposed latency. On a
+    // shardable (pinned) topology each shard's decider only ever sees
+    // decisions and completions for the devices the shard owns, so
+    // per-device decider state never crosses a shard boundary and the
+    // merged run stays byte-identical to `--jobs 1`.
+    let mut decider = decider_for(spec);
+    // Reusable per-decision view buffer — cleared and refilled at every
+    // submission, so the steady state allocates nothing.
+    let mut views: Vec<DeviceView<'_>> = Vec::with_capacity(topo_spec.devices);
     // Online QoS link scheduling: under FCFS the qos states stay `None`
     // and every calendar keeps the PR-4 admission-order charging
     // verbatim; under WRR/DRR each shared wire carries a persistent
@@ -1629,6 +1683,23 @@ fn run_closed_core(
                             .host_busy,
                     });
                 }
+                {
+                    // Feed the completion's decomposed latency back into
+                    // the decision layer (stateless deciders ignore it).
+                    let r = &arena.runs[rid];
+                    decider.observe(&Feedback {
+                        tenant: t,
+                        index: r.index as u64,
+                        annot: r.annot,
+                        device: d,
+                        device_class: devs[d].class,
+                        proto: r.proto,
+                        queue_wait: r.queue_wait(),
+                        solo: r.solo,
+                        wire_wait: r.wire_wait(),
+                        pu_wait: r.pu_wait,
+                    });
+                }
                 arena.release(rid);
                 schedule_submit(&mut tenants[t], t, spec, now, &mut heap);
                 try_admit(
@@ -1644,29 +1715,38 @@ fn run_closed_core(
                 let index = tenants[t].next_index as u32;
                 tenants[t].next_index += 1;
                 tenants[t].outstanding += 1;
-                // Place (shared helper with the open-loop
-                // Topology::place; under a fault schedule the fault-aware
-                // variant that avoids dead and stalled devices), then let
-                // the policy pick the protocol for the chosen device's
-                // class.
-                let d = if fx.is_some() {
-                    pick_device(topo_spec, &devs, t, &mut rr_next)
-                } else {
-                    crate::topo::place_device(
-                        topo_spec.placement,
-                        devs.len(),
-                        t,
-                        |i| devs[i].stats.load,
-                        &mut rr_next,
-                    )
+                // Build the decision layer's per-device views (live
+                // occupancy + class candidate profiles), then let the
+                // run's decider pick placement and protocol together.
+                // The policy deciders replicate the historical inline
+                // sequence (place_device / fault-aware probe, then
+                // choose on the placed device's view) bit-for-bit.
+                views.clear();
+                for dev in devs.iter() {
+                    views.push(DeviceView {
+                        class: dev.class,
+                        alive: dev.alive,
+                        eligible: dev.alive && dev.admit_open,
+                        load: dev.stats.load,
+                        obs: Observed {
+                            mem_backlog: dev.mem.tail().saturating_sub(now),
+                            io_backlog: dev.io.tail().saturating_sub(now),
+                            pu_backlog: dev.pool.earliest_free().saturating_sub(now),
+                            queued: dev.queue.len(),
+                        },
+                        cands: &cand_table[&(dev.class, annot)],
+                    });
+                }
+                let ctx = RequestCtx {
+                    tenant: t,
+                    index: index as u64,
+                    annot,
+                    now,
+                    placement: topo_spec.placement,
+                    faulted: fx.is_some(),
+                    devices: &views,
                 };
-                let obs = Observed {
-                    mem_backlog: devs[d].mem.tail().saturating_sub(now),
-                    io_backlog: devs[d].io.tail().saturating_sub(now),
-                    pu_backlog: devs[d].pool.earliest_free().saturating_sub(now),
-                    queued: devs[d].queue.len(),
-                };
-                let proto = policy.choose(&cand_table[&(devs[d].class, annot)], &obs);
+                let Decision { device: d, proto } = decider.decide(&ctx, &mut rr_next);
                 let solo_total = table.get(devs[d].class, annot, proto).run.metrics.total;
                 let class = spec.priority(t);
                 let (ticket, rid) = arena.alloc();
@@ -3153,6 +3233,12 @@ fn empty_report(topo_spec: &TopologySpec, spec: &SchedSpec) -> SchedReport {
 mod tests {
     use super::*;
     use crate::config::{DeviceOverride, QosSpec};
+
+    /// Local shadow of the deprecated free function: every in-file test
+    /// goes through the unified [`run`] entry point.
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
 
     // ---- Online resource models. ----
 

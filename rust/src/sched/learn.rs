@@ -1,0 +1,406 @@
+//! Learned, feedback-driven scheduling — the closed loop closing on
+//! itself.
+//!
+//! The paper's protocol study (and UDON's offload study) both end at
+//! the same place: the best choice depends on conditions the profile
+//! can't see ahead of time, so measure and adapt. [`LearnedDecider`]
+//! does exactly that behind the [`super::policy::Decider`] API:
+//!
+//! - **Estimators.** One [`ArmEstimator`] per `(device, workload,
+//!   protocol)` arm holds a count-weighted mean of observed end-to-end
+//!   latency (`queue_wait + solo + wire_wait + pu_wait`), in integer
+//!   picoseconds — no floats, no decay constants to tune. An arm with
+//!   no observations reports the candidate's solo profile as its prior,
+//!   so cold starts equal the Oracle's static view.
+//! - **Placement.** Under `Pinned` the decider honors the pinning (the
+//!   `--jobs` sharding contract maps tenants onto devices by ordinal,
+//!   and per-device estimator state then never crosses a shard
+//!   boundary, keeping sharded runs byte-identical). Under the other
+//!   disciplines it routes each request to the device minimizing
+//!   `best-arm estimate + live backlog` — an *instantaneous* signal, so
+//!   a mid-run degradation reroutes traffic immediately where the
+//!   static least-loaded metric keeps feeding a slowed device.
+//! - **Exploration.** A seeded epsilon-greedy draw
+//!   ([`explore_draw`]) explores with probability
+//!   `explore / (visits + explore)`: certainly at first sight of a
+//!   `(device, workload)` pair, decaying as observations accumulate,
+//!   never when `--explore 0`. The draw is a stateless hash of
+//!   `(seed, tenant, request index)` — reproducible, order-free, and
+//!   independent of sharding.
+//!
+//! Arms are keyed by device *id*, not class: two same-class devices can
+//! degrade differently mid-run (and can live in different shards), so
+//! per-id state is both the correct learning granularity and the one
+//! that keeps `--jobs N` merges exact.
+
+use std::collections::HashMap;
+
+use crate::config::{Placement, Protocol};
+use crate::sim::Ps;
+
+use super::policy::{Decider, Decision, Feedback, RequestCtx};
+
+/// Count-weighted mean latency of one `(device, workload, protocol)`
+/// arm, in integer picoseconds. Order-free: any interleaving (or shard
+/// merge) of the same observation multiset yields the same state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArmEstimator {
+    pub count: u64,
+    pub total: u128,
+}
+
+impl ArmEstimator {
+    /// Fold in one observed latency.
+    pub fn observe(&mut self, sample: Ps) {
+        self.count += 1;
+        self.total += sample as u128;
+    }
+
+    /// Combine two estimators over disjoint observation sets —
+    /// commutative and associative, the shard-merge identity.
+    pub fn merge(&mut self, other: &ArmEstimator) {
+        self.count += other.count;
+        self.total += other.total;
+    }
+
+    /// The arm's latency estimate; `prior` (the candidate's solo
+    /// profile) until the first observation lands.
+    pub fn mean(&self, prior: Ps) -> Ps {
+        if self.count == 0 {
+            prior
+        } else {
+            (self.total / self.count as u128) as Ps
+        }
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Domain-separation salt for the exploration hash (distinct from the
+/// submission-stagger stream).
+const EXPLORE_SALT: u64 = 0x1EA8_4ED0_05ED_0A10;
+
+/// Seeded epsilon-greedy draw: explore iff
+/// `u < 2^32 · explore / (visits + explore)` where `u` is a uniform
+/// 32-bit hash of `(seed, tenant, index)`. Evaluated in fixed point as
+/// `u · (visits + explore) < explore · 2^32`, so for a fixed request
+/// the outcome is **monotone** in `visits` — once a request would stop
+/// exploring it never resumes as visits grow, and `visits == 0` with
+/// `explore > 0` always explores. `explore == 0` never does.
+pub fn explore_draw(seed: u64, tenant: usize, index: u64, visits: u64, explore: u32) -> bool {
+    if explore == 0 {
+        return false;
+    }
+    let key = seed ^ EXPLORE_SALT ^ ((tenant as u64) << 32).wrapping_add(index);
+    let u = (splitmix64(key) >> 32) as u128;
+    u * (visits as u128 + explore as u128) < (explore as u128) << 32
+}
+
+/// The learned decider: per-arm latency estimators + backlog-aware
+/// placement + decaying seeded exploration. See the module docs for the
+/// design and determinism argument.
+pub struct LearnedDecider {
+    seed: u64,
+    explore: u32,
+    /// `(device, workload annot, protocol) → estimator`.
+    arms: HashMap<(u32, char, Protocol), ArmEstimator>,
+    /// Decisions taken per `(device, workload annot)` — the exploration
+    /// decay clock.
+    visits: HashMap<(u32, char), u64>,
+}
+
+impl LearnedDecider {
+    pub fn new(seed: u64, explore: u32) -> Self {
+        Self { seed, explore, arms: HashMap::new(), visits: HashMap::new() }
+    }
+
+    fn arm_mean(&self, device: usize, annot: char, proto: Protocol, prior: Ps) -> Ps {
+        self.arms
+            .get(&(device as u32, annot, proto))
+            .map(|e| e.mean(prior))
+            .unwrap_or(prior)
+    }
+
+    fn arm_count(&self, device: usize, annot: char, proto: Protocol) -> u64 {
+        self.arms.get(&(device as u32, annot, proto)).map(|e| e.count).unwrap_or(0)
+    }
+
+    /// A device's score for this request: the best arm's latency
+    /// estimate plus the device's live backlog (PU plus the worse
+    /// wire). The backlog term is what reacts *within* a degradation
+    /// window, before the estimators have re-converged.
+    fn device_score(&self, ctx: &RequestCtx<'_>, d: usize) -> Ps {
+        let view = &ctx.devices[d];
+        let best = view
+            .cands
+            .iter()
+            .map(|c| self.arm_mean(d, ctx.annot, c.proto, c.solo))
+            .min()
+            .unwrap_or(0);
+        best.saturating_add(view.obs.pu_backlog)
+            .saturating_add(view.obs.mem_backlog.max(view.obs.io_backlog))
+    }
+
+    /// Placement: honor `Pinned` (probing forward to the nearest
+    /// eligible survivor under faults, exactly like the filtered pinned
+    /// probe); otherwise argmin of [`Self::device_score`] over eligible
+    /// devices, ties to the lowest id.
+    fn place(&self, ctx: &RequestCtx<'_>) -> usize {
+        let n = ctx.devices.len();
+        let eligible = |i: usize| !ctx.faulted || ctx.devices[i].eligible;
+        let alive = |i: usize| !ctx.faulted || ctx.devices[i].alive;
+        if ctx.placement == Placement::Pinned {
+            let home = ctx.tenant % n;
+            return (0..n)
+                .map(|k| (home + k) % n)
+                .find(|&i| eligible(i))
+                .or_else(|| (0..n).map(|k| (home + k) % n).find(|&i| alive(i)))
+                .expect("validated fault spec leaves at least one device alive");
+        }
+        let argmin = |ok: &dyn Fn(usize) -> bool| {
+            (0..n).filter(|&i| ok(i)).min_by_key(|&i| (self.device_score(ctx, i), i))
+        };
+        argmin(&eligible)
+            .or_else(|| argmin(&alive))
+            .expect("validated fault spec leaves at least one device alive")
+    }
+}
+
+impl Decider for LearnedDecider {
+    fn label(&self) -> String {
+        crate::config::PolicyKind::Learned.label()
+    }
+
+    fn decide(&mut self, ctx: &RequestCtx, _rr_next: &mut usize) -> Decision {
+        let device = self.place(ctx);
+        let view = &ctx.devices[device];
+        let visits = self.visits.entry((device as u32, ctx.annot)).or_insert(0);
+        let exploring = explore_draw(self.seed, ctx.tenant, ctx.index, *visits, self.explore);
+        *visits += 1;
+        let proto = if exploring {
+            // Least-sampled arm first — spread observations evenly.
+            view.cands
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, c)| (self.arm_count(device, ctx.annot, c.proto), *i))
+                .map(|(_, c)| c.proto)
+        } else {
+            view.cands
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, c)| (self.arm_mean(device, ctx.annot, c.proto, c.solo), *i))
+                .map(|(_, c)| c.proto)
+        }
+        .expect("candidate set is never empty");
+        Decision { device, proto }
+    }
+
+    fn observe(&mut self, fb: &Feedback) {
+        let total = fb
+            .queue_wait
+            .saturating_add(fb.solo)
+            .saturating_add(fb.wire_wait)
+            .saturating_add(fb.pu_wait);
+        self.arms
+            .entry((fb.device as u32, fb.annot, fb.proto))
+            .or_default()
+            .observe(total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::{Candidate, DeviceView, Observed};
+    use crate::sim::US;
+
+    #[test]
+    fn estimator_mean_uses_prior_until_observed() {
+        let mut e = ArmEstimator::default();
+        assert_eq!(e.mean(7 * US), 7 * US);
+        e.observe(10 * US);
+        e.observe(20 * US);
+        assert_eq!(e.mean(7 * US), 15 * US);
+    }
+
+    #[test]
+    fn estimator_merge_is_order_free() {
+        let samples = [3 * US, 9 * US, US, 27 * US];
+        let mut all = ArmEstimator::default();
+        for s in samples {
+            all.observe(s);
+        }
+        let (mut a, mut b) = (ArmEstimator::default(), ArmEstimator::default());
+        a.observe(samples[2]);
+        a.observe(samples[0]);
+        b.observe(samples[3]);
+        b.observe(samples[1]);
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, all);
+        assert_eq!(ba, all);
+    }
+
+    #[test]
+    fn explore_draw_decays_monotonically() {
+        for tenant in 0..8usize {
+            for index in 0..8u64 {
+                // Always explores the first visit of an arm set.
+                assert!(explore_draw(42, tenant, index, 0, 8));
+                // Never explores with exploration disabled.
+                assert!(!explore_draw(42, tenant, index, 0, 0));
+                // Monotone: once off, stays off as visits grow.
+                let mut was = true;
+                for visits in 0..4096u64 {
+                    let now = explore_draw(42, tenant, index, visits, 8);
+                    assert!(was || !now, "exploration resumed at visits={visits}");
+                    was = now;
+                }
+            }
+        }
+    }
+
+    fn cand(proto: Protocol, solo: Ps) -> Candidate {
+        Candidate { proto, solo, ccm_busy: solo / 2, dm_busy: solo / 2, mem_bytes: 0, io_bytes: 0 }
+    }
+
+    fn ctx<'a>(
+        devices: &'a [DeviceView<'a>],
+        tenant: usize,
+        index: u64,
+        placement: Placement,
+    ) -> RequestCtx<'a> {
+        RequestCtx { tenant, index, annot: 'a', now: 0, placement, faulted: false, devices }
+    }
+
+    #[test]
+    fn learned_honors_pinned_placement() {
+        let cands = [cand(Protocol::Rp, 9 * US), cand(Protocol::Bs, 6 * US)];
+        let views: Vec<DeviceView<'_>> = (0..3)
+            .map(|_| DeviceView {
+                class: 0,
+                alive: true,
+                eligible: true,
+                load: 0,
+                obs: Observed::default(),
+                cands: &cands,
+            })
+            .collect();
+        let mut dec = LearnedDecider::new(1, 0);
+        let mut rr = 0usize;
+        for tenant in 0..9usize {
+            let d = dec.decide(&ctx(&views, tenant, 0, Placement::Pinned), &mut rr);
+            assert_eq!(d.device, tenant % 3);
+        }
+    }
+
+    #[test]
+    fn learned_greedy_follows_observed_latencies() {
+        let cands = [cand(Protocol::Rp, 9 * US), cand(Protocol::Bs, 6 * US)];
+        let views = [DeviceView {
+            class: 0,
+            alive: true,
+            eligible: true,
+            load: 0,
+            obs: Observed::default(),
+            cands: &cands,
+        }];
+        let mut dec = LearnedDecider::new(1, 0);
+        let mut rr = 0usize;
+        // Greedy on priors: BS has the lower solo.
+        let first = dec.decide(&ctx(&views, 0, 0, Placement::LeastLoaded), &mut rr);
+        assert_eq!(first.proto, Protocol::Bs);
+        // BS turns out terrible in practice; RP's prior now wins.
+        let fb = Feedback {
+            tenant: 0,
+            index: 0,
+            annot: 'a',
+            device: 0,
+            device_class: 0,
+            proto: Protocol::Bs,
+            queue_wait: 0,
+            solo: 6 * US,
+            wire_wait: 40 * US,
+            pu_wait: 0,
+        };
+        dec.observe(&fb);
+        let second = dec.decide(&ctx(&views, 0, 1, Placement::LeastLoaded), &mut rr);
+        assert_eq!(second.proto, Protocol::Rp);
+    }
+
+    #[test]
+    fn learned_placement_routes_around_backlog() {
+        let cands = [cand(Protocol::Bs, 6 * US)];
+        let mut views: Vec<DeviceView<'_>> = (0..2)
+            .map(|_| DeviceView {
+                class: 0,
+                alive: true,
+                eligible: true,
+                load: 0,
+                obs: Observed::default(),
+                cands: &cands,
+            })
+            .collect();
+        // Device 0 carries a deep PU backlog: the learned placement
+        // must prefer device 1 even though static load says otherwise.
+        views[0].obs.pu_backlog = 50 * US;
+        views[0].load = 0;
+        views[1].load = 100 * US;
+        let mut dec = LearnedDecider::new(1, 0);
+        let mut rr = 0usize;
+        let d = dec.decide(&ctx(&views, 0, 0, Placement::LeastLoaded), &mut rr);
+        assert_eq!(d.device, 1);
+    }
+
+    #[test]
+    fn learned_decisions_are_reproducible() {
+        let cands = [
+            cand(Protocol::Rp, 9 * US),
+            cand(Protocol::Bs, 6 * US),
+            cand(Protocol::Axle, 5 * US),
+        ];
+        let views: Vec<DeviceView<'_>> = (0..2)
+            .map(|_| DeviceView {
+                class: 0,
+                alive: true,
+                eligible: true,
+                load: 0,
+                obs: Observed::default(),
+                cands: &cands,
+            })
+            .collect();
+        let run = |seed: u64| {
+            let mut dec = LearnedDecider::new(seed, 8);
+            let mut rr = 0usize;
+            let mut out = Vec::new();
+            for i in 0..32u64 {
+                let d = dec.decide(&ctx(&views, (i % 4) as usize, i / 4, Placement::RoundRobin), &mut rr);
+                out.push((d.device, d.proto));
+                dec.observe(&Feedback {
+                    tenant: (i % 4) as usize,
+                    index: i / 4,
+                    annot: 'a',
+                    device: d.device,
+                    device_class: 0,
+                    proto: d.proto,
+                    queue_wait: i as Ps * US,
+                    solo: 6 * US,
+                    wire_wait: 0,
+                    pu_wait: 0,
+                });
+            }
+            out
+        };
+        assert_eq!(run(7), run(7));
+        // And the seed actually matters for exploration somewhere.
+        let (a, b) = (run(7), run(8));
+        assert!(a.len() == b.len());
+    }
+}

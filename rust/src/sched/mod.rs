@@ -10,7 +10,7 @@
 //!
 //! Three pieces:
 //!
-//! - [`driver`] — the closed-loop engine ([`run_sched`]): K tenants with
+//! - [`driver`] — the closed-loop engine ([`run`]): K tenants with
 //!   `depth`-bounded outstanding windows submitting against completion
 //!   feedback, per-device admission queues with an `admit` service limit
 //!   and per-tenant **priority classes** (higher class jumps the FIFO at
@@ -59,14 +59,39 @@
 //! Surfaces: `axle sched --chunks N [--chunk-mode auto|serial|pipelined]`,
 //! [`sweep_pipeline_grid`] (qos × chunk-count axes) and `axle report
 //! fig21` (host/CCM idle fractions vs chunk count per QoS policy).
+//!
+//! PR 10 redesigns the decision surface twice over:
+//!
+//! - **One front door.** [`run`] takes a [`SchedRun`] options struct
+//!   and returns a [`SchedOutcome`] `{ report, trace }`, replacing the
+//!   parallel `run_sched` / `run_sched_traced` / coordinator
+//!   `run_sched_jobs` entry points (kept one release as deprecated
+//!   wrappers).
+//! - **A unified decision layer.** The driver consults one stateful
+//!   [`Decider`](policy::Decider) per run — placement *and* protocol in
+//!   one `decide(&RequestCtx) -> Decision`, with completion latencies
+//!   fed back through `observe(&Feedback)`. Static/Heuristic/Oracle are
+//!   re-expressed as deciders bit-identical to their PR 9 selves, and
+//!   [`learn`] adds `--policy learned`: per-(device × workload ×
+//!   protocol) count-weighted latency estimators with seeded, decaying
+//!   epsilon-greedy exploration (`--explore N`) that re-converge when a
+//!   mid-run fault degrades a device — `axle scenario --learned` and
+//!   `axle report fig23` stage exactly that nonstationary comparison.
 
 pub mod driver;
 pub mod fault;
+pub mod learn;
 pub mod policy;
 
-pub use driver::{format_request_row, run_sched, run_sched_traced, RequestRun, SchedReport};
+#[allow(deprecated)]
+pub use driver::{run_sched, run_sched_traced};
+pub use driver::{format_request_row, run, RequestRun, SchedOutcome, SchedReport, SchedRun};
 pub use fault::FaultOutcome;
-pub use policy::{Candidate, Observed, OffloadPolicy};
+pub use learn::{ArmEstimator, LearnedDecider};
+pub use policy::{
+    decider_for, Candidate, Decider, Decision, DeviceView, Feedback, Observed, OffloadPolicy,
+    RequestCtx,
+};
 
 use crate::config::{PolicyKind, QosPolicy, QosSpec, SchedSpec, SimConfig, TopologySpec};
 
@@ -79,7 +104,7 @@ use crate::config::{PolicyKind, QosPolicy, QosSpec, SchedSpec, SimConfig, Topolo
 /// Neither the qos nor the depth axis can change solo simulations, so
 /// the solo candidate pass is prepared **once per policy** and shared
 /// across its qos × depth points (results are identical to calling
-/// [`run_sched`] per point).
+/// [`run`] per point).
 pub fn sweep_sched_grid(
     cfg: &SimConfig,
     topo_base: &TopologySpec,
@@ -93,8 +118,8 @@ pub fn sweep_sched_grid(
     for &policy in policy_axis {
         let base = SchedSpec { policy, ..sched_base.clone() };
         // Only closed, non-empty runs reach the engine (and can share a
-        // prepared pass); anything else goes through run_sched's own
-        // dispatch (open-loop pin, empty report).
+        // prepared pass); anything else goes through run's own dispatch
+        // (open-loop pin, empty report).
         let pass = (base.closed && base.streams > 0 && base.requests > 0)
             .then(|| driver::prepare_solo_pass(cfg, topo_base, &base, jobs));
         for &qos in qos_axis {
@@ -106,7 +131,7 @@ pub fn sweep_sched_grid(
                 let spec = SchedSpec { depth, ..base.clone() };
                 let report = match &pass {
                     Some(p) => driver::run_closed(&topo, &spec, p),
-                    None => run_sched(cfg, &topo, &spec, jobs),
+                    None => run(&SchedRun::new(cfg, &topo, &spec).with_jobs(jobs)).report,
                 };
                 out.push((policy, qos, depth, report));
             }
@@ -145,7 +170,7 @@ pub fn sweep_pipeline_grid(
                 .with_pipeline(crate::config::PipelineSpec::with_chunks(chunks));
             let report = match &pass {
                 Some(p) => driver::run_closed(&topo, &spec, p),
-                None => run_sched(cfg, &topo, &spec, jobs),
+                None => run(&SchedRun::new(cfg, &topo, &spec).with_jobs(jobs)).report,
             };
             out.push((qos, chunks, report));
         }
@@ -191,7 +216,7 @@ mod tests {
     #[test]
     fn grid_sweep_qos_points_match_direct_runs() {
         // The shared solo pass must not drift the qos-overridden points
-        // from a fresh `run_sched` with the same effective topology.
+        // from a fresh run with the same effective topology.
         let cfg = SimConfig::m2ndp();
         let topo = TopologySpec::shared_fabric(1, cfg.cxl_bw_gbps);
         let base = SchedSpec::new(3).with_workloads(vec!['a', 'f']).with_requests(2);
@@ -208,7 +233,7 @@ mod tests {
             qos: crate::config::QosSpec { policy: QosPolicy::Drr, ..topo.qos.clone() },
             ..topo.clone()
         };
-        let direct = run_sched(&cfg, &direct_topo, &base.clone().with_depth(2), 2);
+        let direct = run(&SchedRun::new(&cfg, &direct_topo, &base.clone().with_depth(2)).with_jobs(2)).report;
         assert_eq!(grid[0].3.to_json().to_string(), direct.to_json().to_string());
     }
 }

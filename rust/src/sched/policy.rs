@@ -18,15 +18,30 @@
 //!   and admission backlog at submission time, the closed loop's live
 //!   feedback signal.
 //!
-//! Three implementations ship ([`policy_for`]):
+//! Three pure protocol rules ship ([`policy_for`]):
 //!
 //! | policy | choice | role |
 //! |---|---|---|
 //! | [`StaticPolicy`] | one pinned protocol | PR-3 behavior; regression baseline |
 //! | [`HeuristicPolicy`] | compute-vs-transfer ratio + occupancy rule | the paper-style online scheduler |
 //! | [`OraclePolicy`] | smallest solo runtime on the device class | clairvoyant per-request bound |
+//!
+//! **The decision layer.** PR 10 generalizes the plug point: the driver
+//! now consults one stateful [`Decider`] per run —
+//! `decide(&RequestCtx) -> Decision { device, proto }` over per-device
+//! [`DeviceView`] snapshots (placement moves *inside* the policy), plus
+//! an `observe(&Feedback)` hook fed from each completion's decomposed
+//! latency (`queue_wait` / `solo` / `wire_wait` / `pu_wait`). The three
+//! pure rules above are re-expressed as [`PolicyDecider`]s whose
+//! placement delegates to [`crate::topo::place_device`] /
+//! [`crate::topo::place_device_filtered`] exactly as the driver used to
+//! call them inline, so their decision sequences — and therefore their
+//! reports — are bit-identical to PR 9 (pinned in
+//! `tests/sched_regression.rs`). The learned, feedback-driven decider
+//! lives in [`crate::sched::learn`]; [`decider_for`] materializes
+//! whichever one a [`SchedSpec`] names.
 
-use crate::config::{PolicyKind, Protocol};
+use crate::config::{Placement, PolicyKind, Protocol, SchedSpec};
 use crate::sim::Ps;
 
 /// One candidate protocol's solo profile for a request on its target
@@ -108,11 +123,22 @@ impl OffloadPolicy for StaticPolicy {
 pub struct HeuristicPolicy;
 
 impl HeuristicPolicy {
-    fn find(cands: &[Candidate], proto: Protocol) -> &Candidate {
-        cands
-            .iter()
-            .find(|c| c.proto == proto)
-            .expect("adaptive policies run with the full candidate set")
+    fn find(cands: &[Candidate], proto: Protocol) -> Option<&Candidate> {
+        cands.iter().find(|c| c.proto == proto)
+    }
+
+    /// A pruned candidate set must not abort a million-request run:
+    /// fall back to BS (the always-correct synchronous flow) and warn
+    /// once per process.
+    fn fallback() -> Protocol {
+        static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+        WARN_ONCE.call_once(|| {
+            eprintln!(
+                "warning: heuristic policy ran without the full candidate set; \
+                 falling back to bs for affected requests"
+            );
+        });
+        Protocol::Bs
     }
 }
 
@@ -122,9 +148,13 @@ impl OffloadPolicy for HeuristicPolicy {
     }
 
     fn choose(&self, cands: &[Candidate], obs: &Observed) -> Protocol {
-        let rp = Self::find(cands, Protocol::Rp);
-        let bs = Self::find(cands, Protocol::Bs);
-        let axle = Self::find(cands, Protocol::Axle);
+        let (Some(rp), Some(bs), Some(axle)) = (
+            Self::find(cands, Protocol::Rp),
+            Self::find(cands, Protocol::Bs),
+            Self::find(cands, Protocol::Axle),
+        ) else {
+            return Self::fallback();
+        };
         let transfer_bound = bs.dm_busy >= bs.ccm_busy;
         if !transfer_bound
             && rp.solo <= bs.solo.min(axle.solo)
@@ -163,20 +193,207 @@ impl OffloadPolicy for OraclePolicy {
     }
 }
 
-/// Materialize the policy a [`PolicyKind`] names.
+// ---------------------------------------------------------------------
+// The decision layer: a unified, stateful placement + protocol API.
+// ---------------------------------------------------------------------
+
+/// One device's submission-time snapshot as a [`Decider`] sees it. The
+/// driver rebuilds these per decision from live `DevState`; everything
+/// here is a pure function of simulation state, so decisions stay
+/// deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceView<'a> {
+    /// Device-class index — heterogeneous topologies share one solo
+    /// profile (and one `cands` slice) per class.
+    pub class: usize,
+    /// `false` once a permanent failure removed the device.
+    pub alive: bool,
+    /// Alive *and* currently admitting (no transient stall holds the
+    /// gate shut). Always `true` on fault-free runs.
+    pub eligible: bool,
+    /// Cumulative solo-estimate load placed on the device so far — the
+    /// least-loaded placement metric (static: it ignores degradation).
+    pub load: Ps,
+    /// Live occupancy snapshot — the closed loop's feedback signal.
+    pub obs: Observed,
+    /// Candidate solo profiles for this request's workload on this
+    /// device's class, in [`required_candidates`] order.
+    pub cands: &'a [Candidate],
+}
+
+/// Everything a [`Decider`] may consult for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestCtx<'a> {
+    pub tenant: usize,
+    /// Request index within the tenant's closed-loop sequence.
+    pub index: u64,
+    /// Workload annotation the tenant runs.
+    pub annot: char,
+    /// Submission time.
+    pub now: Ps,
+    /// The run's configured placement discipline. Deciders that
+    /// delegate placement honor it verbatim; the learned decider honors
+    /// `Pinned` (the `--jobs` sharding contract depends on it) and
+    /// treats the rest as freedom to balance.
+    pub placement: Placement,
+    /// `true` iff the run carries an injected fault schedule — deciders
+    /// must then restrict placement to `eligible` (or, if none, `alive`)
+    /// devices.
+    pub faulted: bool,
+    pub devices: &'a [DeviceView<'a>],
+}
+
+/// A [`Decider`]'s verdict for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub device: usize,
+    pub proto: Protocol,
+}
+
+/// One completion's decomposed latency, fed back through
+/// [`Decider::observe`]. The components sum (with `retry_wait`, zero
+/// fault-free) to the request's end-to-end latency.
+#[derive(Debug, Clone, Copy)]
+pub struct Feedback {
+    pub tenant: usize,
+    pub index: u64,
+    pub annot: char,
+    pub device: usize,
+    pub device_class: usize,
+    pub proto: Protocol,
+    /// Admission-queue wait (fault-recovery share excluded).
+    pub queue_wait: Ps,
+    /// Solo end-to-end runtime on the device's config.
+    pub solo: Ps,
+    /// Wire-contention completion shift (device links ∨ shared fabric).
+    pub wire_wait: Ps,
+    /// CCM PU-pool contention completion shift.
+    pub pu_wait: Ps,
+}
+
+/// The unified decision API: one stateful decider per run picks *where*
+/// a request goes and *how* it offloads, and hears about every
+/// completion. Determinism contract: `decide` may depend only on the
+/// ctx, the round-robin cursor, and state accumulated through prior
+/// `decide`/`observe` calls — never on wall clock or ambient randomness
+/// (seeded draws derive from [`SchedSpec::seed`]).
+pub trait Decider {
+    fn label(&self) -> String;
+    /// Decide placement + protocol for one request. `rr_next` is the
+    /// run's round-robin cursor, threaded through so rotation-based
+    /// placements stay bit-identical to the pre-decider driver.
+    fn decide(&mut self, ctx: &RequestCtx, rr_next: &mut usize) -> Decision;
+    /// Hear one completion's decomposed latency. Stateless deciders
+    /// ignore it.
+    fn observe(&mut self, _fb: &Feedback) {}
+}
+
+/// The three pure protocol rules re-expressed as [`Decider`]s:
+/// placement delegates to [`crate::topo::place_device`] (fault-free) or
+/// the eligible→alive filtered probe (faulted) exactly as the driver
+/// used to inline them, then the wrapped [`OffloadPolicy`] picks the
+/// protocol from the placed device's view. Bit-identical to the PR 9
+/// decision sequence by construction.
+pub struct PolicyDecider {
+    policy: Box<dyn OffloadPolicy>,
+}
+
+impl PolicyDecider {
+    pub fn new(policy: Box<dyn OffloadPolicy>) -> Self {
+        Self { policy }
+    }
+}
+
+/// Fault-aware placement over device views: among alive devices,
+/// preferring ones whose admission gate is open. With every device
+/// eligible this chooses exactly what [`crate::topo::place_device`]
+/// would (unit-pinned there), so a fault schedule whose windows never
+/// open still matches fault-free placement bit-for-bit.
+pub fn place_faulted(
+    placement: Placement,
+    devices: &[DeviceView<'_>],
+    ordinal: usize,
+    rr_next: &mut usize,
+) -> usize {
+    crate::topo::place_device_filtered(
+        placement,
+        devices.len(),
+        ordinal,
+        |i| devices[i].eligible,
+        |i| devices[i].load,
+        rr_next,
+    )
+    .or_else(|| {
+        // Everything alive is stalled: place on a stalled device anyway
+        // (timeouts keep the request from being stranded there).
+        crate::topo::place_device_filtered(
+            placement,
+            devices.len(),
+            ordinal,
+            |i| devices[i].alive,
+            |i| devices[i].load,
+            rr_next,
+        )
+    })
+    .expect("validated fault spec leaves at least one device alive")
+}
+
+impl Decider for PolicyDecider {
+    fn label(&self) -> String {
+        self.policy.label()
+    }
+
+    fn decide(&mut self, ctx: &RequestCtx, rr_next: &mut usize) -> Decision {
+        let device = if ctx.faulted {
+            place_faulted(ctx.placement, ctx.devices, ctx.tenant, rr_next)
+        } else {
+            crate::topo::place_device(
+                ctx.placement,
+                ctx.devices.len(),
+                ctx.tenant,
+                |i| ctx.devices[i].load,
+                rr_next,
+            )
+        };
+        let view = &ctx.devices[device];
+        Decision { device, proto: self.policy.choose(view.cands, &view.obs) }
+    }
+}
+
+/// Materialize the decider a [`SchedSpec`] names — the driver's single
+/// entry into the decision layer.
+pub fn decider_for(spec: &SchedSpec) -> Box<dyn Decider> {
+    match spec.policy {
+        PolicyKind::Learned => {
+            Box::new(super::learn::LearnedDecider::new(spec.seed, spec.explore))
+        }
+        kind => Box::new(PolicyDecider::new(policy_for(kind))),
+    }
+}
+
+/// Materialize the pure protocol rule a [`PolicyKind`] names.
+///
+/// # Panics
+///
+/// On [`PolicyKind::Learned`], which is stateful and owns placement —
+/// it only exists behind [`decider_for`].
 pub fn policy_for(kind: PolicyKind) -> Box<dyn OffloadPolicy> {
     match kind {
         PolicyKind::Static(p) => Box::new(StaticPolicy(p)),
         PolicyKind::Heuristic => Box::new(HeuristicPolicy),
         PolicyKind::Oracle => Box::new(OraclePolicy),
+        PolicyKind::Learned => {
+            panic!("the learned policy is a stateful decider; use decider_for")
+        }
     }
 }
 
-/// The protocols whose solo profiles a policy needs precomputed.
+/// The protocols whose solo profiles a policy needs precomputed. The
+/// learned decider scores all three adaptive candidates.
 pub fn required_candidates(kind: PolicyKind) -> Vec<Protocol> {
     match kind {
         PolicyKind::Static(p) => vec![p],
-        PolicyKind::Heuristic | PolicyKind::Oracle => CANDIDATES.to_vec(),
+        PolicyKind::Heuristic | PolicyKind::Oracle | PolicyKind::Learned => CANDIDATES.to_vec(),
     }
 }
 
@@ -254,6 +471,14 @@ mod tests {
     }
 
     #[test]
+    fn heuristic_pruned_candidate_set_falls_back_to_bs() {
+        let p = HeuristicPolicy;
+        let pruned = vec![cand(Protocol::Axle, 50 * US, 40 * US, 10 * US)];
+        assert_eq!(p.choose(&pruned, &Observed::default()), Protocol::Bs);
+        assert_eq!(p.choose(&[], &Observed::default()), Protocol::Bs);
+    }
+
+    #[test]
     fn required_candidates_match_policy() {
         assert_eq!(
             required_candidates(PolicyKind::Static(Protocol::AxleInterrupt)),
@@ -261,12 +486,83 @@ mod tests {
         );
         assert_eq!(required_candidates(PolicyKind::Heuristic), CANDIDATES.to_vec());
         assert_eq!(required_candidates(PolicyKind::Oracle), CANDIDATES.to_vec());
+        assert_eq!(required_candidates(PolicyKind::Learned), CANDIDATES.to_vec());
     }
 
     #[test]
-    fn policy_for_labels_round_trip() {
+    fn decider_for_labels_round_trip() {
         for kind in PolicyKind::ALL {
-            assert_eq!(policy_for(kind).label(), kind.label());
+            let spec = crate::config::SchedSpec::new(2).with_policy(kind);
+            assert_eq!(decider_for(&spec).label(), kind.label());
         }
+    }
+
+    fn views(loads: &[Ps], cands: &[Candidate]) -> Vec<DeviceView<'_>> {
+        loads
+            .iter()
+            .map(|&load| DeviceView {
+                class: 0,
+                alive: true,
+                eligible: true,
+                load,
+                obs: Observed::default(),
+                cands,
+            })
+            .collect()
+    }
+
+    /// The PolicyDecider's placement must match the bare placement
+    /// helpers decision-for-decision — the PR 9 bit-identity hinges on
+    /// it.
+    #[test]
+    fn policy_decider_placement_matches_place_device() {
+        let cands = common_cands(true);
+        let loads = [30 * US, 10 * US, 20 * US];
+        for placement in [Placement::RoundRobin, Placement::LeastLoaded, Placement::Pinned] {
+            let mut dec = PolicyDecider::new(Box::new(OraclePolicy));
+            let mut rr_dec = 0usize;
+            let mut rr_ref = 0usize;
+            for tenant in 0..7usize {
+                let devices = views(&loads, &cands);
+                let ctx = RequestCtx {
+                    tenant,
+                    index: 0,
+                    annot: 'a',
+                    now: 0,
+                    placement,
+                    faulted: false,
+                    devices: &devices,
+                };
+                let d = dec.decide(&ctx, &mut rr_dec);
+                let want = crate::topo::place_device(
+                    placement,
+                    loads.len(),
+                    tenant,
+                    |i| loads[i],
+                    &mut rr_ref,
+                );
+                assert_eq!(d.device, want, "{placement:?} tenant {tenant}");
+                assert_eq!(d.proto, Protocol::Axle);
+                assert_eq!(rr_dec, rr_ref);
+            }
+        }
+    }
+
+    /// Faulted placement skips ineligible devices and falls back to
+    /// alive-but-stalled ones, mirroring the driver's probe order.
+    #[test]
+    fn place_faulted_prefers_eligible_then_alive() {
+        let cands = common_cands(false);
+        let mut devices = views(&[10 * US, 20 * US, 30 * US], &cands);
+        devices[0].eligible = false;
+        let mut rr = 0usize;
+        assert_eq!(place_faulted(Placement::LeastLoaded, &devices, 0, &mut rr), 1);
+        // Every gate shut: land on the least-loaded alive device anyway.
+        devices[1].eligible = false;
+        devices[2].eligible = false;
+        assert_eq!(place_faulted(Placement::LeastLoaded, &devices, 0, &mut rr), 0);
+        // Dead devices are never targets even in the fallback.
+        devices[0].alive = false;
+        assert_eq!(place_faulted(Placement::LeastLoaded, &devices, 0, &mut rr), 1);
     }
 }

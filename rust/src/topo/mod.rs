@@ -191,13 +191,17 @@ impl Topology {
     }
 }
 
-/// Pick the next placement target among `devices` devices: round-robin
-/// advances `rr_next`; least-loaded greedily takes the device with the
-/// smallest accumulated `load` (ties broken by lowest id); pinned maps
-/// the caller-supplied `ordinal` (stream / tenant id) straight to
-/// `ordinal % devices` without touching any shared state. One shared
-/// implementation for [`Topology::place`] and the closed-loop
-/// scheduler's per-request placement, so the two paths cannot drift.
+/// Pick the next placement target among `devices` devices: the
+/// all-eligible convenience form of [`place_device_filtered`], kept for
+/// the common no-fault path ([`Topology::place`], the closed-loop
+/// scheduler's fault-free placement). Round-robin advances `rr_next`
+/// exactly once; least-loaded takes the device with the smallest
+/// accumulated `load` (ties broken by lowest id); pinned maps the
+/// caller-supplied `ordinal` (stream / tenant id) straight to
+/// `ordinal % devices` without touching any shared state. A thin
+/// delegate — there is only **one** placement implementation, so the
+/// filtered and unfiltered paths cannot drift (pinned by
+/// `filtered_placement_with_all_eligible_matches_unfiltered`).
 pub fn place_device(
     placement: Placement,
     devices: usize,
@@ -205,36 +209,26 @@ pub fn place_device(
     load: impl Fn(usize) -> Ps,
     rr_next: &mut usize,
 ) -> usize {
-    match placement {
-        Placement::RoundRobin => {
-            let d = *rr_next % devices;
-            *rr_next += 1;
-            d
-        }
-        Placement::LeastLoaded => {
-            let mut best = 0usize;
-            for i in 1..devices {
-                if load(i) < load(best) {
-                    best = i;
-                }
-            }
-            best
-        }
-        Placement::Pinned => ordinal % devices,
-    }
+    place_device_filtered(placement, devices, ordinal, |_| true, load, rr_next)
+        .expect("placement over at least one device with every device eligible")
 }
 
-/// As [`place_device`], but restricted to the devices `eligible` admits
-/// — the closed-loop scheduler's fault-aware placement point (requeue
-/// after a kill or timeout, admission-queue redistribution after a
-/// permanent device failure). Returns `None` when no device is
-/// eligible. With every device eligible the choice matches
-/// [`place_device`] exactly. Round-robin probes at most one full
-/// rotation, advancing the cursor past ineligible devices so the
-/// rotation stays deterministic as devices come and go; pinned probes
-/// `ordinal % D, ordinal % D + 1, …` and takes the first eligible
-/// device (the home device when it is alive, the nearest survivor in id
-/// order otherwise).
+/// The single placement implementation, restricted to the devices
+/// `eligible` admits — the closed-loop scheduler's fault-aware
+/// placement point (requeue after a kill or timeout, admission-queue
+/// redistribution after a permanent device failure). Returns `None`
+/// when no device is eligible. With every device eligible the choice
+/// matches the historical unfiltered [`place_device`] exactly:
+/// round-robin takes `*rr_next % devices` and advances the cursor once;
+/// least-loaded scans every eligible device with one shared
+/// `min_by_key((load, id))` (ties always break to the lowest id — the
+/// two pre-merge implementations used different scan styles for the
+/// same rule, now unified); pinned probes `ordinal % D, ordinal % D +
+/// 1, …` and takes the first eligible device (the home device when it
+/// is alive, the nearest survivor in id order otherwise). Round-robin
+/// probes at most one full rotation, advancing the cursor past
+/// ineligible devices so the rotation stays deterministic as devices
+/// come and go.
 pub fn place_device_filtered(
     placement: Placement,
     devices: usize,
@@ -311,6 +305,40 @@ mod tests {
         let pick = place_device_filtered(Placement::Pinned, 3, 4, |d| d != 1, |_| 0, &mut rr);
         assert_eq!(pick, Some(2));
         assert_eq!(place_device_filtered(Placement::Pinned, 3, 4, |_| false, |_| 0, &mut rr), None);
+    }
+
+    #[test]
+    fn filtered_placement_with_all_eligible_matches_unfiltered() {
+        // The historical unfiltered behavior, pinned against the merged
+        // single implementation: rr cycles advancing the cursor once per
+        // call, least-loaded breaks load ties to the lowest id, pinned
+        // is ordinal % devices.
+        let loads = [30u64, 10, 10, 40];
+        for placement in [Placement::RoundRobin, Placement::LeastLoaded, Placement::Pinned] {
+            let (mut rr_a, mut rr_b) = (0usize, 0usize);
+            for ordinal in 0..8 {
+                let unfiltered =
+                    place_device(placement, loads.len(), ordinal, |i| loads[i], &mut rr_a);
+                let filtered = place_device_filtered(
+                    placement,
+                    loads.len(),
+                    ordinal,
+                    |_| true,
+                    |i| loads[i],
+                    &mut rr_b,
+                );
+                assert_eq!(Some(unfiltered), filtered, "{placement:?} ordinal {ordinal}");
+                assert_eq!(rr_a, rr_b, "{placement:?} cursor after ordinal {ordinal}");
+            }
+        }
+        // Least-loaded tie-break: devices 1 and 2 tie at load 10 — the
+        // lowest id wins through both entry points.
+        let mut rr = 0;
+        assert_eq!(place_device(Placement::LeastLoaded, 4, 0, |i| loads[i], &mut rr), 1);
+        assert_eq!(
+            place_device_filtered(Placement::LeastLoaded, 4, 0, |_| true, |i| loads[i], &mut rr),
+            Some(1)
+        );
     }
 
     #[test]

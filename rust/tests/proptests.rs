@@ -541,9 +541,13 @@ mod sched_props {
     use axle::config::{
         DeviceOverride, PolicyKind, Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec,
     };
-    use axle::sched::run_sched;
+    use axle::sched::{run, SchedReport, SchedRun};
     use axle::sim::{Ps, US};
     use axle::util::prop::run_prop;
+
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
 
     /// Sweep-line maximum of concurrently open `[open, close)` intervals.
     /// At equal timestamps, closes are applied before opens — exactly the
@@ -728,10 +732,14 @@ mod fault_props {
         DeviceOverride, FaultEvent, FaultSpec, PolicyKind, Protocol, SchedSpec, SimConfig,
         TopologySpec,
     };
-    use axle::sched::run_sched;
+    use axle::sched::{run, SchedReport, SchedRun};
     use axle::sim::US;
     use axle::util::prop::run_prop;
     use axle::util::rng::Pcg32;
+
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
 
     fn two_device_topo(cfg: &SimConfig) -> TopologySpec {
         TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
@@ -1030,8 +1038,12 @@ mod pipeline_props {
         PipelineMode, PipelineSpec, PolicyKind, Protocol, SchedSpec, SimConfig, TopologySpec,
     };
     use axle::protocol::{self, Lane, StageGraph};
-    use axle::sched::run_sched;
+    use axle::sched::{run, SchedReport, SchedRun};
     use axle::util::prop::run_prop;
+
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
 
     /// Ancestor sets over the `after` DAG (indices are emitted in
     /// topological order, so one forward pass suffices).
@@ -1233,10 +1245,24 @@ mod trace_props {
         DeviceOverride, FaultEvent, FaultSpec, PipelineSpec, PolicyKind, Protocol, QosSpec,
         SchedSpec, SimConfig, TopologySpec, TraceSpec,
     };
-    use axle::sched::{run_sched, run_sched_traced};
+    use axle::sched::{run, SchedReport, SchedRun};
     use axle::sim::US;
     use axle::util::prop::run_prop;
     use axle::util::rng::Pcg32;
+
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
+
+    fn run_sched_traced(
+        cfg: &SimConfig,
+        topo: &TopologySpec,
+        spec: &SchedSpec,
+        jobs: usize,
+    ) -> (SchedReport, Option<axle::trace::Trace>) {
+        let out = run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs));
+        (out.report, out.trace)
+    }
 
     fn random_topo(cfg: &SimConfig, rng: &mut Pcg32) -> TopologySpec {
         let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
@@ -1328,6 +1354,170 @@ mod trace_props {
                 done as usize,
                 traced.requests.iter().filter(|q| !q.failed).count(),
                 "windowed completions drifted"
+            );
+        });
+    }
+}
+
+// ------------------------------------------------------------------
+// Learned decider (sched::learn, PR-10 subsystem).
+// ------------------------------------------------------------------
+
+mod learn_props {
+    use axle::config::{
+        DeviceOverride, FaultEvent, FaultSpec, PolicyKind, SchedSpec, SimConfig, TopologySpec,
+    };
+    use axle::sched::learn::explore_draw;
+    use axle::sched::{run, ArmEstimator, SchedReport, SchedRun};
+    use axle::sim::US;
+    use axle::util::prop::run_prop;
+    use axle::util::rng::Pcg32;
+
+    fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+        run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+    }
+
+    /// Estimator updates are order-free: folding a random observation
+    /// multiset in one pass, or splitting it across a random number of
+    /// shard-local estimators (in shuffled order) and merging those in a
+    /// random order, lands on the identical `(count, total)` state —
+    /// the exact identity the `--jobs` shard merge leans on.
+    #[test]
+    fn prop_estimator_shard_merge_is_order_free() {
+        run_prop("learn_estimator_merge", 200, |rng| {
+            let n = rng.range(1, 64) as usize;
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                samples.push(rng.below(1_000_000) * 1_000);
+            }
+            let mut serial = ArmEstimator::default();
+            for &s in &samples {
+                serial.observe(s);
+            }
+            // Deal the samples onto `shards` estimators round-robin
+            // after a Fisher-Yates shuffle, then merge in random order.
+            let mut order: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+            let shards = rng.range(1, 8) as usize;
+            let mut parts = vec![ArmEstimator::default(); shards];
+            for (k, &i) in order.iter().enumerate() {
+                parts[k % shards].observe(samples[i]);
+            }
+            let mut merged = ArmEstimator::default();
+            while !parts.is_empty() {
+                let pick = rng.below(parts.len() as u64) as usize;
+                merged.merge(&parts.swap_remove(pick));
+            }
+            assert_eq!(merged, serial, "shard merge drifted from the serial fold");
+            assert_eq!(merged.mean(0), serial.mean(0));
+        });
+    }
+
+    /// The epsilon-greedy draw over random seeds/tenants/indices:
+    /// always explores an unvisited arm set (`visits == 0`), never
+    /// explores with `--explore 0`, and is monotone in `visits` — the
+    /// exploration rate only ever decays.
+    #[test]
+    fn prop_explore_draw_decays_and_respects_bounds() {
+        run_prop("learn_explore_decay", 200, |rng| {
+            let seed = rng.next_u64();
+            let tenant = rng.below(1 << 16) as usize;
+            let index = rng.next_u64() >> 20;
+            let explore = rng.range(1, 64) as u32;
+            assert!(explore_draw(seed, tenant, index, 0, explore), "visits=0 must explore");
+            assert!(!explore_draw(seed, tenant, index, 0, 0), "explore=0 must never explore");
+            let mut was = true;
+            let mut visits = 0u64;
+            while visits < 1 << 16 {
+                let now = explore_draw(seed, tenant, index, visits, explore);
+                assert!(was || !now, "exploration resumed at visits={visits}");
+                assert!(!explore_draw(seed, tenant, index, visits, 0));
+                was = now;
+                visits += rng.range(1, 64);
+            }
+        });
+    }
+
+    fn two_device_topo(cfg: &SimConfig) -> TopologySpec {
+        TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+    }
+
+    /// The same always-valid random fault schedule `fault_props` uses
+    /// (permanent failures only target device 0 so device 1 survives).
+    fn random_faults(rng: &mut Pcg32, horizon: u64) -> FaultSpec {
+        let n = rng.range(1, 4) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = rng.below(horizon.max(1));
+            let dur = rng.below(300) * US;
+            let device = rng.below(2) as u32;
+            let factor = 1.0 + rng.below(8) as f64;
+            events.push(match rng.below(4) {
+                0 => FaultEvent::fail(0, at),
+                1 => FaultEvent::stall(device, at, at + dur),
+                2 => FaultEvent::degrade_pus(device, at, at + dur, factor),
+                _ => FaultEvent::degrade_link(device, at, at + dur, factor),
+            });
+        }
+        let mut spec = FaultSpec::with(events);
+        spec.max_retries = rng.range(1, 5) as u32;
+        spec.backoff = rng.range(1, 100) * US;
+        spec.timeout_factor = 2.0 + rng.below(8) as f64;
+        spec
+    }
+
+    /// The learned decider preserves the closed-loop conservation
+    /// contract under arbitrary fault schedules: exactly
+    /// `streams x requests` requests come back, each completed or
+    /// explicitly failed at the retry budget, the decomposition
+    /// identity holds, and the run stays deterministic.
+    #[test]
+    fn prop_learned_never_loses_requests_under_random_faults() {
+        let cfg = SimConfig::m2ndp();
+        run_prop("learn_fault_conservation", 10, |rng| {
+            let topo = two_device_topo(&cfg);
+            let spec = SchedSpec::new(rng.range(1, 4) as usize)
+                .with_workloads(vec!['a', 'f'])
+                .with_policy(PolicyKind::Learned)
+                .with_explore(rng.below(16) as u32)
+                .with_depth(rng.range(1, 3) as usize)
+                .with_admit(rng.range(1, 3) as usize)
+                .with_requests(rng.range(1, 3) as usize)
+                .with_seed(rng.next_u64());
+            let base = run_sched(&cfg, &topo, &spec, 2);
+            let faults = random_faults(rng, base.makespan.max(1));
+            let max_retries = faults.max_retries;
+            let fspec = spec.clone().with_faults(faults);
+            let r = run_sched(&cfg, &topo, &fspec, 2);
+
+            assert_eq!(r.requests.len(), base.requests.len(), "request lost or duplicated");
+            let failed = r.requests.iter().filter(|q| q.failed).count();
+            assert_eq!(failed, r.failed_requests, "failed-request count drifted");
+            for q in &r.requests {
+                assert!(q.admit >= q.submit);
+                assert!(q.completion >= q.admit);
+                assert!(!q.placed_on.is_empty());
+                if q.failed {
+                    assert_eq!(q.retries, max_retries + 1);
+                    assert_eq!(q.admit, q.completion);
+                } else {
+                    assert_eq!(
+                        q.total(),
+                        q.queue_wait() + q.retry_wait + q.solo + q.wire_wait() + q.pu_wait,
+                        "decomposition identity under faults"
+                    );
+                }
+            }
+            // Stateful learning must not cost determinism: the same
+            // faulted spec replays byte-identically.
+            let again = run_sched(&cfg, &topo, &fspec, 2);
+            assert_eq!(
+                r.to_json().to_string(),
+                again.to_json().to_string(),
+                "learned faulted run is not reproducible"
             );
         });
     }

@@ -16,8 +16,25 @@ use axle::config::{
     DeviceOverride, FaultEvent, FaultSpec, Placement, PipelineMode, PipelineSpec, PolicyKind,
     Protocol, QosSpec, SchedSpec, SimConfig, TopologySpec, TraceSpec,
 };
-use axle::sched::{run_sched, run_sched_traced, SchedReport};
+use axle::sched::{run, SchedReport, SchedRun};
 use axle::topo::{run_tenants, TenantSpec};
+
+/// Every test goes through the unified [`run`] entry point; these
+/// helpers keep the historical call shape (and double as the migration
+/// example for out-of-tree users of the deprecated free functions).
+fn run_sched(cfg: &SimConfig, topo: &TopologySpec, spec: &SchedSpec, jobs: usize) -> SchedReport {
+    run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs)).report
+}
+
+fn run_sched_traced(
+    cfg: &SimConfig,
+    topo: &TopologySpec,
+    spec: &SchedSpec,
+    jobs: usize,
+) -> (SchedReport, Option<axle::trace::Trace>) {
+    let out = run(&SchedRun::new(cfg, topo, spec).with_jobs(jobs));
+    (out.report, out.trace)
+}
 
 fn data_heavy_mix() -> Vec<char> {
     vec!['a', 'd', 'e', 'i']
@@ -876,5 +893,102 @@ fn traced_fault_run_is_bit_identical_and_validates() {
         let tr = tr.expect("trace spec is set");
         axle::trace::validate(&tr, &traced)
             .unwrap_or_else(|e| panic!("faulted trace does not reconcile (chunks={chunks}): {e}"));
+    }
+}
+
+/// PR 10 acceptance: on the nonstationary scenario (two *identical*
+/// devices behind a shared fabric, least-loaded placement, an 8x
+/// PU-and-link degradation landing on device 0 a quarter of the way
+/// into the fault-free heuristic makespan and outlasting every run)
+/// the learned decider must re-converge onto the healthy device, while
+/// `heuristic` and `oracle` — whose least-loaded placement weighs
+/// *undegraded* solo-latency load estimates — keep splitting work onto
+/// the slow device for the rest of the run.
+#[test]
+fn learned_reconverges_under_nonstationary_degradation() {
+    let coord = axle::coordinator::Coordinator::new(SimConfig::m2ndp());
+    let out = coord.run_nonstationary_scenario(6, 6, 2);
+    for (name, r) in
+        [("learned", &out.learned), ("heuristic", &out.heuristic), ("oracle", &out.oracle)]
+    {
+        assert_eq!(r.scheduled, 36, "{name} lost requests");
+        assert_eq!(r.failed_requests, 0, "{name} dropped requests");
+        assert_eq!(r.requests.len(), 36, "{name} retained rows");
+    }
+    assert!(out.at > 0 && out.until > out.at, "degradation window is degenerate");
+    // The tentpole claim, stated the way the issue asks for it:
+    // strictly better than the stale-profile heuristic, and within a
+    // 25% bound of oracle (oracle shares the heuristic's static
+    // placement here, so learned normally beats it outright — the
+    // bound only leaves room for exploration overhead).
+    assert!(
+        out.learned.makespan < out.heuristic.makespan,
+        "learned makespan {} is not strictly below heuristic {}",
+        out.learned.makespan,
+        out.heuristic.makespan
+    );
+    assert!(
+        out.learned.makespan <= out.oracle.makespan.saturating_mul(5) / 4,
+        "learned makespan {} is outside the 5/4 oracle bound ({})",
+        out.learned.makespan,
+        out.oracle.makespan
+    );
+    // Faulted runs always collapse to one shard, so worker count can
+    // never bend the outcome — pin it anyway, byte-for-byte.
+    let again = coord.run_nonstationary_scenario(6, 6, 4);
+    for (name, a, b) in [
+        ("learned", &out.learned, &again.learned),
+        ("heuristic", &out.heuristic, &again.heuristic),
+        ("oracle", &out.oracle, &again.oracle),
+    ] {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "{name} drifted across worker counts"
+        );
+    }
+}
+
+/// The deprecated free functions are thin shims over [`run`]: their
+/// reports must stay byte-identical to the options-struct entry point
+/// across policy (including the stateful learned decider) × QoS ×
+/// chunked admission × worker count for the deprecation window.
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_match_unified_run() {
+    let cfg = SimConfig::m2ndp();
+    for qos in [QosSpec::fcfs(), QosSpec::wrr(vec![3, 1])] {
+        let topo = TopologySpec::shared_fabric(2, cfg.cxl_bw_gbps)
+            .with_override(1, DeviceOverride { ccm_pus: Some(4), ..Default::default() })
+            .with_qos(qos.clone());
+        for policy in PolicyKind::ALL {
+            for chunks in [1, 4] {
+                let spec = SchedSpec::new(4)
+                    .with_workloads(vec!['a', 'e'])
+                    .with_policy(policy)
+                    .with_requests(2)
+                    .with_admit(2)
+                    .with_pipeline(PipelineSpec::with_chunks(chunks));
+                let tag = format!("{policy:?} {:?} chunks={chunks}", qos.policy);
+                let unified = run(&SchedRun::new(&cfg, &topo, &spec)).report;
+                for jobs in [1, 2] {
+                    let legacy = axle::sched::run_sched(&cfg, &topo, &spec, jobs);
+                    assert_eq!(
+                        unified.to_json().to_string(),
+                        legacy.to_json().to_string(),
+                        "run_sched diverged from run(): {tag} jobs={jobs}"
+                    );
+                }
+                let tspec = spec.clone().with_trace(TraceSpec::default());
+                let traced = run(&SchedRun::new(&cfg, &topo, &tspec)).report;
+                let (legacy, tr) = axle::sched::run_sched_traced(&cfg, &topo, &tspec, 1);
+                assert_eq!(
+                    traced.to_json().to_string(),
+                    legacy.to_json().to_string(),
+                    "run_sched_traced diverged from run(): {tag}"
+                );
+                assert!(tr.is_some(), "wrapper dropped the trace: {tag}");
+            }
+        }
     }
 }
